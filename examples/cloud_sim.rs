@@ -1,0 +1,84 @@
+//! Cloud deployment simulation — the paper's EC2 scenario (§5.2, §6.2):
+//! heterogeneous clusters, offline profiling + weighted partitioning, and
+//! the 2-tier hierarchical merge against its alternatives.
+//!
+//!     cargo run --release --example cloud_sim
+
+use specdfa::cluster::{CloudMatcher, ClusterSpec};
+use specdfa::compile_prosite;
+use specdfa::speculative::merge::MergeStrategy;
+use specdfa::util::bench::Table;
+use specdfa::workload::InputGen;
+
+fn main() -> anyhow::Result<()> {
+    let dfa = compile_prosite("C-x(2,4)-C-x(3)-[LIVMFYWC]-x(4)-H-x(3,5)-H.")?;
+    println!("zinc-finger DFA: |Q|={}", dfa.num_states);
+    let syms = InputGen::new(3).uniform_syms(&dfa, 8_000_000);
+
+    // 1. Merge strategy shoot-out on a 20-node cluster (Fig. 9 / §5.2).
+    let mut t = Table::new(
+        "merge strategies, 20 cc2.8xlarge nodes (300 cores), 8M symbols",
+        &["strategy", "makespan ms", "comm %", "speedup"],
+    );
+    for (name, strat) in [
+        ("sequential (Eq. 8)", MergeStrategy::Sequential),
+        ("binary tree (Eq. 9)", MergeStrategy::BinaryTree),
+        ("hierarchical 2-tier (Fig. 9)",
+         MergeStrategy::Hierarchical { cores_per_node: 15 }),
+    ] {
+        let out = CloudMatcher::new(&dfa, ClusterSpec::homogeneous(20))
+            .lookahead(4)
+            .merge_strategy(strat)
+            .seed(17)
+            .run_syms(&syms);
+        t.row(vec![
+            name.to_string(),
+            format!("{:.2}", out.makespan_us / 1e3),
+            format!("{:.2}", out.comm_ratio() * 100.0),
+            format!("{:.1}x", out.speedup()),
+        ]);
+    }
+    t.print();
+
+    // 2. Load balancing across fast/slow instance mixes (Table 3).
+    let mut t = Table::new(
+        "inhomogeneous clusters: capacity-weighted partitioning (Eq. 1)",
+        &["fast", "slow", "balance CV", "speedup"],
+    );
+    for (fast, slow) in [(0, 5), (2, 3), (4, 1), (5, 0)] {
+        let out = CloudMatcher::new(&dfa, ClusterSpec::fast_slow(fast, slow))
+            .lookahead(1)
+            .seed(19)
+            .run_syms(&syms);
+        t.row(vec![
+            fast.to_string(),
+            slow.to_string(),
+            format!("{:.4}", out.balance_cv()),
+            format!("{:.1}x", out.speedup()),
+        ]);
+    }
+    t.print();
+
+    // 3. The leave-one-core-idle rule vs hypervisor preemption (§5.2).
+    let mut t = Table::new(
+        "hypervisor preemption: allocate 15/16 vs 16/16 cores per node",
+        &["allocation", "makespan ms", "speedup"],
+    );
+    for (name, spec) in [
+        ("15 of 16 cores (paper's rule)", ClusterSpec::homogeneous(8)),
+        ("all 16 cores (preemption risk)",
+         ClusterSpec::homogeneous(8).allocate_all_cores()),
+    ] {
+        let out = CloudMatcher::new(&dfa, spec)
+            .lookahead(4)
+            .seed(23)
+            .run_syms(&syms);
+        t.row(vec![
+            name.to_string(),
+            format!("{:.2}", out.makespan_us / 1e3),
+            format!("{:.1}x", out.speedup()),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,113 @@
+//! End-to-end full-stack driver: proves all three layers compose on a
+//! real small workload.
+//!
+//! Pipeline exercised:
+//!   PROSITE pattern text
+//!     -> parser -> Thompson NFA -> subset construction -> Hopcroft
+//!     -> structural analysis (I_max,r; Eqs. 11-13)
+//!     -> L3 multicore speculative match over real threads (Alg. 3)
+//!     -> L3 simulated-EC2 cloud match (Fig. 9 merging)
+//!     -> L1/L2 vectorized match via the AOT Pallas artifact on PJRT
+//!   with every path checked against sequential semantics (Alg. 1).
+//!
+//! Run (artifacts required: `make artifacts`):
+//!     cargo run --release --example e2e_full_stack
+//!
+//! The summary table is recorded in EXPERIMENTS.md §End-to-end.
+
+use std::time::Instant;
+
+use specdfa::cluster::{CloudMatcher, ClusterSpec};
+use specdfa::experiments::calibrate::host_syms_per_us;
+use specdfa::runtime::pjrt::VectorUnit;
+use specdfa::runtime::simd::SimdMatcher;
+use specdfa::speculative::lookahead::Lookahead;
+use specdfa::speculative::matcher::MatchPlan;
+use specdfa::util::bench::Table;
+use specdfa::workload::{prosite_suite_cached, InputGen};
+use specdfa::SequentialMatcher;
+
+fn main() -> anyhow::Result<()> {
+    println!("== specdfa end-to-end full-stack driver ==\n");
+
+    // --- workload: 8 MB protein corpus, real PROSITE signatures ---
+    let mut gen = InputGen::new(0xE2E);
+    let mut corpus = gen.protein(8 << 20);
+    gen.plant(&mut corpus, b"RGD", 8);
+    gen.plant(&mut corpus, b"IDLGTTS", 2); // PS00298 HSP70 fragment
+    println!("corpus: {} MB protein sequence", corpus.len() >> 20);
+
+    let rate = host_syms_per_us();
+    println!("host calibration: {rate:.0} symbols/us\n");
+
+    let vu = VectorUnit::load(VectorUnit::default_dir(), "lane8_main")
+        .map_err(|e| anyhow::anyhow!(
+            "{e:#}\n(run `make artifacts` first)"))?;
+    println!("vector unit: lane8_main on {} ({} lanes, q<={})\n",
+             vu.platform(), vu.spec.lanes, vu.spec.q);
+
+    let mut t = Table::new(
+        "end-to-end: sequential vs multicore vs cloud vs vector unit",
+        &["signature", "|Q|", "I_max4", "hit", "seq ms",
+          "mc speedup (P=40)", "cloud speedup (288c)", "simd instr-speedup",
+          "verified"],
+    );
+
+    let patterns: Vec<_> = prosite_suite_cached()
+        .iter()
+        .filter(|p| (p.dfa.num_states as usize) <= vu.spec.q)
+        .take(6)
+        .collect();
+    for p in patterns {
+        // structural analysis
+        let la = Lookahead::analyze(&p.dfa, 4);
+
+        // L3 sequential (Listing 1) — the measured yardstick
+        let seq = SequentialMatcher::new(&p.dfa);
+        let t0 = Instant::now();
+        let want = seq.run_bytes(&corpus);
+        let seq_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        // L3 multicore speculative match over REAL threads
+        let plan = MatchPlan::new(&p.dfa).processors(40).lookahead(4);
+        let mc = plan.run(&corpus);
+        let mc_speedup =
+            corpus.len() as f64 / mc.makespan_syms().max(1) as f64;
+
+        // L3 cloud (simulated EC2, 20 nodes / 288 cores)
+        let syms = p.dfa.map_input(&corpus);
+        let cloud = CloudMatcher::new(&p.dfa, ClusterSpec::homogeneous(20))
+            .lookahead(4)
+            .base_rate(rate)
+            .run_syms(&syms);
+
+        // L1/L2 vectorized match via PJRT (64 KiB slice — interpret-mode
+        // executable; work ratios are the metric, §6.1 methodology)
+        let slice = &syms[..(1 << 16).min(syms.len())];
+        let want_slice = seq.run_syms(slice);
+        let simd = SimdMatcher::new(&p.dfa, &vu)?
+            .lookahead(1)
+            .run_syms(slice)?;
+
+        let ok = mc.accepted == want.accepted
+            && mc.final_state == want.final_state
+            && cloud.final_state == want.final_state
+            && simd.final_state == want_slice.final_state;
+        t.row(vec![
+            p.name.clone(),
+            p.q().to_string(),
+            la.i_max.to_string(),
+            want.accepted.to_string(),
+            format!("{seq_ms:.1}"),
+            format!("{mc_speedup:.1}x"),
+            format!("{:.1}x", cloud.speedup()),
+            format!("{:.2}x", simd.instr_speedup()),
+            if ok { "OK".into() } else { "MISMATCH".into() },
+        ]);
+        assert!(ok, "layer disagreement on {}", p.name);
+    }
+    t.print();
+    println!("all layers agree with sequential semantics — \
+              failure-freedom holds end-to-end");
+    Ok(())
+}

@@ -1,0 +1,101 @@
+"""AOT entry point: lower the L2 model to HLO *text* artifacts.
+
+HLO text (NOT lowered.compiler_ir("hlo") protos / .serialize()) is the
+interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction
+ids which the rust `xla` crate's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`).  The text parser reassigns ids, so text
+round-trips cleanly.  See /opt/xla-example/gen_hlo.py.
+
+Usage (from repo root):
+    python python/compile/aot.py --out artifacts
+
+Produces artifacts/<variant>.hlo.txt for every VariantSpec in model.py,
+artifacts/compose.hlo.txt for the Eq. 9 merge kernel, and
+artifacts/manifest.json describing the static shapes so the rust runtime can
+pick variants and pad accordingly.  Deterministic: same inputs -> same text.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(spec: model.VariantSpec) -> str:
+    lowered = jax.jit(spec.bind()).lower(*spec.abstract_args())
+    return to_hlo_text(lowered)
+
+
+def lower_compose(qp: int) -> str:
+    arg = jax.ShapeDtypeStruct((qp,), jnp.int32)
+    lowered = jax.jit(model.compose).lower(arg, arg)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="artifacts", help="output directory")
+    ap.add_argument("--only", default=None,
+                    help="build a single named variant (for tests)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"format": "hlo-text", "modules": {}}
+    for spec in model.VARIANTS:
+        if args.only and spec.name != args.only:
+            continue
+        text = lower_variant(spec)
+        path = os.path.join(args.out, f"{spec.name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["modules"][spec.name] = spec.manifest_entry()
+        print(f"wrote {path} ({len(text)} chars)")
+
+    if not args.only:
+        text = lower_compose(model.COMPOSE_QP)
+        path = os.path.join(args.out, "compose.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["modules"]["compose"] = {"kind": "compose",
+                                          "qp": model.COMPOSE_QP}
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {mpath}")
+
+    # TSV manifest for the rust runtime (built offline, without a JSON dep):
+    # lane_match rows: name kind lanes q s t n block_t
+    # compose row:     compose compose qp 0 0 0 0 0
+    tpath = os.path.join(args.out, "manifest.tsv")
+    with open(tpath, "w") as f:
+        for name, e in sorted(manifest["modules"].items()):
+            if e["kind"] == "lane_match":
+                f.write(f"{name}\tlane_match\t{e['lanes']}\t{e['q']}\t"
+                        f"{e['s']}\t{e['t']}\t{e['n']}\t{e['block_t']}\n")
+            else:
+                f.write(f"{name}\tcompose\t{e['qp']}\t0\t0\t0\t0\t0\n")
+    print(f"wrote {tpath}")
+
+
+if __name__ == "__main__":
+    main()

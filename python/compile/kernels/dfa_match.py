@@ -1,0 +1,111 @@
+"""Layer-1 Pallas kernel: lane-parallel DFA stepping (the SBase gather loop).
+
+This is the TPU re-thinking of the paper's AVX2 matching loop (Listing 2):
+
+    InpSyms = _mm256_i32gather_epi32(IBase, InpIdx, 4);
+    States  = _mm256_add_epi32(States, InpSyms);
+    States  = _mm256_i32gather_epi32(SBase, States, 4);
+
+The 8 AVX2 lanes are speculative (chunk x initial-state) matches running in
+lockstep.  On TPU there is no scalar gather instruction either; the paper's
+core insight — "DFA stepping is a pure gather, so the whole loop vectorizes
+once a gather primitive exists" — maps to:
+
+  * the transition table SBase lives resident in VMEM for the whole kernel
+    (worst-case PROSITE DFA: 1536 states x 64 symbols x 4 B = 384 KiB,
+    comfortably inside a TensorCore's ~16 MiB VMEM),
+  * the per-step data-dependent indexed load `SBase[state, sym]` is a
+    vectorized take over the lane dimension,
+  * the input stream is tiled HBM->VMEM by the BlockSpec grid over time
+    blocks (`block_t` symbols per grid step), the role threadblock/stream
+    scheduling plays in the paper's CPU version.
+
+The kernel MUST be run with interpret=True on this CPU image: real-TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+Under jit, interpret mode lowers to plain HLO (the fori_loop becomes an XLA
+while loop), so the artifact produced from this kernel is a real compiled
+executable on the rust side.
+
+Correctness oracle: kernels/ref.py (pure jax.lax.scan / pure python).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["lane_dfa_match", "DEFAULT_BLOCK_T"]
+
+# Time-tile size: symbols consumed per grid step.  512 keeps the (lanes x
+# block_t) int32 input tile at 16 KiB for 8 lanes — small against the
+# VMEM-resident table, large enough to amortize grid-step overhead.
+DEFAULT_BLOCK_T = 512
+
+
+def _dfa_kernel(table_ref, syms_ref, lens_ref, init_ref, out_ref, *, block_t):
+    """One grid step: advance every lane by `block_t` symbols.
+
+    table_ref : i32[Q, S]      whole transition table, VMEM-resident
+    syms_ref  : i32[L, block_t] this step's symbol tile (pre-gathered IBase)
+    lens_ref  : i32[L]         per-lane total symbol count (masking)
+    init_ref  : i32[L]         per-lane initial DFA state
+    out_ref   : i32[L]         per-lane current state, carried across steps
+    """
+    # Whole-table VMEM residency: one load, reused for every step.
+    table = table_ref[...]
+    lens = lens_ref[...]
+    t0 = pl.program_id(0) * block_t
+
+    @pl.when(pl.program_id(0) == 0)
+    def _seed():
+        out_ref[...] = init_ref[...]
+
+    def body(i, state):
+        # Per-lane symbol at local step i (IBase gather analog).
+        sym = syms_ref[:, i]
+        # The SBase gather: vectorized indexed load over the lane dimension.
+        nxt = table[state, sym]
+        # Lanes past their chunk length hold their state (identity step);
+        # this is how variable-length chunks ride a static-shape kernel.
+        keep = (t0 + i) < lens
+        return jnp.where(keep, nxt, state)
+
+    out_ref[...] = jax.lax.fori_loop(0, block_t, body, out_ref[...])
+
+
+def lane_dfa_match(table, syms, lens, init, *, block_t=DEFAULT_BLOCK_T,
+                   interpret=True):
+    """Run `lanes` speculative DFA matches in lockstep.
+
+    Args:
+      table: i32[Q, S] dense transition table (state, symbol) -> state.
+      syms:  i32[lanes, T] per-lane symbol streams; T % block_t == 0.
+      lens:  i32[lanes] symbols to actually consume per lane (<= T).
+      init:  i32[lanes] initial state per lane.
+      block_t: time-tile size (static).
+      interpret: must stay True on CPU images (see module docstring).
+
+    Returns:
+      i32[lanes] final state per lane, i.e. delta*(init[l], syms[l,:lens[l]]).
+    """
+    lanes, t = syms.shape
+    if t % block_t != 0:
+        raise ValueError(f"T={t} must be a multiple of block_t={block_t}")
+    grid = t // block_t
+    kernel = partial(_dfa_kernel, block_t=block_t)
+    return pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[
+            # Whole table every step (index_map pins block 0).
+            pl.BlockSpec(table.shape, lambda i: (0, 0)),
+            # Stream the symbol matrix one time-tile per grid step.
+            pl.BlockSpec((lanes, block_t), lambda i: (0, i)),
+            pl.BlockSpec((lanes,), lambda i: (0,)),
+            pl.BlockSpec((lanes,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((lanes,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((lanes,), jnp.int32),
+        interpret=interpret,
+    )(table, syms, lens, init)

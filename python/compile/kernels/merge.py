@@ -1,0 +1,39 @@
+"""Layer-1 Pallas kernel: L-vector composition (Eq. 9 of the paper).
+
+Combining the mappings of two adjacent chunks is itself a gather:
+
+    L_{i,j}[q] = L_j[ L_i[q] ]    for all q in Q.
+
+The paper merges L-vectors sequentially on shared memory (Eq. 8) and
+hierarchically on EC2 (Fig. 9); either way the primitive combining step is
+this one-gather composition.  Exposing it as a kernel lets the rust
+coordinator offload merge trees of padded L-vectors to the same PJRT
+executable path used for matching.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["compose_lvectors"]
+
+
+def _compose_kernel(la_ref, lb_ref, out_ref):
+    la = la_ref[...]
+    out_ref[...] = lb_ref[...][la]
+
+
+def compose_lvectors(la, lb, *, interpret=True):
+    """Compose two L-vectors: out[q] = lb[la[q]].  la, lb: i32[Qp]."""
+    (qp,) = la.shape
+    return pl.pallas_call(
+        _compose_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((qp,), lambda i: (0,)),
+            pl.BlockSpec((qp,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((qp,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((qp,), jnp.int32),
+        interpret=interpret,
+    )(la, lb)

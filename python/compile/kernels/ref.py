@@ -1,0 +1,45 @@
+"""Pure-jnp / pure-python correctness oracles for the Pallas DFA kernel.
+
+These implement Algorithm 1 of the paper (sequential DFA matching) lifted
+over a lane dimension, with none of the kernel's tiling tricks — the ground
+truth the L1 kernel and L2 model are pinned to by pytest + hypothesis.
+"""
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["lane_dfa_match_ref", "lane_dfa_match_py", "compose_ref"]
+
+
+def lane_dfa_match_ref(table, syms, lens, init):
+    """Oracle for kernels.dfa_match.lane_dfa_match, as a jax.lax.scan.
+
+    table: i32[Q, S]; syms: i32[L, T]; lens: i32[L]; init: i32[L].
+    Returns i32[L] final states.
+    """
+    t = syms.shape[1]
+
+    def step(state, xs):
+        sym, i = xs
+        nxt = table[state, sym]
+        return jnp.where(i < lens, nxt, state), None
+
+    final, _ = jax.lax.scan(step, init, (syms.T, jnp.arange(t)))
+    return final
+
+
+def lane_dfa_match_py(table, syms, lens, init):
+    """Pure-python Algorithm 1 over lanes (no jax). Lists/ints in, list out."""
+    lanes = len(init)
+    out = []
+    for l in range(lanes):
+        state = int(init[l])
+        for i in range(int(lens[l])):
+            state = int(table[state][int(syms[l][i])])
+        out.append(state)
+    return out
+
+
+def compose_ref(la, lb):
+    """Eq. (9) L-vector composition oracle: out[j] = lb[la[j]]."""
+    return jnp.asarray(lb)[jnp.asarray(la)]

@@ -1,0 +1,123 @@
+"""Layer-2 JAX model: the speculative lane-matching compute graph.
+
+This is the whole computation the paper's AVX2 inner loop (Listing 2)
+performs per SIMD register, expressed in JAX and lowered ONCE to HLO text by
+aot.py.  Python never runs at match time: the rust coordinator loads the
+compiled artifact via PJRT and feeds it the flattened transition table
+(SBase), the symbol-mapped input window (IBase), and per-lane descriptors.
+
+Graph structure per artifact variant (all shapes static):
+
+    lane_match(table_flat, inp, starts, lens, init) -> (final_states,)
+
+      table_flat : i32[Q*S]   flattened SBase (Fig. 8c); rust re-strides its
+                              DFA to the artifact's (Q, S) padding
+      inp        : i32[N]     IBase window: symbol-mapped input (Fig. 8d)
+      starts     : i32[L]     per-lane start offset into `inp`
+      lens       : i32[L]     per-lane number of symbols to consume (<= T)
+      init       : i32[L]     per-lane initial DFA state
+      final      : i32[L]     delta*(init[l], inp[starts[l] : starts[l]+lens[l]])
+
+The per-lane windowing gather (the `_mm256_i32gather_epi32(IBase, InpIdx)`
+half of Listing 2) happens here in L2 as a vectorized take; the data-
+dependent SBase gather — the irreducible, serially-dependent half — lives in
+the L1 Pallas kernel so both lower into the same HLO module.
+
+One artifact call advances every lane by at most T symbols; the rust side
+carries `final -> init` across calls for longer chunks, exactly like the
+paper's loop carries `States` across iterations.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.dfa_match import lane_dfa_match, DEFAULT_BLOCK_T
+from compile.kernels.merge import compose_lvectors
+
+__all__ = ["lane_match", "compose", "VariantSpec", "VARIANTS"]
+
+
+def lane_match(table_flat, inp, starts, lens, init, *, q, s, t,
+               block_t=DEFAULT_BLOCK_T):
+    """Advance `L` speculative lanes by up to `t` symbols each.
+
+    Static config: q, s (table padding), t (max symbols per call), block_t
+    (kernel time tile).  Returns a 1-tuple (final_states,) so the lowered
+    module is a tuple — the rust loader unwraps with to_tuple1().
+    """
+    table = table_flat.reshape(q, s)
+    lanes = starts.shape[0]
+    n = inp.shape[0]
+    # Per-lane window gather (IBase gather of Listing 2).  Out-of-range
+    # positions are clipped; the kernel masks them out via `lens`.
+    idx = starts[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]
+    idx = jnp.clip(idx, 0, n - 1)
+    syms = jnp.take(inp, idx)
+    lens = jnp.minimum(lens, jnp.int32(t))
+    final = lane_dfa_match(table, syms, lens, init, block_t=block_t)
+    return (final,)
+
+
+def compose(la, lb):
+    """Eq. (9) L-vector composition as a lowered module: out[q]=lb[la[q]]."""
+    return (compose_lvectors(la, lb),)
+
+
+class VariantSpec:
+    """Static-shape configuration of one AOT artifact."""
+
+    def __init__(self, name, *, lanes, q, s, t, n, block_t=DEFAULT_BLOCK_T):
+        if t % block_t != 0:
+            raise ValueError(f"{name}: t={t} not a multiple of block_t={block_t}")
+        self.name = name
+        self.lanes = lanes
+        self.q = q
+        self.s = s
+        self.t = t
+        self.n = n
+        self.block_t = block_t
+
+    def abstract_args(self):
+        i32 = jnp.int32
+        return (
+            jax.ShapeDtypeStruct((self.q * self.s,), i32),  # table_flat
+            jax.ShapeDtypeStruct((self.n,), i32),           # inp
+            jax.ShapeDtypeStruct((self.lanes,), i32),       # starts
+            jax.ShapeDtypeStruct((self.lanes,), i32),       # lens
+            jax.ShapeDtypeStruct((self.lanes,), i32),       # init
+        )
+
+    def bind(self):
+        return partial(lane_match, q=self.q, s=self.s, t=self.t,
+                       block_t=self.block_t)
+
+    def manifest_entry(self):
+        return {
+            "kind": "lane_match",
+            "lanes": self.lanes, "q": self.q, "s": self.s,
+            "t": self.t, "n": self.n, "block_t": self.block_t,
+        }
+
+
+# The artifact family built by `make artifacts`.
+#
+#  * lane8_main — the production variant: 8 lanes (AVX2 width), table padded
+#    to 1536 states x 64 symbols (384 KiB; covers the largest PROSITE DFA,
+#    1288 states, and any symbol-mapped dense alphabet we generate), 64 Ki
+#    IBase window, 8 Ki symbols advanced per call.
+#  * lane32_wide — 32 lanes for deep speculation (many initial states) and
+#    multi-chunk batching.
+#  * lane8_small — tiny variant: fast to compile/execute, used by tests and
+#    the quickstart example.
+VARIANTS = [
+    VariantSpec("lane8_main", lanes=8, q=1536, s=64, t=8192, n=1 << 16),
+    VariantSpec("lane32_wide", lanes=32, q=1536, s=64, t=4096, n=1 << 16),
+    VariantSpec("lane8_small", lanes=8, q=64, s=16, t=512, n=4096,
+                block_t=128),
+]
+
+# Padded L-vector width for the compose artifact (must cover q of the main
+# variants).
+COMPOSE_QP = 1536

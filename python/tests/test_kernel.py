@@ -1,0 +1,179 @@
+"""L1 correctness: Pallas DFA kernel vs the pure oracles.
+
+Hypothesis sweeps DFA shapes, lane counts, tile sizes and data; every case
+asserts exact (integer) equality between the Pallas kernel (interpret mode),
+the jax.lax.scan oracle and the pure-python Algorithm 1.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.dfa_match import lane_dfa_match
+from compile.kernels.merge import compose_lvectors
+from compile.kernels.ref import (
+    compose_ref,
+    lane_dfa_match_py,
+    lane_dfa_match_ref,
+)
+
+
+def run_all(table, syms, lens, init, block_t):
+    k = np.asarray(
+        lane_dfa_match(
+            jnp.asarray(table), jnp.asarray(syms), jnp.asarray(lens),
+            jnp.asarray(init), block_t=block_t,
+        )
+    )
+    r = np.asarray(
+        lane_dfa_match_ref(
+            jnp.asarray(table), jnp.asarray(syms), jnp.asarray(lens),
+            jnp.asarray(init),
+        )
+    )
+    p = np.asarray(lane_dfa_match_py(table, syms, lens, init))
+    return k, r, p
+
+
+def rand_case(rng, q, s, lanes, t):
+    table = rng.integers(0, q, size=(q, s)).astype(np.int32)
+    syms = rng.integers(0, s, size=(lanes, t)).astype(np.int32)
+    lens = rng.integers(0, t + 1, size=(lanes,)).astype(np.int32)
+    init = rng.integers(0, q, size=(lanes,)).astype(np.int32)
+    return table, syms, lens, init
+
+
+# Fixed shape set so the jit cache is reused across hypothesis examples.
+SHAPES = [
+    # (q, s, lanes, t, block_t)
+    (2, 2, 1, 64, 32),
+    (5, 3, 4, 128, 64),
+    (16, 8, 8, 256, 64),
+    (64, 16, 8, 512, 128),
+    (33, 7, 16, 192, 64),
+]
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1), shape=st.sampled_from(SHAPES))
+def test_kernel_matches_oracles_random(seed, shape):
+    q, s, lanes, t, block_t = shape
+    rng = np.random.default_rng(seed)
+    table, syms, lens, init = rand_case(rng, q, s, lanes, t)
+    k, r, p = run_all(table, syms, lens, init, block_t)
+    np.testing.assert_array_equal(k, r)
+    np.testing.assert_array_equal(k, p)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1))
+def test_kernel_sink_state_absorbs(seed):
+    """Once in the sink (error) state the DFA must stay there (paper §2.1)."""
+    rng = np.random.default_rng(seed)
+    q, s, lanes, t = 8, 4, 8, 128
+    table = rng.integers(0, q, size=(q, s)).astype(np.int32)
+    sink = q - 1
+    table[sink, :] = sink
+    syms = rng.integers(0, s, size=(lanes, t)).astype(np.int32)
+    lens = np.full((lanes,), t, dtype=np.int32)
+    init = np.full((lanes,), sink, dtype=np.int32)
+    k, r, p = run_all(table, syms, lens, init, 64)
+    assert (k == sink).all() and (r == sink).all() and (p == sink).all()
+
+
+def test_kernel_zero_length_lanes_identity():
+    """lens == 0 lanes must return their initial state untouched."""
+    rng = np.random.default_rng(7)
+    table, syms, _, init = rand_case(rng, 16, 8, 8, 256)
+    lens = np.zeros((8,), dtype=np.int32)
+    k, r, p = run_all(table, syms, lens, init, 64)
+    np.testing.assert_array_equal(k, init)
+    np.testing.assert_array_equal(r, init)
+    np.testing.assert_array_equal(p, init)
+
+
+def test_kernel_full_length_vs_truncated_prefix():
+    """Matching lens=m must equal matching the m-prefix at full length."""
+    rng = np.random.default_rng(11)
+    q, s, lanes, t = 16, 8, 8, 256
+    table, syms, _, init = rand_case(rng, q, s, lanes, t)
+    m = 100
+    lens = np.full((lanes,), m, dtype=np.int32)
+    k1, _, _ = run_all(table, syms, lens, init, 64)
+    syms2 = syms.copy()
+    syms2[:, m:] = 0  # garbage beyond the mask must not matter
+    k2, _, _ = run_all(table, syms2, lens, init, 64)
+    np.testing.assert_array_equal(k1, k2)
+
+
+def test_kernel_lanes_independent():
+    """Each lane's result depends only on its own (syms, len, init)."""
+    rng = np.random.default_rng(13)
+    q, s, lanes, t = 16, 8, 8, 256
+    table, syms, lens, init = rand_case(rng, q, s, lanes, t)
+    full, _, _ = run_all(table, syms, lens, init, 64)
+    for l in [0, 3, 7]:
+        solo_syms = np.tile(syms[l], (lanes, 1))
+        solo_lens = np.full((lanes,), lens[l], dtype=np.int32)
+        solo_init = np.full((lanes,), init[l], dtype=np.int32)
+        solo, _, _ = run_all(table, solo_syms, solo_lens, solo_init, 64)
+        assert solo[0] == full[l]
+
+
+@pytest.mark.parametrize("block_t", [32, 64, 128, 256])
+def test_kernel_block_t_invariance(block_t):
+    """The time-tile size is a scheduling knob only — results identical."""
+    rng = np.random.default_rng(17)
+    table, syms, lens, init = rand_case(rng, 32, 8, 8, 256)
+    k, r, _ = run_all(table, syms, lens, init, block_t)
+    np.testing.assert_array_equal(k, r)
+
+
+def test_kernel_rejects_misaligned_block():
+    rng = np.random.default_rng(19)
+    table, syms, lens, init = rand_case(rng, 8, 4, 4, 100)
+    with pytest.raises(ValueError):
+        lane_dfa_match(
+            jnp.asarray(table), jnp.asarray(syms), jnp.asarray(lens),
+            jnp.asarray(init), block_t=64,
+        )
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1), qp=st.sampled_from([8, 64, 1536]))
+def test_compose_matches_ref(seed, qp):
+    rng = np.random.default_rng(seed)
+    la = rng.integers(0, qp, size=(qp,)).astype(np.int32)
+    lb = rng.integers(0, qp, size=(qp,)).astype(np.int32)
+    out = np.asarray(compose_lvectors(jnp.asarray(la), jnp.asarray(lb)))
+    ref = np.asarray(compose_ref(la, lb))
+    np.testing.assert_array_equal(out, ref)
+    np.testing.assert_array_equal(out, lb[la])
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1))
+def test_compose_associative(seed):
+    """Eq. 9 composition must be associative — the merge-tree invariant."""
+    rng = np.random.default_rng(seed)
+    qp = 64
+    ls = [rng.integers(0, qp, size=(qp,)).astype(np.int32) for _ in range(3)]
+
+    def comp(a, b):
+        return np.asarray(compose_lvectors(jnp.asarray(a), jnp.asarray(b)))
+
+    left = comp(comp(ls[0], ls[1]), ls[2])
+    right = comp(ls[0], comp(ls[1], ls[2]))
+    np.testing.assert_array_equal(left, right)
+
+
+def test_compose_identity():
+    qp = 64
+    ident = np.arange(qp, dtype=np.int32)
+    rng = np.random.default_rng(23)
+    la = rng.integers(0, qp, size=(qp,)).astype(np.int32)
+    out = np.asarray(compose_lvectors(jnp.asarray(la), jnp.asarray(ident)))
+    np.testing.assert_array_equal(out, la)
+    out = np.asarray(compose_lvectors(jnp.asarray(ident), jnp.asarray(la)))
+    np.testing.assert_array_equal(out, la)

@@ -1,0 +1,127 @@
+"""L2 correctness: the lane_match model vs a from-scratch python oracle.
+
+The model adds the windowing gather (starts/lens into a shared IBase input)
+on top of the L1 kernel; the oracle here recomputes everything from the raw
+arrays with plain python loops.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.model import lane_match, VariantSpec, VARIANTS
+
+
+def oracle(table_flat, inp, starts, lens, init, q, s, t):
+    """delta*(init[l], inp[starts[l] : starts[l]+min(lens[l],t)])."""
+    out = []
+    n = len(inp)
+    for l in range(len(starts)):
+        state = int(init[l])
+        m = min(int(lens[l]), t)
+        for i in range(m):
+            pos = min(max(int(starts[l]) + i, 0), n - 1)
+            sym = int(inp[pos])
+            state = int(table_flat[state * s + sym])
+        out.append(state)
+    return np.array(out, dtype=np.int32)
+
+
+SMALL = VariantSpec("unit_small", lanes=8, q=32, s=8, t=256, n=2048,
+                    block_t=64)
+
+
+def run_model(spec, table_flat, inp, starts, lens, init):
+    fn = spec.bind()
+    (out,) = fn(
+        jnp.asarray(table_flat), jnp.asarray(inp), jnp.asarray(starts),
+        jnp.asarray(lens), jnp.asarray(init),
+    )
+    return np.asarray(out)
+
+
+def rand_model_case(rng, spec):
+    table_flat = rng.integers(0, spec.q, size=(spec.q * spec.s,)).astype(np.int32)
+    inp = rng.integers(0, spec.s, size=(spec.n,)).astype(np.int32)
+    starts = rng.integers(0, spec.n, size=(spec.lanes,)).astype(np.int32)
+    lens = rng.integers(0, spec.t + 1, size=(spec.lanes,)).astype(np.int32)
+    init = rng.integers(0, spec.q, size=(spec.lanes,)).astype(np.int32)
+    return table_flat, inp, starts, lens, init
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1))
+def test_model_matches_oracle_random(seed):
+    rng = np.random.default_rng(seed)
+    spec = SMALL
+    table_flat, inp, starts, lens, init = rand_model_case(rng, spec)
+    got = run_model(spec, table_flat, inp, starts, lens, init)
+    want = oracle(table_flat, inp, starts, lens, init, spec.q, spec.s, spec.t)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_model_chained_calls_equal_one_long_match():
+    """Carrying final->init across calls must equal one sequential run.
+
+    This is the contract the rust runtime relies on to advance chunks longer
+    than the artifact's static T.
+    """
+    rng = np.random.default_rng(3)
+    spec = SMALL
+    table_flat = rng.integers(0, spec.q, size=(spec.q * spec.s,)).astype(np.int32)
+    inp = rng.integers(0, spec.s, size=(spec.n,)).astype(np.int32)
+    total = 700  # needs ceil(700/256) = 3 calls
+    start0 = 100
+    init = rng.integers(0, spec.q, size=(spec.lanes,)).astype(np.int32)
+
+    # chained artifact calls
+    state = init.copy()
+    consumed = 0
+    while consumed < total:
+        step = min(spec.t, total - consumed)
+        starts = np.full((spec.lanes,), start0 + consumed, dtype=np.int32)
+        lens = np.full((spec.lanes,), step, dtype=np.int32)
+        state = run_model(spec, table_flat, inp, starts, lens, state)
+        consumed += step
+
+    # one long python run
+    want = []
+    for l in range(spec.lanes):
+        st_ = int(init[l])
+        for i in range(total):
+            st_ = int(table_flat[st_ * spec.s + int(inp[start0 + i])])
+        want.append(st_)
+    np.testing.assert_array_equal(state, np.array(want, dtype=np.int32))
+
+
+def test_model_lanes_share_chunk_different_initials():
+    """The speculative use-case: same window, 8 candidate initial states."""
+    rng = np.random.default_rng(5)
+    spec = SMALL
+    table_flat = rng.integers(0, spec.q, size=(spec.q * spec.s,)).astype(np.int32)
+    inp = rng.integers(0, spec.s, size=(spec.n,)).astype(np.int32)
+    starts = np.full((spec.lanes,), 64, dtype=np.int32)
+    lens = np.full((spec.lanes,), 200, dtype=np.int32)
+    init = np.arange(spec.lanes, dtype=np.int32)
+    got = run_model(spec, table_flat, inp, starts, lens, init)
+    want = oracle(table_flat, inp, starts, lens, init, spec.q, spec.s, spec.t)
+    np.testing.assert_array_equal(got, want)
+    # The run is a true L-vector fragment: got[j] = delta*(q_j, chunk).
+
+
+def test_variant_specs_are_consistent():
+    for spec in VARIANTS:
+        assert spec.t % spec.block_t == 0
+        assert spec.q >= 2 and spec.s >= 2 and spec.lanes >= 1
+        assert spec.n >= spec.t
+        entry = spec.manifest_entry()
+        assert entry["kind"] == "lane_match"
+        assert entry["q"] * entry["s"] == spec.q * spec.s
+
+
+def test_variant_table_fits_vmem_budget():
+    """DESIGN §Hardware-Adaptation: table must stay VMEM-resident (<16 MiB)."""
+    for spec in VARIANTS:
+        table_bytes = spec.q * spec.s * 4
+        tile_bytes = spec.lanes * spec.block_t * 4
+        assert table_bytes + tile_bytes < 16 * 1024 * 1024

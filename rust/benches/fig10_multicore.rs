@@ -1,0 +1,6 @@
+//! Regenerates Fig. 10 (MTL multicore speedups + I_max gains) of the paper. Run: cargo bench --bench fig10_multicore
+fn main() {
+    for t in specdfa::experiments::run("fig10").expect("known experiment") {
+        t.print();
+    }
+}

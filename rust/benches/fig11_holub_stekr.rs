@@ -1,0 +1,6 @@
+//! Regenerates Fig. 11 (Holub-Stekr comparator speed-downs) of the paper. Run: cargo bench --bench fig11_holub_stekr
+fn main() {
+    for t in specdfa::experiments::run("fig11").expect("known experiment") {
+        t.print();
+    }
+}

@@ -1,0 +1,6 @@
+//! Regenerates Fig. 12 (vs ScanProsite and grep) of the paper. Run: cargo bench --bench fig12_scanprosite
+fn main() {
+    for t in specdfa::experiments::run("fig12").expect("known experiment") {
+        t.print();
+    }
+}

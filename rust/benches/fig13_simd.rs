@@ -1,0 +1,6 @@
+//! Regenerates Fig. 13 (8-lane vectorized matching) of the paper. Run: cargo bench --bench fig13_simd
+fn main() {
+    for t in specdfa::experiments::run("fig13").expect("known experiment") {
+        t.print();
+    }
+}

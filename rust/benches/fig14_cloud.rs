@@ -1,0 +1,6 @@
+//! Regenerates Fig. 14 (EC2 speedups + communication ratio) of the paper. Run: cargo bench --bench fig14_cloud
+fn main() {
+    for t in specdfa::experiments::run("fig14").expect("known experiment") {
+        t.print();
+    }
+}

@@ -1,0 +1,6 @@
+//! Regenerates Fig. 15 (observed vs Eq. 15 prediction) of the paper. Run: cargo bench --bench fig15_predicted
+fn main() {
+    for t in specdfa::experiments::run("fig15").expect("known experiment") {
+        t.print();
+    }
+}

@@ -1,0 +1,9 @@
+//! Regenerates Fig. 16 and Table 4 (initial-state reduction rates).
+//! Run: cargo bench --bench fig16_table4_lookahead
+fn main() {
+    for name in ["fig16", "table4"] {
+        for t in specdfa::experiments::run(name).expect("known experiment") {
+            t.print();
+        }
+    }
+}

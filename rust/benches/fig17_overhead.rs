@@ -1,0 +1,6 @@
+//! Regenerates Fig. 17 (I_max,r computation overhead) of the paper. Run: cargo bench --bench fig17_overhead
+fn main() {
+    for t in specdfa::experiments::run("fig17").expect("known experiment") {
+        t.print();
+    }
+}

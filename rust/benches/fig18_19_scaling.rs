@@ -1,0 +1,10 @@
+//! Regenerates Fig. 18 (shared-memory input-size scaling) and Fig. 19
+//! (cloud input-size scaling). Run: cargo bench --bench fig18_19_scaling
+//! Set SPECDFA_BIG=1 for the 1 GB rows.
+fn main() {
+    for name in ["fig18", "fig19"] {
+        for t in specdfa::experiments::run(name).expect("known experiment") {
+            t.print();
+        }
+    }
+}

@@ -1,0 +1,182 @@
+//! Hot-path micro-benchmarks — the §Perf profiling harness.
+//!
+//! Measures, per layer:
+//!   L3 scalar loop     ns/symbol of the Listing-1 flat-table loop
+//!                      (bytes vs premapped symbols, |Q| sweep for cache
+//!                      behaviour)
+//!   L3 lookahead       I_max,r analysis cost (BFS vs Algorithm 4)
+//!   L3 merge           L-vector compose / lookup throughput
+//!   L1/L2 via PJRT     per-call overhead + per-symbol throughput of the
+//!                      compiled lane_match executable
+//!
+//! Run: cargo bench --bench hotpath   (or `make perf`)
+
+use std::time::Instant;
+
+use specdfa::automata::FlatDfa;
+use specdfa::regex::compile::compile_search;
+use specdfa::runtime::pjrt::{pad_table, VectorUnit};
+use specdfa::speculative::lookahead::{i_max_r_naive, Lookahead};
+use specdfa::speculative::lvector::LVector;
+use specdfa::util::bench::{time_median, Table};
+use specdfa::util::rng::Rng;
+use specdfa::workload::{pcre_like, InputGen};
+
+fn main() {
+    scalar_loop();
+    lookahead_cost();
+    merge_cost();
+    pjrt_cost();
+}
+
+fn scalar_loop() {
+    let mut t = Table::new(
+        "L3 scalar hot loop (Listing 1)",
+        &["|Q|", "ns/sym (bytes)", "ns/sym (premapped)", "ns/state-sym (x4)", "MB/s (bytes)"],
+    );
+    let mut rng = Rng::new(0x607);
+    for target_q in [8usize, 64, 256, 512, 1024] {
+        let p = pcre_like::generate_sized(&mut rng, target_q);
+        let flat = FlatDfa::from_dfa(&p.dfa);
+        let n = 4_000_000;
+        let mut gen = InputGen::new(1);
+        let bytes = gen.ascii_text(n);
+        let syms = p.dfa.map_input(&bytes);
+        let tb = time_median(1, 5, || flat.run_bytes(flat.start_off, &bytes));
+        let ts = time_median(1, 5, || flat.run_syms(flat.start_off, &syms));
+        let t4 = time_median(1, 5, || {
+            flat.run_syms_x4([flat.start_off; 4], &syms)
+        });
+        t.row(vec![
+            p.dfa.num_states.to_string(),
+            format!("{:.3}", tb * 1e9 / n as f64),
+            format!("{:.3}", ts * 1e9 / n as f64),
+            format!("{:.3}", t4 * 1e9 / (4 * n) as f64),
+            format!("{:.0}", n as f64 / tb / 1e6),
+        ]);
+    }
+    t.print();
+}
+
+fn lookahead_cost() {
+    let mut t = Table::new(
+        "L3 lookahead analysis cost",
+        &["|Q|", "bfs r=4 µs", "alg4 r=2 µs"],
+    );
+    let mut rng = Rng::new(0x607_2);
+    for target_q in [32usize, 128, 512] {
+        let p = pcre_like::generate_sized(&mut rng, target_q);
+        let t_bfs = time_median(1, 3, || Lookahead::analyze(&p.dfa, 4).i_max);
+        let t_naive = time_median(1, 3, || i_max_r_naive(&p.dfa, 2));
+        t.row(vec![
+            p.dfa.num_states.to_string(),
+            format!("{:.1}", t_bfs * 1e6),
+            format!("{:.1}", t_naive * 1e6),
+        ]);
+    }
+    t.print();
+}
+
+fn merge_cost() {
+    let mut t = Table::new(
+        "L3 merge primitives",
+        &["|Q|", "compose ns", "lookup ns"],
+    );
+    let mut rng = Rng::new(0x607_3);
+    for q in [16usize, 256, 1536] {
+        let mk = |rng: &mut Rng| {
+            let mut lv = LVector::identity(q);
+            for i in 0..q {
+                lv.set(i as u32, rng.below(q as u64) as u32);
+            }
+            lv
+        };
+        let a = mk(&mut rng);
+        let b = mk(&mut rng);
+        let tc = time_median(10, 50, || a.compose(&b));
+        let tl = time_median(10, 50, || {
+            let mut s = 0u32;
+            for _ in 0..1000 {
+                s = a.get(s % q as u32);
+            }
+            s
+        });
+        t.row(vec![
+            q.to_string(),
+            format!("{:.0}", tc * 1e9),
+            format!("{:.2}", tl * 1e9 / 1000.0),
+        ]);
+    }
+    t.print();
+}
+
+fn pjrt_cost() {
+    let vu = match VectorUnit::load(VectorUnit::default_dir(), "lane8_small")
+    {
+        Ok(v) => v,
+        Err(e) => {
+            println!("PJRT bench skipped: {e:#}");
+            return;
+        }
+    };
+    let dfa = compile_search("(ab|cd)+").unwrap();
+    let table = pad_table(
+        &dfa.table,
+        dfa.num_states as usize,
+        dfa.num_symbols as usize,
+        &vu.spec,
+    )
+    .unwrap();
+    let mut gen = InputGen::new(2);
+    let syms = gen.uniform_syms(&dfa, vu.spec.n);
+    let inp: Vec<i32> = syms.iter().map(|&s| s as i32).collect();
+    let starts = vec![0i32; vu.spec.lanes];
+    let init = vec![0i32; vu.spec.lanes];
+    // device-resident table (set once; §Perf optimization)
+    vu.set_table(&table).unwrap();
+
+    let mut t = Table::new(
+        "L1/L2 PJRT lane_match executable (lane8_small)",
+        &["lens", "µs/call", "ns/lane-sym"],
+    );
+    for frac in [0usize, 1, 2] {
+        let len = match frac {
+            0 => 0,
+            1 => vu.spec.t / 2,
+            _ => vu.spec.t,
+        };
+        let lens = vec![len as i32; vu.spec.lanes];
+        let tc = time_median(3, 15, || {
+            vu.lane_match(&[], &inp, &starts, &lens, &init).unwrap()
+        });
+        let lane_syms = (len * vu.spec.lanes) as f64;
+        t.row(vec![
+            len.to_string(),
+            format!("{:.1}", tc * 1e6),
+            if lane_syms > 0.0 {
+                format!("{:.1}", tc * 1e9 / lane_syms)
+            } else {
+                "-".into()
+            },
+        ]);
+    }
+    t.print();
+
+    // end-to-end call-chain throughput on a long chunk
+    let dfa2 = compile_search("needle").unwrap();
+    let m = specdfa::runtime::simd::SimdMatcher::new(&dfa2, &vu)
+        .unwrap()
+        .lookahead(1);
+    let syms2 = InputGen::new(3).uniform_syms(&dfa2, 1 << 16);
+    let t0 = Instant::now();
+    let out = m.run_syms(&syms2).unwrap();
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "SimdMatcher 64Ki syms: {:.1} ms wall, {} pjrt calls, \
+         chunk-speedup {:.2}x, instr-speedup {:.2}x\n",
+        dt * 1e3,
+        out.pjrt_calls,
+        out.chunk_speedup(),
+        out.instr_speedup()
+    );
+}

@@ -1,0 +1,6 @@
+//! Regenerates Table 3 (load balancing on inhomogeneous clusters) of the paper. Run: cargo bench --bench table3_loadbalance
+fn main() {
+    for t in specdfa::experiments::run("table3").expect("known experiment") {
+        t.print();
+    }
+}

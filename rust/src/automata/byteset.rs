@@ -1,0 +1,118 @@
+//! 256-bit byte sets: the label alphabet of regex ASTs and NFA transitions.
+//!
+//! DFAs run over *dense symbol classes* (the IBase mapping of Fig. 8d), and
+//! classes are computed by partitioning 0..=255 against every ByteSet used
+//! in a pattern — so ByteSet is the bridge between "PCRE regexes over
+//! bytes" and "DFA over a small dense alphabet".
+
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct ByteSet(pub [u64; 4]);
+
+impl ByteSet {
+    pub const EMPTY: ByteSet = ByteSet([0; 4]);
+    pub const ALL: ByteSet = ByteSet([u64::MAX; 4]);
+
+    pub fn single(b: u8) -> Self {
+        let mut s = Self::EMPTY;
+        s.insert(b);
+        s
+    }
+
+    pub fn range(lo: u8, hi: u8) -> Self {
+        let mut s = Self::EMPTY;
+        let mut b = lo;
+        loop {
+            s.insert(b);
+            if b == hi {
+                break;
+            }
+            b += 1;
+        }
+        s
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Self {
+        let mut s = Self::EMPTY;
+        for &b in bytes {
+            s.insert(b);
+        }
+        s
+    }
+
+    #[inline]
+    pub fn insert(&mut self, b: u8) {
+        self.0[(b >> 6) as usize] |= 1u64 << (b & 63);
+    }
+
+    #[inline]
+    pub fn contains(&self, b: u8) -> bool {
+        self.0[(b >> 6) as usize] & (1u64 << (b & 63)) != 0
+    }
+
+    pub fn union(&self, o: &ByteSet) -> ByteSet {
+        ByteSet([
+            self.0[0] | o.0[0],
+            self.0[1] | o.0[1],
+            self.0[2] | o.0[2],
+            self.0[3] | o.0[3],
+        ])
+    }
+
+    pub fn negate(&self) -> ByteSet {
+        ByteSet([!self.0[0], !self.0[1], !self.0[2], !self.0[3]])
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0 == [0; 4]
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = u8> + '_ {
+        (0u16..256).filter(|&b| self.contains(b as u8)).map(|b| b as u8)
+    }
+
+    /// Smallest member, if any.
+    pub fn first(&self) -> Option<u8> {
+        (0u16..256).map(|b| b as u8).find(|&b| self.contains(b))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_and_range() {
+        let a = ByteSet::single(b'a');
+        assert!(a.contains(b'a') && !a.contains(b'b'));
+        let d = ByteSet::range(b'0', b'9');
+        assert_eq!(d.len(), 10);
+        assert!(d.contains(b'5') && !d.contains(b'a'));
+    }
+
+    #[test]
+    fn full_range_boundaries() {
+        let all = ByteSet::range(0, 255);
+        assert_eq!(all.len(), 256);
+        assert_eq!(all, ByteSet::ALL);
+    }
+
+    #[test]
+    fn negate_partition() {
+        let v = ByteSet::from_bytes(b"aeiou");
+        let c = v.negate();
+        assert_eq!(v.len() + c.len(), 256);
+        for b in 0..=255u8 {
+            assert_ne!(v.contains(b), c.contains(b));
+        }
+    }
+
+    #[test]
+    fn union_collects() {
+        let u = ByteSet::single(b'x').union(&ByteSet::single(b'y'));
+        assert_eq!(u.iter().collect::<Vec<_>>(), vec![b'x', b'y']);
+    }
+}

@@ -1,0 +1,175 @@
+//! Grail+-style text format I/O (Fig. 8b).
+//!
+//! The paper's framework "reads DFAs and input strings in Grail+ format and
+//! converts them to our framework's internal representation."  Format:
+//!
+//! ```text
+//! (START) |- 0
+//! 0 a 1
+//! 1 b 2
+//! 2 -| (FINAL)
+//! ```
+//!
+//! Transition labels are single characters (symbol classes are emitted as
+//! their representative byte) or bare integers for dense-symbol DFAs.
+
+use std::fmt::Write as _;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::dfa::Dfa;
+
+/// Serialize a DFA to Grail+ text.  Labels are dense symbol ids.
+pub fn to_grail(dfa: &Dfa) -> String {
+    let mut out = String::new();
+    writeln!(out, "(START) |- {}", dfa.start).unwrap();
+    for q in 0..dfa.num_states {
+        for s in 0..dfa.num_symbols {
+            writeln!(out, "{} {} {}", q, s, dfa.step(q, s)).unwrap();
+        }
+    }
+    for q in 0..dfa.num_states {
+        if dfa.accepting[q as usize] {
+            writeln!(out, "{} -| (FINAL)", q).unwrap();
+        }
+    }
+    out
+}
+
+/// Parse Grail+ text into a DFA over dense symbols.
+///
+/// The state/symbol spaces are the integers that appear; the transition
+/// function must be total over them (we verify and fail otherwise, since
+/// every downstream algorithm assumes a complete DFA).
+pub fn from_grail(text: &str) -> Result<Dfa> {
+    let mut start: Option<u32> = None;
+    let mut finals: Vec<u32> = Vec::new();
+    let mut triples: Vec<(u32, u32, u32)> = Vec::new();
+
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        match toks.as_slice() {
+            ["(START)", "|-", s] => {
+                let s: u32 = s.parse()
+                    .with_context(|| format!("line {}: bad start", lineno + 1))?;
+                if start.replace(s).is_some() {
+                    bail!("line {}: duplicate start", lineno + 1);
+                }
+            }
+            [q, "-|", "(FINAL)"] => {
+                finals.push(q.parse()
+                    .with_context(|| format!("line {}: bad final", lineno + 1))?);
+            }
+            [q, a, t] => {
+                let q: u32 = q.parse()
+                    .with_context(|| format!("line {}: bad src", lineno + 1))?;
+                let a: u32 = a.parse()
+                    .with_context(|| format!("line {}: bad label", lineno + 1))?;
+                let t: u32 = t.parse()
+                    .with_context(|| format!("line {}: bad dst", lineno + 1))?;
+                triples.push((q, a, t));
+            }
+            _ => bail!("line {}: unrecognized: {line:?}", lineno + 1),
+        }
+    }
+
+    let start = start.ok_or_else(|| anyhow!("no (START) line"))?;
+    let num_states = triples
+        .iter()
+        .flat_map(|&(q, _, t)| [q, t])
+        .chain(finals.iter().copied())
+        .chain([start])
+        .max()
+        .unwrap_or(0)
+        + 1;
+    let num_symbols = triples.iter().map(|&(_, a, _)| a).max()
+        .ok_or_else(|| anyhow!("no transitions"))?
+        + 1;
+
+    let mut table = vec![u32::MAX; (num_states * num_symbols) as usize];
+    for (q, a, t) in triples {
+        let cell = &mut table[(q * num_symbols + a) as usize];
+        if *cell != u32::MAX && *cell != t {
+            bail!("nondeterministic: state {q} symbol {a}");
+        }
+        *cell = t;
+    }
+    if table.iter().any(|&t| t == u32::MAX) {
+        bail!("incomplete DFA: missing transitions");
+    }
+
+    let mut accepting = vec![false; num_states as usize];
+    for f in finals {
+        accepting[f as usize] = true;
+    }
+    // identity-ish byte class map (byte b -> min(b, num_symbols-1)); raw
+    // Grail DFAs operate on dense symbols directly.
+    let mut classes = [0u8; 256];
+    for b in 0..256usize {
+        classes[b] = (b as u32).min(num_symbols - 1) as u8;
+    }
+    Ok(Dfa::new(num_states, num_symbols, start, accepting, table, classes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::automata::dfa::tests::fig1_dfa;
+
+    #[test]
+    fn roundtrip_fig1() {
+        let dfa = fig1_dfa();
+        let text = to_grail(&dfa);
+        let back = from_grail(&text).unwrap();
+        assert_eq!(back.num_states, dfa.num_states);
+        assert_eq!(back.num_symbols, dfa.num_symbols);
+        assert_eq!(back.start, dfa.start);
+        assert_eq!(back.accepting, dfa.accepting);
+        assert_eq!(back.table, dfa.table);
+    }
+
+    #[test]
+    fn parse_fig8_example() {
+        // the paper's Fig. 8(b) DFA (4 states + sink row added to complete)
+        let text = "\
+(START) |- 0
+0 0 1
+0 1 2
+1 0 3
+1 1 2
+2 0 1
+2 1 3
+3 0 3
+3 1 3
+2 -| (FINAL)
+3 -| (FINAL)
+";
+        let dfa = from_grail(text).unwrap();
+        assert_eq!(dfa.num_states, 4);
+        assert_eq!(dfa.num_symbols, 2);
+        assert!(dfa.accepting[2] && dfa.accepting[3]);
+        assert!(!dfa.accepting[0]);
+    }
+
+    #[test]
+    fn rejects_incomplete() {
+        let text = "(START) |- 0\n0 0 1\n1 -| (FINAL)\n";
+        assert!(from_grail(text).is_err());
+    }
+
+    #[test]
+    fn rejects_nondeterministic() {
+        let text = "(START) |- 0\n0 0 1\n0 0 0\n1 0 1\n1 -| (FINAL)\n";
+        assert!(from_grail(text).is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(from_grail("hello world foo bar\n").is_err());
+        assert!(from_grail("").is_err());
+    }
+}

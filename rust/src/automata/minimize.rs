@@ -1,0 +1,281 @@
+//! DFA minimization: Hopcroft's O(n·s·log n) partition refinement, plus a
+//! naive Moore refinement used as a cross-checking oracle in tests.
+//!
+//! The paper runs Grail+ to produce "unique minimum DFAs" for all 299 PCRE
+//! and 110 PROSITE patterns; this module is that step.  Input DFAs must be
+//! complete (ours always are — subset construction materializes the sink).
+
+use super::dfa::Dfa;
+
+/// Hopcroft's algorithm. Returns an equivalent minimal complete DFA
+/// (unreachable states are trimmed first).
+pub fn minimize(dfa: &Dfa) -> Dfa {
+    let dfa = dfa.trim_unreachable();
+    let n = dfa.num_states as usize;
+    let s = dfa.num_symbols as usize;
+    if n <= 1 {
+        return dfa;
+    }
+
+    // reverse transitions: rev[c][t] = list of sources q with delta(q,c)=t
+    let mut rev: Vec<Vec<Vec<u32>>> = vec![vec![Vec::new(); n]; s];
+    for q in 0..n {
+        for c in 0..s {
+            let t = dfa.table[q * s + c] as usize;
+            rev[c][t].push(q as u32);
+        }
+    }
+
+    // partition as: block id per state + member lists
+    let mut block_of: Vec<u32> = dfa
+        .accepting
+        .iter()
+        .map(|&a| if a { 1u32 } else { 0u32 })
+        .collect();
+    let mut blocks: Vec<Vec<u32>> = vec![Vec::new(), Vec::new()];
+    for q in 0..n {
+        blocks[block_of[q] as usize].push(q as u32);
+    }
+    // drop empty initial block (all-accepting or none-accepting DFAs)
+    if blocks[0].is_empty() || blocks[1].is_empty() {
+        let keep = if blocks[0].is_empty() { 1 } else { 0 };
+        let b = std::mem::take(&mut blocks[keep]);
+        blocks = vec![b];
+        for q in 0..n {
+            block_of[q] = 0;
+        }
+    }
+
+    // worklist of (block, symbol)
+    let mut work: Vec<(u32, u32)> = Vec::new();
+    let smaller = if blocks.len() == 2 {
+        if blocks[0].len() <= blocks[1].len() { 0 } else { 1 }
+    } else {
+        0
+    };
+    for c in 0..s as u32 {
+        work.push((smaller as u32, c));
+        if blocks.len() == 2 {
+            // classic optimization: only the smaller block is needed, but
+            // pushing both is also correct; push both for simplicity of the
+            // invariant, cost is negligible at our sizes.
+            work.push((1 - smaller as u32, c));
+        }
+    }
+
+    let mut in_splitter: Vec<bool> = vec![false; n];
+    while let Some((a, c)) = work.pop() {
+        // X = preimage of block a under symbol c
+        let mut x: Vec<u32> = Vec::new();
+        for &t in &blocks[a as usize] {
+            for &q in &rev[c as usize][t as usize] {
+                x.push(q);
+            }
+        }
+        if x.is_empty() {
+            continue;
+        }
+        for &q in &x {
+            in_splitter[q as usize] = true;
+        }
+        // find blocks intersecting X
+        let mut touched: Vec<u32> = Vec::new();
+        for &q in &x {
+            let b = block_of[q as usize];
+            if !touched.contains(&b) {
+                touched.push(b);
+            }
+        }
+        for b in touched {
+            let members = &blocks[b as usize];
+            let hit = members
+                .iter()
+                .filter(|&&q| in_splitter[q as usize])
+                .count();
+            if hit == 0 || hit == members.len() {
+                continue; // no split
+            }
+            // split block b into (in X) and (not in X)
+            let (inside, outside): (Vec<u32>, Vec<u32>) = members
+                .iter()
+                .partition(|&&q| in_splitter[q as usize]);
+            let new_id = blocks.len() as u32;
+            // smaller part becomes the new block (Hopcroft's trick)
+            let (keep, new) = if inside.len() <= outside.len() {
+                (outside, inside)
+            } else {
+                (inside, outside)
+            };
+            for &q in &new {
+                block_of[q as usize] = new_id;
+            }
+            blocks[b as usize] = keep;
+            blocks.push(new);
+            for c2 in 0..s as u32 {
+                work.push((new_id, c2));
+            }
+        }
+        for &q in &x {
+            in_splitter[q as usize] = false;
+        }
+    }
+
+    // build quotient DFA
+    let m = blocks.len() as u32;
+    let mut table = vec![0u32; (m as usize) * s];
+    let mut accepting = vec![false; m as usize];
+    for (bid, members) in blocks.iter().enumerate() {
+        let q = members[0] as usize;
+        accepting[bid] = dfa.accepting[q];
+        for c in 0..s {
+            table[bid * s + c] = block_of[dfa.table[q * s + c] as usize];
+        }
+        // sanity in debug: all members agree
+        debug_assert!(members.iter().all(|&qq| {
+            dfa.accepting[qq as usize] == accepting[bid]
+        }));
+    }
+    let start = block_of[dfa.start as usize];
+    Dfa::new(m, s as u32, start, accepting, table, dfa.classes)
+        .trim_unreachable()
+}
+
+/// Naive Moore partition refinement — O(n^2 s) oracle for tests.
+pub fn minimize_moore(dfa: &Dfa) -> Dfa {
+    let dfa = dfa.trim_unreachable();
+    let n = dfa.num_states as usize;
+    let s = dfa.num_symbols as usize;
+    let mut class: Vec<u32> = dfa
+        .accepting
+        .iter()
+        .map(|&a| if a { 1 } else { 0 })
+        .collect();
+    loop {
+        // signature = (class, classes of successors)
+        let mut sig_map: std::collections::HashMap<Vec<u32>, u32> =
+            std::collections::HashMap::new();
+        let mut next_class = vec![0u32; n];
+        for q in 0..n {
+            let mut sig = Vec::with_capacity(s + 1);
+            sig.push(class[q]);
+            for c in 0..s {
+                sig.push(class[dfa.table[q * s + c] as usize]);
+            }
+            let id = sig_map.len() as u32;
+            let e = *sig_map.entry(sig).or_insert(id);
+            next_class[q] = e;
+        }
+        if next_class == class {
+            break;
+        }
+        class = next_class;
+    }
+    let m = class.iter().max().map(|&c| c + 1).unwrap_or(0);
+    let mut table = vec![0u32; (m as usize) * s];
+    let mut accepting = vec![false; m as usize];
+    for q in 0..n {
+        let b = class[q] as usize;
+        accepting[b] = dfa.accepting[q];
+        for c in 0..s {
+            table[b * s + c] = class[dfa.table[q * s + c] as usize];
+        }
+    }
+    Dfa::new(m, s as u32, class[dfa.start as usize], accepting, table,
+             dfa.classes)
+        .trim_unreachable()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::automata::byteset::ByteSet;
+    use crate::automata::nfa::Nfa;
+    use crate::automata::subset::determinize;
+    use crate::regex::ast::Ast;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn lit(s: &str) -> Ast {
+        Ast::Concat(s.bytes().map(|b| Ast::Class(ByteSet::single(b))).collect())
+    }
+
+    #[test]
+    fn minimize_merges_equivalent_states() {
+        // (a|b)(a|b) via two alternatives produces redundant states
+        let ab = Ast::Alt(vec![lit("a"), lit("b")]);
+        let ast = Ast::Concat(vec![ab.clone(), ab]);
+        let dfa = determinize(&Nfa::from_ast(&ast));
+        let min = minimize(&dfa);
+        assert!(min.num_states <= dfa.num_states);
+        // minimal: 4 states: start, after-1, accept, sink
+        assert_eq!(min.num_states, 4);
+        for input in [&b"aa"[..], b"ab", b"ba", b"bb", b"a", b"abc", b""] {
+            assert_eq!(min.accepts_bytes(input), dfa.accepts_bytes(input));
+        }
+    }
+
+    #[test]
+    fn hopcroft_equals_moore_state_count() {
+        let asts = [
+            Ast::Repeat { node: Box::new(lit("ab")), min: 0, max: None },
+            Ast::Alt(vec![lit("cat"), lit("car"), lit("cab")]),
+            Ast::Concat(vec![
+                Ast::Repeat { node: Box::new(lit("a")), min: 2, max: Some(5) },
+                lit("b"),
+            ]),
+        ];
+        for ast in &asts {
+            let dfa = determinize(&Nfa::from_ast(ast));
+            let h = minimize(&dfa);
+            let m = minimize_moore(&dfa);
+            assert_eq!(h.num_states, m.num_states, "ast={ast:?}");
+        }
+    }
+
+    fn random_ast(rng: &mut Rng, depth: usize) -> Ast {
+        if depth == 0 || rng.chance(0.3) {
+            return Ast::Class(ByteSet::single(b'a' + rng.below(3) as u8));
+        }
+        match rng.below(3) {
+            0 => Ast::Concat((0..rng.range_usize(1, 3))
+                .map(|_| random_ast(rng, depth - 1)).collect()),
+            1 => Ast::Alt((0..rng.range_usize(1, 3))
+                .map(|_| random_ast(rng, depth - 1)).collect()),
+            _ => Ast::Repeat {
+                node: Box::new(random_ast(rng, depth - 1)),
+                min: rng.below(2) as u32,
+                max: None,
+            },
+        }
+    }
+
+    #[test]
+    fn prop_minimize_preserves_language_and_is_minimal() {
+        prop::check("hopcroft == moore == original language", 40, |rng| {
+            let ast = random_ast(rng, 3);
+            let dfa = determinize(&Nfa::from_ast(&ast));
+            let h = minimize(&dfa);
+            let m = minimize_moore(&dfa);
+            assert_eq!(h.num_states, m.num_states);
+            for _ in 0..25 {
+                let len = rng.below(10) as usize;
+                let s: Vec<u8> =
+                    (0..len).map(|_| b'a' + rng.below(3) as u8).collect();
+                let want = dfa.accepts_bytes(&s);
+                assert_eq!(h.accepts_bytes(&s), want);
+                assert_eq!(m.accepts_bytes(&s), want);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_minimize_idempotent() {
+        prop::check("minimize(minimize(d)) == minimize(d) size", 20, |rng| {
+            let ast = random_ast(rng, 3);
+            let dfa = determinize(&Nfa::from_ast(&ast));
+            let once = minimize(&dfa);
+            let twice = minimize(&once);
+            assert_eq!(once.num_states, twice.num_states);
+        });
+    }
+}

@@ -1,0 +1,15 @@
+//! Automata substrate: everything the paper delegates to Grail+ [37,15],
+//! built from scratch — Thompson NFA construction, subset construction,
+//! Hopcroft minimization, the flattened SBase/IBase DFA representation of
+//! Fig. 8, and Grail+-style text I/O.
+
+pub mod byteset;
+pub mod dfa;
+pub mod grail;
+pub mod minimize;
+pub mod nfa;
+pub mod subset;
+
+pub use byteset::ByteSet;
+pub use dfa::{Dfa, FlatDfa};
+pub use nfa::Nfa;

@@ -1,0 +1,293 @@
+//! Thompson NFA construction from regex ASTs.
+//!
+//! Each AST node compiles to an (entry, exit) state pair with epsilon and
+//! ByteSet-labelled edges; subset construction (subset.rs) then builds the
+//! dense-alphabet DFA.  This replaces Grail+'s `retofm`/`fmtodfa` pipeline.
+
+use super::byteset::ByteSet;
+use crate::regex::ast::Ast;
+
+/// Nondeterministic finite automaton with epsilon moves.
+/// Single start, single accept (Thompson invariant).
+#[derive(Clone, Debug)]
+pub struct Nfa {
+    /// eps[s] = epsilon successors of s
+    pub eps: Vec<Vec<u32>>,
+    /// trans[s] = labelled edges (set, target)
+    pub trans: Vec<Vec<(ByteSet, u32)>>,
+    pub start: u32,
+    pub accept: u32,
+}
+
+impl Nfa {
+    pub fn num_states(&self) -> usize {
+        self.eps.len()
+    }
+
+    fn new() -> Self {
+        Nfa { eps: Vec::new(), trans: Vec::new(), start: 0, accept: 0 }
+    }
+
+    fn add_state(&mut self) -> u32 {
+        self.eps.push(Vec::new());
+        self.trans.push(Vec::new());
+        (self.eps.len() - 1) as u32
+    }
+
+    fn add_eps(&mut self, from: u32, to: u32) {
+        self.eps[from as usize].push(to);
+    }
+
+    fn add_edge(&mut self, from: u32, set: ByteSet, to: u32) {
+        self.trans[from as usize].push((set, to));
+    }
+
+    /// Compile an AST into a Thompson NFA.
+    pub fn from_ast(ast: &Ast) -> Nfa {
+        let mut nfa = Nfa::new();
+        let start = nfa.add_state();
+        let accept = nfa.add_state();
+        nfa.start = start;
+        nfa.accept = accept;
+        nfa.build(ast, start, accept);
+        nfa
+    }
+
+    /// Wire `ast` between states `from` and `to`.
+    fn build(&mut self, ast: &Ast, from: u32, to: u32) {
+        match ast {
+            Ast::Empty => { /* no path: matches nothing */ }
+            Ast::Epsilon => self.add_eps(from, to),
+            Ast::Class(set) => {
+                if set.is_empty() {
+                    // empty class matches nothing
+                } else {
+                    self.add_edge(from, *set, to);
+                }
+            }
+            Ast::Concat(parts) => {
+                if parts.is_empty() {
+                    self.add_eps(from, to);
+                    return;
+                }
+                let mut cur = from;
+                for (i, p) in parts.iter().enumerate() {
+                    let nxt = if i + 1 == parts.len() {
+                        to
+                    } else {
+                        self.add_state()
+                    };
+                    self.build(p, cur, nxt);
+                    cur = nxt;
+                }
+            }
+            Ast::Alt(alts) => {
+                for a in alts {
+                    let s = self.add_state();
+                    let e = self.add_state();
+                    self.add_eps(from, s);
+                    self.build(a, s, e);
+                    self.add_eps(e, to);
+                }
+            }
+            Ast::Repeat { node, min, max } => {
+                self.build_repeat(node, *min, *max, from, to);
+            }
+        }
+    }
+
+    fn build_repeat(
+        &mut self,
+        node: &Ast,
+        min: u32,
+        max: Option<u32>,
+        from: u32,
+        to: u32,
+    ) {
+        match max {
+            None => {
+                // node{min,}: min copies then a star loop
+                let mut cur = from;
+                for _ in 0..min {
+                    let nxt = self.add_state();
+                    self.build(node, cur, nxt);
+                    cur = nxt;
+                }
+                // star: cur -e-> loop_in, loop: node loop_in->loop_in, -e-> to
+                let hub = self.add_state();
+                self.add_eps(cur, hub);
+                let s = self.add_state();
+                let e = self.add_state();
+                self.add_eps(hub, s);
+                self.build(node, s, e);
+                self.add_eps(e, hub);
+                self.add_eps(hub, to);
+            }
+            Some(max) => {
+                assert!(max >= min, "bad repeat bounds");
+                // min mandatory copies, then (max-min) optional copies
+                let mut cur = from;
+                for _ in 0..min {
+                    let nxt = self.add_state();
+                    self.build(node, cur, nxt);
+                    cur = nxt;
+                }
+                for _ in min..max {
+                    let nxt = self.add_state();
+                    self.build(node, cur, nxt);
+                    self.add_eps(cur, to);
+                    cur = nxt;
+                }
+                self.add_eps(cur, to);
+            }
+        }
+    }
+
+    /// Epsilon-closure of a set of states (sorted, deduped).
+    pub fn eps_closure(&self, states: &[u32]) -> Vec<u32> {
+        let mut seen = vec![false; self.num_states()];
+        let mut stack: Vec<u32> = Vec::new();
+        for &s in states {
+            if !seen[s as usize] {
+                seen[s as usize] = true;
+                stack.push(s);
+            }
+        }
+        let mut out = stack.clone();
+        while let Some(s) = stack.pop() {
+            for &t in &self.eps[s as usize] {
+                if !seen[t as usize] {
+                    seen[t as usize] = true;
+                    stack.push(t);
+                    out.push(t);
+                }
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+
+    /// Direct NFA simulation over raw bytes — the slow ground truth used by
+    /// tests to validate the whole NFA->DFA->minimize pipeline.
+    pub fn accepts(&self, input: &[u8]) -> bool {
+        let mut cur = self.eps_closure(&[self.start]);
+        for &b in input {
+            let mut nxt: Vec<u32> = Vec::new();
+            for &s in &cur {
+                for &(set, t) in &self.trans[s as usize] {
+                    if set.contains(b) && !nxt.contains(&t) {
+                        nxt.push(t);
+                    }
+                }
+            }
+            cur = self.eps_closure(&nxt);
+            if cur.is_empty() {
+                return false;
+            }
+        }
+        cur.contains(&self.accept)
+    }
+
+    /// All ByteSets appearing on edges (for byte-class computation).
+    pub fn edge_sets(&self) -> Vec<ByteSet> {
+        let mut v: Vec<ByteSet> = Vec::new();
+        for edges in &self.trans {
+            for &(set, _) in edges {
+                if !v.contains(&set) {
+                    v.push(set);
+                }
+            }
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::regex::ast::Ast;
+
+    fn lit(s: &str) -> Ast {
+        Ast::Concat(s.bytes().map(|b| Ast::Class(ByteSet::single(b))).collect())
+    }
+
+    #[test]
+    fn literal_accepts_exact() {
+        let nfa = Nfa::from_ast(&lit("abc"));
+        assert!(nfa.accepts(b"abc"));
+        assert!(!nfa.accepts(b"ab"));
+        assert!(!nfa.accepts(b"abcd"));
+        assert!(!nfa.accepts(b""));
+    }
+
+    #[test]
+    fn alternation() {
+        let ast = Ast::Alt(vec![lit("cat"), lit("dog")]);
+        let nfa = Nfa::from_ast(&ast);
+        assert!(nfa.accepts(b"cat") && nfa.accepts(b"dog"));
+        assert!(!nfa.accepts(b"cow"));
+    }
+
+    #[test]
+    fn star_repeats() {
+        // (ab)*
+        let ast = Ast::Repeat { node: Box::new(lit("ab")), min: 0, max: None };
+        let nfa = Nfa::from_ast(&ast);
+        assert!(nfa.accepts(b""));
+        assert!(nfa.accepts(b"ab"));
+        assert!(nfa.accepts(b"ababab"));
+        assert!(!nfa.accepts(b"aba"));
+    }
+
+    #[test]
+    fn bounded_repeat() {
+        // a{2,4}
+        let ast = Ast::Repeat {
+            node: Box::new(lit("a")),
+            min: 2,
+            max: Some(4),
+        };
+        let nfa = Nfa::from_ast(&ast);
+        assert!(!nfa.accepts(b"a"));
+        assert!(nfa.accepts(b"aa"));
+        assert!(nfa.accepts(b"aaa"));
+        assert!(nfa.accepts(b"aaaa"));
+        assert!(!nfa.accepts(b"aaaaa"));
+    }
+
+    #[test]
+    fn exact_repeat_and_plus() {
+        // a{3}
+        let ast = Ast::Repeat { node: Box::new(lit("a")), min: 3, max: Some(3) };
+        let nfa = Nfa::from_ast(&ast);
+        assert!(nfa.accepts(b"aaa") && !nfa.accepts(b"aa") && !nfa.accepts(b"aaaa"));
+        // a+ == a{1,}
+        let plus = Ast::Repeat { node: Box::new(lit("a")), min: 1, max: None };
+        let nfa = Nfa::from_ast(&plus);
+        assert!(!nfa.accepts(b"") && nfa.accepts(b"a") && nfa.accepts(b"aaaa"));
+    }
+
+    #[test]
+    fn empty_language() {
+        let nfa = Nfa::from_ast(&Ast::Empty);
+        assert!(!nfa.accepts(b"") && !nfa.accepts(b"a"));
+        let nfa = Nfa::from_ast(&Ast::Epsilon);
+        assert!(nfa.accepts(b"") && !nfa.accepts(b"a"));
+    }
+
+    #[test]
+    fn motivating_example_a_star_b_c_star() {
+        // a*bc* — the paper's Fig. 1 DFA
+        let ast = Ast::Concat(vec![
+            Ast::Repeat { node: Box::new(lit("a")), min: 0, max: None },
+            lit("b"),
+            Ast::Repeat { node: Box::new(lit("c")), min: 0, max: None },
+        ]);
+        let nfa = Nfa::from_ast(&ast);
+        assert!(nfa.accepts(b"aaaaaaabcccc")); // Fig. 1(b) input
+        assert!(nfa.accepts(b"b"));
+        assert!(!nfa.accepts(b"ab c"[..3].as_ref()));
+        assert!(!nfa.accepts(b"aacc"));
+        assert!(!nfa.accepts(b"abb"));
+    }
+}

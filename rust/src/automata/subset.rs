@@ -1,0 +1,152 @@
+//! Subset construction: Thompson NFA -> complete dense-alphabet DFA.
+//!
+//! The 256-byte alphabet is first compressed into equivalence classes
+//! against every ByteSet used by the NFA (dfa.rs::byte_classes) — the IBase
+//! symbol mapping of Fig. 8(d) — then the classic worklist construction
+//! runs over the dense class alphabet.  The resulting DFA is complete: a
+//! sink is materialized for dead transitions (the paper's unique q_e).
+
+use std::collections::HashMap;
+
+use super::dfa::{byte_classes, Dfa};
+use super::nfa::Nfa;
+
+/// Determinize an NFA.  Returns a complete DFA (with sink if needed).
+pub fn determinize(nfa: &Nfa) -> Dfa {
+    // 1. byte classes from the NFA's edge sets
+    let sets = nfa.edge_sets();
+    let (classes, num_classes) = byte_classes(&sets);
+    // representative byte per class
+    let mut reps: Vec<u8> = vec![0; num_classes as usize];
+    for b in (0..=255u8).rev() {
+        reps[classes[b as usize] as usize] = b;
+    }
+
+    // 2. worklist subset construction over class alphabet
+    let mut state_ids: HashMap<Vec<u32>, u32> = HashMap::new();
+    let mut subsets: Vec<Vec<u32>> = Vec::new();
+    let mut table: Vec<u32> = Vec::new();
+
+    let start_set = nfa.eps_closure(&[nfa.start]);
+    state_ids.insert(start_set.clone(), 0);
+    subsets.push(start_set);
+    let mut worklist = vec![0u32];
+    // reserve row for state 0
+    table.resize(num_classes as usize, u32::MAX);
+
+    while let Some(q) = worklist.pop() {
+        let subset = subsets[q as usize].clone();
+        for c in 0..num_classes {
+            let rep = reps[c as usize];
+            let mut targets: Vec<u32> = Vec::new();
+            for &s in &subset {
+                for &(set, t) in &nfa.trans[s as usize] {
+                    if set.contains(rep) && !targets.contains(&t) {
+                        targets.push(t);
+                    }
+                }
+            }
+            let closure = nfa.eps_closure(&targets);
+            let id = match state_ids.get(&closure) {
+                Some(&id) => id,
+                None => {
+                    let id = subsets.len() as u32;
+                    state_ids.insert(closure.clone(), id);
+                    subsets.push(closure);
+                    table.extend(std::iter::repeat(u32::MAX)
+                        .take(num_classes as usize));
+                    worklist.push(id);
+                    id
+                }
+            };
+            table[(q * num_classes + c) as usize] = id;
+        }
+    }
+
+    let num_states = subsets.len() as u32;
+    let accepting: Vec<bool> = subsets
+        .iter()
+        .map(|sub| sub.contains(&nfa.accept))
+        .collect();
+    debug_assert!(table.iter().all(|&t| t != u32::MAX));
+    Dfa::new(num_states, num_classes, 0, accepting, table, classes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::automata::byteset::ByteSet;
+    use crate::regex::ast::Ast;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn lit(s: &str) -> Ast {
+        Ast::Concat(s.bytes().map(|b| Ast::Class(ByteSet::single(b))).collect())
+    }
+
+    #[test]
+    fn determinize_literal() {
+        let nfa = Nfa::from_ast(&lit("ab"));
+        let dfa = determinize(&nfa);
+        assert!(dfa.accepts_bytes(b"ab"));
+        assert!(!dfa.accepts_bytes(b"a"));
+        assert!(!dfa.accepts_bytes(b"abc"));
+        // complete: every entry valid
+        assert_eq!(dfa.table.len(),
+                   (dfa.num_states * dfa.num_symbols) as usize);
+    }
+
+    #[test]
+    fn determinize_has_sink_for_dead_input() {
+        let nfa = Nfa::from_ast(&lit("ab"));
+        let dfa = determinize(&nfa).trim_unreachable();
+        assert!(dfa.sink().is_some());
+    }
+
+    /// Random ASTs: DFA must agree with direct NFA simulation.
+    fn random_ast(rng: &mut Rng, depth: usize) -> Ast {
+        if depth == 0 || rng.chance(0.3) {
+            let b = b'a' + rng.below(3) as u8; // small alphabet {a,b,c}
+            return Ast::Class(ByteSet::single(b));
+        }
+        match rng.below(4) {
+            0 => Ast::Concat((0..rng.range_usize(1, 3))
+                .map(|_| random_ast(rng, depth - 1)).collect()),
+            1 => Ast::Alt((0..rng.range_usize(1, 3))
+                .map(|_| random_ast(rng, depth - 1)).collect()),
+            2 => Ast::Repeat {
+                node: Box::new(random_ast(rng, depth - 1)),
+                min: 0,
+                max: None,
+            },
+            _ => {
+                let min = rng.below(3) as u32;
+                let max = min + rng.below(3) as u32;
+                Ast::Repeat {
+                    node: Box::new(random_ast(rng, depth - 1)),
+                    min,
+                    max: Some(max),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_dfa_equals_nfa_on_random_strings() {
+        prop::check("determinize preserves language", 60, |rng| {
+            let ast = random_ast(rng, 3);
+            let nfa = Nfa::from_ast(&ast);
+            let dfa = determinize(&nfa);
+            for _ in 0..20 {
+                let len = rng.below(12) as usize;
+                let s: Vec<u8> =
+                    (0..len).map(|_| b'a' + rng.below(3) as u8).collect();
+                assert_eq!(
+                    nfa.accepts(&s),
+                    dfa.accepts_bytes(&s),
+                    "ast={ast:?} input={s:?}"
+                );
+            }
+        });
+    }
+}

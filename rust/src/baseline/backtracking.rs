@@ -1,0 +1,300 @@
+//! Perl-style backtracking regex engine — the ScanProsite stand-in for
+//! Fig. 12(a).
+//!
+//! ScanProsite [14,39] is implemented in Perl, whose regex engine performs
+//! recursive backtracking and, for an unanchored pattern, re-scans from
+//! every input position.  This engine reproduces exactly that execution
+//! model (same asymptotic class, same per-position restart behaviour), so
+//! the speedup ratios of Fig. 12 are driven by the same mechanism as in
+//! the paper: per-byte interpretive overhead × positions × backtracking.
+//!
+//! A fuel counter guards against the exponential blowup cases so the
+//! benchmark harness can cap runtimes; `None` = ran out of fuel.
+
+use crate::regex::ast::Ast;
+
+pub struct Backtracker<'a> {
+    ast: &'a Ast,
+    fuel: u64,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BacktrackStats {
+    /// recursive match() invocations — the work metric
+    pub steps: u64,
+    pub matched: bool,
+}
+
+impl<'a> Backtracker<'a> {
+    pub fn new(ast: &'a Ast) -> Self {
+        Backtracker { ast, fuel: u64::MAX }
+    }
+
+    pub fn with_fuel(ast: &'a Ast, fuel: u64) -> Self {
+        Backtracker { ast, fuel }
+    }
+
+    /// Whole-input match (anchored at both ends).
+    pub fn is_match(&self, input: &[u8]) -> Option<BacktrackStats> {
+        let mut steps = 0u64;
+        let ok = match_node(
+            self.ast,
+            input,
+            0,
+            &mut steps,
+            self.fuel,
+            &mut |pos, steps_ref| {
+                let _ = steps_ref;
+                pos == input.len()
+            },
+        )?;
+        Some(BacktrackStats { steps, matched: ok })
+    }
+
+    /// Match starting exactly at `start`, any suffix allowed (one step of
+    /// the Perl scan loop).
+    pub fn search_at(
+        &self,
+        input: &[u8],
+        start: usize,
+    ) -> Option<BacktrackStats> {
+        let mut steps = 0u64;
+        let ok = match_node(
+            self.ast,
+            input,
+            start,
+            &mut steps,
+            self.fuel,
+            &mut |_pos, _| true,
+        )?;
+        Some(BacktrackStats { steps, matched: ok })
+    }
+
+    /// Unanchored search: try to match at every start position, first
+    /// match wins (the Perl `/pattern/` scan loop).
+    pub fn search(&self, input: &[u8]) -> Option<BacktrackStats> {
+        let mut total_steps = 0u64;
+        for start in 0..=input.len() {
+            let mut steps = 0u64;
+            let ok = match_node(
+                self.ast,
+                input,
+                start,
+                &mut steps,
+                self.fuel.saturating_sub(total_steps),
+                &mut |_pos, _| true, // any suffix completes a search match
+            )?;
+            total_steps += steps;
+            if ok {
+                return Some(BacktrackStats {
+                    steps: total_steps,
+                    matched: true,
+                });
+            }
+        }
+        Some(BacktrackStats { steps: total_steps, matched: false })
+    }
+}
+
+/// CPS backtracking matcher: `k(pos)` is the continuation deciding whether
+/// the rest of the input completes the match.
+fn match_node(
+    ast: &Ast,
+    input: &[u8],
+    pos: usize,
+    steps: &mut u64,
+    fuel: u64,
+    k: &mut dyn FnMut(usize, &mut u64) -> bool,
+) -> Option<bool> {
+    *steps += 1;
+    if *steps > fuel {
+        return None; // out of fuel: caller treats as "too slow"
+    }
+    match ast {
+        Ast::Empty => Some(false),
+        Ast::Epsilon => Some(k(pos, steps)),
+        Ast::Class(set) => {
+            if pos < input.len() && set.contains(input[pos]) {
+                Some(k(pos + 1, steps))
+            } else {
+                Some(false)
+            }
+        }
+        Ast::Concat(parts) => match_seq(parts, input, pos, steps, fuel, k),
+        Ast::Alt(alts) => {
+            for a in alts {
+                if match_node(a, input, pos, steps, fuel, k)? {
+                    return Some(true);
+                }
+            }
+            Some(false)
+        }
+        Ast::Repeat { node, min, max } => {
+            match_repeat(node, *min, *max, input, pos, steps, fuel, k)
+        }
+    }
+}
+
+fn match_seq(
+    parts: &[Ast],
+    input: &[u8],
+    pos: usize,
+    steps: &mut u64,
+    fuel: u64,
+    k: &mut dyn FnMut(usize, &mut u64) -> bool,
+) -> Option<bool> {
+    match parts.split_first() {
+        None => Some(k(pos, steps)),
+        Some((head, rest)) => {
+            // propagate fuel exhaustion through the continuation via a flag
+            let mut exhausted = false;
+            let out = match_node(head, input, pos, steps, fuel, &mut |p, st| {
+                match match_seq(rest, input, p, st, fuel, k) {
+                    Some(b) => b,
+                    None => {
+                        exhausted = true;
+                        true // unwind quickly
+                    }
+                }
+            })?;
+            if exhausted {
+                None
+            } else {
+                Some(out)
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn match_repeat(
+    node: &Ast,
+    min: u32,
+    max: Option<u32>,
+    input: &[u8],
+    pos: usize,
+    steps: &mut u64,
+    fuel: u64,
+    k: &mut dyn FnMut(usize, &mut u64) -> bool,
+) -> Option<bool> {
+    // greedy: try to consume as many copies as possible, backtracking down
+    fn go(
+        node: &Ast,
+        taken: u32,
+        min: u32,
+        max: Option<u32>,
+        input: &[u8],
+        pos: usize,
+        steps: &mut u64,
+        fuel: u64,
+        k: &mut dyn FnMut(usize, &mut u64) -> bool,
+    ) -> Option<bool> {
+        let can_take_more = max.map_or(true, |m| taken < m);
+        if can_take_more {
+            let mut exhausted = false;
+            let advanced =
+                match_node(node, input, pos, steps, fuel, &mut |p, st| {
+                    if p == pos {
+                        return false; // null-width loop guard
+                    }
+                    match go(node, taken + 1, min, max, input, p, st, fuel, k)
+                    {
+                        Some(b) => b,
+                        None => {
+                            exhausted = true;
+                            true
+                        }
+                    }
+                })?;
+            if exhausted {
+                return None;
+            }
+            if advanced {
+                return Some(true);
+            }
+        }
+        if taken >= min {
+            Some(k(pos, steps))
+        } else {
+            Some(false)
+        }
+    }
+    go(node, 0, min, max, input, pos, steps, fuel, k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::regex::compile::{compile_exact, compile_search};
+    use crate::regex::parser;
+    use crate::util::prop;
+
+    fn bt_match(pat: &str, input: &[u8]) -> bool {
+        let p = parser::parse(pat).unwrap();
+        Backtracker::new(&p.ast).is_match(input).unwrap().matched
+    }
+
+    fn bt_search(pat: &str, input: &[u8]) -> bool {
+        let p = parser::parse(pat).unwrap();
+        Backtracker::new(&p.ast).search(input).unwrap().matched
+    }
+
+    #[test]
+    fn basic_semantics() {
+        assert!(bt_match("a*bc*", b"aaabccc"));
+        assert!(!bt_match("a*bc*", b"aaacccb"));
+        assert!(bt_match("(ab|cd)+", b"abcdab"));
+        assert!(!bt_match("(ab|cd)+", b""));
+        assert!(bt_match("x{2,3}", b"xxx"));
+        assert!(!bt_match("x{2,3}", b"xxxx"));
+    }
+
+    #[test]
+    fn search_vs_match() {
+        assert!(bt_search("needle", b"hay needle hay"));
+        assert!(!bt_match("needle", b"hay needle hay"));
+        assert!(!bt_search("needle", b"haystack"));
+    }
+
+    #[test]
+    fn prop_agrees_with_dfa() {
+        let pats = ["a(b|c)*d", "x{1,3}y?", "(ab)+|(ba)+", "[abc]{2}d"];
+        prop::check("backtracker == DFA", 30, |rng| {
+            let pat = pats[rng.usize_below(pats.len())];
+            let len = rng.below(12) as usize;
+            let s: Vec<u8> =
+                (0..len).map(|_| b"abcdxy"[rng.usize_below(6)]).collect();
+            let dfa_exact = compile_exact(pat).unwrap();
+            assert_eq!(bt_match(pat, &s), dfa_exact.accepts_bytes(&s),
+                       "match {pat} {s:?}");
+            let dfa_search = compile_search(pat).unwrap();
+            assert_eq!(bt_search(pat, &s), dfa_search.accepts_bytes(&s),
+                       "search {pat} {s:?}");
+        });
+    }
+
+    #[test]
+    fn null_width_star_terminates() {
+        assert!(bt_match("(a*)*b", b"aaab"));
+        assert!(!bt_match("(a*)*b", b"aaac"));
+    }
+
+    #[test]
+    fn fuel_exhaustion_detected() {
+        // classic catastrophic backtracking: (a+)+b vs aaaa...c
+        let p = parser::parse("(a+)+b").unwrap();
+        let input = vec![b'a'; 28];
+        let bt = Backtracker::with_fuel(&p.ast, 100_000);
+        assert!(bt.is_match(&input).is_none(), "should run out of fuel");
+    }
+
+    #[test]
+    fn steps_grow_with_positions() {
+        // unanchored search on a non-matching input is Θ(n·cost(pattern))
+        let p = parser::parse("abc").unwrap();
+        let bt = Backtracker::new(&p.ast);
+        let short = bt.search(&vec![b'z'; 100]).unwrap().steps;
+        let long = bt.search(&vec![b'z'; 1000]).unwrap().steps;
+        assert!(long > short * 5, "short={short} long={long}");
+    }
+}

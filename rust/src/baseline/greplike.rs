@@ -1,0 +1,292 @@
+//! grep-style matcher — the UNIX grep stand-in for Fig. 12(b).
+//!
+//! GNU grep builds a DFA and uses Boyer–Moore on a required literal to
+//! skip input [17]; it is much faster than Perl but still pays per-line /
+//! per-candidate verification overhead.  This engine reproduces that
+//! architecture honestly:
+//!
+//!  * extract a mandatory literal factor from the AST (if any),
+//!  * Boyer–Moore–Horspool scan for candidate positions,
+//!  * verify candidates with a bounded backtracking match,
+//!  * fall back to a per-position NFA (Thompson) simulation when the
+//!    pattern has no usable literal.
+//!
+//! The point of the comparison (as in the paper) is architectural: a
+//! per-candidate engine does strictly more work per byte than the paper's
+//! single-pass table loop, and cannot be parallelized by chunking without
+//! the speculation machinery.
+
+use crate::automata::byteset::ByteSet;
+use crate::baseline::backtracking::Backtracker;
+use crate::regex::ast::Ast;
+
+pub struct GrepLike<'a> {
+    ast: &'a Ast,
+    literal: Option<Vec<u8>>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GrepStats {
+    pub matched: bool,
+    /// bytes inspected by the BMH scan + verifier steps (work metric)
+    pub work: u64,
+    pub candidates: u64,
+}
+
+impl<'a> GrepLike<'a> {
+    pub fn new(ast: &'a Ast) -> Self {
+        GrepLike { ast, literal: required_literal(ast) }
+    }
+
+    pub fn required_literal(&self) -> Option<&[u8]> {
+        self.literal.as_deref()
+    }
+
+    /// Does `input` contain a match of the pattern?
+    pub fn search(&self, input: &[u8]) -> GrepStats {
+        match &self.literal {
+            Some(lit) if !lit.is_empty() => {
+                self.search_with_literal(input, lit)
+            }
+            _ => self.search_nfa(input),
+        }
+    }
+
+    fn search_with_literal(&self, input: &[u8], lit: &[u8]) -> GrepStats {
+        let mut work = 0u64;
+        let mut candidates = 0u64;
+        let mut from = 0usize;
+        while let Some(hit) = bmh_find(&mut work, input, lit, from) {
+            candidates += 1;
+            // verify: some match must straddle this literal occurrence;
+            // try all starts up to the literal hit (bounded by pattern
+            // reach, approximated by scanning backwards a window)
+            let bt = Backtracker::with_fuel(self.ast, 1_000_000);
+            let lo = hit.saturating_sub(4096);
+            for start in lo..=hit {
+                if let Some(stats) = suffix_match(&bt, input, start) {
+                    work += stats.0;
+                    if stats.1 {
+                        return GrepStats { matched: true, work, candidates };
+                    }
+                } else {
+                    break; // fuel exceeded — stop verifying this candidate
+                }
+            }
+            from = hit + 1;
+        }
+        GrepStats { matched: false, work, candidates }
+    }
+
+    fn search_nfa(&self, input: &[u8]) -> GrepStats {
+        // Thompson simulation restarted at every position (grep's slow
+        // path for literal-free patterns on short inputs)
+        use crate::automata::nfa::Nfa;
+        let nfa = Nfa::from_ast(self.ast);
+        let mut work = 0u64;
+        for start in 0..=input.len() {
+            let mut cur = nfa.eps_closure(&[nfa.start]);
+            if cur.contains(&nfa.accept) {
+                return GrepStats { matched: true, work, candidates: 0 };
+            }
+            for &b in &input[start..] {
+                work += cur.len() as u64;
+                let mut nxt: Vec<u32> = Vec::new();
+                for &s in &cur {
+                    for &(set, t) in &nfa.trans[s as usize] {
+                        if set.contains(b) && !nxt.contains(&t) {
+                            nxt.push(t);
+                        }
+                    }
+                }
+                cur = nfa.eps_closure(&nxt);
+                if cur.contains(&nfa.accept) {
+                    return GrepStats { matched: true, work, candidates: 0 };
+                }
+                if cur.is_empty() {
+                    break;
+                }
+            }
+        }
+        GrepStats { matched: false, work, candidates: 0 }
+    }
+}
+
+/// Match the pattern starting exactly at `start` with any suffix allowed.
+/// Returns (steps, matched), or None on fuel exhaustion.
+fn suffix_match(
+    bt: &Backtracker,
+    input: &[u8],
+    start: usize,
+) -> Option<(u64, bool)> {
+    let st = bt.search_at(input, start)?;
+    Some((st.steps, st.matched))
+}
+
+/// Boyer–Moore–Horspool: find `needle` in `haystack[from..]`, counting
+/// inspected bytes into `work`.
+fn bmh_find(
+    work: &mut u64,
+    haystack: &[u8],
+    needle: &[u8],
+    from: usize,
+) -> Option<usize> {
+    let n = haystack.len();
+    let m = needle.len();
+    if m == 0 || from + m > n {
+        return None;
+    }
+    // bad-character shift table
+    let mut shift = [m; 256];
+    for (i, &b) in needle[..m - 1].iter().enumerate() {
+        shift[b as usize] = m - 1 - i;
+    }
+    let mut pos = from;
+    while pos + m <= n {
+        let last = haystack[pos + m - 1];
+        *work += 1;
+        if last == needle[m - 1] {
+            let mut i = m - 1;
+            while i > 0 && haystack[pos + i - 1] == needle[i - 1] {
+                *work += 1;
+                i -= 1;
+            }
+            if i == 0 {
+                return Some(pos);
+            }
+        }
+        pos += shift[last as usize];
+    }
+    None
+}
+
+/// Extract a mandatory literal factor: a byte string every match must
+/// contain.  Conservative (None when unsure).
+pub fn required_literal(ast: &Ast) -> Option<Vec<u8>> {
+    fn singleton(set: &ByteSet) -> Option<u8> {
+        if set.len() == 1 { set.first() } else { None }
+    }
+    fn walk(ast: &Ast) -> Option<Vec<u8>> {
+        match ast {
+            Ast::Class(set) => singleton(set).map(|b| vec![b]),
+            Ast::Concat(parts) => {
+                // longest run of singleton classes anywhere in the concat
+                let mut best: Vec<u8> = Vec::new();
+                let mut cur: Vec<u8> = Vec::new();
+                for p in parts {
+                    match p {
+                        Ast::Class(set) => {
+                            if let Some(b) = singleton(set) {
+                                cur.push(b);
+                                continue;
+                            }
+                            if cur.len() > best.len() {
+                                best = std::mem::take(&mut cur);
+                            } else {
+                                cur.clear();
+                            }
+                        }
+                        Ast::Repeat { node, min, max }
+                            if *min >= 1 && *max == Some(*min) =>
+                        {
+                            // exact repeat: node^min is fully mandatory and
+                            // contiguous on both sides
+                            if let Some(lit) = walk(node) {
+                                for _ in 0..*min {
+                                    cur.extend_from_slice(&lit);
+                                }
+                                continue;
+                            }
+                            if cur.len() > best.len() {
+                                best = std::mem::take(&mut cur);
+                            } else {
+                                cur.clear();
+                            }
+                        }
+                        Ast::Repeat { node, min, .. } if *min >= 1 => {
+                            // variable repeat: the first copy is contiguous
+                            // with the prefix, but nothing after it is
+                            if let Some(mut lit) = walk(node) {
+                                cur.append(&mut lit);
+                            }
+                            if cur.len() > best.len() {
+                                best = std::mem::take(&mut cur);
+                            } else {
+                                cur.clear();
+                            }
+                        }
+                        _ => {
+                            if cur.len() > best.len() {
+                                best = std::mem::take(&mut cur);
+                            } else {
+                                cur.clear();
+                            }
+                        }
+                    }
+                }
+                if cur.len() > best.len() {
+                    best = cur;
+                }
+                if best.is_empty() { None } else { Some(best) }
+            }
+            Ast::Repeat { node, min, .. } if *min >= 1 => walk(node),
+            _ => None,
+        }
+    }
+    walk(ast).filter(|l| !l.is_empty())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::regex::compile::compile_search;
+    use crate::regex::parser;
+    use crate::util::prop;
+
+    fn grep(pat: &str, input: &[u8]) -> bool {
+        let p = parser::parse(pat).unwrap();
+        GrepLike::new(&p.ast).search(input).matched
+    }
+
+    #[test]
+    fn literal_extraction() {
+        let p = parser::parse("xa+needle[0-9]?").unwrap();
+        let lit = required_literal(&p.ast).unwrap();
+        assert_eq!(lit, b"needle".to_vec());
+        let p = parser::parse("(a|b)c*").unwrap();
+        assert!(required_literal(&p.ast).is_none());
+    }
+
+    #[test]
+    fn bmh_finds_all() {
+        let mut w = 0;
+        assert_eq!(bmh_find(&mut w, b"hello world", b"world", 0), Some(6));
+        assert_eq!(bmh_find(&mut w, b"aaaa", b"aa", 1), Some(1));
+        assert_eq!(bmh_find(&mut w, b"abc", b"d", 0), None);
+        assert_eq!(bmh_find(&mut w, b"abc", b"abcd", 0), None);
+    }
+
+    #[test]
+    fn search_semantics() {
+        assert!(grep("needle", b"hay needle hay"));
+        assert!(!grep("needle", b"haystack"));
+        assert!(grep("a+b", b"xxaaabyy"));
+        assert!(grep("(a|b)+", b"zzzazz")); // NFA fallback path
+        assert!(!grep("(a|b)+c", b"zzz"));
+    }
+
+    #[test]
+    fn prop_agrees_with_dfa_search() {
+        let pats = ["abc", "a+b", "ne{2}dle", "(cat|dog)s?", "[0-9]+x"];
+        prop::check("greplike == DFA search", 30, |rng| {
+            let pat = pats[rng.usize_below(pats.len())];
+            let len = rng.below(60) as usize;
+            let s: Vec<u8> = (0..len)
+                .map(|_| b"abcdnes togx0123 "[rng.usize_below(17)])
+                .collect();
+            let dfa = compile_search(pat).unwrap();
+            assert_eq!(grep(pat, &s), dfa.accepts_bytes(&s),
+                       "pat={pat} s={:?}", String::from_utf8_lossy(&s));
+        });
+    }
+}

@@ -1,0 +1,151 @@
+//! The prior speculative parallel DFA algorithm of Holub & Štekr [19],
+//! reproduced as the paper's comparator (Fig. 11).
+//!
+//! Differences from the paper's method (§4.1/§7):
+//!  * the input is split into |P| *uniform* chunks (no work-balancing
+//!    between the first and subsequent chunks), and
+//!  * every chunk except the first is matched for *all* |Q| states (no
+//!    structural reduction).
+//!
+//! Per-processor work is therefore ~ (n/|P|)·|Q| symbols, so the speedup
+//! is O(|P|/|Q|) — a speed-down whenever |Q| > |P| (the paper observed
+//! −390× for a 788-state DFA).
+
+use crate::automata::{Dfa, FlatDfa};
+use crate::speculative::lvector::LVector;
+use crate::speculative::merge::{self, MergeStats, MergeStrategy};
+
+#[derive(Clone, Debug)]
+pub struct HolubStekrOutcome {
+    pub final_state: u32,
+    pub accepted: bool,
+    /// per-processor symbols matched (chunk_len × states matched)
+    pub work: Vec<usize>,
+    pub merge_stats: MergeStats,
+}
+
+impl HolubStekrOutcome {
+    pub fn makespan_syms(&self) -> usize {
+        self.work.iter().copied().max().unwrap_or(0)
+    }
+}
+
+pub struct HolubStekr<'d> {
+    dfa: &'d Dfa,
+    flat: FlatDfa,
+    processors: usize,
+}
+
+impl<'d> HolubStekr<'d> {
+    pub fn new(dfa: &'d Dfa, processors: usize) -> Self {
+        assert!(processors >= 1);
+        HolubStekr { dfa, flat: FlatDfa::from_dfa(dfa), processors }
+    }
+
+    pub fn run_syms(&self, syms: &[u32]) -> HolubStekrOutcome {
+        let n = syms.len();
+        let p = self.processors;
+        let q = self.dfa.num_states as usize;
+        // uniform chunking
+        let bounds: Vec<(usize, usize)> = (0..p)
+            .map(|i| (n * i / p, n * (i + 1) / p))
+            .collect();
+
+        let mut lvecs: Vec<LVector> = Vec::with_capacity(p);
+        let mut work = Vec::with_capacity(p);
+        let mut slots: Vec<Option<(LVector, usize)>> = vec![None; p];
+        std::thread::scope(|scope| {
+            let flat = &self.flat;
+            let dfa = self.dfa;
+            for (i, (slot, &(s, e))) in
+                slots.iter_mut().zip(&bounds).enumerate()
+            {
+                scope.spawn(move || {
+                    let chunk = &syms[s..e];
+                    let mut lv = LVector::identity(q);
+                    if i == 0 {
+                        let off =
+                            flat.run_syms(flat.offset_of(dfa.start), chunk);
+                        lv.set(dfa.start, flat.state_of(off));
+                        *slot = Some((lv, chunk.len()));
+                    } else {
+                        for init in 0..q as u32 {
+                            let off =
+                                flat.run_syms(flat.offset_of(init), chunk);
+                            lv.set(init, flat.state_of(off));
+                        }
+                        *slot = Some((lv, chunk.len() * q));
+                    }
+                });
+            }
+        });
+        for slot in slots {
+            let (lv, w) = slot.unwrap();
+            lvecs.push(lv);
+            work.push(w);
+        }
+
+        let (final_state, merge_stats) =
+            merge::merge(&lvecs, self.dfa.start, MergeStrategy::Sequential);
+        HolubStekrOutcome {
+            final_state,
+            accepted: self.dfa.accepting[final_state as usize],
+            work,
+            merge_stats,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baseline::sequential::SequentialMatcher;
+    use crate::speculative::lookahead::tests::random_dfa;
+    use crate::speculative::matcher::MatchPlan;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn prop_correct_but_slower() {
+        prop::check("Holub-Stekr correct; work >= ours", 30, |rng| {
+            let dfa = random_dfa(rng);
+            let len = rng.range_usize(0, 400);
+            let syms: Vec<u32> = (0..len)
+                .map(|_| rng.below(dfa.num_symbols as u64) as u32)
+                .collect();
+            let p = rng.range_usize(1, 8);
+            let hs = HolubStekr::new(&dfa, p).run_syms(&syms);
+            let seq = SequentialMatcher::new(&dfa).run_syms(&syms);
+            assert_eq!(hs.final_state, seq.final_state);
+            assert_eq!(hs.accepted, seq.accepted);
+            // our balanced partition never does more per-processor work
+            let ours = MatchPlan::new(&dfa).processors(p).run_syms(&syms);
+            assert!(
+                ours.makespan_syms() <= hs.makespan_syms() + dfa.num_states as usize,
+                "ours {} vs hs {}",
+                ours.makespan_syms(),
+                hs.makespan_syms()
+            );
+        });
+    }
+
+    #[test]
+    fn speeddown_when_q_exceeds_p() {
+        // |Q| = 20-ish, P = 4: per-proc work ~ n·|Q|/|P| >> n
+        let mut rng = Rng::new(11);
+        let dfa = random_dfa(&mut rng);
+        let n = 40_000;
+        let syms: Vec<u32> = (0..n)
+            .map(|_| rng.below(dfa.num_symbols as u64) as u32)
+            .collect();
+        let hs = HolubStekr::new(&dfa, 4).run_syms(&syms);
+        if dfa.num_states > 8 {
+            assert!(
+                hs.makespan_syms() > n,
+                "expected speed-down work: {} states {}",
+                hs.makespan_syms(),
+                dfa.num_states
+            );
+        }
+    }
+}

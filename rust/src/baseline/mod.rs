@@ -1,0 +1,18 @@
+//! Baseline matchers the paper compares against:
+//!
+//! * [`sequential`] — the efficient C-style sequential matcher of
+//!   Listing 1, the yardstick every speedup in §6 is measured against.
+//! * [`holub_stekr`] — the prior speculative parallel algorithm [19]
+//!   (uniform chunks, all |Q| states matched per chunk), reproduced for
+//!   Fig. 11.
+//! * [`backtracking`] — a Perl-style backtracking engine standing in for
+//!   ScanProsite (Fig. 12a).
+//! * [`greplike`] — a grep-style engine (per-position DFA scan with a
+//!   memchr-style literal prefilter) standing in for UNIX grep (Fig. 12b).
+
+pub mod backtracking;
+pub mod greplike;
+pub mod holub_stekr;
+pub mod sequential;
+
+pub use sequential::SequentialMatcher;

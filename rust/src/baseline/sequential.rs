@@ -1,0 +1,154 @@
+//! Sequential DFA matching: Algorithm 1 over the flattened SBase table.
+//!
+//! This is the paper's Listing 1: "two add operations, one comparison, one
+//! indexed load and one conditional jump" per input symbol.  It is the
+//! yardstick for every speedup measurement, and the inner loop reused by
+//! the speculative matcher for per-chunk matching.
+
+use crate::automata::{Dfa, FlatDfa};
+
+/// Result of a sequential run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SeqOutcome {
+    /// delta*(q0, input)
+    pub final_state: u32,
+    /// final_state in F
+    pub accepted: bool,
+    /// symbols actually consumed (< input length iff early exit fired)
+    pub consumed: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct SequentialMatcher {
+    flat: FlatDfa,
+}
+
+impl SequentialMatcher {
+    pub fn new(dfa: &Dfa) -> Self {
+        SequentialMatcher { flat: FlatDfa::from_dfa(dfa) }
+    }
+
+    pub fn flat(&self) -> &FlatDfa {
+        &self.flat
+    }
+
+    /// Plain Listing-1 run over pre-mapped dense symbols: no early exit,
+    /// computes delta*(start, syms).  This is the hot loop.
+    #[inline]
+    pub fn run_syms(&self, syms: &[u32]) -> SeqOutcome {
+        let off = self.flat.run_syms(self.flat.start_off, syms);
+        SeqOutcome {
+            final_state: self.flat.state_of(off),
+            accepted: self.flat.is_accepting_off(off),
+            consumed: syms.len(),
+        }
+    }
+
+    /// Run over raw bytes (IBase class mapping fused into the loop).
+    #[inline]
+    pub fn run_bytes(&self, bytes: &[u8]) -> SeqOutcome {
+        let off = self.flat.run_bytes(self.flat.start_off, bytes);
+        SeqOutcome {
+            final_state: self.flat.state_of(off),
+            accepted: self.flat.is_accepting_off(off),
+            consumed: bytes.len(),
+        }
+    }
+
+    /// Algorithm 1 with the early exits: return on reaching a final state
+    /// (line 4–5; sound for absorbing-final search DFAs) and on reaching
+    /// the sink (§3: "it is unnecessary to process the remaining input
+    /// characters once the error state has been reached").
+    pub fn run_early_exit(&self, bytes: &[u8]) -> SeqOutcome {
+        let flat = &self.flat;
+        let sink = flat.sink_off.unwrap_or(u32::MAX);
+        let mut off = flat.start_off;
+        if flat.is_accepting_off(off) {
+            return SeqOutcome {
+                final_state: flat.state_of(off),
+                accepted: true,
+                consumed: 0,
+            };
+        }
+        for (i, &b) in bytes.iter().enumerate() {
+            off = flat.sbase[(off + flat.classes[b as usize] as u32) as usize];
+            if flat.is_accepting_off(off) {
+                return SeqOutcome {
+                    final_state: flat.state_of(off),
+                    accepted: true,
+                    consumed: i + 1,
+                };
+            }
+            if off == sink {
+                return SeqOutcome {
+                    final_state: flat.state_of(off),
+                    accepted: false,
+                    consumed: i + 1,
+                };
+            }
+        }
+        SeqOutcome {
+            final_state: flat.state_of(off),
+            accepted: flat.is_accepting_off(off),
+            consumed: bytes.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::regex::compile::{compile_search, compile_exact};
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matches_dfa_run() {
+        let dfa = compile_search("ab+c").unwrap();
+        let m = SequentialMatcher::new(&dfa);
+        for input in [&b"xxabbbczz"[..], b"abc", b"", b"nope"] {
+            let out = m.run_bytes(input);
+            assert_eq!(out.accepted, dfa.accepts_bytes(input));
+            assert_eq!(out.final_state, dfa.run_bytes(dfa.start, input));
+        }
+    }
+
+    #[test]
+    fn early_exit_agrees_on_search_dfas() {
+        let dfa = compile_search("needle").unwrap();
+        let m = SequentialMatcher::new(&dfa);
+        let mut input = vec![b'x'; 10_000];
+        input.extend_from_slice(b"needle");
+        input.extend(vec![b'y'; 10_000]);
+        let full = m.run_bytes(&input);
+        let fast = m.run_early_exit(&input);
+        assert!(full.accepted && fast.accepted);
+        assert!(fast.consumed < input.len());
+        assert_eq!(fast.consumed, 10_006);
+    }
+
+    #[test]
+    fn early_exit_sink_shortcut() {
+        // exact-match DFA sinks on first mismatch
+        let dfa = compile_exact("abc").unwrap();
+        let m = SequentialMatcher::new(&dfa);
+        let mut input = vec![b'z'; 1000];
+        input[0] = b'a';
+        let fast = m.run_early_exit(&input);
+        assert!(!fast.accepted);
+        assert!(fast.consumed <= 2);
+    }
+
+    #[test]
+    fn prop_syms_equals_bytes() {
+        prop::check("run_syms == run_bytes", 20, |rng: &mut Rng| {
+            let dfa = compile_search("(ab|cd)+e?").unwrap();
+            let m = SequentialMatcher::new(&dfa);
+            let len = rng.below(200) as usize;
+            let bytes: Vec<u8> =
+                (0..len).map(|_| b"abcdex"[rng.usize_below(6)]).collect();
+            let syms = dfa.map_input(&bytes);
+            assert_eq!(m.run_syms(&syms), m.run_bytes(&bytes));
+        });
+    }
+}

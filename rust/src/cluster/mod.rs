@@ -1,0 +1,25 @@
+//! Simulated cloud computing environment — the EC2 substitute.
+//!
+//! The paper's cloud experiments (§5.2, §6.2) measure quantities that are
+//! functions of (a) per-core matching capacity, (b) message latency
+//! distributions, and (c) the merge topology.  All three are modelled here
+//! with the paper's own measured parameters:
+//!
+//!  * inter-node L-vector transfer: mean 362 µs, σ = 3.6 %
+//!  * intra-node L-vector transfer: mean 2.68 µs, σ = 0.14 %
+//!  * cc2.8xlarge : m2.4xlarge capacity ratio 1.41
+//!  * hypervisor preemption: without the leave-one-core-idle rule, one
+//!    worker per node may run an order of magnitude slower
+//!
+//! Matching itself is executed for real (results are bit-identical to the
+//! sequential matcher — failure-freedom is preserved); only the *timing*
+//! of the parallel execution is simulated, since the build host exposes a
+//! single physical core (see DESIGN.md §Substitutions).
+
+pub mod cloud;
+pub mod network;
+pub mod node;
+
+pub use cloud::{CloudMatcher, CloudOutcome};
+pub use network::LatencyModel;
+pub use node::{ClusterSpec, InstanceType, NodeSpec};

@@ -1,0 +1,113 @@
+//! Message latency model, parameterized with the paper's own EC2
+//! measurements (§5.2): inter-node L-vector transfer 362 µs (σ 3.6 %),
+//! intra-node 2.68 µs (σ 0.14 %).  Latencies are sampled from truncated
+//! normal distributions; the large inter/intra gap is exactly what makes
+//! the 2-tier hierarchical merge win (Fig. 9).
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct LatencyModel {
+    pub inter_mean_us: f64,
+    pub inter_sd_frac: f64,
+    pub intra_mean_us: f64,
+    pub intra_sd_frac: f64,
+    /// per-message fixed software overhead (MPI stack), µs
+    pub per_msg_overhead_us: f64,
+}
+
+impl Default for LatencyModel {
+    fn default() -> Self {
+        LatencyModel {
+            inter_mean_us: 362.0,
+            inter_sd_frac: 0.036,
+            intra_mean_us: 2.68,
+            intra_sd_frac: 0.0014,
+            per_msg_overhead_us: 0.5,
+        }
+    }
+}
+
+impl LatencyModel {
+    /// A local-cluster model (for contrast experiments): low, stable
+    /// inter-node latency.
+    pub fn local_cluster() -> Self {
+        LatencyModel {
+            inter_mean_us: 20.0,
+            inter_sd_frac: 0.01,
+            intra_mean_us: 2.68,
+            intra_sd_frac: 0.0014,
+            per_msg_overhead_us: 0.5,
+        }
+    }
+
+    pub fn sample_inter(&self, rng: &mut Rng) -> f64 {
+        sample_pos(rng, self.inter_mean_us, self.inter_sd_frac)
+            + self.per_msg_overhead_us
+    }
+
+    pub fn sample_intra(&self, rng: &mut Rng) -> f64 {
+        sample_pos(rng, self.intra_mean_us, self.intra_sd_frac)
+            + self.per_msg_overhead_us
+    }
+
+    /// Latency between two workers given their node ids.
+    pub fn sample_between(
+        &self,
+        rng: &mut Rng,
+        node_a: usize,
+        node_b: usize,
+    ) -> f64 {
+        if node_a == node_b {
+            self.sample_intra(rng)
+        } else {
+            self.sample_inter(rng)
+        }
+    }
+}
+
+fn sample_pos(rng: &mut Rng, mean: f64, sd_frac: f64) -> f64 {
+    let v = rng.gauss_ms(mean, mean * sd_frac);
+    v.max(mean * 0.1) // truncate absurd tail draws
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn samples_match_paper_parameters() {
+        let m = LatencyModel::default();
+        let mut rng = Rng::new(100);
+        let inter: Vec<f64> =
+            (0..20_000).map(|_| m.sample_inter(&mut rng)).collect();
+        let intra: Vec<f64> =
+            (0..20_000).map(|_| m.sample_intra(&mut rng)).collect();
+        let im = stats::mean(&inter);
+        assert!((im - 362.5).abs() < 1.0, "inter mean {im}");
+        assert!((stats::stddev(&inter) / 362.0 - 0.036).abs() < 0.005);
+        assert!((stats::mean(&intra) - 3.18).abs() < 0.1);
+        // the two regimes are separated by two orders of magnitude
+        assert!(stats::mean(&inter) / stats::mean(&intra) > 100.0);
+    }
+
+    #[test]
+    fn between_dispatches_on_node() {
+        let m = LatencyModel::default();
+        let mut rng = Rng::new(3);
+        let same = m.sample_between(&mut rng, 2, 2);
+        let diff = m.sample_between(&mut rng, 2, 3);
+        assert!(same < 10.0 && diff > 100.0);
+    }
+
+    #[test]
+    fn samples_always_positive() {
+        let m = LatencyModel::default();
+        let mut rng = Rng::new(4);
+        for _ in 0..10_000 {
+            assert!(m.sample_inter(&mut rng) > 0.0);
+            assert!(m.sample_intra(&mut rng) > 0.0);
+        }
+    }
+}

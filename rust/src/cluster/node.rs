@@ -1,0 +1,148 @@
+//! Node and cluster specifications (Table 2's instance types).
+
+/// EC2 instance families used in the paper (Table 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InstanceType {
+    /// cc2.8xlarge: 2× Xeon E5-2670, 16 cores, 88 CUs — "Fast" in Table 3
+    Cc28xlarge,
+    /// m2.4xlarge: 2× Xeon X5550, 8 cores, 26 CUs — "Slow" in Table 3
+    M24xlarge,
+    /// custom capacity (heterogeneous clusters beyond the paper's two)
+    Custom,
+}
+
+/// One cluster node.
+#[derive(Clone, Debug)]
+pub struct NodeSpec {
+    pub instance: InstanceType,
+    pub cores: usize,
+    /// per-core matching capacity relative to the m2.4xlarge baseline;
+    /// the paper measured cc2.8xlarge/m2.4xlarge = 1.41
+    pub capacity: f64,
+}
+
+impl NodeSpec {
+    pub fn cc2_8xlarge() -> NodeSpec {
+        NodeSpec { instance: InstanceType::Cc28xlarge, cores: 16, capacity: 1.41 }
+    }
+
+    pub fn m2_4xlarge() -> NodeSpec {
+        NodeSpec { instance: InstanceType::M24xlarge, cores: 8, capacity: 1.0 }
+    }
+
+    pub fn custom(cores: usize, capacity: f64) -> NodeSpec {
+        assert!(cores >= 1 && capacity > 0.0);
+        NodeSpec { instance: InstanceType::Custom, cores, capacity }
+    }
+}
+
+/// A cluster: a list of nodes plus the allocation policy.
+#[derive(Clone, Debug)]
+pub struct ClusterSpec {
+    pub nodes: Vec<NodeSpec>,
+    /// §5.2: leave one core per node unallocated to dodge hypervisor
+    /// preemption (the paper's finding; default true)
+    pub leave_one_core_idle: bool,
+    /// probability that a node suffers a preempted (10× slower) worker
+    /// when all cores are allocated
+    pub preemption_prob: f64,
+    /// capacity jitter across cluster invocations (§6.2: "capacities of
+    /// cluster nodes could change slightly across cluster invocations")
+    pub capacity_jitter: f64,
+}
+
+impl ClusterSpec {
+    pub fn new(nodes: Vec<NodeSpec>) -> ClusterSpec {
+        assert!(!nodes.is_empty());
+        ClusterSpec {
+            nodes,
+            leave_one_core_idle: true,
+            preemption_prob: 0.9,
+            capacity_jitter: 0.02,
+        }
+    }
+
+    /// The paper's main cloud setup: `n` cc2.8xlarge instances.
+    pub fn homogeneous(n: usize) -> ClusterSpec {
+        ClusterSpec::new(vec![NodeSpec::cc2_8xlarge(); n])
+    }
+
+    /// Table 3 mixes: `fast` cc2.8xlarge + `slow` m2.4xlarge instances.
+    pub fn fast_slow(fast: usize, slow: usize) -> ClusterSpec {
+        let mut nodes = vec![NodeSpec::cc2_8xlarge(); fast];
+        nodes.extend(vec![NodeSpec::m2_4xlarge(); slow]);
+        ClusterSpec::new(nodes)
+    }
+
+    pub fn allocate_all_cores(mut self) -> Self {
+        self.leave_one_core_idle = false;
+        self
+    }
+
+    /// Worker slots: (node_id, per-core capacity) per allocated core.
+    pub fn workers(&self) -> Vec<(usize, f64)> {
+        let mut out = Vec::new();
+        for (id, node) in self.nodes.iter().enumerate() {
+            let cores = if self.leave_one_core_idle {
+                node.cores.saturating_sub(1).max(1)
+            } else {
+                node.cores
+            };
+            for _ in 0..cores {
+                out.push((id, node.capacity));
+            }
+        }
+        out
+    }
+
+    pub fn total_workers(&self) -> usize {
+        self.workers().len()
+    }
+
+    /// Cores per node actually allocated (|C| of Fig. 9) — assumes a
+    /// homogeneous-core cluster layout for the 2-tier merge grouping.
+    pub fn cores_per_node(&self) -> usize {
+        let node = &self.nodes[0];
+        if self.leave_one_core_idle {
+            node.cores.saturating_sub(1).max(1)
+        } else {
+            node.cores
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_cluster_300_cores() {
+        // §6.2: 20 cc2.8xlarge × 15 allocated cores = 300
+        let c = ClusterSpec::homogeneous(20);
+        assert_eq!(c.total_workers(), 300);
+        assert_eq!(c.cores_per_node(), 15);
+    }
+
+    #[test]
+    fn all_cores_allocation() {
+        let c = ClusterSpec::homogeneous(2).allocate_all_cores();
+        assert_eq!(c.total_workers(), 32);
+    }
+
+    #[test]
+    fn fast_slow_mix() {
+        // Table 3 row "4 fast, 1 slow"
+        let c = ClusterSpec::fast_slow(4, 1);
+        assert_eq!(c.nodes.len(), 5);
+        let w = c.workers();
+        assert_eq!(w.len(), 4 * 15 + 7);
+        assert!(w.iter().filter(|(_, cap)| *cap > 1.0).count() == 60);
+    }
+
+    #[test]
+    fn capacity_ratio_paper_measured() {
+        let fast = NodeSpec::cc2_8xlarge();
+        let slow = NodeSpec::m2_4xlarge();
+        assert!((fast.capacity / slow.capacity - 1.41).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,40 @@
+//! Host calibration: measure the real single-core matching rate of the
+//! Listing-1 loop on this machine.  Every simulated speedup is anchored to
+//! this measured number (DESIGN.md §Substitutions).
+
+use std::sync::OnceLock;
+
+use crate::automata::FlatDfa;
+use crate::regex::compile::compile_search;
+use crate::speculative::profile::measure_capacity;
+use crate::workload::InputGen;
+
+/// Measured symbols/µs of the sequential flat-table loop on this host.
+pub fn host_syms_per_us() -> f64 {
+    static RATE: OnceLock<f64> = OnceLock::new();
+    *RATE.get_or_init(|| {
+        let dfa = compile_search("(ab|cd)+e?").unwrap();
+        let flat = FlatDfa::from_dfa(&dfa);
+        let syms = InputGen::new(0xCA11B)
+            .uniform_syms(&dfa, 2_000_000);
+        measure_capacity(&flat, &syms, 7)
+    })
+}
+
+/// Convert a symbol count to µs at the calibrated host rate.
+pub fn syms_to_us(syms: f64) -> f64 {
+    syms / host_syms_per_us()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rate_is_measured_and_cached() {
+        let a = host_syms_per_us();
+        let b = host_syms_per_us();
+        assert_eq!(a, b);
+        assert!(a > 10.0 && a < 100_000.0, "rate {a} syms/us");
+    }
+}

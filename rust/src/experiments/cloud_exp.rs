@@ -1,0 +1,167 @@
+//! Cloud experiments on the simulated EC2 cluster: Fig. 14 (speedups +
+//! communication ratio), Table 3 (load balancing on inhomogeneous
+//! clusters), Fig. 19 (input-size scaling).
+
+use crate::cluster::{CloudMatcher, ClusterSpec};
+use crate::util::bench::{fmt_speedup, Table};
+use crate::util::stats;
+use crate::workload::{prosite_suite_cached, pcre_suite_cached, InputGen};
+
+use super::calibrate::host_syms_per_us;
+use super::multicore::spread_by_q;
+
+/// §6.2: inputs of 8 million characters on EC2.
+pub const N_CLOUD: usize = 8_000_000;
+
+/// Fig. 14: speedups (a, c) and proportional communication cost (b, d)
+/// on cc2.8xlarge clusters of 32..288 cores.
+pub fn fig14() -> Vec<Table> {
+    let mut out = Vec::new();
+    let core_cfgs: &[(usize, &str)] =
+        &[(3, "32"), (5, "64"), (9, "128"), (14, "192"), (20, "288")];
+    for (title, suite) in [
+        ("Fig. 14(a,b) — EC2 PROSITE, r=4", prosite_suite_cached()),
+        ("Fig. 14(c,d) — EC2 PCRE, r=4", pcre_suite_cached()),
+    ] {
+        let mut t = Table::new(
+            title,
+            &["pattern", "|Q|", "S@32", "S@64", "S@128", "S@192", "S@288",
+              "comm%@288"],
+        );
+        for p in spread_by_q(suite, 8) {
+            let syms = p.input_syms(&mut InputGen::new(0xC10D), N_CLOUD);
+            let mut row = vec![p.name.clone(), p.q().to_string()];
+            let mut last_comm = 0.0;
+            for &(nodes, _) in core_cfgs {
+                let out_c = CloudMatcher::new(
+                    &p.dfa,
+                    ClusterSpec::homogeneous(nodes),
+                )
+                .lookahead(4)
+                .base_rate(host_syms_per_us())
+                .seed(0xEC2 + nodes as u64)
+                .run_syms(&syms);
+                row.push(fmt_speedup(out_c.speedup()));
+                last_comm = out_c.comm_ratio();
+            }
+            row.push(format!("{:.2}%", last_comm * 100.0));
+            t.row(row);
+        }
+        out.push(t);
+    }
+    out
+}
+
+/// Table 3: load-balance effectiveness (proportional stddev of matching
+/// times) on six fast/slow EC2 instance mixes.
+pub fn table3() -> Vec<Table> {
+    let mixes: &[(usize, usize)] =
+        &[(0, 5), (1, 4), (2, 3), (3, 2), (4, 1), (5, 0)];
+    let mut t = Table::new(
+        "Table 3 — load balancing on inhomogeneous clusters (CV of \
+         matching times)",
+        &["Fast", "Slow", "PROSITE min", "PROSITE avg", "PROSITE max",
+          "PCRE min", "PCRE avg", "PCRE max"],
+    );
+    for &(fast, slow) in mixes {
+        let mut row = vec![fast.to_string(), slow.to_string()];
+        for suite in [prosite_suite_cached(), pcre_suite_cached()] {
+            let mut cvs = Vec::new();
+            for p in spread_by_q(suite, 6) {
+                let syms = p.input_syms(&mut InputGen::new(0x7AB3), N_CLOUD / 4);
+                let out_c = CloudMatcher::new(
+                    &p.dfa,
+                    ClusterSpec::fast_slow(fast, slow),
+                )
+                .lookahead(4)
+                .adaptive_partition(true)
+                .base_rate(host_syms_per_us())
+                .seed(0x7AB3 + fast as u64 * 10 + slow as u64)
+                .run_syms(&syms);
+                cvs.push(out_c.balance_cv());
+            }
+            row.push(format!("{:.4}", stats::min(&cvs)));
+            row.push(format!("{:.4}", stats::mean(&cvs)));
+            row.push(format!("{:.4}", stats::max(&cvs)));
+        }
+        t.row(row);
+    }
+
+    // Ablation: the paper-faithful worst-case (I_max) partition vs this
+    // repo's adaptive fixed-point partition, on the 4-fast/1-slow mix.
+    let mut ta = Table::new(
+        "Table 3 ablation — worst-case I_max partition vs adaptive (CV, \
+         4 fast / 1 slow)",
+        &["pattern", "|Q|", "CV fixed", "CV adaptive"],
+    );
+    for p in spread_by_q(prosite_suite_cached(), 6) {
+        let syms = p.input_syms(&mut InputGen::new(0x7AB4), N_CLOUD / 4);
+        let run = |adaptive: bool| {
+            CloudMatcher::new(&p.dfa, ClusterSpec::fast_slow(4, 1))
+                .lookahead(4)
+                .adaptive_partition(adaptive)
+                .base_rate(host_syms_per_us())
+                .seed(0x7AB4)
+                .run_syms(&syms)
+                .balance_cv()
+        };
+        ta.row(vec![
+            p.name.clone(),
+            p.q().to_string(),
+            format!("{:.4}", run(false)),
+            format!("{:.4}", run(true)),
+        ]);
+    }
+    vec![t, ta]
+}
+
+/// Fig. 19: cloud performance (a) and communication ratio (b) for input
+/// sizes 10 MB..1 GB on 288 cores (PROSITE).
+pub fn fig19() -> Vec<Table> {
+    let mut sizes: Vec<(usize, &str)> =
+        vec![(10 << 20, "10MB"), (100 << 20, "100MB")];
+    if std::env::var("SPECDFA_BIG").is_ok() {
+        sizes.push((1 << 30, "1GB"));
+    }
+    let mut t = Table::new(
+        "Fig. 19 — EC2 input-size scaling, 20 nodes (288 cores), PROSITE, r=4",
+        &["pattern", "|Q|", "size", "speedup", "comm%"],
+    );
+    for p in spread_by_q(prosite_suite_cached(), 3) {
+        for &(n, label) in &sizes {
+            let syms = p.input_syms(&mut InputGen::new(0xF1619), n);
+            let out_c =
+                CloudMatcher::new(&p.dfa, ClusterSpec::homogeneous(20))
+                    .lookahead(4)
+                    .base_rate(host_syms_per_us())
+                    .seed(0xF19)
+                    .run_syms(&syms);
+            t.row(vec![
+                p.name.clone(),
+                p.q().to_string(),
+                label.to_string(),
+                fmt_speedup(out_c.speedup()),
+                format!("{:.2}%", out_c.comm_ratio() * 100.0),
+            ]);
+        }
+    }
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn core_configs_match_paper_multiples_of_32() {
+        // §6.2: "cluster sizes that are a multiple of 32 cores" up to 288
+        for (nodes, label) in
+            [(3usize, "32"), (5, "64"), (9, "128"), (14, "192"), (20, "288")]
+        {
+            let c = ClusterSpec::homogeneous(nodes);
+            let cores = c.total_workers();
+            let labelled: usize = label.parse().unwrap();
+            assert!(cores >= labelled, "{nodes} nodes -> {cores} cores");
+        }
+    }
+}

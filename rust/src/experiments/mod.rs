@@ -1,0 +1,46 @@
+//! Experiment regenerators: one entry per table and figure of the paper's
+//! evaluation (§6).  Each produces `util::bench::Table`s with the same
+//! rows/series the paper reports; the bench targets under rust/benches/
+//! and the CLI (`specdfa experiment <name>`) print them.
+//!
+//! Timing methodology (see DESIGN.md §Substitutions): matching work is
+//! executed for real and verified against sequential semantics; parallel
+//! speedups are work-ratio speedups on a cost model calibrated with the
+//! measured single-core symbol rate of this host — the same methodology
+//! the paper itself uses for its SIMD results (instruction ratios on the
+//! SDE emulator, §6.1).
+
+pub mod calibrate;
+pub mod cloud_exp;
+pub mod compare;
+pub mod multicore;
+pub mod simd_exp;
+pub mod structure;
+
+use crate::util::bench::Table;
+
+/// All experiment names, in paper order.
+pub const ALL: &[&str] = &[
+    "table1", "fig10", "fig11", "fig12", "fig13", "fig14", "table3",
+    "fig15", "fig16", "table4", "fig17", "fig18", "fig19",
+];
+
+/// Run one experiment by name.
+pub fn run(name: &str) -> Option<Vec<Table>> {
+    Some(match name {
+        "table1" => multicore::table1(),
+        "fig10" => multicore::fig10(),
+        "fig11" => multicore::fig11(),
+        "fig12" => compare::fig12(),
+        "fig13" => simd_exp::fig13(),
+        "fig14" => cloud_exp::fig14(),
+        "table3" => cloud_exp::table3(),
+        "fig15" => multicore::fig15(),
+        "fig16" => structure::fig16(),
+        "table4" => structure::table4(),
+        "fig17" => structure::fig17(),
+        "fig18" => multicore::fig18(),
+        "fig19" => cloud_exp::fig19(),
+        _ => return None,
+    })
+}

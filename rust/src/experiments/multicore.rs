@@ -1,0 +1,259 @@
+//! Shared-memory multicore experiments: Table 1, Fig. 10, Fig. 11,
+//! Fig. 15, Fig. 18.
+
+use crate::baseline::holub_stekr::HolubStekr;
+use crate::speculative::matcher::MatchPlan;
+use crate::speculative::partition::{partition, predicted_speedup};
+use crate::util::bench::{fmt_speedup, Table};
+use crate::workload::{pcre_suite_cached, prosite_suite_cached, BenchPattern,
+                      InputGen};
+
+/// Paper default problem size (§6: "inputs of one million characters").
+pub const N_DEFAULT: usize = 1_000_000;
+/// The MTL node's core count.
+pub const P_MTL: usize = 40;
+
+/// Work-ratio speedup: sequential symbols over parallel makespan symbols
+/// (+ the sequential-merge lookups, which are negligible but included).
+pub fn model_speedup(n: usize, makespan_syms: usize, merge_lookups: usize) -> f64 {
+    n as f64 / (makespan_syms as f64 + merge_lookups as f64).max(1.0)
+}
+
+/// Pick `k` patterns spread evenly across the suite's |Q| range.
+pub fn spread_by_q(suite: &[BenchPattern], k: usize) -> Vec<&BenchPattern> {
+    let mut sorted: Vec<&BenchPattern> = suite.iter().collect();
+    sorted.sort_by_key(|p| p.q());
+    if sorted.len() <= k {
+        return sorted;
+    }
+    (0..k)
+        .map(|i| sorted[i * (sorted.len() - 1) / (k - 1).max(1)])
+        .collect()
+}
+
+/// Table 1: chunk-size computation for the Fig. 6 DFA on three processors
+/// of non-uniform capacity.
+pub fn table1() -> Vec<Table> {
+    let weights = [1.5, 0.75, 0.75];
+    let n = 36;
+    let q = 4;
+    let chunks = partition(n, &weights, q);
+    let l0 = n as f64 * q as f64
+        / (weights[0] * q as f64 + weights[1] + weights[2]);
+    let mut t = Table::new(
+        "Table 1 — chunk sizes, Fig. 6 DFA, 3 processors (m_k = 50/25/25)",
+        &["Processor", "m_k", "w_k", "L_0*w_k", "Input character range"],
+    );
+    for (k, c) in chunks.iter().enumerate() {
+        let wk = weights[k];
+        let expected = if k == 0 { l0 * wk } else { l0 * wk / q as f64 };
+        t.row(vec![
+            format!("p{k}"),
+            format!("{}", [50, 25, 25][k]),
+            format!("{wk}"),
+            format!("{expected:.1}"),
+            format!("{}-{}", c.start, c.end.saturating_sub(1)),
+        ]);
+    }
+    vec![t]
+}
+
+/// Fig. 10: speedups on the 40-core MTL node for PROSITE (a) and PCRE (c)
+/// with 4-symbol reverse lookahead, plus the I_max-optimization gain over
+/// matching |Q| states (b, d).
+pub fn fig10() -> Vec<Table> {
+    let mut out = Vec::new();
+    for (title, suite) in [
+        ("Fig. 10(a,b) — PROSITE on 40-core node, r=4",
+         prosite_suite_cached()),
+        ("Fig. 10(c,d) — PCRE on 40-core node, r=4", pcre_suite_cached()),
+    ] {
+        let mut t = Table::new(
+            title,
+            &["pattern", "|Q|", "I_max,4", "gamma",
+              "P=10", "P=20", "P=30", "P=40", "Imax-gain@40"],
+        );
+        for p in spread_by_q(suite, 12) {
+            let n = N_DEFAULT;
+            let syms = p.input_syms(&mut InputGen::new(0xF1610), n);
+            let base = MatchPlan::new(&p.dfa).lookahead(4)
+                .sequential_execution();
+            let mut row = vec![
+                p.name.clone(),
+                p.q().to_string(),
+                base.i_max().to_string(),
+                format!("{:.3}", base.gamma()),
+            ];
+            let mut makespan40_opt = 0usize;
+            for procs in [10, 20, 30, 40] {
+                let outp = base.clone().processors(procs).run_syms(&syms);
+                if procs == 40 {
+                    makespan40_opt = outp.makespan_syms();
+                }
+                row.push(fmt_speedup(model_speedup(
+                    n,
+                    outp.makespan_syms(),
+                    outp.merge_stats.lookup_ops,
+                )));
+            }
+            // Fig. 10(b,d): optimized vs matching all |Q| states
+            let basic = MatchPlan::new(&p.dfa)
+                .sequential_execution()
+                .processors(40)
+                .run_syms(&syms);
+            let gain =
+                basic.makespan_syms() as f64 / makespan40_opt.max(1) as f64;
+            row.push(format!("{gain:.1}x"));
+            t.row(row);
+        }
+        out.push(t);
+    }
+    out
+}
+
+/// Fig. 11: the Holub–Štekr algorithm [19] on the same workloads —
+/// speed-downs whenever |Q| > |P| (paper: up to −390×).
+pub fn fig11() -> Vec<Table> {
+    let mut out = Vec::new();
+    for (title, suite) in [
+        ("Fig. 11(a) — Holub-Stekr, PROSITE", prosite_suite_cached()),
+        ("Fig. 11(b) — Holub-Stekr, PCRE", pcre_suite_cached()),
+    ] {
+        let mut t = Table::new(
+            title,
+            &["pattern", "|Q|", "P=10", "P=40", "ours P=40 (r=4)"],
+        );
+        for p in spread_by_q(suite, 10) {
+            let n = N_DEFAULT;
+            let syms = p.input_syms(&mut InputGen::new(0xF1611), n);
+            let mut row = vec![p.name.clone(), p.q().to_string()];
+            for procs in [10, 40] {
+                let hs = HolubStekr::new(&p.dfa, procs).run_syms(&syms);
+                row.push(fmt_speedup(model_speedup(
+                    n,
+                    hs.makespan_syms(),
+                    hs.merge_stats.lookup_ops,
+                )));
+            }
+            let ours = MatchPlan::new(&p.dfa)
+                .lookahead(4)
+                .sequential_execution()
+                .processors(40)
+                .run_syms(&syms);
+            row.push(fmt_speedup(model_speedup(
+                n,
+                ours.makespan_syms(),
+                ours.merge_stats.lookup_ops,
+            )));
+            t.row(row);
+        }
+        out.push(t);
+    }
+    out
+}
+
+/// Fig. 15: basic algorithm (no I_max optimization) against the Eq. (15)
+/// prediction 1 + (|P|−1)/|Q|.
+pub fn fig15() -> Vec<Table> {
+    let mut t = Table::new(
+        "Fig. 15 — speedups without I_max optimization vs Eq. (15), P=40",
+        &["pattern", "|Q|", "observed", "P=40 (predicted)"],
+    );
+    let mut all: Vec<&BenchPattern> = Vec::new();
+    all.extend(spread_by_q(pcre_suite_cached(), 8));
+    all.extend(spread_by_q(prosite_suite_cached(), 8));
+    all.sort_by_key(|p| p.q());
+    for p in all {
+        let n = N_DEFAULT;
+        let syms = p.input_syms(&mut InputGen::new(0xF1615), n);
+        let outp = MatchPlan::new(&p.dfa)
+            .sequential_execution()
+            .processors(P_MTL)
+            .run_syms(&syms);
+        t.row(vec![
+            p.name.clone(),
+            p.q().to_string(),
+            fmt_speedup(model_speedup(
+                n,
+                outp.makespan_syms(),
+                outp.merge_stats.lookup_ops,
+            )),
+            format!("{:.2}x", predicted_speedup(P_MTL, p.q())),
+        ]);
+    }
+    vec![t]
+}
+
+/// Fig. 18: speedups for varying input sizes (1 MB / 16 MB / 128 MB here;
+/// the paper's 10 GB point follows the same O(n)-invariance — set
+/// SPECDFA_BIG=1 to add a 1 GB row).
+pub fn fig18() -> Vec<Table> {
+    let mut sizes: Vec<usize> =
+        vec![1 << 20, 16 << 20, 128 << 20];
+    if std::env::var("SPECDFA_BIG").is_ok() {
+        sizes.push(1 << 30);
+    }
+    let mut t = Table::new(
+        "Fig. 18 — speedup invariance over input size, P=40, r=4",
+        &["pattern", "|Q|", "1MB", "16MB", "128MB", "(+1GB w/ SPECDFA_BIG)"],
+    );
+    let mut pats: Vec<&BenchPattern> = Vec::new();
+    pats.extend(spread_by_q(pcre_suite_cached(), 2));
+    pats.extend(spread_by_q(prosite_suite_cached(), 2));
+    for p in pats {
+        let mut row = vec![p.name.clone(), p.q().to_string()];
+        let base =
+            MatchPlan::new(&p.dfa).lookahead(4).sequential_execution()
+                .processors(P_MTL);
+        for (i, &n) in sizes.iter().enumerate() {
+            let syms =
+                p.input_syms(&mut InputGen::new(0xF1618 + i as u64), n);
+            let outp = base.clone().run_syms(&syms);
+            row.push(fmt_speedup(model_speedup(
+                n,
+                outp.makespan_syms(),
+                outp.merge_stats.lookup_ops,
+            )));
+        }
+        while row.len() < 6 {
+            row.push("-".to_string());
+        }
+        t.row(row);
+    }
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_matches_paper() {
+        let t = &table1()[0];
+        assert_eq!(t.rows.len(), 3);
+        assert_eq!(t.rows[0][4], "0-27");
+        assert_eq!(t.rows[1][4], "28-31");
+        assert_eq!(t.rows[2][4], "32-35");
+        assert_eq!(t.rows[0][3], "28.8");
+    }
+
+    #[test]
+    fn spread_by_q_covers_range() {
+        let suite = pcre_suite_cached();
+        let picked = spread_by_q(suite, 5);
+        assert_eq!(picked.len(), 5);
+        let qs: Vec<usize> = picked.iter().map(|p| p.q()).collect();
+        assert!(qs.windows(2).all(|w| w[0] <= w[1]));
+        let min_q = suite.iter().map(|p| p.q()).min().unwrap();
+        let max_q = suite.iter().map(|p| p.q()).max().unwrap();
+        assert_eq!(qs[0], min_q);
+        assert_eq!(*qs.last().unwrap(), max_q);
+    }
+
+    #[test]
+    fn model_speedup_bounds() {
+        assert!((model_speedup(100, 100, 0) - 1.0).abs() < 1e-12);
+        assert!(model_speedup(100, 50, 0) > 1.9);
+        assert!(model_speedup(100, 200, 0) < 1.0); // speed-down representable
+    }
+}

@@ -1,0 +1,162 @@
+//! Structural-property experiments: Fig. 16 (initial-state reduction
+//! rates), Table 4 (average I_max,r / |Q|), Fig. 17 (I_max,r computation
+//! overhead).
+
+use std::time::Instant;
+
+use crate::automata::Dfa;
+use crate::speculative::lookahead::{i_max_r_naive, Lookahead};
+use crate::util::bench::Table;
+use crate::util::rng::Rng;
+use crate::util::stats;
+use crate::workload::{pcre_suite_cached, prosite_suite_cached};
+
+use super::multicore::spread_by_q;
+
+/// Fig. 16: per-DFA |Q| and the reduction rate (1 − I_max,r/|Q|) for
+/// r = 1..4.
+pub fn fig16() -> Vec<Table> {
+    let mut out = Vec::new();
+    for (title, suite) in [
+        ("Fig. 16(a) — PCRE initial-state reduction", pcre_suite_cached()),
+        ("Fig. 16(b) — PROSITE initial-state reduction",
+         prosite_suite_cached()),
+    ] {
+        let mut t = Table::new(
+            title,
+            &["pattern", "|Q|", "red r=1", "red r=2", "red r=3", "red r=4"],
+        );
+        for p in spread_by_q(suite, 12) {
+            let la = Lookahead::analyze(&p.dfa, 4);
+            let mut row = vec![p.name.clone(), p.q().to_string()];
+            for k in 0..4 {
+                let reduction =
+                    1.0 - la.i_max_by_r[k] as f64 / p.q() as f64;
+                row.push(format!("{:.0}%", reduction * 100.0));
+            }
+            t.row(row);
+        }
+        out.push(t);
+    }
+    out
+}
+
+/// Table 4: average size of I_max,r relative to |Q| over each suite
+/// (paper: PCRE 33.7/26.4/23.7/21.7 %, PROSITE 47.2/29.2/20.5/16.0 %).
+pub fn table4() -> Vec<Table> {
+    let mut t = Table::new(
+        "Table 4 — average I_max,r / |Q| (r reverse lookahead symbols)",
+        &["suite", "r=0", "r=1", "r=2", "r=3", "r=4"],
+    );
+    for (name, suite) in [
+        ("PCRE", pcre_suite_cached()),
+        ("PROSITE", prosite_suite_cached()),
+    ] {
+        let mut ratios = vec![Vec::new(); 4];
+        for p in suite {
+            let la = Lookahead::analyze(&p.dfa, 4);
+            for k in 0..4 {
+                ratios[k].push(la.i_max_by_r[k] as f64 / p.q() as f64);
+            }
+        }
+        let mut row = vec![name.to_string(), "100%".to_string()];
+        for k in 0..4 {
+            row.push(format!("{:.1}%", stats::mean(&ratios[k]) * 100.0));
+        }
+        t.row(row);
+    }
+    vec![t]
+}
+
+/// Random complete DFA with the given |Q| and |Σ| (for Fig. 17 scaling).
+fn random_dfa_sized(rng: &mut Rng, q: u32, s: u32) -> Dfa {
+    let sink = q - 1;
+    let mut table = Vec::with_capacity((q * s) as usize);
+    for state in 0..q {
+        for _ in 0..s {
+            table.push(if state == sink {
+                sink
+            } else {
+                rng.below(q as u64) as u32
+            });
+        }
+    }
+    let accepting = (0..q).map(|st| st != sink && st % 7 == 3).collect();
+    let mut classes = [0u8; 256];
+    for b in 0..256 {
+        classes[b] = (b % s as usize) as u8;
+    }
+    Dfa::new(q, s, 0, accepting, table, classes)
+}
+
+/// Fig. 17: overhead of computing I_max,r with the paper's Algorithm 4
+/// (exponential in r): (a) growing |Σ| at fixed |Q|, (b) growing |Q| at
+/// fixed |Σ|.
+pub fn fig17() -> Vec<Table> {
+    let mut rng = Rng::new(0xF16_17);
+    let mut ta = Table::new(
+        "Fig. 17(a) — I_max,r cost vs |Sigma| (|Q|=50), Algorithm 4, µs",
+        &["|Sigma|", "r=1", "r=2", "r=3"],
+    );
+    for s in [4u32, 8, 16, 24, 32] {
+        let dfa = random_dfa_sized(&mut rng, 50, s);
+        let mut row = vec![s.to_string()];
+        for r in 1..=3 {
+            let t0 = Instant::now();
+            let v = i_max_r_naive(&dfa, r);
+            std::hint::black_box(v);
+            row.push(format!("{:.1}", t0.elapsed().as_secs_f64() * 1e6));
+        }
+        ta.row(row);
+    }
+    let mut tb = Table::new(
+        "Fig. 17(b) — I_max,r cost vs |Q| (|Sigma|=20), Algorithm 4 vs BFS, µs",
+        &["|Q|", "alg4 r=2", "alg4 r=3", "bfs r=3"],
+    );
+    for q in [50u32, 100, 200, 400, 800] {
+        let dfa = random_dfa_sized(&mut rng, q, 20);
+        let mut row = vec![q.to_string()];
+        for r in 2..=3 {
+            let t0 = Instant::now();
+            std::hint::black_box(i_max_r_naive(&dfa, r));
+            row.push(format!("{:.1}", t0.elapsed().as_secs_f64() * 1e6));
+        }
+        let t0 = Instant::now();
+        std::hint::black_box(Lookahead::analyze(&dfa, 3).i_max);
+        row.push(format!("{:.1}", t0.elapsed().as_secs_f64() * 1e6));
+        tb.row(row);
+    }
+    vec![ta, tb]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table4_ratios_in_range_and_monotone() {
+        let t = &table4()[0];
+        for row in &t.rows {
+            let vals: Vec<f64> = row[2..]
+                .iter()
+                .map(|s| s.trim_end_matches('%').parse::<f64>().unwrap())
+                .collect();
+            for v in &vals {
+                assert!(*v > 0.0 && *v <= 100.0);
+            }
+            // Lemma 1: averages non-increasing in r
+            for w in vals.windows(2) {
+                assert!(w[0] >= w[1] - 1e-9, "{vals:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn random_dfa_sized_shapes() {
+        let mut rng = Rng::new(1);
+        let dfa = random_dfa_sized(&mut rng, 64, 12);
+        assert_eq!(dfa.num_states, 64);
+        assert_eq!(dfa.num_symbols, 12);
+        assert_eq!(dfa.sink(), Some(63));
+    }
+}

@@ -1,0 +1,39 @@
+//! # specdfa — Speculative Parallel DFA Membership Test
+//!
+//! Production-quality reproduction of *"A Speculative Parallel DFA
+//! Membership Test for Multicore, SIMD and Cloud Computing Environments"*
+//! (Ko, Jung, Han, Burgstaller; Int. J. Parallel Programming, 2012).
+//!
+//! The library is organized as the paper's system plus every substrate it
+//! depends on (see DESIGN.md):
+//!
+//! * [`regex`] / [`automata`] — pattern frontends and the Grail+-substitute
+//!   toolchain (Thompson NFA, subset construction, Hopcroft minimization,
+//!   flattened SBase/IBase tables).
+//! * [`baseline`] — sequential matcher (Listing 1), Holub–Štekr comparator,
+//!   backtracking (ScanProsite analog) and grep-like engines.
+//! * [`speculative`] — the paper's contribution: failure-free speculative
+//!   parallel matching with I_max,r reverse-lookahead optimization,
+//!   weighted partitioning and L-vector merging.
+//! * [`cluster`] — simulated cloud computing environment (EC2 analog).
+//! * [`runtime`] — PJRT vector unit: loads the AOT-compiled Pallas lane
+//!   matcher (the AVX2-gather analog) and drives it from the match path.
+//! * [`workload`] — PCRE-like and PROSITE-like benchmark suites and input
+//!   generators.
+//! * [`experiments`] — regenerators for every table and figure in §6.
+
+pub mod automata;
+pub mod baseline;
+pub mod cluster;
+pub mod experiments;
+pub mod regex;
+pub mod workload;
+pub mod runtime;
+pub mod speculative;
+pub mod util;
+
+pub use automata::{Dfa, FlatDfa};
+pub use baseline::sequential::SequentialMatcher;
+pub use regex::compile::{compile_exact, compile_prosite, compile_search};
+pub use speculative::matcher::{MatchOutcome, MatchPlan};
+pub use speculative::merge::MergeStrategy;

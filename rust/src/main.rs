@@ -1,0 +1,279 @@
+//! specdfa CLI — leader entrypoint for the speculative parallel DFA
+//! membership test.
+//!
+//! Subcommands (hand-rolled parser; the build is offline, no clap):
+//!   match       run a membership test on a file or generated input
+//!   experiment  regenerate a paper table/figure (or `all`)
+//!   suite       show the benchmark suites with structural properties
+//!   profile     print host calibration (measured symbol rate)
+//!   grail       run a DFA given in Grail+ format
+//!   simd        run the PJRT vector-unit matcher
+//!   cloud       run the simulated-EC2 matcher
+
+use std::process::ExitCode;
+
+use specdfa::automata::grail;
+use specdfa::cluster::{CloudMatcher, ClusterSpec};
+use specdfa::experiments;
+use specdfa::regex::compile::{compile_prosite, compile_search};
+use specdfa::runtime::pjrt::VectorUnit;
+use specdfa::runtime::simd::SimdMatcher;
+use specdfa::speculative::lookahead::Lookahead;
+use specdfa::speculative::matcher::MatchPlan;
+use specdfa::util::bench::Table;
+use specdfa::workload::{pcre_suite_cached, prosite_suite_cached, InputGen};
+use specdfa::SequentialMatcher;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let result = match args.first().map(String::as_str) {
+        Some("match") => cmd_match(&args[1..]),
+        Some("experiment") => cmd_experiment(&args[1..]),
+        Some("suite") => cmd_suite(&args[1..]),
+        Some("profile") => cmd_profile(),
+        Some("grail") => cmd_grail(&args[1..]),
+        Some("simd") => cmd_simd(&args[1..]),
+        Some("cloud") => cmd_cloud(&args[1..]),
+        Some("help") | None => {
+            print_usage();
+            Ok(())
+        }
+        Some(other) => {
+            eprintln!("unknown command {other:?}");
+            print_usage();
+            return ExitCode::FAILURE;
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "specdfa — speculative parallel DFA membership test\n\
+         \n\
+         USAGE:\n\
+         \x20 specdfa match   (--regex PAT | --prosite PAT) \
+         [--file F | --gen N] [--procs P] [--lookahead R]\n\
+         \x20 specdfa experiment <name>|all      names: {}\n\
+         \x20 specdfa suite   [pcre|prosite]\n\
+         \x20 specdfa profile\n\
+         \x20 specdfa grail   <dfa-file> [--gen N]\n\
+         \x20 specdfa simd    (--regex PAT | --prosite PAT) [--gen N] \
+         [--variant V] [--lookahead R]\n\
+         \x20 specdfa cloud   (--regex PAT | --prosite PAT) [--gen N] \
+         [--nodes K] [--lookahead R]",
+        experiments::ALL.join(" ")
+    );
+}
+
+/// Minimal flag parser: --key value pairs.
+fn flags(args: &[String]) -> anyhow::Result<Vec<(String, String)>> {
+    let mut out = Vec::new();
+    let mut it = args.iter();
+    while let Some(k) = it.next() {
+        let Some(key) = k.strip_prefix("--") else {
+            anyhow::bail!("expected --flag, got {k:?}");
+        };
+        let v = it
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("--{key} needs a value"))?;
+        out.push((key.to_string(), v.clone()));
+    }
+    Ok(out)
+}
+
+fn get<'a>(fl: &'a [(String, String)], key: &str) -> Option<&'a str> {
+    fl.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+}
+
+fn compile_from_flags(
+    fl: &[(String, String)],
+) -> anyhow::Result<specdfa::Dfa> {
+    match (get(fl, "regex"), get(fl, "prosite")) {
+        (Some(pat), None) => compile_search(pat),
+        (None, Some(pat)) => compile_prosite(pat),
+        _ => anyhow::bail!("need exactly one of --regex / --prosite"),
+    }
+}
+
+fn input_from_flags(
+    fl: &[(String, String)],
+    dfa: &specdfa::Dfa,
+    protein: bool,
+) -> anyhow::Result<Vec<u8>> {
+    if let Some(path) = get(fl, "file") {
+        return Ok(std::fs::read(path)?);
+    }
+    let n: usize = get(fl, "gen").unwrap_or("1000000").parse()?;
+    let mut gen = InputGen::new(0xC11);
+    Ok(if protein {
+        gen.protein(n)
+    } else {
+        let syms = gen.uniform_syms(dfa, n);
+        // map symbols back through representative bytes
+        let mut reps = vec![b'?'; dfa.num_symbols as usize];
+        for b in (0..=255u8).rev() {
+            reps[dfa.class_of(b) as usize] = b;
+        }
+        syms.into_iter().map(|s| reps[s as usize]).collect()
+    })
+}
+
+fn cmd_match(args: &[String]) -> anyhow::Result<()> {
+    let fl = flags(args)?;
+    let dfa = compile_from_flags(&fl)?;
+    let input = input_from_flags(&fl, &dfa, get(&fl, "prosite").is_some())?;
+    let procs: usize = get(&fl, "procs").unwrap_or("8").parse()?;
+    let r: usize = get(&fl, "lookahead").unwrap_or("4").parse()?;
+
+    let la = Lookahead::analyze(&dfa, r.max(1));
+    println!(
+        "DFA: |Q|={} |Sigma|={} I_max,{}={} gamma={:.3}",
+        dfa.num_states, dfa.num_symbols, r.max(1), la.i_max,
+        la.i_max as f64 / dfa.num_states as f64
+    );
+
+    let seq = SequentialMatcher::new(&dfa).run_bytes(&input);
+    let plan = MatchPlan::new(&dfa).processors(procs).lookahead(r);
+    let out = plan.run(&input);
+    anyhow::ensure!(out.accepted == seq.accepted, "failure-freedom violated!");
+    println!(
+        "match: {} (final state {}, n={}, P={procs}, r={r})",
+        out.accepted, out.final_state, input.len()
+    );
+    println!(
+        "work: makespan {} syms vs sequential {} syms -> model speedup {:.2}x",
+        out.makespan_syms(),
+        input.len(),
+        input.len() as f64 / out.makespan_syms().max(1) as f64
+    );
+    Ok(())
+}
+
+fn cmd_experiment(args: &[String]) -> anyhow::Result<()> {
+    let name = args
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("experiment name required"))?;
+    let names: Vec<&str> = if name == "all" {
+        experiments::ALL.to_vec()
+    } else {
+        vec![name.as_str()]
+    };
+    for n in names {
+        let tables = experiments::run(n)
+            .ok_or_else(|| anyhow::anyhow!("unknown experiment {n:?}"))?;
+        for t in tables {
+            t.print();
+        }
+    }
+    Ok(())
+}
+
+fn cmd_suite(args: &[String]) -> anyhow::Result<()> {
+    let which = args.first().map(String::as_str).unwrap_or("pcre");
+    let suite = match which {
+        "pcre" => pcre_suite_cached(),
+        "prosite" => prosite_suite_cached(),
+        _ => anyhow::bail!("suite must be pcre or prosite"),
+    };
+    let mut t = Table::new(
+        &format!("{which} suite"),
+        &["name", "|Q|", "|Sigma|", "I_max,1", "I_max,4", "gamma4"],
+    );
+    for p in suite {
+        let la = Lookahead::analyze(&p.dfa, 4);
+        t.row(vec![
+            p.name.clone(),
+            p.q().to_string(),
+            p.dfa.num_symbols.to_string(),
+            la.i_max_by_r[0].to_string(),
+            la.i_max.to_string(),
+            format!("{:.3}", la.i_max as f64 / p.q() as f64),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_profile() -> anyhow::Result<()> {
+    let rate = experiments::calibrate::host_syms_per_us();
+    println!(
+        "host sequential matching rate: {rate:.1} symbols/us \
+         ({:.2} ns/symbol, {:.1} MB/s at 1 byte/symbol)",
+        1000.0 / rate,
+        rate * 1e6 / (1 << 20) as f64
+    );
+    Ok(())
+}
+
+fn cmd_grail(args: &[String]) -> anyhow::Result<()> {
+    let path = args
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("grail file required"))?;
+    let text = std::fs::read_to_string(path)?;
+    let dfa = grail::from_grail(&text)?;
+    let fl = flags(&args[1..])?;
+    let n: usize = get(&fl, "gen").unwrap_or("1000000").parse()?;
+    let syms = InputGen::new(1).uniform_syms(&dfa, n);
+    let out = MatchPlan::new(&dfa).processors(8).lookahead(2).run_syms(&syms);
+    println!(
+        "grail DFA |Q|={} |Sigma|={}: match={} final={}",
+        dfa.num_states, dfa.num_symbols, out.accepted, out.final_state
+    );
+    Ok(())
+}
+
+fn cmd_simd(args: &[String]) -> anyhow::Result<()> {
+    let fl = flags(args)?;
+    let dfa = compile_from_flags(&fl)?;
+    let variant = get(&fl, "variant").unwrap_or("lane8_main");
+    let r: usize = get(&fl, "lookahead").unwrap_or("1").parse()?;
+    let n: usize = get(&fl, "gen").unwrap_or("65536").parse()?;
+    let vu = VectorUnit::load(VectorUnit::default_dir(), variant)?;
+    println!("vector unit: {} on {} ({} lanes, t={})",
+             vu.name, vu.platform(), vu.spec.lanes, vu.spec.t);
+    let syms = InputGen::new(0x51D).uniform_syms(&dfa, n);
+    let m = SimdMatcher::new(&dfa, &vu)?.lookahead(r);
+    let out = m.run_syms(&syms)?;
+    let seq = SequentialMatcher::new(&dfa).run_syms(&syms);
+    anyhow::ensure!(out.final_state == seq.final_state,
+                    "vector unit disagrees with scalar matcher");
+    println!(
+        "match={} lanes={} slots={} passes={} pjrt_calls={} \
+         chunk-speedup={:.2}x instr-speedup={:.2}x wall={:.1}ms",
+        out.accepted, vu.spec.lanes, out.lane_slots, out.passes,
+        out.pjrt_calls, out.chunk_speedup(), out.instr_speedup(),
+        out.wall_s * 1e3
+    );
+    Ok(())
+}
+
+fn cmd_cloud(args: &[String]) -> anyhow::Result<()> {
+    let fl = flags(args)?;
+    let dfa = compile_from_flags(&fl)?;
+    let nodes: usize = get(&fl, "nodes").unwrap_or("20").parse()?;
+    let r: usize = get(&fl, "lookahead").unwrap_or("4").parse()?;
+    let n: usize = get(&fl, "gen").unwrap_or("8000000").parse()?;
+    let syms = InputGen::new(0xC1D).uniform_syms(&dfa, n);
+    let out = CloudMatcher::new(&dfa, ClusterSpec::homogeneous(nodes))
+        .lookahead(r)
+        .base_rate(experiments::calibrate::host_syms_per_us())
+        .run_syms(&syms);
+    println!(
+        "cloud: {} nodes ({} cores): match={} speedup={:.1}x comm={:.2}% \
+         balance-cv={:.4}",
+        nodes,
+        ClusterSpec::homogeneous(nodes).total_workers(),
+        out.accepted,
+        out.speedup(),
+        out.comm_ratio() * 100.0,
+        out.balance_cv()
+    );
+    Ok(())
+}

@@ -1,0 +1,93 @@
+//! Regex abstract syntax tree over byte sets.
+//!
+//! A deliberately small core: every surface construct (classes, `.`,
+//! escapes, `*`/`+`/`?`/`{m,n}`, alternation, grouping, PROSITE elements)
+//! desugars into these five node kinds.
+
+use crate::automata::byteset::ByteSet;
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Ast {
+    /// Matches nothing (the empty language).
+    Empty,
+    /// Matches the empty string.
+    Epsilon,
+    /// Matches one byte from the set.
+    Class(ByteSet),
+    /// Sequence.
+    Concat(Vec<Ast>),
+    /// Union.
+    Alt(Vec<Ast>),
+    /// node{min, max}; max=None means unbounded. Covers * + ? {m} {m,} {m,n}.
+    Repeat { node: Box<Ast>, min: u32, max: Option<u32> },
+}
+
+impl Ast {
+    pub fn literal(s: &[u8]) -> Ast {
+        Ast::Concat(s.iter().map(|&b| Ast::Class(ByteSet::single(b))).collect())
+    }
+
+    pub fn star(node: Ast) -> Ast {
+        Ast::Repeat { node: Box::new(node), min: 0, max: None }
+    }
+
+    pub fn plus(node: Ast) -> Ast {
+        Ast::Repeat { node: Box::new(node), min: 1, max: None }
+    }
+
+    pub fn opt(node: Ast) -> Ast {
+        Ast::Repeat { node: Box::new(node), min: 0, max: Some(1) }
+    }
+
+    /// `.*self.*` over the given universe — "input contains a match"
+    /// (search semantics; how grep/ScanProsite patterns are interpreted).
+    pub fn surrounded(self, universe: ByteSet) -> Ast {
+        Ast::Concat(vec![
+            Ast::star(Ast::Class(universe)),
+            self,
+            Ast::star(Ast::Class(universe)),
+        ])
+    }
+
+    /// Rough node count (used to cap pathological test inputs).
+    pub fn size(&self) -> usize {
+        match self {
+            Ast::Empty | Ast::Epsilon | Ast::Class(_) => 1,
+            Ast::Concat(v) | Ast::Alt(v) => {
+                1 + v.iter().map(|a| a.size()).sum::<usize>()
+            }
+            Ast::Repeat { node, min, max } => {
+                // repeats expand during Thompson construction
+                let copies = max.unwrap_or(*min + 1).max(1) as usize;
+                1 + node.size() * copies
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn helpers_shape() {
+        let l = Ast::literal(b"ab");
+        match &l {
+            Ast::Concat(v) => assert_eq!(v.len(), 2),
+            _ => panic!(),
+        }
+        assert!(matches!(Ast::star(l.clone()),
+                         Ast::Repeat { min: 0, max: None, .. }));
+        assert!(matches!(Ast::plus(l.clone()),
+                         Ast::Repeat { min: 1, max: None, .. }));
+        assert!(matches!(Ast::opt(l),
+                         Ast::Repeat { min: 0, max: Some(1), .. }));
+    }
+
+    #[test]
+    fn size_accounts_repeats() {
+        let a = Ast::Class(ByteSet::single(b'a'));
+        let r = Ast::Repeat { node: Box::new(a), min: 0, max: Some(10) };
+        assert!(r.size() > 10);
+    }
+}

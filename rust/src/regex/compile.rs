@@ -1,0 +1,152 @@
+//! Pattern -> minimal DFA compile pipeline (the paper's Grail+ toolchain):
+//! parse -> Thompson NFA -> subset construction -> Hopcroft minimization.
+//!
+//! Two membership semantics:
+//!  * `compile_exact`   — L(A) = L(pattern): whole-input match.
+//!  * `compile_search`  — L(A) = Σ* pattern Σ*: "input contains a match",
+//!    which is what ScanProsite/grep compute and what the paper's
+//!    membership test runs on protein sequences.  Finals are absorbing, so
+//!    Algorithm 1's early exit (lines 4–5) is sound.
+
+use anyhow::Result;
+
+use super::ast::Ast;
+use super::parser;
+use super::prosite;
+use crate::automata::byteset::ByteSet;
+use crate::automata::minimize::minimize;
+use crate::automata::nfa::Nfa;
+use crate::automata::subset::determinize;
+use crate::automata::Dfa;
+
+/// A compiled pattern: the minimal DFA plus provenance.
+#[derive(Clone, Debug)]
+pub struct CompiledPattern {
+    pub name: String,
+    pub pattern: String,
+    pub dfa: Dfa,
+}
+
+fn build(ast: &Ast) -> Dfa {
+    minimize(&determinize(&Nfa::from_ast(ast)))
+}
+
+/// Compile a PCRE-style regex with whole-input semantics (anchors at both
+/// ends implied; explicit `^`/`$` are no-ops here).
+pub fn compile_exact(pattern: &str) -> Result<Dfa> {
+    let parsed = parser::parse(pattern)?;
+    Ok(build(&parsed.ast))
+}
+
+/// Compile a PCRE-style regex with search ("contains") semantics: the DFA
+/// accepts any input containing a substring matching the pattern.  `^`/`$`
+/// anchors suppress the corresponding Σ* wrap.
+pub fn compile_search(pattern: &str) -> Result<Dfa> {
+    let parsed = parser::parse(pattern)?;
+    let universe = ByteSet::ALL;
+    let mut parts = Vec::new();
+    if !parsed.anchored_start {
+        parts.push(Ast::star(Ast::Class(universe)));
+    }
+    parts.push(parsed.ast);
+    if !parsed.anchored_end {
+        parts.push(Ast::star(Ast::Class(universe)));
+    }
+    Ok(build(&Ast::Concat(parts)))
+}
+
+/// Compile a PROSITE pattern with ScanProsite semantics: match anywhere in
+/// the sequence unless `<`/`>` anchored.  Alphabet is the amino-acid set.
+pub fn compile_prosite(pattern: &str) -> Result<Dfa> {
+    let parsed = prosite::parse(pattern)?;
+    let universe = prosite::amino_set();
+    let mut parts = Vec::new();
+    if !parsed.anchored_start {
+        parts.push(Ast::star(Ast::Class(universe)));
+    }
+    parts.push(parsed.ast);
+    if !parsed.anchored_end {
+        parts.push(Ast::star(Ast::Class(universe)));
+    }
+    Ok(build(&Ast::Concat(parts)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn exact_vs_search_semantics() {
+        let exact = compile_exact("ab+c").unwrap();
+        let search = compile_search("ab+c").unwrap();
+        assert!(exact.accepts_bytes(b"abbc"));
+        assert!(!exact.accepts_bytes(b"xabbcx"));
+        assert!(search.accepts_bytes(b"xabbcx"));
+        assert!(search.accepts_bytes(b"abbc"));
+        assert!(!search.accepts_bytes(b"abx"));
+    }
+
+    #[test]
+    fn search_finals_absorbing() {
+        let dfa = compile_search("abc").unwrap();
+        // after a match, any continuation still accepts
+        assert!(dfa.accepts_bytes(b"abc"));
+        assert!(dfa.accepts_bytes(b"abc!!!!"));
+        // minimal search DFA has a single absorbing accept state
+        let q = dfa.run_bytes(dfa.start, b"abc");
+        for s in 0..dfa.num_symbols {
+            assert_eq!(dfa.step(q, s), q);
+        }
+    }
+
+    #[test]
+    fn anchored_search() {
+        let dfa = compile_search("^abc").unwrap();
+        assert!(dfa.accepts_bytes(b"abcxxx"));
+        assert!(!dfa.accepts_bytes(b"xabc"));
+        let dfa = compile_search("abc$").unwrap();
+        assert!(dfa.accepts_bytes(b"xxabc"));
+        assert!(!dfa.accepts_bytes(b"abcx"));
+    }
+
+    #[test]
+    fn prosite_scan_semantics() {
+        let dfa = compile_prosite("R-G-D.").unwrap();
+        assert!(dfa.accepts_bytes(b"MKRGDAC"));
+        assert!(!dfa.accepts_bytes(b"MKRGEAC"));
+        let dfa = compile_prosite("<M-A.").unwrap();
+        assert!(dfa.accepts_bytes(b"MACDEF"));
+        assert!(!dfa.accepts_bytes(b"AMACDE"));
+    }
+
+    #[test]
+    fn minimal_dfa_is_deterministic_complete() {
+        let dfa = compile_search("([ab]c){2,3}|d+").unwrap();
+        assert_eq!(dfa.table.len(),
+                   (dfa.num_states * dfa.num_symbols) as usize);
+        assert!(dfa.table.iter().all(|&t| t < dfa.num_states));
+    }
+
+    #[test]
+    fn prop_exact_compile_agrees_with_nfa() {
+        let patterns = [
+            "a(b|c)*d", "x{2,5}y", r"\d+-\d+", "(ab|ba)+", "[a-f]{3}",
+            "q?w?e?r?t?y?", "(a|b)(a|b)(a|b)",
+        ];
+        prop::check("compiled DFA == NFA simulation", 30, |rng| {
+            let pat = patterns[rng.usize_below(patterns.len())];
+            let parsed = parser::parse(pat).unwrap();
+            let nfa = Nfa::from_ast(&parsed.ast);
+            let dfa = compile_exact(pat).unwrap();
+            for _ in 0..20 {
+                let len = rng.below(10) as usize;
+                let s: Vec<u8> = (0..len)
+                    .map(|_| b"abcdxy0123-"[rng.usize_below(11)])
+                    .collect();
+                assert_eq!(nfa.accepts(&s), dfa.accepts_bytes(&s),
+                           "pat={pat} s={s:?}");
+            }
+        });
+    }
+}

@@ -1,0 +1,11 @@
+//! Regular-expression frontends: a PCRE-style parser, a PROSITE protein
+//! pattern parser, and the compile pipeline regex -> NFA -> DFA -> minimal
+//! DFA (the paper's Grail+ toolchain, §5).
+
+pub mod ast;
+pub mod compile;
+pub mod parser;
+pub mod prosite;
+
+pub use ast::Ast;
+pub use compile::{compile_exact, compile_search, CompiledPattern};

@@ -1,0 +1,423 @@
+//! PCRE-style regex parser (the subset the PCRE benchmark patterns use).
+//!
+//! Grammar:
+//! ```text
+//! alt    := concat ('|' concat)*
+//! concat := repeat*
+//! repeat := atom ( '*' | '+' | '?' | '{m}' | '{m,}' | '{m,n}' )* '?'?  (lazy marker ignored)
+//! atom   := '(' alt ')' | '[' class ']' | '.' | escape | literal-byte
+//! class  := '^'? (byte | byte '-' byte | class-escape)+
+//! escape := \d \D \w \W \s \S \n \r \t \f \0 \xHH or \<punct>
+//! ```
+//!
+//! Anchors `^`/`$` are accepted at the pattern edges and simply mark the
+//! pattern as edge-anchored (membership compilation handles wrapping —
+//! see compile.rs).  DFA membership semantics make interior anchors
+//! meaningless; they are rejected.
+
+use anyhow::{bail, Result};
+
+use super::ast::Ast;
+use crate::automata::byteset::ByteSet;
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ParsedRegex {
+    pub ast: Ast,
+    /// pattern started with '^'
+    pub anchored_start: bool,
+    /// pattern ended with '$'
+    pub anchored_end: bool,
+}
+
+pub fn parse(pattern: &str) -> Result<ParsedRegex> {
+    let bytes = pattern.as_bytes();
+    let mut p = Parser { b: bytes, i: 0 };
+    let anchored_start = p.eat(b'^');
+    let ast = p.parse_alt()?;
+    let anchored_end = if p.peek() == Some(b'$') {
+        p.i += 1;
+        true
+    } else {
+        false
+    };
+    if p.i != p.b.len() {
+        bail!("trailing input at byte {} in {pattern:?}", p.i);
+    }
+    Ok(ParsedRegex { ast, anchored_start, anchored_end })
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn eat(&mut self, c: u8) -> bool {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn parse_alt(&mut self) -> Result<Ast> {
+        let mut alts = vec![self.parse_concat()?];
+        while self.eat(b'|') {
+            alts.push(self.parse_concat()?);
+        }
+        Ok(if alts.len() == 1 { alts.pop().unwrap() } else { Ast::Alt(alts) })
+    }
+
+    fn parse_concat(&mut self) -> Result<Ast> {
+        let mut parts = Vec::new();
+        while let Some(c) = self.peek() {
+            if c == b'|' || c == b')' || c == b'$' {
+                break;
+            }
+            parts.push(self.parse_repeat()?);
+        }
+        Ok(match parts.len() {
+            0 => Ast::Epsilon,
+            1 => parts.pop().unwrap(),
+            _ => Ast::Concat(parts),
+        })
+    }
+
+    fn parse_repeat(&mut self) -> Result<Ast> {
+        let mut node = self.parse_atom()?;
+        loop {
+            match self.peek() {
+                Some(b'*') => {
+                    self.i += 1;
+                    node = Ast::star(node);
+                }
+                Some(b'+') => {
+                    self.i += 1;
+                    node = Ast::plus(node);
+                }
+                Some(b'?') => {
+                    self.i += 1;
+                    node = Ast::opt(node);
+                }
+                Some(b'{') => {
+                    let save = self.i;
+                    match self.parse_bounds() {
+                        Ok((min, max)) => {
+                            if let Some(m) = max {
+                                if m < min {
+                                    bail!("bad repeat bounds {{{min},{m}}}");
+                                }
+                            }
+                            node = Ast::Repeat {
+                                node: Box::new(node),
+                                min,
+                                max,
+                            };
+                        }
+                        Err(_) => {
+                            // PCRE treats an unparsable '{' as a literal
+                            self.i = save;
+                            break;
+                        }
+                    }
+                }
+                _ => break,
+            }
+            // lazy quantifier marker: semantics-free for DFA membership
+            if self.peek() == Some(b'?') {
+                self.i += 1;
+            }
+        }
+        Ok(node)
+    }
+
+    fn parse_bounds(&mut self) -> Result<(u32, Option<u32>)> {
+        assert!(self.eat(b'{'));
+        let min = self.parse_int()?;
+        let out = if self.eat(b',') {
+            if self.peek() == Some(b'}') {
+                (min, None)
+            } else {
+                (min, Some(self.parse_int()?))
+            }
+        } else {
+            (min, Some(min))
+        };
+        if !self.eat(b'}') {
+            bail!("expected }}");
+        }
+        Ok(out)
+    }
+
+    fn parse_int(&mut self) -> Result<u32> {
+        let start = self.i;
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.i += 1;
+        }
+        if self.i == start {
+            bail!("expected integer");
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        let v: u32 = s.parse()?;
+        if v > 1000 {
+            bail!("repeat bound {v} too large");
+        }
+        Ok(v)
+    }
+
+    fn parse_atom(&mut self) -> Result<Ast> {
+        match self.peek() {
+            None => bail!("unexpected end of pattern"),
+            Some(b'(') => {
+                self.i += 1;
+                // non-capturing group markers (?: are accepted
+                if self.peek() == Some(b'?') {
+                    self.i += 1;
+                    if !self.eat(b':') {
+                        bail!("unsupported (?...) construct");
+                    }
+                }
+                let inner = self.parse_alt()?;
+                if !self.eat(b')') {
+                    bail!("unbalanced (");
+                }
+                Ok(inner)
+            }
+            Some(b'[') => {
+                self.i += 1;
+                let set = self.parse_class()?;
+                Ok(Ast::Class(set))
+            }
+            Some(b'.') => {
+                self.i += 1;
+                // '.' = any byte except newline (PCRE default)
+                let mut s = ByteSet::ALL;
+                s = {
+                    let mut t = s;
+                    t.0[(b'\n' >> 6) as usize] &= !(1u64 << (b'\n' & 63));
+                    t
+                };
+                Ok(Ast::Class(s))
+            }
+            Some(b'\\') => {
+                self.i += 1;
+                let set = self.parse_escape()?;
+                Ok(Ast::Class(set))
+            }
+            // '{' that failed to parse as bounds falls through to a
+            // literal (PCRE behaviour), so it is NOT in this reject list.
+            Some(c @ (b'*' | b'+' | b'?' | b')')) => {
+                bail!("dangling metacharacter {:?}", c as char)
+            }
+            Some(c) => {
+                self.i += 1;
+                Ok(Ast::Class(ByteSet::single(c)))
+            }
+        }
+    }
+
+    fn parse_escape(&mut self) -> Result<ByteSet> {
+        let Some(c) = self.peek() else { bail!("dangling backslash") };
+        self.i += 1;
+        Ok(match c {
+            b'd' => ByteSet::range(b'0', b'9'),
+            b'D' => ByteSet::range(b'0', b'9').negate(),
+            b'w' => word_set(),
+            b'W' => word_set().negate(),
+            b's' => ByteSet::from_bytes(b" \t\n\r\x0b\x0c"),
+            b'S' => ByteSet::from_bytes(b" \t\n\r\x0b\x0c").negate(),
+            b'n' => ByteSet::single(b'\n'),
+            b'r' => ByteSet::single(b'\r'),
+            b't' => ByteSet::single(b'\t'),
+            b'f' => ByteSet::single(0x0c),
+            b'0' => ByteSet::single(0),
+            b'x' => {
+                let hi = self.hex_digit()?;
+                let lo = self.hex_digit()?;
+                ByteSet::single(hi * 16 + lo)
+            }
+            // punctuation escapes: \. \* \( etc.
+            c if !c.is_ascii_alphanumeric() => ByteSet::single(c),
+            c => bail!("unsupported escape \\{}", c as char),
+        })
+    }
+
+    fn hex_digit(&mut self) -> Result<u8> {
+        let Some(c) = self.peek() else { bail!("bad \\x escape") };
+        self.i += 1;
+        match c {
+            b'0'..=b'9' => Ok(c - b'0'),
+            b'a'..=b'f' => Ok(c - b'a' + 10),
+            b'A'..=b'F' => Ok(c - b'A' + 10),
+            _ => bail!("bad hex digit {:?}", c as char),
+        }
+    }
+
+    fn parse_class(&mut self) -> Result<ByteSet> {
+        let negate = self.eat(b'^');
+        let mut set = ByteSet::EMPTY;
+        let mut first = true;
+        loop {
+            let Some(c) = self.peek() else { bail!("unterminated [") };
+            if c == b']' && !first {
+                self.i += 1;
+                break;
+            }
+            first = false;
+            let lo = if c == b'\\' {
+                self.i += 1;
+                let esc = self.parse_escape()?;
+                if esc.len() > 1 {
+                    // class escape like \d inside []
+                    set = set.union(&esc);
+                    continue;
+                }
+                esc.first().unwrap()
+            } else {
+                self.i += 1;
+                c
+            };
+            // range?
+            if self.peek() == Some(b'-')
+                && self.b.get(self.i + 1).map_or(false, |&n| n != b']')
+            {
+                self.i += 1; // '-'
+                let hc = self.peek().unwrap();
+                let hi = if hc == b'\\' {
+                    self.i += 1;
+                    let esc = self.parse_escape()?;
+                    if esc.len() != 1 {
+                        bail!("bad range endpoint");
+                    }
+                    esc.first().unwrap()
+                } else {
+                    self.i += 1;
+                    hc
+                };
+                if hi < lo {
+                    bail!("reversed range {}-{}", lo as char, hi as char);
+                }
+                set = set.union(&ByteSet::range(lo, hi));
+            } else {
+                set.insert(lo);
+            }
+        }
+        Ok(if negate { set.negate() } else { set })
+    }
+}
+
+fn word_set() -> ByteSet {
+    ByteSet::range(b'a', b'z')
+        .union(&ByteSet::range(b'A', b'Z'))
+        .union(&ByteSet::range(b'0', b'9'))
+        .union(&ByteSet::single(b'_'))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::automata::nfa::Nfa;
+
+    fn accepts(pat: &str, input: &[u8]) -> bool {
+        let parsed = parse(pat).unwrap();
+        Nfa::from_ast(&parsed.ast).accepts(input)
+    }
+
+    #[test]
+    fn literals_and_alternation() {
+        assert!(accepts("abc", b"abc"));
+        assert!(!accepts("abc", b"abd"));
+        assert!(accepts("cat|dog", b"dog"));
+        assert!(!accepts("cat|dog", b"cow"));
+    }
+
+    #[test]
+    fn quantifiers() {
+        assert!(accepts("a*", b""));
+        assert!(accepts("a*", b"aaaa"));
+        assert!(accepts("a+b", b"aab"));
+        assert!(!accepts("a+b", b"b"));
+        assert!(accepts("colou?r", b"color"));
+        assert!(accepts("colou?r", b"colour"));
+        assert!(accepts("a{2,3}", b"aa"));
+        assert!(accepts("a{2,3}", b"aaa"));
+        assert!(!accepts("a{2,3}", b"a"));
+        assert!(!accepts("a{2,3}", b"aaaa"));
+        assert!(accepts("a{3}", b"aaa"));
+        assert!(accepts("a{2,}", b"aaaaaa"));
+        assert!(!accepts("a{2,}", b"a"));
+    }
+
+    #[test]
+    fn classes() {
+        assert!(accepts("[abc]+", b"cab"));
+        assert!(!accepts("[abc]+", b"cad"));
+        assert!(accepts("[a-z0-9]+", b"hello42"));
+        assert!(accepts("[^aeiou]", b"x"));
+        assert!(!accepts("[^aeiou]", b"a"));
+        assert!(accepts("[-a]", b"-")); // literal '-' at edge
+        assert!(accepts("[]a]", b"]")); // ']' first is literal
+    }
+
+    #[test]
+    fn escapes() {
+        assert!(accepts(r"\d{3}", b"123"));
+        assert!(!accepts(r"\d{3}", b"12a"));
+        assert!(accepts(r"\w+", b"az_9"));
+        assert!(accepts(r"\s", b" "));
+        assert!(accepts(r"\.", b"."));
+        assert!(!accepts(r"\.", b"a"));
+        assert!(accepts(r"\x41", b"A"));
+        assert!(accepts(r"[\d_]+", b"1_2"));
+    }
+
+    #[test]
+    fn dot_excludes_newline() {
+        assert!(accepts(".", b"x"));
+        assert!(!accepts(".", b"\n"));
+    }
+
+    #[test]
+    fn groups_nested() {
+        assert!(accepts("(ab)+c", b"ababc"));
+        assert!(accepts("(a(b|c)){2}", b"abac"));
+        assert!(accepts("(?:ab|cd)*", b"abcdab"));
+    }
+
+    #[test]
+    fn anchors_recorded() {
+        let p = parse("^abc$").unwrap();
+        assert!(p.anchored_start && p.anchored_end);
+        let p = parse("abc").unwrap();
+        assert!(!p.anchored_start && !p.anchored_end);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse("(a").is_err());
+        assert!(parse("a)").is_err());
+        assert!(parse("[a").is_err());
+        assert!(parse("*a").is_err());
+        assert!(parse(r"\").is_err());
+        assert!(parse("a{3,2}").is_err());
+        assert!(parse("[z-a]").is_err());
+    }
+
+    #[test]
+    fn brace_literal_fallback() {
+        // PCRE treats '{' not starting a valid bound as a literal
+        assert!(accepts("a{x", b"a{x"));
+    }
+
+    #[test]
+    fn lazy_markers_ignored() {
+        assert!(accepts("a+?b", b"aab"));
+        assert!(accepts("a*?", b"aa"));
+        assert!(accepts("a{1,2}?b", b"ab"));
+    }
+}

@@ -1,0 +1,267 @@
+//! PROSITE protein pattern parser (the PA lines of the PROSITE database).
+//!
+//! Syntax (https://prosite.expasy.org — §"PA line"):
+//!   * elements separated by `-`; the pattern ends with `.`
+//!   * `x` — any amino acid; `[ACD]` — one of; `{ACD}` — none of
+//!   * repetition: `e(3)` exactly, `e(2,4)` between
+//!   * `<` anchors at the N-terminus, `>` at the C-terminus
+//!
+//! Example (PS00029, leucine zipper):
+//!   `L-x(6)-L-x(6)-L-x(6)-L.`
+//!
+//! Patterns compile to ASTs over the 20-letter amino-acid alphabet (plus
+//! the wildcard letters B, Z, X which PROSITE sequences may contain).
+
+use anyhow::{bail, Result};
+
+use super::ast::Ast;
+use crate::automata::byteset::ByteSet;
+
+/// The 20 standard amino acids.
+pub const AMINO_ACIDS: &[u8; 20] = b"ACDEFGHIKLMNPQRSTVWY";
+/// Sequence alphabet: amino acids + ambiguity codes seen in SwissProt.
+pub const SEQUENCE_ALPHABET: &[u8; 23] = b"ACDEFGHIKLMNPQRSTVWYBZX";
+
+pub fn amino_set() -> ByteSet {
+    ByteSet::from_bytes(SEQUENCE_ALPHABET)
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ParsedProsite {
+    pub ast: Ast,
+    /// `<` present: match must start at the sequence N-terminus
+    pub anchored_start: bool,
+    /// `>` present: match must end at the C-terminus
+    pub anchored_end: bool,
+}
+
+pub fn parse(pattern: &str) -> Result<ParsedProsite> {
+    let mut text = pattern.trim();
+    if let Some(stripped) = text.strip_suffix('.') {
+        text = stripped;
+    }
+    let mut anchored_start = false;
+    let mut anchored_end = false;
+    if let Some(stripped) = text.strip_prefix('<') {
+        anchored_start = true;
+        text = stripped;
+    }
+    if let Some(stripped) = text.strip_suffix('>') {
+        anchored_end = true;
+        text = stripped;
+    }
+    if text.is_empty() {
+        bail!("empty PROSITE pattern");
+    }
+
+    let mut parts = Vec::new();
+    for element in text.split('-') {
+        parts.push(parse_element(element.trim())?);
+    }
+    Ok(ParsedProsite {
+        ast: if parts.len() == 1 {
+            parts.pop().unwrap()
+        } else {
+            Ast::Concat(parts)
+        },
+        anchored_start,
+        anchored_end,
+    })
+}
+
+fn parse_element(e: &str) -> Result<Ast> {
+    if e.is_empty() {
+        bail!("empty pattern element");
+    }
+    let b = e.as_bytes();
+    let (core, rest) = parse_core(b)?;
+    let (min, max) = parse_counts(rest)?;
+    Ok(if (min, max) == (1, Some(1)) {
+        core
+    } else {
+        Ast::Repeat { node: Box::new(core), min, max }
+    })
+}
+
+/// Parse the residue part; return it plus the remaining repetition suffix.
+fn parse_core(b: &[u8]) -> Result<(Ast, &[u8])> {
+    match b[0] {
+        b'x' | b'X' => Ok((Ast::Class(amino_set()), &b[1..])),
+        b'[' => {
+            let Some(end) = b.iter().position(|&c| c == b']') else {
+                bail!("unterminated [ in PROSITE element");
+            };
+            let set = residue_set(&b[1..end])?;
+            Ok((Ast::Class(set), &b[end + 1..]))
+        }
+        b'{' => {
+            let Some(end) = b.iter().position(|&c| c == b'}') else {
+                bail!("unterminated {{ in PROSITE element");
+            };
+            let excluded = residue_set(&b[1..end])?;
+            // complement within the sequence alphabet, not all bytes
+            let mut set = amino_set();
+            for byte in excluded.iter() {
+                set = {
+                    let mut t = set;
+                    t.0[(byte >> 6) as usize] &= !(1u64 << (byte & 63));
+                    t
+                };
+            }
+            Ok((Ast::Class(set), &b[end + 1..]))
+        }
+        c if c.is_ascii_uppercase() => {
+            Ok((Ast::Class(ByteSet::single(c)), &b[1..]))
+        }
+        c => bail!("bad PROSITE element start {:?}", c as char),
+    }
+}
+
+fn residue_set(inner: &[u8]) -> Result<ByteSet> {
+    if inner.is_empty() {
+        bail!("empty residue set");
+    }
+    let mut set = ByteSet::EMPTY;
+    for &c in inner {
+        // PROSITE uses '>' inside sets in rare C-terminal patterns like
+        // [G>]; treat '>' as "end of sequence possible" — approximated by
+        // ignoring it (the set keeps its other members).
+        if c == b'>' {
+            continue;
+        }
+        if !c.is_ascii_uppercase() {
+            bail!("bad residue {:?}", c as char);
+        }
+        set.insert(c);
+    }
+    if set.is_empty() {
+        bail!("residue set had only '>'");
+    }
+    Ok(set)
+}
+
+fn parse_counts(rest: &[u8]) -> Result<(u32, Option<u32>)> {
+    if rest.is_empty() {
+        return Ok((1, Some(1)));
+    }
+    if rest[0] != b'(' || *rest.last().unwrap() != b')' {
+        bail!("bad repetition suffix {:?}",
+              String::from_utf8_lossy(rest));
+    }
+    let inner = std::str::from_utf8(&rest[1..rest.len() - 1])?;
+    let parse_one = |s: &str| -> Result<u32> {
+        let v: u32 = s.trim().parse()?;
+        if v > 2000 {
+            bail!("repetition {v} too large");
+        }
+        Ok(v)
+    };
+    match inner.split_once(',') {
+        None => {
+            let n = parse_one(inner)?;
+            Ok((n, Some(n)))
+        }
+        Some((lo, hi)) => {
+            let lo = parse_one(lo)?;
+            let hi = parse_one(hi)?;
+            if hi < lo {
+                bail!("reversed repetition ({lo},{hi})");
+            }
+            Ok((lo, Some(hi)))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::automata::nfa::Nfa;
+
+    fn accepts(pat: &str, seq: &[u8]) -> bool {
+        let p = parse(pat).unwrap();
+        Nfa::from_ast(&p.ast).accepts(seq)
+    }
+
+    #[test]
+    fn simple_residues() {
+        // PS00016 cell attachment RGD
+        assert!(accepts("R-G-D.", b"RGD"));
+        assert!(!accepts("R-G-D.", b"RGE"));
+    }
+
+    #[test]
+    fn wildcards_and_counts() {
+        // leucine zipper
+        let zip = "L-x(6)-L-x(6)-L-x(6)-L.";
+        assert!(accepts(zip, b"LAAAAAALCCCCCCLDDDDDDL"));
+        assert!(!accepts(zip, b"LAAAAAALCCCCCCLDDDDDL")); // one x short
+    }
+
+    #[test]
+    fn ranges() {
+        let p = "A-x(2,4)-C.";
+        assert!(!accepts(p, b"AxC"[..3].as_ref()));
+        assert!(accepts(p, b"AGGC"));
+        assert!(accepts(p, b"AGGGC"));
+        assert!(accepts(p, b"AGGGGC"));
+        assert!(!accepts(p, b"AGGGGGC"));
+        assert!(!accepts(p, b"AGC"));
+    }
+
+    #[test]
+    fn sets_and_exclusions() {
+        assert!(accepts("[AC]-B.", b"AB"));
+        assert!(accepts("[AC]-B.", b"CB"));
+        assert!(!accepts("[AC]-B.", b"DB"));
+        assert!(accepts("{AC}-B.", b"DB"));
+        assert!(!accepts("{AC}-B.", b"AB"));
+    }
+
+    #[test]
+    fn set_repetition() {
+        assert!(accepts("[LIVM](2)-K.", b"LVK"));
+        assert!(!accepts("[LIVM](2)-K.", b"LAK"));
+    }
+
+    #[test]
+    fn anchors_flagged() {
+        let p = parse("<A-x-B.").unwrap();
+        assert!(p.anchored_start && !p.anchored_end);
+        let p = parse("A-x-B>.").unwrap();
+        assert!(!p.anchored_start && p.anchored_end);
+    }
+
+    #[test]
+    fn real_patterns_parse() {
+        // a few real PROSITE signatures
+        for pat in [
+            "C-x-[DN]-x(4)-[FY]-x-C-x-C.",                 // PS00010 ASX
+            "[RK](2)-x-[ST].",                             // PS00004-like
+            "N-{P}-[ST]-{P}.",                             // PS00001 N-glyc
+            "[GSTNE]-[GSTQCR]-[FYWLSP]-H-[LIVMFYW].",      // PS00028-like
+            "C-x(2,4)-C-x(3)-[LIVMFYWC]-x(8)-H-x(3,5)-H.", // zinc finger C2H2
+            "W-x(9,11)-[VFY]-[FYW]-x(6,7)-[GSTNE].",
+        ] {
+            parse(pat).unwrap_or_else(|e| panic!("{pat}: {e}"));
+        }
+    }
+
+    #[test]
+    fn n_glyc_semantics() {
+        let p = "N-{P}-[ST]-{P}.";
+        assert!(accepts(p, b"NASA"));
+        assert!(accepts(p, b"NGTG"));
+        assert!(!accepts(p, b"NPSA")); // P excluded at position 2
+        assert!(!accepts(p, b"NASP")); // P excluded at position 4
+        assert!(!accepts(p, b"NAAA")); // needs S or T at position 3
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse("").is_err());
+        assert!(parse("a-b.").is_err()); // lowercase non-x
+        assert!(parse("[.").is_err());
+        assert!(parse("A-x(4,2).").is_err());
+        assert!(parse("A-()").is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts (HLO text)
+//! and exposes them as the system's **vector unit** — the role the 8-wide
+//! AVX2 gather loop (Listing 2) plays in the paper.
+//!
+//! Python never runs here: `make artifacts` lowered the L2 model once; the
+//! rust hot path compiles the HLO with the PJRT CPU client and executes it
+//! with concrete buffers.
+
+pub mod pjrt;
+pub mod simd;
+
+pub use pjrt::{ArtifactManifest, VariantSpec, VectorUnit};
+pub use simd::{SimdMatcher, SimdOutcome};

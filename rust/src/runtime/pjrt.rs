@@ -1,0 +1,349 @@
+//! PJRT wrapper: load HLO-text artifacts, compile once, execute many.
+//!
+//! Interchange is HLO *text* (see python/compile/aot.py): jax ≥ 0.5 emits
+//! protos with 64-bit instruction ids that xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids.  Pattern follows
+//! /opt/xla-example/src/bin/load_hlo.rs.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Static shape configuration of one lane_match artifact (mirrors
+/// python/compile/model.py::VariantSpec).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct VariantSpec {
+    pub lanes: usize,
+    /// padded state count of the transition table
+    pub q: usize,
+    /// padded symbol count (row stride)
+    pub s: usize,
+    /// max symbols advanced per call
+    pub t: usize,
+    /// input window length
+    pub n: usize,
+    pub block_t: usize,
+}
+
+/// Parsed artifacts/manifest.tsv.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactManifest {
+    pub lane_match: HashMap<String, VariantSpec>,
+    /// padded L-vector width of the compose artifact
+    pub compose_qp: Option<usize>,
+}
+
+impl ArtifactManifest {
+    pub fn load(dir: &Path) -> Result<ArtifactManifest> {
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let mut m = ArtifactManifest::default();
+        for (lineno, line) in text.lines().enumerate() {
+            let f: Vec<&str> = line.split('\t').collect();
+            let ctx = || format!("{path:?} line {}", lineno + 1);
+            match f.as_slice() {
+                [name, "lane_match", lanes, q, s, t, n, block_t] => {
+                    m.lane_match.insert(
+                        name.to_string(),
+                        VariantSpec {
+                            lanes: lanes.parse().with_context(ctx)?,
+                            q: q.parse().with_context(ctx)?,
+                            s: s.parse().with_context(ctx)?,
+                            t: t.parse().with_context(ctx)?,
+                            n: n.parse().with_context(ctx)?,
+                            block_t: block_t.parse().with_context(ctx)?,
+                        },
+                    );
+                }
+                [_, "compose", qp, ..] => {
+                    m.compose_qp = Some(qp.parse().with_context(ctx)?);
+                }
+                [] | [""] => {}
+                _ => bail!("unrecognized manifest line: {line:?}"),
+            }
+        }
+        Ok(m)
+    }
+}
+
+/// A compiled lane_match executable + its shape spec.
+pub struct VectorUnit {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    compose_exe: Option<xla::PjRtLoadedExecutable>,
+    compose_qp: usize,
+    pub spec: VariantSpec,
+    pub name: String,
+    /// executions performed (diagnostics / Fig. 13 instruction accounting)
+    pub calls: std::cell::Cell<u64>,
+    /// device-resident transition table (§Perf: uploading the padded
+    /// table per call — q·s·4 B ≈ 393 KiB for lane8_main — dominated the
+    /// per-call cost; `set_table` uploads it once, `lane_match` then only
+    /// moves the small per-call operands)
+    table_buf: std::cell::RefCell<Option<xla::PjRtBuffer>>,
+}
+
+impl VectorUnit {
+    /// Load variant `name` from the artifact directory.
+    pub fn load(dir: impl AsRef<Path>, name: &str) -> Result<VectorUnit> {
+        let dir = dir.as_ref();
+        let manifest = ArtifactManifest::load(dir)?;
+        let spec = *manifest
+            .lane_match
+            .get(name)
+            .ok_or_else(|| anyhow!("variant {name:?} not in manifest"))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
+        let exe = compile_hlo(&client, &dir.join(format!("{name}.hlo.txt")))?;
+        let compose_path = dir.join("compose.hlo.txt");
+        let (compose_exe, compose_qp) = if compose_path.exists() {
+            (
+                Some(compile_hlo(&client, &compose_path)?),
+                manifest.compose_qp.unwrap_or(0),
+            )
+        } else {
+            (None, 0)
+        };
+        Ok(VectorUnit {
+            client,
+            exe,
+            compose_exe,
+            compose_qp,
+            spec,
+            name: name.to_string(),
+            calls: std::cell::Cell::new(0),
+            table_buf: std::cell::RefCell::new(None),
+        })
+    }
+
+    /// Upload a padded transition table to the device once; subsequent
+    /// `lane_match` calls reuse it (pass `table = &[]`).
+    pub fn set_table(&self, table: &[i32]) -> Result<()> {
+        let sp = &self.spec;
+        if table.len() != sp.q * sp.s {
+            bail!("table len {} != q*s {}", table.len(), sp.q * sp.s);
+        }
+        let buf = self
+            .client
+            .buffer_from_host_buffer(table, &[sp.q * sp.s], None)
+            .map_err(|e| anyhow!("table upload: {e:?}"))?;
+        *self.table_buf.borrow_mut() = Some(buf);
+        Ok(())
+    }
+
+    /// Default artifact directory: $SPECDFA_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("SPECDFA_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// One vector step: advance every lane by up to `spec.t` symbols.
+    ///
+    /// * `table` — padded flat table, len q*s, entries are *state ids*
+    ///   (not premultiplied offsets; the kernel indexes [q, s]).  Pass an
+    ///   empty slice to reuse the device-resident table from `set_table`
+    ///   (the fast path — saves ~400 KiB of host->device traffic/call).
+    /// * `inp` — symbol window, len n.
+    /// * `starts`/`lens`/`init` — per-lane descriptors, len lanes.
+    pub fn lane_match(
+        &self,
+        table: &[i32],
+        inp: &[i32],
+        starts: &[i32],
+        lens: &[i32],
+        init: &[i32],
+    ) -> Result<Vec<i32>> {
+        let sp = &self.spec;
+        if inp.len() != sp.n {
+            bail!("input window len {} != n {}", inp.len(), sp.n);
+        }
+        for (nm, v) in [("starts", starts), ("lens", lens), ("init", init)] {
+            if v.len() != sp.lanes {
+                bail!("{nm} len {} != lanes {}", v.len(), sp.lanes);
+            }
+        }
+        if !table.is_empty() {
+            if table.len() != sp.q * sp.s {
+                bail!("table len {} != q*s {}", table.len(), sp.q * sp.s);
+            }
+            self.set_table(table)?;
+        }
+        let tb = self.table_buf.borrow();
+        let Some(table_dev) = tb.as_ref() else {
+            bail!("no table uploaded: call set_table first");
+        };
+        // small operands go host->device per call; the table stays put
+        let to_dev = |v: &[i32]| -> Result<xla::PjRtBuffer> {
+            self.client
+                .buffer_from_host_buffer(v, &[v.len()], None)
+                .map_err(|e| anyhow!("upload: {e:?}"))
+        };
+        let args = [
+            table_dev,
+            &to_dev(inp)?,
+            &to_dev(starts)?,
+            &to_dev(lens)?,
+            &to_dev(init)?,
+        ];
+        let result = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(&args)
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("to_tuple1: {e:?}"))?;
+        self.calls.set(self.calls.get() + 1);
+        out.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+
+    /// Eq. (9) composition on the device: out[q] = lb[la[q]].
+    /// Vectors must be padded to the compose artifact's width.
+    pub fn compose(&self, la: &[i32], lb: &[i32]) -> Result<Vec<i32>> {
+        let exe = self
+            .compose_exe
+            .as_ref()
+            .ok_or_else(|| anyhow!("compose artifact not loaded"))?;
+        if la.len() != self.compose_qp || lb.len() != self.compose_qp {
+            bail!(
+                "compose args len {}/{} != qp {}",
+                la.len(),
+                lb.len(),
+                self.compose_qp
+            );
+        }
+        let args = [xla::Literal::vec1(la), xla::Literal::vec1(lb)];
+        let result = exe
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("to_tuple1: {e:?}"))?;
+        out.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+
+    pub fn compose_width(&self) -> usize {
+        self.compose_qp
+    }
+}
+
+fn compile_hlo(
+    client: &xla::PjRtClient,
+    path: &Path,
+) -> Result<xla::PjRtLoadedExecutable> {
+    let path_str = path
+        .to_str()
+        .ok_or_else(|| anyhow!("non-utf8 path {path:?}"))?;
+    let proto = xla::HloModuleProto::from_text_file(path_str)
+        .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| anyhow!("compile {path:?}: {e:?}"))
+}
+
+/// Pad a DFA's transition table to a variant's (q, s) shape.  Entries are
+/// state ids; rows beyond the DFA's states self-loop (never reached),
+/// symbol columns beyond the DFA's alphabet self-loop (never fed).
+pub fn pad_table(
+    table: &[u32],
+    num_states: usize,
+    num_symbols: usize,
+    spec: &VariantSpec,
+) -> Result<Vec<i32>> {
+    if num_states > spec.q {
+        bail!("DFA has {num_states} states > artifact q {}", spec.q);
+    }
+    if num_symbols > spec.s {
+        bail!("DFA has {num_symbols} symbols > artifact s {}", spec.s);
+    }
+    let mut out = vec![0i32; spec.q * spec.s];
+    for q in 0..spec.q {
+        for s in 0..spec.s {
+            out[q * spec.s + s] = if q < num_states && s < num_symbols {
+                table[q * num_symbols + s] as i32
+            } else {
+                q as i32 // self-loop padding
+            };
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let dir = tempdir();
+        std::fs::write(
+            dir.join("manifest.tsv"),
+            "lane8_main\tlane_match\t8\t1536\t64\t8192\t65536\t512\n\
+             compose\tcompose\t1536\t0\t0\t0\t0\t0\n",
+        )
+        .unwrap();
+        let m = ArtifactManifest::load(&dir).unwrap();
+        let spec = m.lane_match["lane8_main"];
+        assert_eq!(spec.lanes, 8);
+        assert_eq!(spec.q, 1536);
+        assert_eq!(spec.n, 65536);
+        assert_eq!(m.compose_qp, Some(1536));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_missing_is_error() {
+        let dir = tempdir();
+        let err = ArtifactManifest::load(&dir).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_rejects_garbage() {
+        let dir = tempdir();
+        std::fs::write(dir.join("manifest.tsv"), "what is this\n").unwrap();
+        assert!(ArtifactManifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn pad_table_shapes() {
+        let spec = VariantSpec { lanes: 8, q: 4, s: 3, t: 8, n: 16, block_t: 4 };
+        // 2-state, 2-symbol DFA
+        let table = vec![1, 0, 1, 1];
+        let padded = pad_table(&table, 2, 2, &spec).unwrap();
+        assert_eq!(padded.len(), 12);
+        assert_eq!(padded[0], 1); // (0,0)
+        assert_eq!(padded[1], 0); // (0,1)
+        assert_eq!(padded[2], 0); // (0,2) pad: self-loop
+        assert_eq!(padded[3], 1); // (1,0)
+        assert_eq!(padded[5], 1); // (1,2) pad
+        assert_eq!(padded[6], 2); // (2,0) pad row
+        // too big DFAs are rejected
+        assert!(pad_table(&table, 5, 2, &spec).is_err());
+        assert!(pad_table(&table, 2, 4, &spec).is_err());
+    }
+
+    fn tempdir() -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "specdfa-test-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+}

@@ -1,0 +1,320 @@
+//! Structural DFA analysis: initial-state sets and I_max,r (§4.2/§4.3).
+//!
+//! * Eq. (11): I_σ = { s : δ(x, σ) = s for some x } ∖ {q_e}
+//! * Eq. (13): I_{σ1..σr} = { s : δ*(x, σ1..σr) = s } ∖ {q_e}
+//! * Eq. (12): I_max,r = max over all r-grams of |I_{σ1..σr}|
+//!
+//! Two computations of I_max,r are provided:
+//!  * [`Lookahead::analyze`] — image-set BFS with deduplication: level k
+//!    holds the distinct sets {image(S, σ)}; far cheaper than enumerating
+//!    all |Σ|^r suffixes while computing the exact same maximum.
+//!  * [`i_max_r_naive`] — the paper's Algorithm 4 (exponential in r),
+//!    kept verbatim as the overhead-measurement subject of Fig. 17.
+//!
+//! The error state is excluded everywhere (§3: "for these considerations
+//! the error state q_e can be ignored"), which is sound because q_e is
+//! absorbing and the identity L-vector entry is already correct for it.
+
+use std::collections::HashSet;
+
+use crate::automata::Dfa;
+use crate::util::bitset::BitSet;
+
+/// Precomputed lookahead structure for a DFA.
+#[derive(Clone, Debug)]
+pub struct Lookahead {
+    /// r used for the analysis (≥ 1)
+    pub r: usize,
+    /// I_max,r (Eq. 12) — the partitioning parameter
+    pub i_max: usize,
+    /// I_max,k for k = 1..=r (Lemma 1 monotonicity; diagnostics)
+    pub i_max_by_r: Vec<usize>,
+    /// per-symbol one-step sets I_σ (Eq. 11)
+    pub sets1: Vec<BitSet>,
+    /// sink state if present (excluded from sets)
+    pub sink: Option<u32>,
+}
+
+impl Lookahead {
+    /// Analyze a DFA for up to `r` reverse lookahead symbols.
+    pub fn analyze(dfa: &Dfa, r: usize) -> Lookahead {
+        assert!(r >= 1, "lookahead requires r >= 1");
+        let q = dfa.num_states as usize;
+        let s = dfa.num_symbols as usize;
+        let sink = dfa.sink();
+
+        // level 1: I_σ per symbol
+        let mut sets1: Vec<BitSet> = vec![BitSet::new(q); s];
+        for state in 0..q as u32 {
+            for sym in 0..s as u32 {
+                let t = dfa.step(state, sym);
+                if Some(t) != sink {
+                    sets1[sym as usize].insert(t as usize);
+                }
+            }
+        }
+
+        // Distinct-image BFS with a level-size cap: if the set of distinct
+        // suffix images explodes (pathological DFAs), stop refining and
+        // keep the last completed level's maximum — a sound upper bound by
+        // Lemma 1 (I_max,r is non-increasing in r), so partitioning stays
+        // failure-free, merely slightly conservative.
+        const LEVEL_CAP: usize = 50_000;
+        let mut i_max_by_r = Vec::with_capacity(r);
+        let mut level: HashSet<BitSet> = sets1.iter().cloned().collect();
+        i_max_by_r.push(level.iter().map(|b| b.len()).max().unwrap_or(0));
+        for _ in 1..r {
+            if level.len() * s > LEVEL_CAP {
+                i_max_by_r.push(*i_max_by_r.last().unwrap());
+                continue;
+            }
+            let mut next: HashSet<BitSet> = HashSet::new();
+            for set in &level {
+                for sym in 0..s as u32 {
+                    next.insert(image(dfa, set, sym, sink));
+                }
+            }
+            i_max_by_r.push(next.iter().map(|b| b.len()).max().unwrap_or(0));
+            level = next;
+        }
+
+        let i_max = *i_max_by_r.last().unwrap();
+        Lookahead { r, i_max: i_max.max(1), i_max_by_r, sets1, sink }
+    }
+
+    /// Runtime per-chunk set: the possible initial states given the
+    /// observed reverse-lookahead suffix (dense symbols, matched order —
+    /// `suffix.last()` is the symbol adjacent to the chunk).
+    ///
+    /// Uses min(r, suffix.len()) symbols.  Empty suffix (chunk at input
+    /// start) returns all live states.
+    pub fn initial_set(&self, dfa: &Dfa, suffix: &[u32]) -> BitSet {
+        let q = dfa.num_states as usize;
+        let take = suffix.len().min(self.r);
+        if take == 0 {
+            let mut all = BitSet::new(q);
+            for st in 0..q {
+                if Some(st as u32) != self.sink {
+                    all.insert(st);
+                }
+            }
+            return all;
+        }
+        let used = &suffix[suffix.len() - take..];
+        // first symbol: precomputed I_σ; subsequent: image chaining
+        let mut set = self.sets1[used[0] as usize].clone();
+        for &sym in &used[1..] {
+            set = image(dfa, &set, sym, self.sink);
+        }
+        set
+    }
+
+    /// γ = I_max,r / |Q| — the structural property of Eq. (18).
+    pub fn gamma(&self, dfa: &Dfa) -> f64 {
+        self.i_max as f64 / dfa.num_states as f64
+    }
+}
+
+/// image(S, σ) = { δ(x, σ) : x ∈ S } ∖ {sink}
+fn image(dfa: &Dfa, set: &BitSet, sym: u32, sink: Option<u32>) -> BitSet {
+    let mut out = BitSet::new(set.capacity());
+    for st in set.iter() {
+        let t = dfa.step(st as u32, sym);
+        if Some(t) != sink {
+            out.insert(t as usize);
+        }
+    }
+    out
+}
+
+/// Algorithm 4 generalized to r symbols: enumerate all |Σ|^r suffixes and
+/// take the maximum target-set cardinality.  Exponential in r — used by
+/// the Fig. 17 overhead experiment; `Lookahead::analyze` is the fast path.
+pub fn i_max_r_naive(dfa: &Dfa, r: usize) -> usize {
+    assert!(r >= 1);
+    let q = dfa.num_states as usize;
+    let s = dfa.num_symbols as usize;
+    let sink = dfa.sink();
+    let mut suffix = vec![0u32; r];
+    let mut best = 0usize;
+    loop {
+        // compute I_{σ1..σr} for the current suffix
+        let mut set = BitSet::new(q);
+        for st in 0..q as u32 {
+            let mut cur = st;
+            for &sym in &suffix {
+                cur = dfa.step(cur, sym);
+            }
+            if Some(cur) != sink {
+                set.insert(cur as usize);
+            }
+        }
+        best = best.max(set.len());
+        // next suffix (odometer)
+        let mut i = 0;
+        loop {
+            if i == r {
+                return best.max(1);
+            }
+            suffix[i] += 1;
+            if (suffix[i] as usize) < s {
+                break;
+            }
+            suffix[i] = 0;
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::automata::dfa::tests::fig1_dfa;
+    use crate::automata::grail::from_grail;
+    use crate::regex::compile::{compile_prosite, compile_search};
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    /// The paper's Fig. 6 DFA: states q0..q3, symbols a=0, b=1; complete
+    /// (no sink — every state is live).
+    pub fn fig6_dfa() -> Dfa {
+        from_grail(
+            "(START) |- 0\n\
+             0 0 1\n0 1 2\n\
+             1 0 1\n1 1 3\n\
+             2 0 3\n2 1 2\n\
+             3 0 3\n3 1 3\n\
+             3 -| (FINAL)\n",
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn fig1_imax_is_one() {
+        // motivating example: one target state per symbol => I_max = 1
+        let dfa = fig1_dfa();
+        let la = Lookahead::analyze(&dfa, 1);
+        assert_eq!(la.i_max, 1);
+        assert_eq!(la.sink, Some(2));
+    }
+
+    #[test]
+    fn fig6_sets_match_paper() {
+        // §4.2: I_a = {q1, q3}, I_b = {q2, q3}, I_max = 2
+        let dfa = fig6_dfa();
+        let la = Lookahead::analyze(&dfa, 1);
+        assert_eq!(la.sets1[0].iter().collect::<Vec<_>>(), vec![1, 3]);
+        assert_eq!(la.sets1[1].iter().collect::<Vec<_>>(), vec![2, 3]);
+        assert_eq!(la.i_max, 2);
+    }
+
+    #[test]
+    fn naive_equals_bfs() {
+        for dfa in [fig1_dfa(), fig6_dfa(),
+                    compile_search("(ab|ba)+c?").unwrap(),
+                    compile_prosite("R-G-D.").unwrap()] {
+            for r in 1..=3 {
+                let la = Lookahead::analyze(&dfa, r);
+                assert_eq!(la.i_max, i_max_r_naive(&dfa, r),
+                           "r={r} |Q|={}", dfa.num_states);
+            }
+        }
+    }
+
+    #[test]
+    fn lemma1_monotone_on_fixtures() {
+        for dfa in [fig6_dfa(), compile_prosite("C-x(2)-C-x(3)-H.").unwrap()]
+        {
+            let la = Lookahead::analyze(&dfa, 4);
+            for w in la.i_max_by_r.windows(2) {
+                assert!(w[0] >= w[1], "Lemma 1 violated: {:?}", la.i_max_by_r);
+            }
+        }
+    }
+
+    #[test]
+    fn prop_lemma1_monotone_random_dfas() {
+        prop::check("I_max,r non-increasing in r", 40, |rng: &mut Rng| {
+            let dfa = random_dfa(rng);
+            let la = Lookahead::analyze(&dfa, 4);
+            for w in la.i_max_by_r.windows(2) {
+                assert!(w[0] >= w[1], "{:?}", la.i_max_by_r);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_lookahead_soundness() {
+        // For any input, the true state after reading a prefix ending in
+        // suffix σ1..σr must be inside initial_set(suffix) (or the sink).
+        prop::check("initial_set contains the true state", 60, |rng| {
+            let dfa = random_dfa(rng);
+            let la = Lookahead::analyze(&dfa, rng.range_usize(1, 4));
+            let len = rng.range_usize(1, 60);
+            let syms: Vec<u32> = (0..len)
+                .map(|_| rng.below(dfa.num_symbols as u64) as u32)
+                .collect();
+            let cut = rng.range_usize(1, len);
+            let state = dfa.run(dfa.start, &syms[..cut]);
+            let set = la.initial_set(&dfa, &syms[..cut]);
+            if Some(state) != la.sink {
+                assert!(
+                    set.contains(state as usize),
+                    "state {state} not in set {:?} (cut={cut})",
+                    set.iter().collect::<Vec<_>>()
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn prop_runtime_set_bounded_by_imax() {
+        prop::check("per-chunk set <= I_max,r", 40, |rng| {
+            let dfa = random_dfa(rng);
+            let r = rng.range_usize(1, 3);
+            let la = Lookahead::analyze(&dfa, r);
+            let len = rng.range_usize(r, 40);
+            let syms: Vec<u32> = (0..len)
+                .map(|_| rng.below(dfa.num_symbols as u64) as u32)
+                .collect();
+            let set = la.initial_set(&dfa, &syms);
+            assert!(set.len() <= la.i_max.max(1),
+                    "set {} > imax {}", set.len(), la.i_max);
+        });
+    }
+
+    #[test]
+    fn gamma_in_unit_interval() {
+        let dfa = fig6_dfa();
+        let la = Lookahead::analyze(&dfa, 1);
+        let g = la.gamma(&dfa);
+        assert!(g > 0.0 && g <= 1.0);
+        assert!((g - 0.5).abs() < 1e-12); // 2 / 4
+    }
+
+    /// Random complete DFA with an absorbing sink (like real pattern DFAs).
+    pub fn random_dfa(rng: &mut Rng) -> Dfa {
+        let q = rng.range_u64(2, 24) as u32;
+        let s = rng.range_u64(2, 6) as u32;
+        let sink = q - 1;
+        let mut table = Vec::with_capacity((q * s) as usize);
+        for state in 0..q {
+            for _ in 0..s {
+                if state == sink {
+                    table.push(sink);
+                } else if rng.chance(0.1) {
+                    table.push(sink);
+                } else {
+                    table.push(rng.below(q as u64 - 1) as u32);
+                }
+            }
+        }
+        let accepting: Vec<bool> =
+            (0..q).map(|st| st != sink && rng.chance(0.3)).collect();
+        let mut classes = [0u8; 256];
+        for b in 0..256 {
+            classes[b] = (b % s as usize) as u8;
+        }
+        Dfa::new(q, s, 0, accepting, table, classes)
+    }
+}

@@ -1,0 +1,141 @@
+//! L-vectors: a chunk's mapping from possible initial states to last
+//! active states (§4.1, notation of [19]).
+//!
+//! `L_i = [l_0 .. l_{|Q|-1}]` with `l_j = delta*(q_j, c_i)`.  When the
+//! I_max optimization restricts the initial-state set, the unmatched
+//! entries keep the identity mapping — they are never consulted (lookahead
+//! soundness, verified by property tests), and identity keeps absorbing
+//! states (e.g. the sink) correct for free.
+
+/// Dense chunk state map.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LVector {
+    map: Vec<u32>,
+    /// which entries were actually matched (diagnostics/tests)
+    matched: Vec<bool>,
+}
+
+impl LVector {
+    /// Identity map over |Q| states.
+    pub fn identity(q: usize) -> LVector {
+        LVector {
+            map: (0..q as u32).collect(),
+            matched: vec![false; q],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    #[inline]
+    pub fn set(&mut self, init: u32, fin: u32) {
+        self.map[init as usize] = fin;
+        self.matched[init as usize] = true;
+    }
+
+    #[inline]
+    pub fn get(&self, init: u32) -> u32 {
+        self.map[init as usize]
+    }
+
+    pub fn was_matched(&self, init: u32) -> bool {
+        self.matched[init as usize]
+    }
+
+    pub fn matched_count(&self) -> usize {
+        self.matched.iter().filter(|&&m| m).count()
+    }
+
+    /// Eq. (9): combined map `L_{i,j}[q] = L_j[L_i[q]]`.
+    pub fn compose(&self, next: &LVector) -> LVector {
+        debug_assert_eq!(self.len(), next.len());
+        LVector {
+            map: self.map.iter().map(|&m| next.map[m as usize]).collect(),
+            // entry q of the composition is grounded iff this chunk matched
+            // q (the next chunk's entry for map[q] is then sound by the
+            // lookahead-soundness invariant)
+            matched: self.matched.clone(),
+        }
+    }
+
+    /// Raw map access (padded upload to the PJRT compose kernel).
+    pub fn as_slice(&self) -> &[u32] {
+        &self.map
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_maps_self() {
+        let l = LVector::identity(5);
+        for q in 0..5 {
+            assert_eq!(l.get(q), q);
+            assert!(!l.was_matched(q));
+        }
+    }
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut l = LVector::identity(4);
+        l.set(2, 3);
+        assert_eq!(l.get(2), 3);
+        assert!(l.was_matched(2));
+        assert_eq!(l.matched_count(), 1);
+        assert_eq!(l.get(1), 1);
+    }
+
+    #[test]
+    fn compose_is_function_composition() {
+        // paper example: L2 = [qe, q1] over {q0,q1(,qe)} — use 3 states
+        let mut l1 = LVector::identity(3);
+        l1.set(0, 1); // q0 -> q1
+        l1.set(1, 2);
+        let mut l2 = LVector::identity(3);
+        l2.set(0, 2);
+        l2.set(1, 1);
+        l2.set(2, 2);
+        let c = l1.compose(&l2);
+        assert_eq!(c.get(0), l2.get(l1.get(0)));
+        assert_eq!(c.get(0), 1);
+        assert_eq!(c.get(1), 2);
+    }
+
+    #[test]
+    fn compose_associative() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(9);
+        for _ in 0..50 {
+            let q = rng.range_usize(1, 20);
+            let mk = |rng: &mut Rng| {
+                let mut l = LVector::identity(q);
+                for i in 0..q {
+                    l.set(i as u32, rng.below(q as u64) as u32);
+                }
+                l
+            };
+            let (a, b, c) = (mk(&mut rng), mk(&mut rng), mk(&mut rng));
+            let left = a.compose(&b).compose(&c);
+            let right = a.compose(&b.compose(&c));
+            assert_eq!(left.as_slice(), right.as_slice());
+        }
+    }
+
+    #[test]
+    fn identity_neutral_for_compose() {
+        let mut a = LVector::identity(6);
+        for i in 0..6 {
+            a.set(i, (i + 1) % 6);
+        }
+        let id = LVector::identity(6);
+        assert_eq!(a.compose(&id).as_slice(), a.as_slice());
+        assert_eq!(id.compose(&a).as_slice(), a.as_slice());
+    }
+}

@@ -1,0 +1,607 @@
+//! The speculative parallel matcher: Algorithm 2 (basic) and Algorithm 3
+//! (initial-state-set optimized), executed over OS threads.
+//!
+//! `MatchPlan` is the configuration builder; `run`/`run_syms` perform the
+//! four steps of §4.1: (1) weights from offline profiling are supplied by
+//! the caller, (2) partition the input (partition.rs), (3) match chunks in
+//! parallel, each chunk for its set of possible initial states, and
+//! (4) merge the per-chunk L-vectors (merge.rs).
+//!
+//! Failure-freedom (the paper's headline property) is enforced by
+//! construction and verified by property tests: the outcome is *always*
+//! identical to sequential matching, and the per-processor work is bounded
+//! so no configuration can be slower than the sequential run by more than
+//! the merge cost.
+
+use std::time::Instant;
+
+use crate::automata::{Dfa, FlatDfa};
+use crate::speculative::lookahead::Lookahead;
+use crate::speculative::lvector::LVector;
+use crate::speculative::merge::{self, MergeStats, MergeStrategy};
+use crate::speculative::partition::{partition, partition_with_sizes, Chunk};
+
+/// Compute the chunk layout and per-chunk initial-state sets for one run.
+///
+/// `adaptive = false` is the paper's Algorithm 3: size every subsequent
+/// chunk for the worst case (`m` = I_max,r or |Q|), then look up the
+/// actual set at each boundary.  `adaptive = true` is this repo's
+/// extension: iterate partition ↔ actual set sizes to a fixed point, so
+/// chunk lengths match the work each chunk really has (see
+/// partition_with_sizes; ablation in the table3 bench).
+pub(crate) fn plan_chunks(
+    dfa: &Dfa,
+    lookahead: Option<&Lookahead>,
+    syms: &[u32],
+    weights: &[f64],
+    m: usize,
+    adaptive: bool,
+) -> (Vec<Chunk>, Vec<Vec<u32>>) {
+    let n = syms.len();
+    let p = weights.len();
+    let sets_for = |chunks: &[Chunk]| -> Vec<Vec<u32>> {
+        chunks
+            .iter()
+            .map(|c| {
+                if c.proc == 0 {
+                    vec![dfa.start]
+                } else {
+                    match lookahead {
+                        Some(la) => {
+                            let lo = c.start.saturating_sub(la.r);
+                            la.initial_set(dfa, &syms[lo..c.start])
+                                .iter()
+                                .map(|s| s as u32)
+                                .collect()
+                        }
+                        None => (0..dfa.num_states).collect(),
+                    }
+                }
+            })
+            .collect()
+    };
+
+    if !adaptive || lookahead.is_none() {
+        let chunks = partition(n, weights, m);
+        let sets = sets_for(&chunks);
+        return (chunks, sets);
+    }
+
+    // Adaptive: the set size at any candidate boundary is an exact,
+    // cheaply computable function of the r-symbol suffix there, so build
+    // chunks left-to-right against a per-processor work target T
+    // (work_k = len_k · |I_suffix(start_k)| / w_k ≤ T) and binary-search
+    // the smallest feasible T.  Boundaries and sets stay consistent by
+    // construction.  T = n/w_min is always feasible (chunk 0 covers
+    // everything), so the makespan never exceeds the sequential work —
+    // the extension stays failure-free.
+    let la = lookahead.unwrap();
+    let size_at = |start: usize| -> usize {
+        if start == 0 {
+            1
+        } else {
+            let lo = start.saturating_sub(la.r);
+            la.initial_set(dfa, &syms[lo..start]).len().max(1)
+        }
+    };
+    let build = |t: f64| -> Option<Vec<Chunk>> {
+        let mut chunks = Vec::with_capacity(p);
+        let mut start = 0usize;
+        for (k, &w) in weights.iter().enumerate() {
+            let s = if k == 0 { 1 } else { size_at(start) };
+            let len = ((t * w / s as f64).floor() as usize).max(1);
+            let end = if k == p - 1 { n } else { (start + len).min(n) };
+            if k == p - 1 && start + len < n {
+                return None; // T too small: last chunk overflows target
+            }
+            chunks.push(Chunk { proc: k, start, end });
+            start = end;
+        }
+        Some(chunks)
+    };
+    let w_min = weights.iter().cloned().fold(f64::INFINITY, f64::min);
+    let mut lo = 0.0f64;
+    let mut hi = (n as f64 / w_min).max(1.0);
+    let mut best = build(hi).expect("T = n/w_min must be feasible");
+    for _ in 0..50 {
+        let mid = 0.5 * (lo + hi);
+        match build(mid) {
+            Some(c) => {
+                best = c;
+                hi = mid;
+            }
+            None => lo = mid,
+        }
+    }
+    let sets = sets_for(&best);
+    (best, sets)
+}
+
+/// Per-worker execution record: the inputs to every cost/speedup model.
+#[derive(Clone, Debug)]
+pub struct WorkerWork {
+    pub proc: usize,
+    pub chunk_start: usize,
+    pub chunk_len: usize,
+    /// initial states matched for this chunk (1 for chunk 0)
+    pub states_matched: usize,
+    /// chunk_len * states_matched
+    pub syms_matched: usize,
+    /// measured wall time of this worker's matching loop, seconds
+    pub elapsed_s: f64,
+}
+
+/// Result of a speculative parallel run.
+#[derive(Clone, Debug)]
+pub struct MatchOutcome {
+    pub final_state: u32,
+    pub accepted: bool,
+    /// partitioning parameter m used (|Q| or I_max,r)
+    pub m: usize,
+    pub work: Vec<WorkerWork>,
+    pub merge_stats: MergeStats,
+    /// per-chunk L-vectors (kept for inspection; small: |P| × |Q|)
+    pub lvectors: Vec<LVector>,
+}
+
+impl MatchOutcome {
+    /// Max symbols matched by any worker — the parallel makespan in
+    /// symbol units (the quantity Eq. (14) bounds).
+    pub fn makespan_syms(&self) -> usize {
+        self.work.iter().map(|w| w.syms_matched).max().unwrap_or(0)
+    }
+
+    /// Total redundant work introduced by speculation, in symbols.
+    pub fn speculative_overhead_syms(&self, n: usize) -> usize {
+        let total: usize = self.work.iter().map(|w| w.syms_matched).sum();
+        total.saturating_sub(n)
+    }
+}
+
+/// Configuration builder for speculative parallel matching.
+#[derive(Clone, Debug)]
+pub struct MatchPlan<'d> {
+    dfa: &'d Dfa,
+    flat: FlatDfa,
+    processors: usize,
+    /// reverse lookahead depth r; 0 = basic Algorithm 2 (match all |Q|)
+    r: usize,
+    lookahead: Option<Lookahead>,
+    weights: Vec<f64>,
+    merge: MergeStrategy,
+    use_threads: bool,
+    adaptive: bool,
+}
+
+impl<'d> MatchPlan<'d> {
+    pub fn new(dfa: &'d Dfa) -> Self {
+        MatchPlan {
+            dfa,
+            flat: FlatDfa::from_dfa(dfa),
+            processors: 1,
+            r: 0,
+            lookahead: None,
+            weights: vec![1.0],
+            merge: MergeStrategy::Sequential,
+            use_threads: true,
+            adaptive: false,
+        }
+    }
+
+    /// Enable the adaptive (fixed-point) partition extension: chunk
+    /// lengths follow the *actual* per-boundary initial-state counts
+    /// instead of the worst-case I_max,r.  Requires lookahead(r >= 1).
+    pub fn adaptive_partition(mut self, on: bool) -> Self {
+        self.adaptive = on;
+        self
+    }
+
+    /// Number of processors |P| (uniform weights unless `weights` is set).
+    pub fn processors(mut self, p: usize) -> Self {
+        assert!(p >= 1);
+        self.processors = p;
+        if self.weights.len() != p {
+            self.weights = vec![1.0; p];
+        }
+        self
+    }
+
+    /// Enable the I_max,r optimization (Algorithm 3) with r reverse
+    /// lookahead symbols; r = 0 reverts to basic Algorithm 2.
+    pub fn lookahead(mut self, r: usize) -> Self {
+        self.r = r;
+        self.lookahead =
+            if r > 0 { Some(Lookahead::analyze(self.dfa, r)) } else { None };
+        self
+    }
+
+    /// Per-processor weights (Eq. 1; from profile::weights_from_capacities).
+    pub fn weights(mut self, w: Vec<f64>) -> Self {
+        assert_eq!(w.len(), self.processors, "one weight per processor");
+        self.weights = w;
+        self
+    }
+
+    pub fn merge_strategy(mut self, s: MergeStrategy) -> Self {
+        self.merge = s;
+        self
+    }
+
+    /// Run workers inline on the calling thread (deterministic timing for
+    /// the simulation harness) instead of spawning OS threads.
+    pub fn sequential_execution(mut self) -> Self {
+        self.use_threads = false;
+        self
+    }
+
+    pub fn i_max(&self) -> usize {
+        self.lookahead
+            .as_ref()
+            .map(|la| la.i_max)
+            .unwrap_or(self.dfa.num_states as usize)
+    }
+
+    pub fn gamma(&self) -> f64 {
+        self.i_max() as f64 / self.dfa.num_states as f64
+    }
+
+    /// Match raw bytes (applies the IBase class mapping first).
+    pub fn run(&self, input: &[u8]) -> MatchOutcome {
+        self.run_syms(&self.dfa.map_input(input))
+    }
+
+    /// Match pre-mapped dense symbols — the paper's measured configuration
+    /// (its framework also pre-converts input to the IBase form, Fig. 8d).
+    pub fn run_syms(&self, syms: &[u32]) -> MatchOutcome {
+        let n = syms.len();
+        let q = self.dfa.num_states as usize;
+        let m = self.i_max().max(1);
+
+        // chunk layout + per-chunk initial-state sets (Algorithm 3
+        // lines 1–7 at plan construction; runtime lookup here)
+        let (chunks, sets) = plan_chunks(
+            self.dfa,
+            self.lookahead.as_ref(),
+            syms,
+            &self.weights,
+            m,
+            self.adaptive,
+        );
+        let _ = n;
+
+        let mut results: Vec<(LVector, WorkerWork)> =
+            Vec::with_capacity(chunks.len());
+        if self.use_threads {
+            let mut slots: Vec<Option<(LVector, WorkerWork)>> =
+                vec![None; chunks.len()];
+            std::thread::scope(|scope| {
+                let flat = &self.flat;
+                for (slot, (chunk, set)) in
+                    slots.iter_mut().zip(chunks.iter().zip(&sets))
+                {
+                    scope.spawn(move || {
+                        *slot = Some(match_chunk(flat, q, chunk, set, syms));
+                    });
+                }
+            });
+            results.extend(slots.into_iter().map(Option::unwrap));
+        } else {
+            for (chunk, set) in chunks.iter().zip(&sets) {
+                results.push(match_chunk(&self.flat, q, chunk, set, syms));
+            }
+        }
+
+        let (lvectors, work): (Vec<LVector>, Vec<WorkerWork>) =
+            results.into_iter().unzip();
+        let (final_state, merge_stats) =
+            merge::merge(&lvectors, self.dfa.start, self.merge);
+        MatchOutcome {
+            final_state,
+            accepted: self.dfa.accepting[final_state as usize],
+            m,
+            work,
+            merge_stats,
+            lvectors,
+        }
+    }
+
+}
+
+/// Match one chunk for each possible initial state (Algorithm 2/3 inner
+/// loops) and record the work done.
+fn match_chunk(
+    flat: &FlatDfa,
+    q: usize,
+    chunk: &Chunk,
+    set: &[u32],
+    syms: &[u32],
+) -> (LVector, WorkerWork) {
+    let t0 = Instant::now();
+    let mut lv = LVector::identity(q);
+    let chunk_syms = &syms[chunk.start..chunk.end];
+    // 4-way interleaved chains: one pass matches four initial states
+    // with overlapped loads (§Perf; run_syms_x4)
+    let mut groups = set.chunks_exact(4);
+    for g in &mut groups {
+        let offs = [
+            flat.offset_of(g[0]),
+            flat.offset_of(g[1]),
+            flat.offset_of(g[2]),
+            flat.offset_of(g[3]),
+        ];
+        let fins = flat.run_syms_x4(offs, chunk_syms);
+        for (&init, &fin) in g.iter().zip(&fins) {
+            lv.set(init, flat.state_of(fin));
+        }
+    }
+    for &init in groups.remainder() {
+        let off = flat.run_syms(flat.offset_of(init), chunk_syms);
+        lv.set(init, flat.state_of(off));
+    }
+    let elapsed_s = t0.elapsed().as_secs_f64();
+    (
+        lv,
+        WorkerWork {
+            proc: chunk.proc,
+            chunk_start: chunk.start,
+            chunk_len: chunk.len(),
+            states_matched: set.len(),
+            syms_matched: chunk.len() * set.len(),
+            elapsed_s,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baseline::sequential::SequentialMatcher;
+    use crate::regex::compile::{compile_prosite, compile_search};
+    use crate::speculative::lookahead::tests::{fig6_dfa, random_dfa};
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn random_syms(rng: &mut Rng, dfa: &Dfa, len: usize) -> Vec<u32> {
+        (0..len).map(|_| rng.below(dfa.num_symbols as u64) as u32).collect()
+    }
+
+    #[test]
+    fn matches_sequential_on_fig6() {
+        let dfa = fig6_dfa();
+        // the paper's 36-symbol input (Fig. 6b): a=0, b=1
+        let input: Vec<u32> = "bababbababbaabbaabbaaabbaabbaaabaa"
+            .bytes()
+            .map(|b| if b == b'a' { 0 } else { 1 })
+            .collect();
+        let seq = SequentialMatcher::new(&dfa);
+        let want = seq.run_syms(&input);
+        for p in [1, 2, 3, 5] {
+            for r in [0, 1, 2] {
+                let plan = MatchPlan::new(&dfa).processors(p).lookahead(r);
+                let out = plan.run_syms(&input);
+                assert_eq!(out.final_state, want.final_state, "p={p} r={r}");
+                assert_eq!(out.accepted, want.accepted);
+            }
+        }
+    }
+
+    #[test]
+    fn prop_failure_freedom_random_dfas() {
+        // THE core property: every parallel configuration returns exactly
+        // the sequential result.
+        prop::check("parallel == sequential (random DFAs)", 60, |rng| {
+            let dfa = random_dfa(rng);
+            let len = rng.range_usize(0, 500);
+            let syms = random_syms(rng, &dfa, len);
+            let seq = SequentialMatcher::new(&dfa);
+            let want = seq.run_syms(&syms);
+            let p = rng.range_usize(1, 12);
+            let r = rng.range_usize(0, 4);
+            let weights: Vec<f64> =
+                (0..p).map(|_| 0.5 + rng.f64() * 2.0).collect();
+            let strat = match rng.below(3) {
+                0 => MergeStrategy::Sequential,
+                1 => MergeStrategy::BinaryTree,
+                _ => MergeStrategy::Hierarchical {
+                    cores_per_node: rng.range_usize(1, 5),
+                },
+            };
+            let plan = MatchPlan::new(&dfa)
+                .processors(p)
+                .lookahead(r)
+                .weights(weights)
+                .merge_strategy(strat);
+            let out = plan.run_syms(&syms);
+            assert_eq!(out.final_state, want.final_state,
+                       "p={p} r={r} strat={strat:?} len={len}");
+            assert_eq!(out.accepted, want.accepted);
+        });
+    }
+
+    #[test]
+    fn prop_failure_freedom_real_patterns() {
+        let patterns = ["(ab|cd)+", "a*b?c{2,4}", "hello|world",
+                        r"[0-9]{1,3}(\.[0-9]{1,3}){3}"];
+        prop::check("parallel == sequential (regex DFAs)", 20, |rng| {
+            let pat = patterns[rng.usize_below(patterns.len())];
+            let dfa = compile_search(pat).unwrap();
+            let len = rng.range_usize(0, 2000);
+            let bytes: Vec<u8> = (0..len)
+                .map(|_| b"abcdhello world.0123456789"[rng.usize_below(26)])
+                .collect();
+            let seq = SequentialMatcher::new(&dfa);
+            let want = seq.run_bytes(&bytes);
+            let plan = MatchPlan::new(&dfa)
+                .processors(rng.range_usize(1, 8))
+                .lookahead(rng.range_usize(0, 3));
+            let out = plan.run(&bytes);
+            assert_eq!(out.accepted, want.accepted, "pat={pat}");
+            assert_eq!(out.final_state, want.final_state);
+        });
+    }
+
+    #[test]
+    fn lookahead_reduces_work() {
+        // PROSITE-style DFA with structure: I_max < |Q| must cut overhead
+        let dfa = compile_prosite("C-x(2)-C-x(3)-[LIVMFYWC].").unwrap();
+        let mut rng = Rng::new(42);
+        let syms: Vec<u32> = (0..100_000)
+            .map(|_| rng.below(dfa.num_symbols as u64) as u32)
+            .collect();
+        let basic = MatchPlan::new(&dfa).processors(8).run_syms(&syms);
+        let opt =
+            MatchPlan::new(&dfa).processors(8).lookahead(4).run_syms(&syms);
+        assert!(opt.m < basic.m, "I_max {} !< |Q| {}", opt.m, basic.m);
+        assert!(
+            opt.speculative_overhead_syms(syms.len())
+                < basic.speculative_overhead_syms(syms.len())
+        );
+        assert!(opt.makespan_syms() < basic.makespan_syms());
+        assert_eq!(opt.final_state, basic.final_state);
+    }
+
+    #[test]
+    fn makespan_bounded_by_eq14() {
+        // Eq. (14): parallel time ~ n·m/(m+|P|-1) symbols per processor
+        let dfa = fig6_dfa();
+        let mut rng = Rng::new(7);
+        let n = 120_000;
+        let syms = random_syms(&mut rng, &dfa, n);
+        for p in [2, 4, 8] {
+            let out = MatchPlan::new(&dfa).processors(p).run_syms(&syms);
+            let m = out.m as f64;
+            let bound = (n as f64) * m / (m + p as f64 - 1.0);
+            let makespan = out.makespan_syms() as f64;
+            assert!(
+                makespan <= bound * 1.02 + 64.0,
+                "p={p}: makespan {makespan} > bound {bound}"
+            );
+        }
+    }
+
+    #[test]
+    fn chunk0_matched_once() {
+        let dfa = fig6_dfa();
+        let mut rng = Rng::new(8);
+        let syms = random_syms(&mut rng, &dfa, 10_000);
+        let out = MatchPlan::new(&dfa).processors(4).run_syms(&syms);
+        assert_eq!(out.work[0].states_matched, 1);
+        for w in &out.work[1..] {
+            assert!(w.states_matched >= 1);
+        }
+    }
+
+    #[test]
+    fn empty_input() {
+        let dfa = fig6_dfa();
+        for p in [1, 3] {
+            let out = MatchPlan::new(&dfa).processors(p).run_syms(&[]);
+            assert_eq!(out.final_state, dfa.start);
+        }
+    }
+
+    #[test]
+    fn inline_execution_equals_threads() {
+        let dfa = fig6_dfa();
+        let mut rng = Rng::new(9);
+        let syms = random_syms(&mut rng, &dfa, 5000);
+        let threaded =
+            MatchPlan::new(&dfa).processors(6).lookahead(2).run_syms(&syms);
+        let inline = MatchPlan::new(&dfa)
+            .processors(6)
+            .lookahead(2)
+            .sequential_execution()
+            .run_syms(&syms);
+        assert_eq!(threaded.final_state, inline.final_state);
+        assert_eq!(threaded.makespan_syms(), inline.makespan_syms());
+    }
+}
+
+#[cfg(test)]
+mod adaptive_tests {
+    use super::*;
+    use crate::baseline::sequential::SequentialMatcher;
+    use crate::regex::compile::compile_prosite;
+    use crate::speculative::lookahead::tests::random_dfa;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+    use crate::util::stats;
+
+    #[test]
+    fn prop_adaptive_is_failure_free() {
+        prop::check("adaptive partition == sequential", 40, |rng| {
+            let dfa = random_dfa(rng);
+            let len = rng.range_usize(0, 2000);
+            let syms: Vec<u32> = (0..len)
+                .map(|_| rng.below(dfa.num_symbols as u64) as u32)
+                .collect();
+            let want = SequentialMatcher::new(&dfa).run_syms(&syms);
+            let out = MatchPlan::new(&dfa)
+                .processors(rng.range_usize(1, 10))
+                .lookahead(rng.range_usize(1, 4))
+                .adaptive_partition(true)
+                .run_syms(&syms);
+            assert_eq!(out.final_state, want.final_state);
+        });
+    }
+
+    #[test]
+    fn adaptive_balances_better_than_worst_case() {
+        // gap-heavy PROSITE DFA: per-suffix set sizes vary well below
+        // I_max, so the worst-case partition leaves slack that the
+        // adaptive fixed-point removes.
+        let dfa = compile_prosite(
+            "C-x(2,4)-C-x(3)-[LIVMFYWC]-x(4)-H-x(3,5)-H.",
+        )
+        .unwrap();
+        // realistic protein stream (uniform class streams constantly hit
+        // the non-amino catch-all class, which no protein input contains)
+        let mut gen = crate::workload::InputGen::new(0xADA);
+        let syms = dfa.map_input(&gen.protein(400_000));
+        let cv = |out: &MatchOutcome| {
+            let times: Vec<f64> = out
+                .work
+                .iter()
+                .map(|w| w.syms_matched as f64)
+                .collect();
+            stats::cv(&times)
+        };
+        let fixed = MatchPlan::new(&dfa)
+            .processors(16)
+            .lookahead(4)
+            .run_syms(&syms);
+        let adapt = MatchPlan::new(&dfa)
+            .processors(16)
+            .lookahead(4)
+            .adaptive_partition(true)
+            .run_syms(&syms);
+        assert_eq!(fixed.final_state, adapt.final_state);
+        // the adaptive partition's guarantees: strictly better balance
+        // and a substantially shorter makespan (the worst-case partition
+        // oversizes chunk 0 whenever typical |I_suffix| < I_max)
+        assert!(cv(&adapt) < cv(&fixed),
+                "adaptive CV {} !< fixed CV {}", cv(&adapt), cv(&fixed));
+        assert!(adapt.makespan_syms() as f64
+                    <= fixed.makespan_syms() as f64 * 0.8,
+                "adaptive makespan {} not <20% better than fixed {}",
+                adapt.makespan_syms(), fixed.makespan_syms());
+    }
+
+    #[test]
+    fn adaptive_never_exceeds_sequential_work_per_proc() {
+        let mut rng = Rng::new(0xADB);
+        for _ in 0..10 {
+            let dfa = random_dfa(&mut rng);
+            let n = 100_000;
+            let syms: Vec<u32> = (0..n)
+                .map(|_| rng.below(dfa.num_symbols as u64) as u32)
+                .collect();
+            let out = MatchPlan::new(&dfa)
+                .processors(8)
+                .lookahead(2)
+                .adaptive_partition(true)
+                .run_syms(&syms);
+            assert!(out.makespan_syms() <= n + dfa.num_states as usize);
+        }
+    }
+}

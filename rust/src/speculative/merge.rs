@@ -1,0 +1,219 @@
+//! Merging of partial results (L-vectors) across chunks.
+//!
+//! * [`MergeStrategy::Sequential`] — Eq. (8): propagate the state through
+//!   the chunk maps left to right.  The paper's choice for shared memory
+//!   (the parallel reduction "is not large enough to justify the
+//!   overhead").
+//! * [`MergeStrategy::BinaryTree`] — Eq. (9) pairwise composition in
+//!   ⌈log₂|P|⌉ rounds, the [19] scheme the paper evaluated and rejected.
+//! * [`MergeStrategy::Hierarchical`] — the paper's 2-tier cloud scheme
+//!   (Fig. 9): node leaders compose their local chunk maps, the master
+//!   applies leader maps; only one step crosses the (high-variance)
+//!   inter-node network.
+//!
+//! Each merge returns [`MergeStats`] — the op/message counts the cluster
+//! simulation (cluster/) prices with its latency model.
+
+use super::lvector::LVector;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MergeStrategy {
+    Sequential,
+    BinaryTree,
+    /// cores_per_node = |C| of Fig. 9 (chunks per node leader)
+    Hierarchical { cores_per_node: usize },
+}
+
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct MergeStats {
+    /// Eq. (9) full-map compositions performed
+    pub compose_ops: usize,
+    /// single-state map lookups (Eq. 8 steps)
+    pub lookup_ops: usize,
+    /// longest dependency chain of composition rounds
+    pub depth: usize,
+    /// L-vector messages crossing nodes (priced at inter-node latency)
+    pub inter_node_msgs: usize,
+    /// L-vector messages within a node (priced at intra-node latency)
+    pub intra_node_msgs: usize,
+}
+
+/// Merge chunk maps; `start` is the DFA start state (index 0 of the
+/// L-mapping chain in Eq. 8).  Returns the last active state.
+pub fn merge(
+    lvecs: &[LVector],
+    start: u32,
+    strategy: MergeStrategy,
+) -> (u32, MergeStats) {
+    assert!(!lvecs.is_empty());
+    match strategy {
+        MergeStrategy::Sequential => merge_sequential(lvecs, start),
+        MergeStrategy::BinaryTree => merge_tree(lvecs, start),
+        MergeStrategy::Hierarchical { cores_per_node } => {
+            merge_hierarchical(lvecs, start, cores_per_node)
+        }
+    }
+}
+
+fn merge_sequential(lvecs: &[LVector], start: u32) -> (u32, MergeStats) {
+    let mut state = start;
+    for lv in lvecs {
+        state = lv.get(state);
+    }
+    (
+        state,
+        MergeStats {
+            lookup_ops: lvecs.len(),
+            depth: lvecs.len(),
+            // workers hand their L-vector to the master on the same node
+            intra_node_msgs: lvecs.len().saturating_sub(1),
+            ..Default::default()
+        },
+    )
+}
+
+fn merge_tree(lvecs: &[LVector], start: u32) -> (u32, MergeStats) {
+    let mut stats = MergeStats::default();
+    let mut layer: Vec<LVector> = lvecs.to_vec();
+    while layer.len() > 1 {
+        stats.depth += 1;
+        let mut next = Vec::with_capacity(layer.len().div_ceil(2));
+        let mut it = layer.chunks(2);
+        for pair in &mut it {
+            if pair.len() == 2 {
+                next.push(pair[0].compose(&pair[1]));
+                stats.compose_ops += 1;
+                // one operand always travels to the combiner
+                stats.intra_node_msgs += 1;
+            } else {
+                next.push(pair[0].clone());
+            }
+        }
+        layer = next;
+    }
+    stats.lookup_ops = 1;
+    (layer[0].get(start), stats)
+}
+
+fn merge_hierarchical(
+    lvecs: &[LVector],
+    start: u32,
+    cores_per_node: usize,
+) -> (u32, MergeStats) {
+    assert!(cores_per_node >= 1);
+    let mut stats = MergeStats::default();
+    // tier 1: each node leader composes its node's chunk maps (Eq. 9)
+    let mut leader_maps: Vec<LVector> = Vec::new();
+    for group in lvecs.chunks(cores_per_node) {
+        let mut acc = group[0].clone();
+        for lv in &group[1..] {
+            acc = acc.compose(lv);
+            stats.compose_ops += 1;
+        }
+        // workers -> leader messages stay on the node
+        stats.intra_node_msgs += group.len().saturating_sub(1);
+        leader_maps.push(acc);
+    }
+    stats.depth += 1;
+    // tier 2: master (leader of node 0) applies leader maps sequentially
+    // (Eq. 8 over the composed per-node maps)
+    let mut state = start;
+    for (i, lm) in leader_maps.iter().enumerate() {
+        state = lm.get(state);
+        stats.lookup_ops += 1;
+        if i > 0 {
+            // leader i ships its composed map across the network once
+            stats.inter_node_msgs += 1;
+        }
+    }
+    stats.depth += 1;
+    (state, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn random_lvecs(rng: &mut Rng, p: usize, q: usize) -> Vec<LVector> {
+        (0..p)
+            .map(|_| {
+                let mut lv = LVector::identity(q);
+                for i in 0..q {
+                    lv.set(i as u32, rng.below(q as u64) as u32);
+                }
+                lv
+            })
+            .collect()
+    }
+
+    #[test]
+    fn prop_all_strategies_agree() {
+        prop::check("merge strategies compute the same state", 80, |rng| {
+            let p = rng.range_usize(1, 24);
+            let q = rng.range_usize(1, 16);
+            let start = rng.below(q as u64) as u32;
+            let lvecs = random_lvecs(rng, p, q);
+            let (s_seq, _) = merge(&lvecs, start, MergeStrategy::Sequential);
+            let (s_tree, _) = merge(&lvecs, start, MergeStrategy::BinaryTree);
+            for c in [1, 2, 3, 8, 15, 16] {
+                let (s_h, _) = merge(
+                    &lvecs,
+                    start,
+                    MergeStrategy::Hierarchical { cores_per_node: c },
+                );
+                assert_eq!(s_seq, s_h, "hierarchical({c})");
+            }
+            assert_eq!(s_seq, s_tree);
+        });
+    }
+
+    #[test]
+    fn tree_depth_logarithmic() {
+        let mut rng = Rng::new(1);
+        let lvecs = random_lvecs(&mut rng, 16, 4);
+        let (_, stats) = merge(&lvecs, 0, MergeStrategy::BinaryTree);
+        assert_eq!(stats.depth, 4);
+        assert_eq!(stats.compose_ops, 15);
+    }
+
+    #[test]
+    fn sequential_stats() {
+        let mut rng = Rng::new(2);
+        let lvecs = random_lvecs(&mut rng, 10, 4);
+        let (_, stats) = merge(&lvecs, 0, MergeStrategy::Sequential);
+        assert_eq!(stats.lookup_ops, 10);
+        assert_eq!(stats.compose_ops, 0);
+        assert_eq!(stats.inter_node_msgs, 0);
+    }
+
+    #[test]
+    fn hierarchical_message_counts_fig9() {
+        // 20 nodes x 15 cores = 300 chunks: 19 inter-node messages only
+        let mut rng = Rng::new(3);
+        let lvecs = random_lvecs(&mut rng, 300, 8);
+        let (_, stats) = merge(
+            &lvecs,
+            0,
+            MergeStrategy::Hierarchical { cores_per_node: 15 },
+        );
+        assert_eq!(stats.inter_node_msgs, 19);
+        assert_eq!(stats.intra_node_msgs, 20 * 14);
+        assert_eq!(stats.depth, 2);
+    }
+
+    #[test]
+    fn single_chunk_trivial() {
+        let mut rng = Rng::new(4);
+        let lvecs = random_lvecs(&mut rng, 1, 5);
+        for strat in [
+            MergeStrategy::Sequential,
+            MergeStrategy::BinaryTree,
+            MergeStrategy::Hierarchical { cores_per_node: 4 },
+        ] {
+            let (s, _) = merge(&lvecs, 3, strat);
+            assert_eq!(s, lvecs[0].get(3));
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! The paper's contribution: failure-free speculative parallel DFA
+//! matching.
+//!
+//! * [`partition`]  — weighted input partitioning, Eqs. (1)–(7)/(10)
+//! * [`lookahead`]  — initial-state sets and I_max,r, Eqs. (11)–(13),
+//!   Algorithm 4, Lemma 1
+//! * [`lvector`]    — L-vectors (chunk state maps) and Eq. (9) composition
+//! * [`matcher`]    — Algorithms 2 and 3 over a thread pool
+//! * [`merge`]      — sequential (Eq. 8), binary-tree, and the paper's
+//!   2-tier hierarchical merging (Fig. 9)
+//! * [`profile`]    — offline capacity profiling, Eq. (1)
+
+pub mod lookahead;
+pub mod lvector;
+pub mod matcher;
+pub mod merge;
+pub mod partition;
+pub mod profile;
+
+pub use lookahead::Lookahead;
+pub use lvector::LVector;
+pub use matcher::{MatchOutcome, MatchPlan};
+pub use merge::MergeStrategy;

@@ -1,0 +1,240 @@
+//! Weighted input partitioning: Eqs. (1)–(7) and (10) of §4.1/§4.2.
+//!
+//! Chunk c_0 is matched once (initial state known), subsequent chunks are
+//! matched for up to `m` states (m = |Q| basic, m = I_max,r optimized), so
+//! c_0 is m× longer; processor weights w_k scale every chunk.  The solved
+//! closed form:
+//!
+//!   L_0 = n·m / (w_0·m + Σ_{1≤i<|P|} w_i)                       (5)/(10)
+//!   StartPos(c_k) = ⌊L_0 w_0 + (1/m) Σ_{1≤i<k} L_0 w_i⌋            (6)
+//!   EndPos(c_k)   = ⌊L_0 w_0 + (1/m) Σ_{1≤i≤k} L_0 w_i⌋ − 1        (7)
+
+/// One chunk assignment: processor `proc` matches input[start..end]
+/// (end exclusive) for `states_to_match` initial states.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Chunk {
+    pub proc: usize,
+    pub start: usize,
+    pub end: usize,
+}
+
+impl Chunk {
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start >= self.end
+    }
+}
+
+/// Partition `n` input symbols into |weights| chunks, where all chunks but
+/// the first will be matched for `m` initial states.
+///
+/// Invariants (tested): chunks tile [0, n) exactly, in order; with uniform
+/// weights and m=1 all chunks are within 1 symbol of n/|P|.
+pub fn partition(n: usize, weights: &[f64], m: usize) -> Vec<Chunk> {
+    let p = weights.len();
+    assert!(p > 0, "need at least one processor");
+    assert!(m > 0, "need at least one state to match");
+    assert!(weights.iter().all(|&w| w > 0.0), "weights must be positive");
+    if p == 1 {
+        return vec![Chunk { proc: 0, start: 0, end: n }];
+    }
+
+    let nf = n as f64;
+    let mf = m as f64;
+    let wsum_rest: f64 = weights[1..].iter().sum();
+    // Eq. (5)/(10)
+    let l0 = nf * mf / (weights[0] * mf + wsum_rest);
+
+    // prefix[k] = L0·w0 + (1/m)·Σ_{1<=i<k} L0·w_i  (the StartPos argument)
+    let mut chunks = Vec::with_capacity(p);
+    let mut acc = l0 * weights[0];
+    let mut prev_end = (acc.floor() as usize).min(n);
+    chunks.push(Chunk { proc: 0, start: 0, end: prev_end });
+    for (k, &wk) in weights.iter().enumerate().skip(1) {
+        let end = if k == p - 1 {
+            n
+        } else {
+            acc += l0 * wk / mf;
+            (acc.floor() as usize).clamp(prev_end, n)
+        };
+        chunks.push(Chunk { proc: k, start: prev_end, end });
+        prev_end = end;
+    }
+    chunks
+}
+
+/// Generalized partition: per-chunk initial-state counts `sizes[i]`
+/// (sizes[0] is chunk 0's count, normally 1).  Balancing
+/// `len_i · sizes_i / w_i = const` gives `len_i ∝ w_i / sizes_i`.
+///
+/// This powers the *adaptive* (two-pass) partitioning extension: instead
+/// of sizing every subsequent chunk for the worst case I_max,r, the
+/// matcher measures the actual |I_suffix| at each boundary and re-solves.
+/// The paper discusses (and rejects as potentially failure-violating)
+/// *searching* for low-cardinality boundaries (§4.2); fixed-point
+/// re-weighting needs no search and stays failure-free: per-processor
+/// work remains ≤ n because Σ len_i = n and every chunk is matched for
+/// exactly sizes_i states with len_i ≤ n.
+pub fn partition_with_sizes(
+    n: usize,
+    weights: &[f64],
+    sizes: &[usize],
+) -> Vec<Chunk> {
+    let p = weights.len();
+    assert_eq!(sizes.len(), p);
+    assert!(p > 0);
+    assert!(weights.iter().all(|&w| w > 0.0));
+    assert!(sizes.iter().all(|&s| s > 0));
+    if p == 1 {
+        return vec![Chunk { proc: 0, start: 0, end: n }];
+    }
+    let shares: Vec<f64> =
+        weights.iter().zip(sizes).map(|(&w, &s)| w / s as f64).collect();
+    let total: f64 = shares.iter().sum();
+    let mut chunks = Vec::with_capacity(p);
+    let mut acc = 0.0f64;
+    let mut prev_end = 0usize;
+    for (k, &sh) in shares.iter().enumerate() {
+        let end = if k == p - 1 {
+            n
+        } else {
+            acc += n as f64 * sh / total;
+            (acc.floor() as usize).clamp(prev_end, n)
+        };
+        chunks.push(Chunk { proc: k, start: prev_end, end });
+        prev_end = end;
+    }
+    chunks
+}
+
+/// Total number of symbol-match operations the partition implies
+/// (chunk 0 once, the rest m times) — the speculation overhead metric.
+pub fn total_work(chunks: &[Chunk], m: usize) -> usize {
+    chunks
+        .iter()
+        .map(|c| if c.proc == 0 { c.len() } else { c.len() * m })
+        .sum()
+}
+
+/// Theoretical speedup bound of Eq. (15)/(18):
+/// 1 + (|P|-1) / m, with m = |Q|·γ = I_max,r.
+pub fn predicted_speedup(p: usize, m: usize) -> f64 {
+    1.0 + (p as f64 - 1.0) / m as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn table1_paper_numbers() {
+        // Fig. 6 DFA: |Q| = 4; n = 36; weights 1.5, 0.75, 0.75 (Table 1)
+        let chunks = partition(36, &[1.5, 0.75, 0.75], 4);
+        // Table 1: ranges 0–27, 28–31, 32–35
+        assert_eq!(chunks[0], Chunk { proc: 0, start: 0, end: 28 });
+        assert_eq!(chunks[1], Chunk { proc: 1, start: 28, end: 32 });
+        assert_eq!(chunks[2], Chunk { proc: 2, start: 32, end: 36 });
+    }
+
+    #[test]
+    fn fig7_equal_capacity_with_imax() {
+        // §4.2: n=36, I_max=2, |Q|=4, w=1: L0 = 36*2/(2+1+1) = 18
+        let chunks = partition(36, &[1.0, 1.0, 1.0], 2);
+        assert_eq!(chunks[0].len(), 18);
+        assert_eq!(chunks[1].len(), 9);
+        assert_eq!(chunks[2].len(), 9);
+    }
+
+    #[test]
+    fn fig3_uniform_naive() {
+        // motivating example: 12 symbols, 3 procs, m=1 -> 4 each (Fig. 3)
+        let chunks = partition(12, &[1.0; 3], 1);
+        assert!(chunks.iter().all(|c| c.len() == 4));
+    }
+
+    #[test]
+    fn fig4_balanced_two_state() {
+        // Fig. 4: m = 2 -> chunk0 = 6, chunk1 = chunk2 = 3
+        let chunks = partition(12, &[1.0; 3], 2);
+        assert_eq!(chunks[0].len(), 6);
+        assert_eq!(chunks[1].len(), 3);
+        assert_eq!(chunks[2].len(), 3);
+    }
+
+    #[test]
+    fn single_processor_whole_input() {
+        let chunks = partition(100, &[1.0], 7);
+        assert_eq!(chunks, vec![Chunk { proc: 0, start: 0, end: 100 }]);
+    }
+
+    #[test]
+    fn prop_chunks_tile_input() {
+        prop::check("partition tiles [0,n)", 100, |rng| {
+            let n = rng.below(100_000) as usize;
+            let p = rng.range_usize(1, 16);
+            let m = rng.range_usize(1, 600);
+            let weights: Vec<f64> =
+                (0..p).map(|_| 0.25 + rng.f64() * 3.0).collect();
+            let chunks = partition(n, &weights, m);
+            assert_eq!(chunks.len(), p);
+            assert_eq!(chunks[0].start, 0);
+            assert_eq!(chunks.last().unwrap().end, n);
+            for w in chunks.windows(2) {
+                assert_eq!(w[0].end, w[1].start);
+                assert!(w[0].start <= w[0].end);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_balanced_work_per_processor() {
+        // weighted per-proc work (len·m for i>0, len for i=0, divided by
+        // weight) should be near-equal for non-degenerate chunk sizes
+        prop::check("partition balances weighted work", 50, |rng| {
+            let n = 1_000_000;
+            let p = rng.range_usize(2, 12);
+            let m = rng.range_usize(1, 64);
+            let weights: Vec<f64> =
+                (0..p).map(|_| 0.5 + rng.f64() * 2.0).collect();
+            let chunks = partition(n, &weights, m);
+            let times: Vec<f64> = chunks
+                .iter()
+                .map(|c| {
+                    let work = if c.proc == 0 {
+                        c.len() as f64
+                    } else {
+                        (c.len() * m) as f64
+                    };
+                    work / weights[c.proc]
+                })
+                .collect();
+            let t0 = times[0];
+            for t in &times {
+                assert!(
+                    (t - t0).abs() / t0 < 0.02,
+                    "unbalanced: {times:?} (p={p} m={m})"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn total_work_reflects_speculation() {
+        let chunks = partition(12, &[1.0; 3], 1);
+        assert_eq!(total_work(&chunks, 1), 12);
+        let chunks = partition(12, &[1.0; 3], 2);
+        // Fig. 4: every processor does 6 units
+        assert_eq!(total_work(&chunks, 2), 18);
+    }
+
+    #[test]
+    fn predicted_speedup_formula() {
+        assert!((predicted_speedup(40, 1) - 40.0).abs() < 1e-12);
+        assert!((predicted_speedup(3, 2) - 2.0).abs() < 1e-12);
+        assert!((predicted_speedup(1, 10) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,77 @@
+//! Offline profiling (§4.1, "Offline Profiling"): measure each
+//! processor's DFA matching capacity m_k (symbols per microsecond) and
+//! derive load-balancing weights w_k by Eq. (1):
+//!
+//!   w_k = m_k · ( (1/|P|) · Σ m_i )^{-1}
+//!
+//! On real hardware the profiler times the Listing-1 loop on a sample of
+//! the benchmark DFA ("several partial sequential DFA matching runs ...
+//! from the median of the obtained execution times").  For the simulated
+//! cluster, capacities come from the node model but flow through the same
+//! Eq. (1) weighting.
+
+use std::time::Instant;
+
+use crate::automata::FlatDfa;
+use crate::util::stats;
+
+/// Measure matching capacity of the *calling* processor: median symbols
+/// per microsecond over `runs` timed runs of `sample` symbols each.
+pub fn measure_capacity(flat: &FlatDfa, sample: &[u32], runs: usize) -> f64 {
+    assert!(!sample.is_empty());
+    let mut rates = Vec::with_capacity(runs.max(1));
+    for _ in 0..runs.max(1) {
+        let t0 = Instant::now();
+        let off = flat.run_syms(flat.start_off, sample);
+        let dt = t0.elapsed().as_secs_f64();
+        std::hint::black_box(off);
+        // symbols per microsecond
+        rates.push(sample.len() as f64 / (dt * 1e6).max(1e-9));
+    }
+    stats::median(&rates)
+}
+
+/// Eq. (1): normalize capacities by the mean capacity.
+pub fn weights_from_capacities(caps: &[f64]) -> Vec<f64> {
+    assert!(!caps.is_empty());
+    assert!(caps.iter().all(|&c| c > 0.0), "capacities must be positive");
+    let avg = stats::mean(caps);
+    caps.iter().map(|&c| c / avg).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::automata::FlatDfa;
+    use crate::regex::compile::compile_search;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn eq1_table1_weights() {
+        // Table 1: capacities 50, 25, 25 -> weights 1.5, 0.75, 0.75
+        let w = weights_from_capacities(&[50.0, 25.0, 25.0]);
+        assert!((w[0] - 1.5).abs() < 1e-12);
+        assert!((w[1] - 0.75).abs() < 1e-12);
+        assert!((w[2] - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weights_average_to_one() {
+        let w = weights_from_capacities(&[10.0, 20.0, 40.0, 70.0]);
+        let avg = w.iter().sum::<f64>() / w.len() as f64;
+        assert!((avg - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn measured_capacity_positive_and_sane() {
+        let dfa = compile_search("abc").unwrap();
+        let flat = FlatDfa::from_dfa(&dfa);
+        let mut rng = Rng::new(5);
+        let sample: Vec<u32> = (0..200_000)
+            .map(|_| rng.below(dfa.num_symbols as u64) as u32)
+            .collect();
+        let cap = measure_capacity(&flat, &sample, 5);
+        // any machine should match between 1 and 100k symbols/us
+        assert!(cap > 1.0 && cap < 100_000.0, "capacity {cap}");
+    }
+}

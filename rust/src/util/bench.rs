@@ -1,0 +1,138 @@
+//! Mini benchmark harness (criterion is unavailable offline).
+//!
+//! Provides wall-clock timing with warmup + repetition and a fixed-width
+//! table printer used by every `rust/benches/*.rs` target to print the rows
+//! of the paper's tables and figures.
+
+use std::time::Instant;
+
+use super::stats;
+
+/// Time `f` (returning an opaque value to defeat DCE) with warmup.
+/// Returns median seconds per iteration.
+pub fn time_median<T, F: FnMut() -> T>(warmup: usize, iters: usize, mut f: F) -> f64 {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    stats::median(&samples)
+}
+
+/// Time a single execution.
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (f64, T) {
+    let t0 = Instant::now();
+    let v = f();
+    (t0.elapsed().as_secs_f64(), v)
+}
+
+/// Simple fixed-width table, printed in the style of the paper's tables.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let sep: String = widths
+            .iter()
+            .map(|w| "-".repeat(w + 2))
+            .collect::<Vec<_>>()
+            .join("+");
+        let fmt_row = |cells: &[String]| -> String {
+            (0..ncol)
+                .map(|i| format!(" {:<width$} ", cells[i], width = widths[i]))
+                .collect::<Vec<_>>()
+                .join("|")
+        };
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+        println!();
+    }
+}
+
+/// Format a speedup the way the paper does: speed-downs as negative factors
+/// ("conventional denotation for a 2x speed-down is 1/2 but we use -2").
+pub fn fmt_speedup(s: f64) -> String {
+    if s >= 1.0 || s <= 0.0 {
+        format!("{s:.1}x")
+    } else {
+        format!("{:.1}x", -1.0 / s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["a", "bbbb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.row(vec!["333".into(), "4".into()]);
+        let r = t.render();
+        assert!(r.contains("== demo =="));
+        assert!(r.contains("333"));
+        let lines: Vec<&str> = r.lines().skip(1).collect();
+        assert_eq!(lines[1].len(), lines[2].len().max(lines[1].len()));
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn speedup_formatting_paper_convention() {
+        assert_eq!(fmt_speedup(2.0), "2.0x");
+        assert_eq!(fmt_speedup(0.5), "-2.0x");
+        assert_eq!(fmt_speedup(1.0), "1.0x");
+    }
+
+    #[test]
+    fn time_median_positive() {
+        let t = time_median(1, 3, || (0..1000).sum::<u64>());
+        assert!(t >= 0.0);
+    }
+}

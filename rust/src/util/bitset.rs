@@ -1,0 +1,132 @@
+//! Fixed-capacity bitset over DFA states.
+//!
+//! Initial-state sets (Eq. 11/13) and Hopcroft partitions are sets of
+//! states; |Q| reaches ~1300 for PROSITE, so a u64-word bitset is the right
+//! representation for images, unions and cardinalities.
+
+#[derive(Clone, PartialEq, Eq, Hash, Debug)]
+pub struct BitSet {
+    words: Vec<u64>,
+    bits: usize,
+}
+
+impl BitSet {
+    pub fn new(bits: usize) -> Self {
+        BitSet { words: vec![0; bits.div_ceil(64)], bits }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.bits
+    }
+
+    #[inline]
+    pub fn insert(&mut self, i: usize) {
+        debug_assert!(i < self.bits);
+        self.words[i / 64] |= 1u64 << (i % 64);
+    }
+
+    #[inline]
+    pub fn remove(&mut self, i: usize) {
+        debug_assert!(i < self.bits);
+        self.words[i / 64] &= !(1u64 << (i % 64));
+    }
+
+    #[inline]
+    pub fn contains(&self, i: usize) -> bool {
+        debug_assert!(i < self.bits);
+        self.words[i / 64] & (1u64 << (i % 64)) != 0
+    }
+
+    pub fn len(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    pub fn clear(&mut self) {
+        self.words.iter_mut().for_each(|w| *w = 0);
+    }
+
+    pub fn union_with(&mut self, other: &BitSet) {
+        debug_assert_eq!(self.bits, other.bits);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a |= b;
+        }
+    }
+
+    pub fn intersect_with(&mut self, other: &BitSet) {
+        debug_assert_eq!(self.bits, other.bits);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a &= b;
+        }
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            let mut w = w;
+            std::iter::from_fn(move || {
+                if w == 0 {
+                    None
+                } else {
+                    let b = w.trailing_zeros() as usize;
+                    w &= w - 1;
+                    Some(wi * 64 + b)
+                }
+            })
+        })
+    }
+
+    pub fn from_iter_cap(bits: usize, it: impl IntoIterator<Item = usize>) -> Self {
+        let mut s = BitSet::new(bits);
+        for i in it {
+            s.insert(i);
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_ops() {
+        let mut s = BitSet::new(200);
+        assert!(s.is_empty());
+        s.insert(0);
+        s.insert(63);
+        s.insert(64);
+        s.insert(199);
+        assert_eq!(s.len(), 4);
+        assert!(s.contains(63) && s.contains(64));
+        assert!(!s.contains(1));
+        s.remove(63);
+        assert!(!s.contains(63));
+        assert_eq!(s.iter().collect::<Vec<_>>(), vec![0, 64, 199]);
+    }
+
+    #[test]
+    fn union_intersect() {
+        let a = BitSet::from_iter_cap(100, [1, 2, 3, 50]);
+        let b = BitSet::from_iter_cap(100, [2, 3, 4, 99]);
+        let mut u = a.clone();
+        u.union_with(&b);
+        assert_eq!(u.iter().collect::<Vec<_>>(), vec![1, 2, 3, 4, 50, 99]);
+        let mut i = a.clone();
+        i.intersect_with(&b);
+        assert_eq!(i.iter().collect::<Vec<_>>(), vec![2, 3]);
+    }
+
+    #[test]
+    fn eq_and_hash_by_value() {
+        let a = BitSet::from_iter_cap(128, [5, 70]);
+        let b = BitSet::from_iter_cap(128, [70, 5]);
+        assert_eq!(a, b);
+        use std::collections::HashSet;
+        let mut set = HashSet::new();
+        set.insert(a);
+        assert!(set.contains(&b));
+    }
+}

@@ -1,0 +1,9 @@
+//! Self-contained utilities (the build is offline; no external crates
+//! besides `xla`/`anyhow`): PRNG, statistics, a mini property-testing
+//! harness and a mini benchmark harness.
+
+pub mod bench;
+pub mod bitset;
+pub mod prop;
+pub mod rng;
+pub mod stats;

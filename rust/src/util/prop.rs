@@ -1,0 +1,69 @@
+//! Mini property-testing harness (no proptest crate offline).
+//!
+//! `check(name, cases, |rng| ...)` runs a closure over `cases` independent
+//! deterministic PRNG streams; on failure it reports the failing case seed
+//! so the case replays exactly with `replay(seed, |rng| ...)`.
+
+use super::rng::Rng;
+
+/// Base seed; fixed so CI is deterministic. Override with SPECDFA_PROP_SEED.
+fn base_seed() -> u64 {
+    std::env::var("SPECDFA_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+/// Number-of-cases multiplier, for soak runs (SPECDFA_PROP_FACTOR=10).
+fn factor() -> usize {
+    std::env::var("SPECDFA_PROP_FACTOR")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1)
+}
+
+/// Run `f` over `cases` random cases. `f` should panic (assert!) on failure.
+pub fn check<F: FnMut(&mut Rng)>(name: &str, cases: usize, mut f: F) {
+    let base = base_seed();
+    for i in 0..cases * factor() {
+        let seed = base ^ ((i as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || f(&mut rng),
+        ));
+        if let Err(e) = result {
+            eprintln!(
+                "property '{name}' failed at case {i} (seed {seed:#x}); \
+                 replay with util::prop::replay({seed:#x}, ..)"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Re-run a single failing case by seed.
+pub fn replay<F: FnMut(&mut Rng)>(seed: u64, mut f: F) {
+    let mut rng = Rng::new(seed);
+    f(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("u64 below bound", 50, |rng| {
+            let b = rng.range_u64(1, 1000);
+            assert!(rng.below(b) < b);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn reports_failing_property() {
+        check("always fails eventually", 10, |rng| {
+            assert!(rng.f64() < 0.5, "coin came up heads");
+        });
+    }
+}

@@ -1,0 +1,108 @@
+//! Input corpus generators: random text over a DFA's alphabet, protein
+//! sequences with realistic residue frequencies, and planted-match
+//! inputs.  Deterministic (seeded) so experiments replay exactly.
+
+use crate::automata::Dfa;
+use crate::util::rng::Rng;
+
+pub struct InputGen {
+    rng: Rng,
+}
+
+/// SwissProt-ish amino-acid frequencies (percent ×10, summing to ~1000).
+const AA_FREQ: [(u8, u32); 20] = [
+    (b'A', 83), (b'C', 14), (b'D', 55), (b'E', 67), (b'F', 39),
+    (b'G', 71), (b'H', 23), (b'I', 59), (b'K', 58), (b'L', 97),
+    (b'M', 24), (b'N', 41), (b'P', 47), (b'Q', 39), (b'R', 55),
+    (b'S', 67), (b'T', 54), (b'V', 69), (b'W', 11), (b'Y', 29),
+];
+
+impl InputGen {
+    pub fn new(seed: u64) -> InputGen {
+        InputGen { rng: Rng::new(seed) }
+    }
+
+    /// Uniform random dense symbols for a given DFA.
+    pub fn uniform_syms(&mut self, dfa: &Dfa, n: usize) -> Vec<u32> {
+        (0..n)
+            .map(|_| self.rng.below(dfa.num_symbols as u64) as u32)
+            .collect()
+    }
+
+    /// Random ASCII text over a printable alphabet (log-file-ish).
+    pub fn ascii_text(&mut self, n: usize) -> Vec<u8> {
+        const CHARS: &[u8] =
+            b"abcdefghijklmnopqrstuvwxyz0123456789 .,:-_/\n";
+        (0..n).map(|_| CHARS[self.rng.usize_below(CHARS.len())]).collect()
+    }
+
+    /// Protein sequence with SwissProt-like residue frequencies.
+    pub fn protein(&mut self, n: usize) -> Vec<u8> {
+        let total: u32 = AA_FREQ.iter().map(|&(_, f)| f).sum();
+        (0..n)
+            .map(|_| {
+                let mut pick = self.rng.below(total as u64) as u32;
+                for &(aa, f) in &AA_FREQ {
+                    if pick < f {
+                        return aa;
+                    }
+                    pick -= f;
+                }
+                b'L'
+            })
+            .collect()
+    }
+
+    /// Plant `occurrences` of `needle` at random positions in `base`.
+    pub fn plant(&mut self, base: &mut [u8], needle: &[u8], occurrences: usize) {
+        if needle.len() > base.len() {
+            return;
+        }
+        for _ in 0..occurrences {
+            let pos = self.rng.usize_below(base.len() - needle.len() + 1);
+            base[pos..pos + needle.len()].copy_from_slice(needle);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::regex::prosite::AMINO_ACIDS;
+    use crate::regex::compile::compile_search;
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = InputGen::new(7).ascii_text(100);
+        let b = InputGen::new(7).ascii_text(100);
+        assert_eq!(a, b);
+        let c = InputGen::new(8).ascii_text(100);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn uniform_syms_in_range() {
+        let dfa = compile_search("abc").unwrap();
+        let syms = InputGen::new(1).uniform_syms(&dfa, 1000);
+        assert!(syms.iter().all(|&s| s < dfa.num_symbols));
+    }
+
+    #[test]
+    fn protein_uses_amino_alphabet() {
+        let seq = InputGen::new(2).protein(5000);
+        assert!(seq.iter().all(|b| AMINO_ACIDS.contains(b)));
+        // leucine should be the most common residue
+        let count = |aa: u8| seq.iter().filter(|&&b| b == aa).count();
+        assert!(count(b'L') > count(b'W'));
+    }
+
+    #[test]
+    fn planting_makes_matches() {
+        let dfa = compile_search("needle").unwrap();
+        let mut gen = InputGen::new(3);
+        let mut text = gen.ascii_text(10_000);
+        assert!(!dfa.accepts_bytes(&text) || true); // may match by chance
+        gen.plant(&mut text, b"needle", 3);
+        assert!(dfa.accepts_bytes(&text));
+    }
+}

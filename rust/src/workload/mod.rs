@@ -1,0 +1,61 @@
+//! Benchmark workloads: the PCRE-like and PROSITE-like pattern suites and
+//! input generators standing in for the paper's 299 PCRE patterns, 110
+//! PROSITE signatures, and multi-GB inputs (§6).
+
+pub mod input_gen;
+pub mod pcre_like;
+pub mod prosite_like;
+
+use std::sync::OnceLock;
+
+pub use input_gen::InputGen;
+pub use pcre_like::pcre_suite;
+pub use prosite_like::prosite_suite;
+
+/// Cached suites (subset construction + Hopcroft on the full PROSITE
+/// suite costs ~10 s; experiments and tests share one compilation).
+pub fn pcre_suite_cached() -> &'static [BenchPattern] {
+    static SUITE: OnceLock<Vec<BenchPattern>> = OnceLock::new();
+    SUITE.get_or_init(pcre_suite)
+}
+
+pub fn prosite_suite_cached() -> &'static [BenchPattern] {
+    static SUITE: OnceLock<Vec<BenchPattern>> = OnceLock::new();
+    SUITE.get_or_init(prosite_suite)
+}
+
+/// Which suite a benchmark pattern belongs to (decides the realistic
+/// input distribution: protein residues vs ASCII text).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SuiteKind {
+    Pcre,
+    Prosite,
+}
+
+/// A named benchmark pattern compiled to its minimal search DFA.
+#[derive(Clone, Debug)]
+pub struct BenchPattern {
+    pub name: String,
+    pub pattern: String,
+    pub dfa: crate::automata::Dfa,
+    pub kind: SuiteKind,
+}
+
+impl BenchPattern {
+    pub fn q(&self) -> usize {
+        self.dfa.num_states as usize
+    }
+
+    /// A realistic dense-symbol input stream for this pattern: protein
+    /// residues for PROSITE signatures, log-like ASCII for PCRE.  (A
+    /// uniform stream over *all* symbol classes would constantly hit the
+    /// catch-all class that kills protein matches — input the real
+    /// workloads never contain.)
+    pub fn input_syms(&self, gen: &mut InputGen, n: usize) -> Vec<u32> {
+        let bytes = match self.kind {
+            SuiteKind::Prosite => gen.protein(n),
+            SuiteKind::Pcre => gen.ascii_text(n),
+        };
+        self.dfa.map_input(&bytes)
+    }
+}

@@ -1,0 +1,140 @@
+//! PCRE-like benchmark suite: a curated set of realistic regex patterns
+//! in the style of the PCRE library's test corpus (emails, URIs, IPs,
+//! dates, identifiers, protocol tokens, virus-signature-ish byte
+//! patterns), spanning the paper's DFA size range (§6: up to 512 states
+//! for PCRE), plus a generator for arbitrary target sizes.
+
+use crate::regex::compile::compile_search;
+use crate::util::rng::Rng;
+
+use super::{BenchPattern, SuiteKind};
+
+/// Curated PCRE-style suite.  Names are stable identifiers used in
+/// EXPERIMENTS.md.  Compilation is `compile_search` (contains-a-match),
+/// matching the paper's membership-test usage.
+pub fn pcre_suite() -> Vec<BenchPattern> {
+    let patterns: &[(&str, &str)] = &[
+        ("lit-short", "error"),
+        ("lit-long", "segmentation fault detected"),
+        ("alt-2", "cat|dog"),
+        ("alt-keywords", "while|for|if|else|return|break|continue"),
+        ("hex-color", "#[0-9a-fA-F]{6}"),
+        ("integer", "[0-9]+"),
+        ("signed-float", "[-+]?[0-9]+\\.[0-9]{1,8}"),
+        ("identifier", "[A-Za-z_][A-Za-z0-9_]{2,16}"),
+        ("ipv4", r"[0-9]{1,3}\.[0-9]{1,3}\.[0-9]{1,3}\.[0-9]{1,3}"),
+        ("date-iso", "[0-9]{4}-[0-9]{2}-[0-9]{2}"),
+        ("time-hms", "[0-2][0-9]:[0-5][0-9]:[0-5][0-9]"),
+        ("email", r"[a-z0-9._]{1,16}@[a-z0-9]{1,12}(\.[a-z]{2,4}){1,2}"),
+        ("uri-scheme", "(http|https|ftp)://[a-z0-9./-]{4,24}"),
+        ("html-tag", "<(div|span|p|a|li)( [a-z]{2,8}=\"[^\"]{0,12}\")?>"),
+        ("c-comment", r"/\*([^*]|\*[^/]){0,20}\*/"),
+        ("quoted", "\"[^\"]{0,24}\""),
+        ("word-pair", r"[a-z]{3,10} [a-z]{3,10}ing"),
+        ("phone", r"\+?[0-9]{1,3}[- ][0-9]{3}[- ][0-9]{4}"),
+        ("mac-addr", "[0-9a-f]{2}(:[0-9a-f]{2}){5}"),
+        ("uuid", "[0-9a-f]{8}-[0-9a-f]{4}-[0-9a-f]{4}-[0-9a-f]{4}-[0-9a-f]{12}"),
+        ("b64-run", "[A-Za-z0-9+/]{16,24}={0,2}"),
+        ("sig-bytes", r"\x4d\x5a[\x00-\xff]{2}\x50\x45"),
+        ("log-level", "(TRACE|DEBUG|INFO|WARN|ERROR|FATAL)"),
+        ("semver", "[0-9]{1,2}\\.[0-9]{1,2}\\.[0-9]{1,2}(-alpha|-beta|-rc)?"),
+        ("repeat-deep", "(ab){8,12}"),
+        ("class-heavy", "[aeiou][bcdfg][hjkl][mnpq][rstv]{2,5}"),
+        ("nested-alt", "((red|green|blue) (fox|dog)|(small|large) (cat|bird))"),
+        ("spaced-hex", "0x[0-9a-f]{4}( 0x[0-9a-f]{4}){3}"),
+        ("csv-row", "[a-z]{1,8}(,[a-z]{1,8}){4}"),
+        ("path-unix", "(/[a-z0-9_.-]{1,12}){2,5}"),
+    ];
+    patterns
+        .iter()
+        .map(|(name, pat)| BenchPattern {
+            name: (*name).to_string(),
+            pattern: (*pat).to_string(),
+            dfa: compile_search(pat)
+                .unwrap_or_else(|e| panic!("pattern {name}: {e}")),
+            kind: SuiteKind::Pcre,
+        })
+        .collect()
+}
+
+/// Generate a pattern whose minimal search DFA has roughly `target`
+/// states: an alternation of distinct random literals (each literal
+/// contributes ~its length in states to the trie-shaped DFA).
+pub fn generate_sized(rng: &mut Rng, target: usize) -> BenchPattern {
+    let alpha = b"abcdefghijklmnopqrstuvwxyz";
+    let mut lits: Vec<String> = Vec::new();
+    let mut budget = target.max(4);
+    while budget > 0 {
+        let len = rng.range_usize(4, 12).min(budget.max(4));
+        let lit: String = (0..len)
+            .map(|_| alpha[rng.usize_below(26)] as char)
+            .collect();
+        budget = budget.saturating_sub(len + 1);
+        lits.push(lit);
+    }
+    let pattern = lits.join("|");
+    let name = format!("gen-q{target}");
+    BenchPattern {
+        name,
+        pattern: pattern.clone(),
+        dfa: compile_search(&pattern).unwrap(),
+            kind: SuiteKind::Pcre,
+    }
+}
+
+/// A graded suite of generated DFAs covering the paper's PCRE size range
+/// (|Q| up to ~512).
+pub fn scaled_suite(rng: &mut Rng) -> Vec<BenchPattern> {
+    [8, 16, 32, 64, 128, 256, 512]
+        .iter()
+        .map(|&t| generate_sized(rng, t))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_compiles_and_spans_sizes() {
+        let suite = pcre_suite();
+        assert!(suite.len() >= 25);
+        let qs: Vec<usize> = suite.iter().map(|p| p.q()).collect();
+        let max = *qs.iter().max().unwrap();
+        let min = *qs.iter().min().unwrap();
+        assert!(min >= 2);
+        assert!(max >= 60, "largest DFA only {max} states");
+        // names unique
+        let mut names: Vec<&str> =
+            suite.iter().map(|p| p.name.as_str()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), suite.len());
+    }
+
+    #[test]
+    fn suite_dfas_behave() {
+        let suite = pcre_suite();
+        let by_name = |n: &str| {
+            suite.iter().find(|p| p.name == n).unwrap()
+        };
+        assert!(by_name("ipv4").dfa.accepts_bytes(b"ping 192.168.0.1 ok"));
+        assert!(!by_name("ipv4").dfa.accepts_bytes(b"ping one.two ok"));
+        assert!(by_name("email").dfa.accepts_bytes(b"mail bob@example.com x"));
+        assert!(by_name("log-level").dfa.accepts_bytes(b"2024 ERROR boom"));
+        assert!(!by_name("log-level").dfa.accepts_bytes(b"all quiet"));
+    }
+
+    #[test]
+    fn generated_sizes_track_targets() {
+        let mut rng = Rng::new(1234);
+        for target in [16, 64, 256, 512] {
+            let p = generate_sized(&mut rng, target);
+            let q = p.q();
+            assert!(
+                q >= target / 2 && q <= target * 3 + 16,
+                "target {target} got {q}"
+            );
+        }
+    }
+}

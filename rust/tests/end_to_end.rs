@@ -1,0 +1,130 @@
+//! End-to-end integration over the whole pipeline (no PJRT required):
+//! pattern text -> NFA -> DFA -> minimize -> analysis -> parallel match
+//! -> merge, on realistic workloads; plus Grail+ round-trips and
+//! cross-engine agreement (speculative vs backtracking vs grep-like).
+
+use specdfa::automata::grail;
+use specdfa::automata::minimize::minimize;
+use specdfa::baseline::backtracking::Backtracker;
+use specdfa::baseline::greplike::GrepLike;
+use specdfa::baseline::holub_stekr::HolubStekr;
+use specdfa::baseline::sequential::SequentialMatcher;
+use specdfa::regex::compile::{compile_prosite, compile_search};
+use specdfa::regex::parser;
+use specdfa::speculative::matcher::MatchPlan;
+use specdfa::workload::InputGen;
+
+#[test]
+fn full_pipeline_on_planted_protein_corpus() {
+    let mut gen = InputGen::new(0xE2E_1);
+    let mut corpus = gen.protein(1 << 20);
+    gen.plant(&mut corpus, b"RGD", 3);
+    let dfa = compile_prosite("R-G-D.").unwrap();
+    let seq = SequentialMatcher::new(&dfa).run_bytes(&corpus);
+    assert!(seq.accepted, "planted signature must be found");
+    let out = MatchPlan::new(&dfa).processors(16).lookahead(4).run(&corpus);
+    assert!(out.accepted);
+    assert_eq!(out.final_state, seq.final_state);
+}
+
+#[test]
+fn negative_corpus_rejects_everywhere() {
+    // build a corpus that cannot contain the pattern (no 'W' characters)
+    let dfa = compile_prosite("W-W.").unwrap();
+    let mut gen = InputGen::new(0xE2E_2);
+    let corpus: Vec<u8> = gen
+        .protein(1 << 19)
+        .into_iter()
+        .map(|b| if b == b'W' { b'A' } else { b })
+        .collect();
+    let out = MatchPlan::new(&dfa).processors(8).lookahead(2).run(&corpus);
+    assert!(!out.accepted);
+}
+
+#[test]
+fn engines_agree_on_ascii_logs() {
+    let pats = ["ERROR", "WARN|ERROR", "[0-9]{4}-[0-9]{2}-[0-9]{2}",
+                "fail(ed|ure)?"];
+    let mut gen = InputGen::new(0xE2E_3);
+    let mut text = gen.ascii_text(200_000);
+    gen.plant(&mut text, b"2024-01-31 ERROR something failed", 2);
+    for pat in pats {
+        let dfa = compile_search(pat).unwrap();
+        let want = dfa.accepts_bytes(&text);
+        let parsed = parser::parse(pat).unwrap();
+        let bt = Backtracker::with_fuel(&parsed.ast, 1_000_000_000)
+            .search(&text)
+            .expect("fuel");
+        assert_eq!(bt.matched, want, "backtracker {pat}");
+        let grep = GrepLike::new(&parsed.ast).search(&text);
+        assert_eq!(grep.matched, want, "greplike {pat}");
+        let spec =
+            MatchPlan::new(&dfa).processors(8).lookahead(3).run(&text);
+        assert_eq!(spec.accepted, want, "speculative {pat}");
+        let hs = HolubStekr::new(&dfa, 8).run_syms(&dfa.map_input(&text));
+        assert_eq!(hs.accepted, want, "holub-stekr {pat}");
+    }
+}
+
+#[test]
+fn grail_roundtrip_preserves_parallel_results() {
+    let dfa = compile_search("(ab|cd){2,4}").unwrap();
+    let text = grail::to_grail(&dfa);
+    let back = grail::from_grail(&text).unwrap();
+    let mut gen = InputGen::new(0xE2E_4);
+    let syms = gen.uniform_syms(&dfa, 100_000);
+    let a = MatchPlan::new(&dfa).processors(6).lookahead(2).run_syms(&syms);
+    let b = MatchPlan::new(&back).processors(6).lookahead(2).run_syms(&syms);
+    assert_eq!(a.final_state, b.final_state);
+    assert_eq!(a.accepted, b.accepted);
+}
+
+#[test]
+fn minimization_does_not_change_match_outcomes() {
+    // run the speculative matcher on a deliberately non-minimal DFA and
+    // its minimized form; outcomes must agree
+    let parsed = parser::parse("(aa|ab|ac|ba|bb|bc)+").unwrap();
+    let nfa = specdfa::automata::nfa::Nfa::from_ast(&parsed.ast);
+    let big = specdfa::automata::subset::determinize(&nfa);
+    let small = minimize(&big);
+    assert!(small.num_states <= big.num_states);
+    let mut gen = InputGen::new(0xE2E_5);
+    let bytes: Vec<u8> = gen
+        .ascii_text(50_000)
+        .into_iter()
+        .map(|b| b"abc"[(b as usize) % 3])
+        .collect();
+    let a = MatchPlan::new(&big).processors(5).lookahead(2).run(&bytes);
+    let b = MatchPlan::new(&small).processors(5).lookahead(2).run(&bytes);
+    assert_eq!(a.accepted, b.accepted);
+}
+
+#[test]
+fn prosite_anchored_patterns_end_to_end() {
+    let n_term = compile_prosite("<M-A-x(2)-K.").unwrap();
+    assert!(n_term.accepts_bytes(b"MACCKRRRR"));
+    // '<' anchored: must start at the N-terminus
+    assert!(!n_term.accepts_bytes(b"GMACCKRRR"));
+    let c_term = compile_prosite("K-D-E-L>.").unwrap();
+    assert!(c_term.accepts_bytes(b"MAAKDEL"));
+    assert!(!c_term.accepts_bytes(b"MAAKDELG"));
+}
+
+#[test]
+fn speculative_overhead_shrinks_with_lookahead_depth() {
+    // Lemma 1 materialized: deeper lookahead => less redundant work
+    let dfa =
+        compile_prosite("C-x(2,4)-C-x(3)-[LIVMFYWC]-x(4)-H-x(3,5)-H.")
+            .unwrap();
+    let mut gen = InputGen::new(0xE2E_6);
+    let syms = gen.uniform_syms(&dfa, 400_000);
+    let mut prev = usize::MAX;
+    for r in [1usize, 2, 3, 4] {
+        let out = MatchPlan::new(&dfa)
+            .processors(16)
+            .lookahead(r)
+            .run_syms(&syms);
+        assert!(out.m <= prev, "I_max grew with r: {} > {prev}", out.m);
+        prev = out.m;
+    }
+}

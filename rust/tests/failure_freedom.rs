@@ -1,0 +1,130 @@
+//! The paper's headline property, tested at integration level across the
+//! whole configuration space: *speculation is failure-free* — every
+//! parallel configuration produces exactly the sequential result
+//! (sequential semantics), and per-processor work never exceeds the
+//! sequential symbol count (no speed-down in the work model).
+
+use specdfa::baseline::sequential::SequentialMatcher;
+use specdfa::cluster::{CloudMatcher, ClusterSpec};
+use specdfa::regex::compile::{compile_prosite, compile_search};
+use specdfa::speculative::matcher::MatchPlan;
+use specdfa::speculative::merge::MergeStrategy;
+use specdfa::util::prop;
+use specdfa::workload::{pcre_suite_cached, InputGen};
+
+#[test]
+fn parallel_equals_sequential_across_suite() {
+    let mut gen = InputGen::new(0xFF1);
+    for p in pcre_suite_cached().iter().step_by(3) {
+        let syms = gen.uniform_syms(&p.dfa, 200_000);
+        let want = SequentialMatcher::new(&p.dfa).run_syms(&syms);
+        for procs in [1, 2, 7, 40] {
+            for r in [0, 1, 4] {
+                let out = MatchPlan::new(&p.dfa)
+                    .processors(procs)
+                    .lookahead(r)
+                    .run_syms(&syms);
+                assert_eq!(out.final_state, want.final_state,
+                           "{} P={procs} r={r}", p.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn no_speeddown_in_work_model() {
+    // Eq. (14)/(15): makespan_syms <= n always (failure-freedom), with
+    // equality only at P=1.
+    let mut gen = InputGen::new(0xFF2);
+    for p in pcre_suite_cached().iter().step_by(5) {
+        let n = 300_000;
+        let syms = gen.uniform_syms(&p.dfa, n);
+        for procs in [2, 8, 40] {
+            for r in [0, 4] {
+                let out = MatchPlan::new(&p.dfa)
+                    .processors(procs)
+                    .lookahead(r)
+                    .run_syms(&syms);
+                // +|Q| slack for flooring at chunk boundaries
+                assert!(
+                    out.makespan_syms() <= n + p.dfa.num_states as usize,
+                    "{} P={procs} r={r}: makespan {} > n {n}",
+                    p.name,
+                    out.makespan_syms()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_weights_and_merges_do_not_change_results() {
+    prop::check("arbitrary weights/merges keep sequential semantics", 30,
+                |rng| {
+        let pats = ["a(bc)*d", "[ab]{3,9}", "x+y+z+", "(q|r|s){2,4}t"];
+        let pat = pats[rng.usize_below(pats.len())];
+        let dfa = compile_search(pat).unwrap();
+        let n = rng.range_usize(0, 40_000);
+        let syms: Vec<u32> = (0..n)
+            .map(|_| rng.below(dfa.num_symbols as u64) as u32)
+            .collect();
+        let want = SequentialMatcher::new(&dfa).run_syms(&syms);
+        let p = rng.range_usize(1, 24);
+        let weights: Vec<f64> =
+            (0..p).map(|_| 0.3 + rng.f64() * 4.0).collect();
+        let strat = match rng.below(3) {
+            0 => MergeStrategy::Sequential,
+            1 => MergeStrategy::BinaryTree,
+            _ => MergeStrategy::Hierarchical {
+                cores_per_node: rng.range_usize(1, 8),
+            },
+        };
+        let out = MatchPlan::new(&dfa)
+            .processors(p)
+            .weights(weights)
+            .lookahead(rng.range_usize(0, 5))
+            .merge_strategy(strat)
+            .run_syms(&syms);
+        assert_eq!(out.final_state, want.final_state);
+    });
+}
+
+#[test]
+fn cloud_preserves_sequential_semantics_under_preemption() {
+    let dfa = compile_prosite("C-x(2)-C-x(3)-H.").unwrap();
+    let mut gen = InputGen::new(0xFF4);
+    let syms = gen.uniform_syms(&dfa, 500_000);
+    let want = SequentialMatcher::new(&dfa).run_syms(&syms);
+    for seed in 0..5u64 {
+        let out = CloudMatcher::new(
+            &dfa,
+            ClusterSpec::fast_slow(2, 2).allocate_all_cores(),
+        )
+        .lookahead(2)
+        .seed(seed)
+        .run_syms(&syms);
+        // preemption slows the simulated clock, never changes the result
+        assert_eq!(out.final_state, want.final_state, "seed {seed}");
+    }
+}
+
+#[test]
+fn zero_and_tiny_inputs_all_configs() {
+    let dfa = compile_search("abc").unwrap();
+    for n in [0usize, 1, 2, 3, 5, 17] {
+        let syms: Vec<u32> = (0..n)
+            .map(|i| (i % dfa.num_symbols as usize) as u32)
+            .collect();
+        let want = SequentialMatcher::new(&dfa).run_syms(&syms);
+        for procs in [1, 2, 13] {
+            for r in [0, 1, 3] {
+                let out = MatchPlan::new(&dfa)
+                    .processors(procs)
+                    .lookahead(r)
+                    .run_syms(&syms);
+                assert_eq!(out.final_state, want.final_state,
+                           "n={n} P={procs} r={r}");
+            }
+        }
+    }
+}

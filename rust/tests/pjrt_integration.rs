@@ -1,0 +1,158 @@
+//! Integration: rust runtime loads and executes the AOT artifacts and the
+//! vectorized matcher agrees bit-for-bit with the scalar matchers.
+//!
+//! Requires `make artifacts` (the Makefile test target guarantees this).
+
+use specdfa::automata::Dfa;
+use specdfa::baseline::sequential::SequentialMatcher;
+use specdfa::regex::compile::{compile_prosite, compile_search};
+use specdfa::runtime::pjrt::{pad_table, VectorUnit};
+use specdfa::runtime::simd::SimdMatcher;
+use specdfa::speculative::matcher::MatchPlan;
+use specdfa::util::rng::Rng;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    // tests run from the crate root
+    VectorUnit::default_dir()
+}
+
+fn require_artifacts() -> VectorUnit {
+    VectorUnit::load(artifacts_dir(), "lane8_small").expect(
+        "artifacts missing — run `make artifacts` before `cargo test`",
+    )
+}
+
+fn random_syms(rng: &mut Rng, dfa: &Dfa, n: usize) -> Vec<u32> {
+    (0..n).map(|_| rng.below(dfa.num_symbols as u64) as u32).collect()
+}
+
+#[test]
+fn vector_unit_loads_and_reports_platform() {
+    let vu = require_artifacts();
+    assert_eq!(vu.spec.lanes, 8);
+    assert_eq!(vu.spec.q, 64);
+    let platform = vu.platform();
+    assert!(platform.to_lowercase().contains("cpu")
+            || platform.to_lowercase().contains("host"),
+            "platform {platform}");
+}
+
+#[test]
+fn lane_match_agrees_with_flat_table() {
+    let vu = require_artifacts();
+    let dfa = compile_search("(ab|ba)+").unwrap();
+    assert!(dfa.num_states as usize <= vu.spec.q);
+    let table = pad_table(
+        &dfa.table,
+        dfa.num_states as usize,
+        dfa.num_symbols as usize,
+        &vu.spec,
+    )
+    .unwrap();
+    let mut rng = Rng::new(77);
+    let syms = random_syms(&mut rng, &dfa, vu.spec.n);
+    let inp: Vec<i32> = syms.iter().map(|&s| s as i32).collect();
+
+    // 8 lanes with random (start, len, init)
+    let starts: Vec<i32> = (0..8)
+        .map(|_| rng.below(vu.spec.n as u64) as i32)
+        .collect();
+    let lens: Vec<i32> =
+        (0..8).map(|_| rng.below(vu.spec.t as u64 + 1) as i32).collect();
+    let init: Vec<i32> = (0..8)
+        .map(|_| rng.below(dfa.num_states as u64) as i32)
+        .collect();
+    let out = vu.lane_match(&table, &inp, &starts, &lens, &init).unwrap();
+
+    for l in 0..8 {
+        let s0 = starts[l] as usize;
+        let mut want = init[l] as u32;
+        for i in 0..lens[l] as usize {
+            let pos = (s0 + i).min(vu.spec.n - 1);
+            want = dfa.step(want, syms[pos]);
+        }
+        assert_eq!(out[l] as u32, want, "lane {l}");
+    }
+}
+
+#[test]
+fn simd_matcher_equals_scalar_matchers() {
+    let vu = require_artifacts();
+    let patterns = ["(ab|cd)+e?", "a{2,5}b*c", "hello"];
+    let mut rng = Rng::new(123);
+    for pat in patterns {
+        let dfa = compile_search(pat).unwrap();
+        let seq = SequentialMatcher::new(&dfa);
+        for r in [0usize, 1, 2] {
+            let n = rng.range_usize(0, 20_000);
+            let syms = random_syms(&mut rng, &dfa, n);
+            let want = seq.run_syms(&syms);
+            let simd = SimdMatcher::new(&dfa, &vu).unwrap().lookahead(r);
+            let got = simd.run_syms(&syms).unwrap();
+            assert_eq!(got.final_state, want.final_state,
+                       "pat={pat} r={r} n={n}");
+            assert_eq!(got.accepted, want.accepted);
+            // and the multicore speculative matcher agrees too
+            let mc = MatchPlan::new(&dfa).processors(4).lookahead(r)
+                .run_syms(&syms);
+            assert_eq!(mc.final_state, want.final_state);
+        }
+    }
+}
+
+#[test]
+fn simd_chunk_speedup_grows_with_structure() {
+    let vu = require_artifacts();
+    // protein-like pattern with small I_max
+    let dfa = compile_prosite("D-A-V-I-D.").unwrap();
+    assert!(dfa.num_states as usize <= vu.spec.q, "{}", dfa.num_states);
+    let mut rng = Rng::new(5);
+    let syms = random_syms(&mut rng, &dfa, 50_000);
+    let plain = SimdMatcher::new(&dfa, &vu).unwrap().run_syms(&syms).unwrap();
+    let opt = SimdMatcher::new(&dfa, &vu)
+        .unwrap()
+        .lookahead(4)
+        .run_syms(&syms)
+        .unwrap();
+    assert_eq!(plain.final_state, opt.final_state);
+    assert!(opt.chunk_speedup() >= plain.chunk_speedup(),
+            "opt {} < plain {}", opt.chunk_speedup(), plain.chunk_speedup());
+    assert!(opt.chunk_speedup() > 1.0);
+}
+
+#[test]
+fn compose_kernel_matches_rust_compose() {
+    let dir = artifacts_dir();
+    let vu = match VectorUnit::load(&dir, "lane8_main") {
+        Ok(v) => v,
+        Err(_) => return, // main artifact optional for quick test runs
+    };
+    let qp = vu.compose_width();
+    assert_eq!(qp, 1536);
+    let mut rng = Rng::new(9);
+    let la: Vec<i32> = (0..qp).map(|_| rng.below(qp as u64) as i32).collect();
+    let lb: Vec<i32> = (0..qp).map(|_| rng.below(qp as u64) as i32).collect();
+    let out = vu.compose(&la, &lb).unwrap();
+    for i in 0..qp {
+        assert_eq!(out[i], lb[la[i] as usize]);
+    }
+}
+
+#[test]
+fn chained_calls_cross_window_boundaries() {
+    // chunk longer than t: SimdMatcher must chain calls correctly
+    let vu = require_artifacts();
+    let dfa = compile_search("ab").unwrap();
+    let seq = SequentialMatcher::new(&dfa);
+    let mut rng = Rng::new(31);
+    // longer than t=512 and not a multiple of it
+    let syms = random_syms(&mut rng, &dfa, 512 * 3 + 129);
+    let want = seq.run_syms(&syms);
+    let got = SimdMatcher::new(&dfa, &vu)
+        .unwrap()
+        .lookahead(1)
+        .run_syms(&syms)
+        .unwrap();
+    assert_eq!(got.final_state, want.final_state);
+    assert!(got.pjrt_calls >= 4, "calls {}", got.pjrt_calls);
+}

@@ -1,0 +1,144 @@
+//! Property-test battery over the paper's structural claims, at
+//! integration level with larger random instances than the unit suites.
+
+use specdfa::automata::grail;
+use specdfa::automata::minimize::{minimize, minimize_moore};
+use specdfa::automata::nfa::Nfa;
+use specdfa::automata::subset::determinize;
+use specdfa::automata::Dfa;
+use specdfa::regex::ast::Ast;
+use specdfa::automata::byteset::ByteSet;
+use specdfa::speculative::lookahead::{i_max_r_naive, Lookahead};
+use specdfa::speculative::partition::{partition, total_work};
+use specdfa::util::prop;
+use specdfa::util::rng::Rng;
+
+fn random_dfa(rng: &mut Rng, max_q: u64, max_s: u64) -> Dfa {
+    let q = rng.range_u64(2, max_q) as u32;
+    let s = rng.range_u64(2, max_s) as u32;
+    let sink = q - 1;
+    let mut table = Vec::with_capacity((q * s) as usize);
+    for state in 0..q {
+        for _ in 0..s {
+            table.push(if state == sink {
+                sink
+            } else if rng.chance(0.05) {
+                sink
+            } else {
+                rng.below(q as u64) as u32
+            });
+        }
+    }
+    let accepting = (0..q).map(|st| st != sink && rng.chance(0.25)).collect();
+    let mut classes = [0u8; 256];
+    for b in 0..256 {
+        classes[b] = (b % s as usize) as u8;
+    }
+    Dfa::new(q, s, 0, accepting, table, classes)
+}
+
+#[test]
+fn prop_lemma1_and_alg4_agree_at_scale() {
+    prop::check("BFS I_max == Algorithm 4, monotone (large DFAs)", 15,
+                |rng| {
+        let dfa = random_dfa(rng, 120, 8);
+        let la = Lookahead::analyze(&dfa, 3);
+        for (k, &v) in la.i_max_by_r.iter().enumerate() {
+            assert_eq!(v, i_max_r_naive(&dfa, k + 1), "r={}", k + 1);
+        }
+        for w in la.i_max_by_r.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+    });
+}
+
+#[test]
+fn prop_partition_work_formula_eq14() {
+    // total work of the basic partition ~ n·|Q|·|P| / (|Q|+|P|-1)
+    prop::check("Eq. 14 total work", 60, |rng| {
+        let n = rng.range_usize(10_000, 2_000_000);
+        let p = rng.range_usize(2, 64);
+        let q = rng.range_usize(1, 1024);
+        let chunks = partition(n, &vec![1.0; p], q);
+        let work = total_work(&chunks, q) as f64;
+        let expect = n as f64 * q as f64 * p as f64
+            / (q as f64 + p as f64 - 1.0);
+        assert!(
+            (work - expect).abs() <= expect * 0.01 + (q * p) as f64,
+            "work {work} vs Eq.14 {expect} (n={n} p={p} q={q})"
+        );
+    });
+}
+
+#[test]
+fn prop_grail_roundtrip_random_dfas() {
+    prop::check("grail round-trip identity", 40, |rng| {
+        let dfa = random_dfa(rng, 60, 10);
+        let text = grail::to_grail(&dfa);
+        let back = grail::from_grail(&text).unwrap();
+        assert_eq!(back.num_states, dfa.num_states);
+        assert_eq!(back.table, dfa.table);
+        assert_eq!(back.accepting, dfa.accepting);
+        assert_eq!(back.start, dfa.start);
+    });
+}
+
+#[test]
+fn prop_minimize_fixpoint_and_language_large() {
+    fn random_ast(rng: &mut Rng, depth: usize) -> Ast {
+        if depth == 0 || rng.chance(0.25) {
+            return Ast::Class(ByteSet::single(b'a' + rng.below(4) as u8));
+        }
+        match rng.below(4) {
+            0 => Ast::Concat((0..rng.range_usize(1, 4))
+                .map(|_| random_ast(rng, depth - 1)).collect()),
+            1 => Ast::Alt((0..rng.range_usize(1, 4))
+                .map(|_| random_ast(rng, depth - 1)).collect()),
+            2 => Ast::star(random_ast(rng, depth - 1)),
+            _ => Ast::Repeat {
+                node: Box::new(random_ast(rng, depth - 1)),
+                min: rng.below(3) as u32,
+                max: Some(rng.range_u64(3, 5) as u32),
+            },
+        }
+    }
+    prop::check("Hopcroft == Moore == NFA on depth-4 ASTs", 20, |rng| {
+        let ast = random_ast(rng, 4);
+        if ast.size() > 400 {
+            return; // keep runtime sane
+        }
+        let nfa = Nfa::from_ast(&ast);
+        let dfa = determinize(&nfa);
+        let h = minimize(&dfa);
+        let m = minimize_moore(&dfa);
+        assert_eq!(h.num_states, m.num_states);
+        for _ in 0..30 {
+            let len = rng.below(14) as usize;
+            let s: Vec<u8> =
+                (0..len).map(|_| b'a' + rng.below(4) as u8).collect();
+            assert_eq!(h.accepts_bytes(&s), nfa.accepts(&s));
+        }
+    });
+}
+
+#[test]
+fn prop_lookahead_sound_on_minimized_pattern_dfas() {
+    // soundness on *real* pattern DFAs (not just random tables)
+    let pats = ["(ab|ba)*c", "x[yz]{2,6}w?", "(foo|bar|baz)+"];
+    prop::check("initial_set contains reachable state (pattern DFAs)", 30,
+                |rng| {
+        let pat = pats[rng.usize_below(pats.len())];
+        let dfa = specdfa::compile_search(pat).unwrap();
+        let la = Lookahead::analyze(&dfa, rng.range_usize(1, 5));
+        let len = rng.range_usize(1, 200);
+        let syms: Vec<u32> = (0..len)
+            .map(|_| rng.below(dfa.num_symbols as u64) as u32)
+            .collect();
+        let cut = rng.range_usize(1, len);
+        let state = dfa.run(dfa.start, &syms[..cut]);
+        let set = la.initial_set(&dfa, &syms[..cut]);
+        if Some(state) != la.sink {
+            assert!(set.contains(state as usize), "pat={pat} cut={cut}");
+        }
+    });
+}
