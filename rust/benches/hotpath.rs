@@ -113,7 +113,7 @@ fn merge_cost() {
 fn pjrt_cost() {
     let vu = match VectorUnit::load(VectorUnit::default_dir(), "lane8_small")
     {
-        Ok(v) => v,
+        Ok(v) => std::sync::Arc::new(v),
         Err(e) => {
             println!("PJRT bench skipped: {e:#}");
             return;

@@ -6,6 +6,7 @@
 
 use specdfa::cluster::{CloudMatcher, ClusterSpec};
 use specdfa::compile_prosite;
+use specdfa::engine::{select, AutoThresholds, DfaProps};
 use specdfa::speculative::merge::MergeStrategy;
 use specdfa::util::bench::Table;
 use specdfa::workload::InputGen;
@@ -80,5 +81,11 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     t.print();
+
+    // 4. Where the unified facade's Engine::Auto places this workload:
+    //    8M symbols on a zinc-finger DFA is cluster territory.
+    let props = DfaProps::analyze(&dfa, 4);
+    let sel = select(&props, syms.len(), &AutoThresholds::default());
+    println!("\nEngine::Auto would serve this request via {sel}");
     Ok(())
 }

@@ -40,9 +40,11 @@ fn main() -> anyhow::Result<()> {
     let rate = host_syms_per_us();
     println!("host calibration: {rate:.0} symbols/us\n");
 
-    let vu = VectorUnit::load(VectorUnit::default_dir(), "lane8_main")
-        .map_err(|e| anyhow::anyhow!(
-            "{e:#}\n(run `make artifacts` first)"))?;
+    let vu = std::sync::Arc::new(
+        VectorUnit::load(VectorUnit::default_dir(), "lane8_main")
+            .map_err(|e| anyhow::anyhow!(
+                "{e:#}\n(artifact manifest missing?)"))?,
+    );
     println!("vector unit: lane8_main on {} ({} lanes, q<={})\n",
              vu.platform(), vu.spec.lanes, vu.spec.q);
 

@@ -8,8 +8,10 @@
 use std::time::Instant;
 
 use specdfa::baseline::backtracking::Backtracker;
+use specdfa::engine::{
+    CompiledMatcher, Engine, ExecPolicy, Matcher,
+};
 use specdfa::regex::prosite;
-use specdfa::speculative::matcher::MatchPlan;
 use specdfa::util::bench::Table;
 use specdfa::workload::{prosite_suite_cached, InputGen};
 use specdfa::SequentialMatcher;
@@ -33,11 +35,15 @@ fn main() -> anyhow::Result<()> {
         let s = seq.run_bytes(&corpus);
         let seq_ms = t0.elapsed().as_secs_f64() * 1e3;
 
-        let plan = MatchPlan::new(&p.dfa).processors(8).lookahead(4);
-        let out = plan.run(&corpus);
+        // the speculative engine through the unified facade
+        let cm = CompiledMatcher::from_dfa(
+            p.dfa.clone(),
+            Engine::Speculative { adaptive: false },
+            ExecPolicy { processors: 8, lookahead: 4, ..Default::default() },
+        )?;
+        let out = cm.run_bytes(&corpus)?;
         assert_eq!(out.accepted, s.accepted, "failure-freedom");
-        let model_ms =
-            seq_ms * out.makespan_syms() as f64 / corpus.len() as f64;
+        let model_ms = seq_ms * out.makespan as f64 / corpus.len() as f64;
 
         let parsed = prosite::parse(&p.pattern)?;
         let bt = Backtracker::with_fuel(&parsed.ast, 500_000_000);

@@ -1,0 +1,97 @@
+//! Quickstart for the unified engine API: compile a pattern once, let
+//! `Engine::Auto` pick the substrate per request, serve a batch, and
+//! verify failure-freedom against the sequential yardstick.
+//!
+//!     cargo run --release --example quickstart
+
+use specdfa::engine::{
+    CompiledMatcher, Engine, EngineKind, ExecPolicy, Matcher, Pattern,
+};
+use specdfa::workload::InputGen;
+use specdfa::SequentialMatcher;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Pattern -> CompiledMatcher: minimal DFA (Thompson NFA -> subset
+    //    construction -> Hopcroft) + structural analysis + every adapter
+    //    Engine::Auto can dispatch to, built once.
+    let pattern = Pattern::Regex(
+        r"GET /[a-z0-9/]{1,16} HTTP/1\.[01]".to_string(),
+    );
+    let cm = CompiledMatcher::compile(
+        &pattern,
+        Engine::Auto,
+        ExecPolicy::default(),
+    )?;
+    println!("{}\n", cm.describe());
+
+    // 2. Requests of three very different sizes: Auto dispatches each to
+    //    the substrate the (gamma, |Q|, n) thresholds pick.
+    let mut gen = InputGen::new(42);
+    let probe = gen.ascii_text(2 << 10); // 2 KB health probe
+    let mut page = gen.ascii_text(512 << 10); // 512 KB log page
+    gen.plant(&mut page, b"GET /index/html HTTP/1.1", 3);
+    let mut corpus = gen.ascii_text(16 << 20); // 16 MB corpus scan
+    gen.plant(&mut corpus, b"GET /index/html HTTP/1.1", 5);
+
+    for (name, input) in
+        [("probe", &probe), ("page", &page), ("corpus", &corpus)]
+    {
+        let out = cm.run_bytes(input)?;
+        let sel = out.selection.as_ref().expect("auto reports why");
+        println!("{name:>6} ({:>8} B) -> {}", input.len(), sel);
+        println!(
+            "        accepted={} makespan={} model-speedup={:.2}x\n",
+            out.accepted,
+            out.makespan,
+            out.model_speedup()
+        );
+
+        // 3. Failure-freedom: whatever substrate ran, the result equals
+        //    the Listing-1 sequential run.
+        let seq = SequentialMatcher::new(cm.dfa()).run_bytes(input);
+        assert_eq!(out.accepted, seq.accepted);
+        if let Some(fs) = out.final_state {
+            assert_eq!(fs, seq.final_state);
+        }
+    }
+
+    // 4. Batched serving: many inputs, one compiled pattern, per-request
+    //    dispatch — the serving-shaped entry point.
+    let inputs: Vec<&[u8]> =
+        vec![&probe, &page, b"GET /a HTTP/1.0", &corpus];
+    let batch = cm.match_many(&inputs)?;
+    println!(
+        "batch: {} requests, {} B total, {:.1} ms wall",
+        batch.outcomes.len(),
+        batch.total_syms,
+        batch.wall_s * 1e3
+    );
+    for (kind, count) in batch.by_engine() {
+        println!("  {count} request(s) served by {kind}");
+    }
+    if cm.props().gamma <= 0.5 {
+        assert!(
+            batch.by_engine().len() >= 2,
+            "mixed sizes must use mixed engines on a structured DFA"
+        );
+    }
+
+    // 5. Explicit engine choice is one variant away — same API, same
+    //    verified result.
+    let spec = CompiledMatcher::compile(
+        &pattern,
+        Engine::Speculative { adaptive: false },
+        ExecPolicy { processors: 8, lookahead: 4, ..ExecPolicy::default() },
+    )?;
+    let out = spec.run_bytes(&page)?;
+    assert_eq!(out.engine, EngineKind::Speculative);
+    println!(
+        "\nexplicit speculative on the page: makespan {} of {} symbols \
+         -> {:.2}x",
+        out.makespan,
+        page.len(),
+        out.model_speedup()
+    );
+    println!("failure-freedom verified across all engines");
+    Ok(())
+}

@@ -30,16 +30,24 @@ impl HolubStekrOutcome {
     }
 }
 
-pub struct HolubStekr<'d> {
-    dfa: &'d Dfa,
+pub struct HolubStekr {
+    dfa: Dfa,
     flat: FlatDfa,
     processors: usize,
 }
 
-impl<'d> HolubStekr<'d> {
-    pub fn new(dfa: &'d Dfa, processors: usize) -> Self {
+impl HolubStekr {
+    pub fn new(dfa: &Dfa, processors: usize) -> Self {
         assert!(processors >= 1);
-        HolubStekr { dfa, flat: FlatDfa::from_dfa(dfa), processors }
+        HolubStekr {
+            dfa: dfa.clone(),
+            flat: FlatDfa::from_dfa(dfa),
+            processors,
+        }
+    }
+
+    pub fn dfa(&self) -> &Dfa {
+        &self.dfa
     }
 
     pub fn run_syms(&self, syms: &[u32]) -> HolubStekrOutcome {
@@ -56,7 +64,7 @@ impl<'d> HolubStekr<'d> {
         let mut slots: Vec<Option<(LVector, usize)>> = vec![None; p];
         std::thread::scope(|scope| {
             let flat = &self.flat;
-            let dfa = self.dfa;
+            let dfa = &self.dfa;
             for (i, (slot, &(s, e))) in
                 slots.iter_mut().zip(&bounds).enumerate()
             {

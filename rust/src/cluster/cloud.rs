@@ -37,6 +37,8 @@ pub struct CloudOutcome {
     pub accepted: bool,
     /// partitioning parameter (|Q| or I_max,r)
     pub m: usize,
+    /// per-worker real matching work performed, in symbols
+    pub per_worker_syms: Vec<usize>,
     /// per-worker simulated compute time, µs
     pub per_worker_us: Vec<f64>,
     /// end-to-end simulated time (compute + merge critical path), µs
@@ -64,8 +66,11 @@ impl CloudOutcome {
 }
 
 /// Speculative DFA matching over a simulated cloud cluster.
-pub struct CloudMatcher<'d> {
-    dfa: &'d Dfa,
+///
+/// Owns its DFA (cloned at construction) so a matcher outlives the
+/// pattern-compilation scope — required by the [`crate::engine`] facade.
+pub struct CloudMatcher {
+    dfa: Dfa,
     flat: FlatDfa,
     cluster: ClusterSpec,
     latency: LatencyModel,
@@ -80,11 +85,11 @@ pub struct CloudMatcher<'d> {
     adaptive: bool,
 }
 
-impl<'d> CloudMatcher<'d> {
-    pub fn new(dfa: &'d Dfa, cluster: ClusterSpec) -> Self {
+impl CloudMatcher {
+    pub fn new(dfa: &Dfa, cluster: ClusterSpec) -> Self {
         let cores = cluster.cores_per_node();
         CloudMatcher {
-            dfa,
+            dfa: dfa.clone(),
             flat: FlatDfa::from_dfa(dfa),
             cluster,
             latency: LatencyModel::default(),
@@ -107,7 +112,15 @@ impl<'d> CloudMatcher<'d> {
     pub fn lookahead(mut self, r: usize) -> Self {
         self.r = r;
         self.lookahead =
-            if r > 0 { Some(Lookahead::analyze(self.dfa, r)) } else { None };
+            if r > 0 { Some(Lookahead::analyze(&self.dfa, r)) } else { None };
+        self
+    }
+
+    /// Inject a precomputed lookahead analysis (must come from this DFA);
+    /// see [`crate::speculative::matcher::MatchPlan::with_lookahead`].
+    pub fn with_lookahead(mut self, la: Lookahead) -> Self {
+        self.r = la.r;
+        self.lookahead = Some(la);
         self
     }
 
@@ -137,6 +150,10 @@ impl<'d> CloudMatcher<'d> {
             .as_ref()
             .map(|la| la.i_max)
             .unwrap_or(self.dfa.num_states as usize)
+    }
+
+    pub fn dfa(&self) -> &Dfa {
+        &self.dfa
     }
 
     pub fn run(&self, input: &[u8]) -> CloudOutcome {
@@ -181,14 +198,13 @@ impl<'d> CloudMatcher<'d> {
 
         // ---- partition + real matching ----
         let (chunks, sets) = plan_chunks(
-            self.dfa,
+            &self.dfa,
             self.lookahead.as_ref(),
             syms,
             &weights,
             m,
             self.adaptive,
         );
-        let _ = n;
         let mut lvectors: Vec<LVector> = Vec::with_capacity(p);
         let mut work_syms: Vec<usize> = Vec::with_capacity(p);
         for (chunk, set) in chunks.iter().zip(&sets) {
@@ -231,6 +247,7 @@ impl<'d> CloudMatcher<'d> {
             final_state,
             accepted: self.dfa.accepting[final_state as usize],
             m,
+            per_worker_syms: work_syms,
             per_worker_us,
             makespan_us: finish_us,
             comm_us: (finish_us - compute_max).max(0.0),

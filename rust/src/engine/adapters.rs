@@ -1,0 +1,430 @@
+//! [`Matcher`](super::Matcher) adapters over every existing engine.
+//!
+//! Each adapter owns everything it needs (DFA, flattened tables, shared
+//! lookahead analysis, vector unit), is built once per pattern by
+//! [`super::CompiledMatcher`], and converts its engine's native outcome
+//! into the unified [`Outcome`].
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::automata::Dfa;
+use crate::baseline::backtracking::Backtracker;
+use crate::baseline::greplike::GrepLike;
+use crate::baseline::holub_stekr::HolubStekr;
+use crate::baseline::sequential::SequentialMatcher;
+use crate::cluster::{CloudMatcher, ClusterSpec};
+use crate::regex::ast::Ast;
+use crate::runtime::pjrt::{VariantSpec, VectorUnit};
+use crate::runtime::simd::SimdMatcher;
+use crate::speculative::lookahead::Lookahead;
+use crate::speculative::matcher::MatchPlan;
+use crate::speculative::merge::MergeStrategy;
+
+use super::outcome::{Detail, EngineKind, Outcome};
+use super::Matcher;
+
+/// Representative byte per dense symbol class, so engines that consume
+/// raw bytes (backtracking, grep-like) can serve `run_syms` requests.
+/// Sound because two bytes in one IBase class are members of exactly the
+/// same pattern character classes (automata::dfa::byte_classes).
+fn class_representatives(dfa: &Dfa) -> Vec<u8> {
+    let mut reps = vec![b'?'; dfa.num_symbols as usize];
+    for b in (0..=255u8).rev() {
+        reps[dfa.class_of(b) as usize] = b;
+    }
+    reps
+}
+
+fn syms_to_bytes(reps: &[u8], syms: &[u32]) -> Vec<u8> {
+    syms.iter().map(|&s| reps[s as usize]).collect()
+}
+
+// ---------------------------------------------------------------- seq --
+
+pub struct SequentialAdapter {
+    m: SequentialMatcher,
+}
+
+impl SequentialAdapter {
+    pub fn new(dfa: &Dfa) -> SequentialAdapter {
+        SequentialAdapter { m: SequentialMatcher::new(dfa) }
+    }
+}
+
+impl Matcher for SequentialAdapter {
+    fn describe(&self) -> String {
+        "sequential: Listing-1 scalar loop over the flattened SBase table"
+            .to_string()
+    }
+
+    fn run_syms(&self, syms: &[u32]) -> Result<Outcome> {
+        let t0 = Instant::now();
+        let out = self.m.run_syms(syms);
+        Ok(Outcome {
+            engine: EngineKind::Sequential,
+            n: syms.len(),
+            accepted: out.accepted,
+            final_state: Some(out.final_state),
+            makespan: syms.len(),
+            overhead_syms: 0,
+            per_worker_syms: vec![syms.len()],
+            wall_s: t0.elapsed().as_secs_f64(),
+            selection: None,
+            detail: Detail::Sequential(out),
+        })
+    }
+
+    fn run_bytes(&self, bytes: &[u8]) -> Result<Outcome> {
+        let t0 = Instant::now();
+        let out = self.m.run_bytes(bytes);
+        Ok(Outcome {
+            engine: EngineKind::Sequential,
+            n: bytes.len(),
+            accepted: out.accepted,
+            final_state: Some(out.final_state),
+            makespan: bytes.len(),
+            overhead_syms: 0,
+            per_worker_syms: vec![bytes.len()],
+            wall_s: t0.elapsed().as_secs_f64(),
+            selection: None,
+            detail: Detail::Sequential(out),
+        })
+    }
+}
+
+// --------------------------------------------------------------- spec --
+
+pub struct SpeculativeAdapter {
+    plan: MatchPlan,
+}
+
+impl SpeculativeAdapter {
+    pub fn new(
+        dfa: &Dfa,
+        processors: usize,
+        lookahead: Option<&Lookahead>,
+        weights: Option<Vec<f64>>,
+        merge: Option<MergeStrategy>,
+        adaptive: bool,
+    ) -> Result<SpeculativeAdapter> {
+        let mut plan = MatchPlan::new(dfa)
+            .processors(processors)
+            .adaptive_partition(adaptive);
+        if let Some(la) = lookahead {
+            plan = plan.with_lookahead(la.clone());
+        }
+        if let Some(w) = weights {
+            anyhow::ensure!(
+                w.len() == processors,
+                "weights len {} != processors {processors}",
+                w.len()
+            );
+            plan = plan.weights(w);
+        }
+        if let Some(m) = merge {
+            plan = plan.merge_strategy(m);
+        }
+        Ok(SpeculativeAdapter { plan })
+    }
+
+    fn convert(&self, n: usize, t0: Instant, out: crate::speculative::matcher::MatchOutcome) -> Outcome {
+        Outcome {
+            engine: EngineKind::Speculative,
+            n,
+            accepted: out.accepted,
+            final_state: Some(out.final_state),
+            makespan: out.makespan_syms(),
+            overhead_syms: out.speculative_overhead_syms(n),
+            per_worker_syms: out.work.iter().map(|w| w.syms_matched).collect(),
+            wall_s: t0.elapsed().as_secs_f64(),
+            selection: None,
+            detail: Detail::Speculative(out),
+        }
+    }
+}
+
+impl Matcher for SpeculativeAdapter {
+    fn describe(&self) -> String {
+        format!(
+            "speculative multicore: Algorithm 3, m={}, gamma={:.3}",
+            self.plan.i_max(),
+            self.plan.gamma()
+        )
+    }
+
+    fn run_syms(&self, syms: &[u32]) -> Result<Outcome> {
+        let t0 = Instant::now();
+        let out = self.plan.run_syms(syms);
+        Ok(self.convert(syms.len(), t0, out))
+    }
+
+    fn run_bytes(&self, bytes: &[u8]) -> Result<Outcome> {
+        let t0 = Instant::now();
+        let out = self.plan.run(bytes);
+        Ok(self.convert(bytes.len(), t0, out))
+    }
+}
+
+// --------------------------------------------------------------- simd --
+
+pub struct SimdAdapter {
+    m: SimdMatcher,
+}
+
+impl SimdAdapter {
+    /// `variant = None` builds an artifact-free emulated vector unit
+    /// sized to this DFA; `Some(name)` loads the named AOT artifact.
+    pub fn new(
+        dfa: &Dfa,
+        variant: Option<&str>,
+        lookahead: Option<&Lookahead>,
+    ) -> Result<SimdAdapter> {
+        let vu = match variant {
+            Some(name) => VectorUnit::load(VectorUnit::default_dir(), name)?,
+            None => VectorUnit::emulated(
+                "engine_emulated",
+                VariantSpec::sized_to(
+                    dfa.num_states as usize,
+                    dfa.num_symbols as usize,
+                ),
+            ),
+        };
+        let m = SimdMatcher::new(dfa, &Arc::new(vu))?
+            .with_lookahead(lookahead.cloned());
+        Ok(SimdAdapter { m })
+    }
+
+    fn convert(&self, n: usize, t0: Instant, out: crate::runtime::simd::SimdOutcome) -> Outcome {
+        Outcome {
+            engine: EngineKind::Simd,
+            n,
+            accepted: out.accepted,
+            final_state: Some(out.final_state),
+            // lockstep lanes: the busiest "worker" is the full vector
+            // pipeline, vector_steps deep
+            makespan: out.vector_steps as usize,
+            overhead_syms: (out.vector_steps as usize).saturating_sub(n),
+            per_worker_syms: Vec::new(),
+            wall_s: t0.elapsed().as_secs_f64(),
+            selection: None,
+            detail: Detail::Simd(out),
+        }
+    }
+}
+
+impl Matcher for SimdAdapter {
+    fn describe(&self) -> String {
+        format!(
+            "vector unit: Listing-2 lane-parallel matching, I_max={}",
+            self.m.i_max()
+        )
+    }
+
+    fn run_syms(&self, syms: &[u32]) -> Result<Outcome> {
+        let t0 = Instant::now();
+        let out = self.m.run_syms(syms)?;
+        Ok(self.convert(syms.len(), t0, out))
+    }
+
+    fn run_bytes(&self, bytes: &[u8]) -> Result<Outcome> {
+        self.run_syms(&self.m.dfa().map_input(bytes))
+    }
+}
+
+// -------------------------------------------------------------- cloud --
+
+pub struct CloudAdapter {
+    m: CloudMatcher,
+}
+
+impl CloudAdapter {
+    pub fn new(
+        dfa: &Dfa,
+        nodes: usize,
+        lookahead: Option<&Lookahead>,
+        merge: Option<MergeStrategy>,
+        adaptive: bool,
+    ) -> Result<CloudAdapter> {
+        anyhow::ensure!(nodes >= 1, "cloud engine needs >= 1 node");
+        let mut m = CloudMatcher::new(dfa, ClusterSpec::homogeneous(nodes))
+            .adaptive_partition(adaptive);
+        if let Some(la) = lookahead {
+            m = m.with_lookahead(la.clone());
+        }
+        if let Some(s) = merge {
+            m = m.merge_strategy(s);
+        }
+        Ok(CloudAdapter { m })
+    }
+}
+
+impl Matcher for CloudAdapter {
+    fn describe(&self) -> String {
+        "cloud: weighted partitioning + 2-tier merge on the simulated EC2 \
+         cluster"
+            .to_string()
+    }
+
+    fn run_syms(&self, syms: &[u32]) -> Result<Outcome> {
+        let t0 = Instant::now();
+        let out = self.m.run_syms(syms);
+        let n = syms.len();
+        Ok(Outcome {
+            engine: EngineKind::Cloud,
+            n,
+            accepted: out.accepted,
+            final_state: Some(out.final_state),
+            makespan: out.per_worker_syms.iter().copied().max().unwrap_or(0),
+            overhead_syms: out
+                .per_worker_syms
+                .iter()
+                .sum::<usize>()
+                .saturating_sub(n),
+            per_worker_syms: out.per_worker_syms.clone(),
+            wall_s: t0.elapsed().as_secs_f64(),
+            selection: None,
+            detail: Detail::Cloud(out),
+        })
+    }
+
+    fn run_bytes(&self, bytes: &[u8]) -> Result<Outcome> {
+        self.run_syms(&self.m.dfa().map_input(bytes))
+    }
+}
+
+// -------------------------------------------------------------- holub --
+
+pub struct HolubStekrAdapter {
+    m: HolubStekr,
+}
+
+impl HolubStekrAdapter {
+    pub fn new(dfa: &Dfa, processors: usize) -> HolubStekrAdapter {
+        HolubStekrAdapter { m: HolubStekr::new(dfa, processors) }
+    }
+}
+
+impl Matcher for HolubStekrAdapter {
+    fn describe(&self) -> String {
+        "Holub-Stekr: uniform chunks, all |Q| states per chunk (prior work \
+         comparator)"
+            .to_string()
+    }
+
+    fn run_syms(&self, syms: &[u32]) -> Result<Outcome> {
+        let t0 = Instant::now();
+        let out = self.m.run_syms(syms);
+        let n = syms.len();
+        Ok(Outcome {
+            engine: EngineKind::HolubStekr,
+            n,
+            accepted: out.accepted,
+            final_state: Some(out.final_state),
+            makespan: out.makespan_syms(),
+            overhead_syms: out.work.iter().sum::<usize>().saturating_sub(n),
+            per_worker_syms: out.work.clone(),
+            wall_s: t0.elapsed().as_secs_f64(),
+            selection: None,
+            detail: Detail::HolubStekr(out),
+        })
+    }
+
+    fn run_bytes(&self, bytes: &[u8]) -> Result<Outcome> {
+        self.run_syms(&self.m.dfa().map_input(bytes))
+    }
+}
+
+// ---------------------------------------------------------- backtrack --
+
+pub struct BacktrackingAdapter {
+    ast: Ast,
+    fuel: u64,
+    reps: Vec<u8>,
+}
+
+impl BacktrackingAdapter {
+    pub fn new(dfa: &Dfa, ast: &Ast, fuel: u64) -> BacktrackingAdapter {
+        BacktrackingAdapter {
+            ast: ast.clone(),
+            fuel,
+            reps: class_representatives(dfa),
+        }
+    }
+}
+
+impl Matcher for BacktrackingAdapter {
+    fn describe(&self) -> String {
+        "backtracking: Perl-style recursive engine (ScanProsite stand-in), \
+         unanchored search"
+            .to_string()
+    }
+
+    fn run_syms(&self, syms: &[u32]) -> Result<Outcome> {
+        self.run_bytes(&syms_to_bytes(&self.reps, syms))
+    }
+
+    fn run_bytes(&self, bytes: &[u8]) -> Result<Outcome> {
+        let t0 = Instant::now();
+        let bt = Backtracker::with_fuel(&self.ast, self.fuel);
+        let stats = bt.search(bytes).ok_or_else(|| {
+            anyhow!("backtracking engine ran out of fuel ({})", self.fuel)
+        })?;
+        Ok(Outcome {
+            engine: EngineKind::Backtracking,
+            n: bytes.len(),
+            accepted: stats.matched,
+            final_state: None,
+            makespan: stats.steps as usize,
+            overhead_syms: 0,
+            per_worker_syms: Vec::new(),
+            wall_s: t0.elapsed().as_secs_f64(),
+            selection: None,
+            detail: Detail::Backtracking(stats),
+        })
+    }
+}
+
+// --------------------------------------------------------------- grep --
+
+pub struct GrepLikeAdapter {
+    ast: Ast,
+    reps: Vec<u8>,
+}
+
+impl GrepLikeAdapter {
+    pub fn new(dfa: &Dfa, ast: &Ast) -> GrepLikeAdapter {
+        GrepLikeAdapter { ast: ast.clone(), reps: class_representatives(dfa) }
+    }
+}
+
+impl Matcher for GrepLikeAdapter {
+    fn describe(&self) -> String {
+        "grep-like: Boyer-Moore literal prefilter + bounded verification"
+            .to_string()
+    }
+
+    fn run_syms(&self, syms: &[u32]) -> Result<Outcome> {
+        self.run_bytes(&syms_to_bytes(&self.reps, syms))
+    }
+
+    fn run_bytes(&self, bytes: &[u8]) -> Result<Outcome> {
+        let t0 = Instant::now();
+        let engine = GrepLike::new(&self.ast);
+        let stats = engine.search(bytes);
+        Ok(Outcome {
+            engine: EngineKind::GrepLike,
+            n: bytes.len(),
+            accepted: stats.matched,
+            final_state: None,
+            makespan: stats.work as usize,
+            overhead_syms: 0,
+            per_worker_syms: Vec::new(),
+            wall_s: t0.elapsed().as_secs_f64(),
+            selection: None,
+            detail: Detail::GrepLike(stats),
+        })
+    }
+}

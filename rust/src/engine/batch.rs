@@ -1,0 +1,133 @@
+//! Batched serving: run many inputs through one [`CompiledMatcher`],
+//! amortizing pattern compilation, lookahead analysis and plan/adapter
+//! construction across the batch — the request shape of a matching
+//! service (many inputs per pattern, mixed sizes).
+//!
+//! With [`Engine::Auto`](super::Engine::Auto), each request in the batch
+//! is dispatched independently: a 4 KB probe goes to the scalar loop
+//! while the 16 MB corpus scan behind it goes to the cluster.
+
+use anyhow::Result;
+
+use super::outcome::{EngineKind, Outcome};
+use super::{CompiledMatcher, Matcher};
+
+/// Results of one batch, plus aggregate serving telemetry.
+#[derive(Clone, Debug)]
+pub struct BatchOutcome {
+    /// Per-request outcomes, in input order.
+    pub outcomes: Vec<Outcome>,
+    /// Total input symbols across the batch.
+    pub total_syms: usize,
+    /// Wall time of the whole batch, seconds.
+    pub wall_s: f64,
+}
+
+impl BatchOutcome {
+    /// How many requests each engine served (insertion-ordered).
+    pub fn by_engine(&self) -> Vec<(EngineKind, usize)> {
+        let mut tally: Vec<(EngineKind, usize)> = Vec::new();
+        for o in &self.outcomes {
+            match tally.iter_mut().find(|(k, _)| *k == o.engine) {
+                Some((_, c)) => *c += 1,
+                None => tally.push((o.engine, 1)),
+            }
+        }
+        tally
+    }
+
+    /// How many requests accepted.
+    pub fn accepted_count(&self) -> usize {
+        self.outcomes.iter().filter(|o| o.accepted).count()
+    }
+}
+
+impl CompiledMatcher {
+    /// Serve a batch of byte inputs through the compiled pattern.
+    pub fn match_many(&self, inputs: &[&[u8]]) -> Result<BatchOutcome> {
+        let t0 = std::time::Instant::now();
+        let mut outcomes = Vec::with_capacity(inputs.len());
+        let mut total_syms = 0usize;
+        for input in inputs {
+            total_syms += input.len();
+            outcomes.push(self.run_bytes(input)?);
+        }
+        Ok(BatchOutcome {
+            outcomes,
+            total_syms,
+            wall_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Serve a batch of pre-mapped symbol inputs.
+    pub fn match_many_syms(&self, inputs: &[Vec<u32>]) -> Result<BatchOutcome> {
+        let t0 = std::time::Instant::now();
+        let mut outcomes = Vec::with_capacity(inputs.len());
+        let mut total_syms = 0usize;
+        for input in inputs {
+            total_syms += input.len();
+            outcomes.push(self.run_syms(input)?);
+        }
+        Ok(BatchOutcome {
+            outcomes,
+            total_syms,
+            wall_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Engine, ExecPolicy, Pattern};
+    use super::*;
+    use crate::workload::InputGen;
+
+    #[test]
+    fn batch_preserves_order_and_tallies_engines() {
+        let cm = CompiledMatcher::compile(
+            &Pattern::Regex("needle".to_string()),
+            Engine::Auto,
+            ExecPolicy::default(),
+        )
+        .unwrap();
+        let mut gen = InputGen::new(0xBA7C);
+        let small = gen.ascii_text(512);
+        let mut large = gen.ascii_text(300_000);
+        gen.plant(&mut large, b"needle", 1);
+        let inputs: Vec<&[u8]> = vec![&small, &large, b"needle", b""];
+        let batch = cm.match_many(&inputs).unwrap();
+        assert_eq!(batch.outcomes.len(), 4);
+        assert_eq!(batch.total_syms, 512 + 300_000 + 6);
+        // small inputs stay on the scalar loop; the large scan leaves it
+        assert_eq!(batch.outcomes[0].engine, EngineKind::Sequential);
+        assert_ne!(batch.outcomes[1].engine, EngineKind::Sequential);
+        assert!(batch.outcomes[1].accepted, "planted needle must be found");
+        assert!(batch.outcomes[2].accepted);
+        assert!(!batch.outcomes[3].accepted);
+        let total: usize = batch.by_engine().iter().map(|(_, c)| c).sum();
+        assert_eq!(total, 4);
+        assert!(batch.by_engine().len() >= 2, "{:?}", batch.by_engine());
+        assert_eq!(batch.accepted_count(), 2);
+    }
+
+    #[test]
+    fn batch_syms_matches_batch_bytes() {
+        let cm = CompiledMatcher::compile(
+            &Pattern::Regex("ab+c".to_string()),
+            Engine::speculative(),
+            ExecPolicy { processors: 3, ..ExecPolicy::default() },
+        )
+        .unwrap();
+        let byte_inputs: Vec<&[u8]> = vec![b"xxabbbc", b"nope", b""];
+        let sym_inputs: Vec<Vec<u32>> = byte_inputs
+            .iter()
+            .map(|b| cm.dfa().map_input(b))
+            .collect();
+        let a = cm.match_many(&byte_inputs).unwrap();
+        let b = cm.match_many_syms(&sym_inputs).unwrap();
+        for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+            assert_eq!(x.accepted, y.accepted);
+            assert_eq!(x.final_state, y.final_state);
+        }
+    }
+}

@@ -1,0 +1,614 @@
+//! The unified engine API: **one facade over every matching substrate**.
+//!
+//! The paper's contribution is a single algorithm deployed across three
+//! substrates (multicore, SIMD, cloud); this module gives the repo the
+//! matching shape — one request path that picks the right substrate per
+//! request instead of four bespoke APIs:
+//!
+//! ```text
+//!   Pattern ──compile──▶ CompiledMatcher ──run/match_many──▶ Outcome
+//!                            │
+//!              Engine::Auto ─┤ γ = I_max,r/|Q|, |Q|, n  (select.rs)
+//!                            ├─▶ SequentialAdapter   (Listing 1)
+//!                            ├─▶ SpeculativeAdapter  (Algorithms 2/3)
+//!                            ├─▶ SimdAdapter         (Listing 2 lanes)
+//!                            ├─▶ CloudAdapter        (simulated EC2)
+//!                            └─▶ Holub-Stekr / backtracking / grep-like
+//! ```
+//!
+//! * [`Matcher`] — the object-safe trait every adapter implements
+//!   (`run_bytes` / `run_syms` / `describe`).
+//! * [`Outcome`] — unified telemetry with an engine-specific
+//!   [`Detail`](outcome::Detail) payload.
+//! * [`Engine`] + [`ExecPolicy`] — which substrate, and the shared
+//!   execution knobs (processors, lookahead depth, weights, merge).
+//! * [`CompiledMatcher`] — pattern compiled once (DFA + lookahead
+//!   analysis + adapters), served many times; [`CompiledMatcher::match_many`]
+//!   amortizes plan construction across a batch of requests.
+//! * [`select`] — the `Engine::Auto` dispatch rule over (γ, |Q|, n).
+
+pub mod adapters;
+pub mod batch;
+pub mod outcome;
+pub mod select;
+
+use anyhow::{bail, Result};
+
+use crate::automata::Dfa;
+use crate::regex::ast::Ast;
+use crate::regex::{compile, parser, prosite};
+use crate::speculative::lookahead::Lookahead;
+use crate::speculative::merge::MergeStrategy;
+
+pub use batch::BatchOutcome;
+pub use outcome::{Detail, EngineKind, Outcome};
+pub use select::{select, AutoThresholds, DfaProps, Selection};
+
+use adapters::{
+    BacktrackingAdapter, CloudAdapter, GrepLikeAdapter, HolubStekrAdapter,
+    SequentialAdapter, SimdAdapter, SpeculativeAdapter,
+};
+
+/// An engine adapter: one substrate behind the unified request shape.
+pub trait Matcher {
+    /// Human-readable description of the engine and its configuration.
+    fn describe(&self) -> String;
+    /// Membership test over pre-mapped dense symbols (IBase form).
+    fn run_syms(&self, syms: &[u32]) -> Result<Outcome>;
+    /// Membership test over raw bytes.
+    fn run_bytes(&self, bytes: &[u8]) -> Result<Outcome>;
+}
+
+/// Which substrate to run, with engine-specific knobs inline.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Engine {
+    /// Pick per request from DFA structure + input size ([`select`]).
+    Auto,
+    /// Listing-1 scalar loop.
+    Sequential,
+    /// The paper's multicore speculative matcher.
+    Speculative {
+        /// fixed-point adaptive partition (repo extension) instead of the
+        /// worst-case I_max sizing
+        adaptive: bool,
+    },
+    /// Lane-parallel vector unit.  `variant` names an AOT artifact from
+    /// the manifest; `None` uses the emulated unit sized to the DFA.
+    Simd { variant: Option<String> },
+    /// Simulated-EC2 cluster with this many nodes.
+    Cloud { nodes: usize },
+    /// Prior-work comparator (uniform chunks × all |Q| states).
+    HolubStekr,
+    /// Perl-style backtracking (needs the pattern AST; search semantics).
+    Backtracking,
+    /// grep-style prefilter engine (needs the pattern AST; search
+    /// semantics).
+    GrepLike,
+}
+
+impl Engine {
+    /// Default-configured speculative engine.
+    pub fn speculative() -> Engine {
+        Engine::Speculative { adaptive: false }
+    }
+
+    /// Default-configured (emulated) SIMD engine.
+    pub fn simd() -> Engine {
+        Engine::Simd { variant: None }
+    }
+
+    /// Default-configured cloud engine.
+    pub fn cloud() -> Engine {
+        Engine::Cloud { nodes: DEFAULT_CLOUD_NODES }
+    }
+
+    /// Parse a CLI engine name: auto|seq|spec|simd|cloud|holub|backtrack|grep.
+    pub fn parse(name: &str) -> Result<Engine> {
+        Ok(match name {
+            "auto" => Engine::Auto,
+            "seq" | "sequential" => Engine::Sequential,
+            "spec" | "speculative" => Engine::speculative(),
+            "simd" => Engine::simd(),
+            "cloud" => Engine::cloud(),
+            "holub" => Engine::HolubStekr,
+            "backtrack" | "backtracking" => Engine::Backtracking,
+            "grep" => Engine::GrepLike,
+            other => bail!(
+                "unknown engine {other:?} (expected \
+                 auto|seq|spec|simd|cloud|holub|backtrack|grep)"
+            ),
+        })
+    }
+}
+
+/// Default cluster size for the cloud adapter (`ExecPolicy::cloud_nodes`
+/// and `Engine::cloud()`).
+pub const DEFAULT_CLOUD_NODES: usize = 4;
+
+/// Shared execution knobs, applied to whichever engines get built.
+#[derive(Clone, Debug)]
+pub struct ExecPolicy {
+    /// |P| for the multicore engines (speculative, Holub–Štekr).
+    pub processors: usize,
+    /// Reverse lookahead depth r (Algorithm 3); 0 = basic Algorithm 2.
+    /// `Engine::Auto` clamps this to ≥ 1 so the dispatch decision (which
+    /// uses the r-analysis) matches what the adapters actually execute.
+    pub lookahead: usize,
+    /// Cluster size for the cloud adapter `Engine::Auto` builds;
+    /// `Engine::Cloud { nodes }` overrides this when chosen explicitly.
+    pub cloud_nodes: usize,
+    /// Per-processor weights (Eq. 1); `None` = uniform.  Must match
+    /// `processors` in length when set.
+    pub weights: Option<Vec<f64>>,
+    /// Merge strategy override; `None` keeps each engine's paper-correct
+    /// default (sequential Eq. 8 on shared memory, hierarchical Fig. 9 on
+    /// the cluster).
+    pub merge: Option<MergeStrategy>,
+    /// Fuel bound for the backtracking engine.
+    pub backtrack_fuel: u64,
+    /// `Engine::Auto` dispatch thresholds.
+    pub thresholds: AutoThresholds,
+}
+
+impl Default for ExecPolicy {
+    fn default() -> ExecPolicy {
+        ExecPolicy {
+            processors: 8,
+            lookahead: 4,
+            cloud_nodes: DEFAULT_CLOUD_NODES,
+            weights: None,
+            merge: None,
+            backtrack_fuel: 1 << 34,
+            thresholds: AutoThresholds::default(),
+        }
+    }
+}
+
+/// A pattern in one of the supported frontends.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Pattern {
+    /// PCRE-style regex, search ("input contains a match") semantics.
+    Regex(String),
+    /// PCRE-style regex, whole-input semantics.
+    RegexExact(String),
+    /// PROSITE protein signature (ScanProsite semantics).
+    Prosite(String),
+    /// A DFA in Grail+ text format (no AST: the backtracking and
+    /// grep-like engines are unavailable).
+    Grail(String),
+}
+
+struct CompiledPattern {
+    dfa: Dfa,
+    /// raw pattern AST for the AST engines; only present when unanchored
+    /// search semantics make their scan loops equivalent to the DFA
+    ast: Option<Ast>,
+}
+
+impl Pattern {
+    fn compile(&self) -> Result<CompiledPattern> {
+        Ok(match self {
+            Pattern::Regex(p) => {
+                let parsed = parser::parse(p)?;
+                let ast = if parsed.anchored_start || parsed.anchored_end {
+                    None // the AST engines' scan loop ignores anchors
+                } else {
+                    Some(parsed.ast)
+                };
+                CompiledPattern { dfa: compile::compile_search(p)?, ast }
+            }
+            Pattern::RegexExact(p) => CompiledPattern {
+                dfa: compile::compile_exact(p)?,
+                ast: None, // exact semantics: search engines don't apply
+            },
+            Pattern::Prosite(p) => {
+                let parsed = prosite::parse(p)?;
+                let ast = if parsed.anchored_start || parsed.anchored_end {
+                    None
+                } else {
+                    Some(parsed.ast)
+                };
+                CompiledPattern { dfa: compile::compile_prosite(p)?, ast }
+            }
+            Pattern::Grail(text) => CompiledPattern {
+                dfa: crate::automata::grail::from_grail(text)?,
+                ast: None,
+            },
+        })
+    }
+}
+
+/// One pattern compiled for serving: minimal DFA, shared structural
+/// analysis, and every adapter the chosen [`Engine`] needs — built once,
+/// reused for every request and across [`CompiledMatcher::match_many`]
+/// batches.
+pub struct CompiledMatcher {
+    dfa: Dfa,
+    engine: Engine,
+    policy: ExecPolicy,
+    props: DfaProps,
+    seq: SequentialAdapter,
+    spec: Option<SpeculativeAdapter>,
+    simd: Option<SimdAdapter>,
+    cloud: Option<CloudAdapter>,
+    holub: Option<HolubStekrAdapter>,
+    backtrack: Option<BacktrackingAdapter>,
+    grep: Option<GrepLikeAdapter>,
+}
+
+impl CompiledMatcher {
+    /// Compile a pattern for the given engine under the given policy.
+    pub fn compile(
+        pattern: &Pattern,
+        engine: Engine,
+        policy: ExecPolicy,
+    ) -> Result<CompiledMatcher> {
+        let parts = pattern.compile()?;
+        Self::from_parts(parts.dfa, parts.ast, engine, policy)
+    }
+
+    /// Build directly from a DFA (no AST: the backtracking and grep-like
+    /// engines are unavailable).
+    pub fn from_dfa(
+        dfa: Dfa,
+        engine: Engine,
+        policy: ExecPolicy,
+    ) -> Result<CompiledMatcher> {
+        Self::from_parts(dfa, None, engine, policy)
+    }
+
+    fn from_parts(
+        dfa: Dfa,
+        ast: Option<Ast>,
+        engine: Engine,
+        policy: ExecPolicy,
+    ) -> Result<CompiledMatcher> {
+        let auto = engine == Engine::Auto;
+        // one structural analysis shared by every adapter and by Auto.
+        // Auto clamps r to >= 1: the dispatch rules reason about the
+        // r-lookahead structure, so the adapters must run with it too.
+        let r = if auto { policy.lookahead.max(1) } else { policy.lookahead };
+        let la = if r > 0 {
+            Some(Lookahead::analyze(&dfa, r))
+        } else {
+            None
+        };
+        let props = match &la {
+            Some(la) => DfaProps::from_lookahead(&dfa, la),
+            None => DfaProps::analyze(&dfa, 1),
+        };
+        let mut cm = CompiledMatcher {
+            seq: SequentialAdapter::new(&dfa),
+            spec: None,
+            simd: None,
+            cloud: None,
+            holub: None,
+            backtrack: None,
+            grep: None,
+            props,
+            engine,
+            policy,
+            dfa,
+        };
+
+        if auto || matches!(cm.engine, Engine::Speculative { .. }) {
+            let adaptive =
+                matches!(cm.engine, Engine::Speculative { adaptive: true });
+            cm.spec = Some(SpeculativeAdapter::new(
+                &cm.dfa,
+                cm.policy.processors,
+                la.as_ref(),
+                cm.policy.weights.clone(),
+                cm.policy.merge,
+                adaptive,
+            )?);
+        }
+        if auto || matches!(cm.engine, Engine::Simd { .. }) {
+            let variant = match &cm.engine {
+                Engine::Simd { variant } => variant.as_deref(),
+                _ => None,
+            };
+            cm.simd = Some(SimdAdapter::new(&cm.dfa, variant, la.as_ref())?);
+        }
+        if auto || matches!(cm.engine, Engine::Cloud { .. }) {
+            let nodes = match cm.engine {
+                Engine::Cloud { nodes } => nodes,
+                _ => cm.policy.cloud_nodes,
+            };
+            cm.cloud = Some(CloudAdapter::new(
+                &cm.dfa,
+                nodes,
+                la.as_ref(),
+                cm.policy.merge,
+                false,
+            )?);
+        }
+        if cm.engine == Engine::HolubStekr {
+            cm.holub = Some(HolubStekrAdapter::new(
+                &cm.dfa,
+                cm.policy.processors,
+            ));
+        }
+        if cm.engine == Engine::Backtracking {
+            match &ast {
+                Some(ast) => {
+                    cm.backtrack = Some(BacktrackingAdapter::new(
+                        &cm.dfa,
+                        ast,
+                        cm.policy.backtrack_fuel,
+                    ));
+                }
+                None => bail!(
+                    "backtracking engine needs an unanchored search \
+                     pattern AST (Regex/Prosite without ^/$/</> anchors)"
+                ),
+            }
+        }
+        if cm.engine == Engine::GrepLike {
+            match &ast {
+                Some(ast) => {
+                    cm.grep = Some(GrepLikeAdapter::new(&cm.dfa, ast));
+                }
+                None => bail!(
+                    "grep-like engine needs an unanchored search pattern \
+                     AST (Regex/Prosite without ^/$/</> anchors)"
+                ),
+            }
+        }
+        Ok(cm)
+    }
+
+    /// The compiled minimal DFA.
+    pub fn dfa(&self) -> &Dfa {
+        &self.dfa
+    }
+
+    /// Structural properties (γ, |Q|, I_max,r) computed at compile time.
+    pub fn props(&self) -> &DfaProps {
+        &self.props
+    }
+
+    /// The engine this matcher was compiled for.
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// What `Engine::Auto` would pick for an input of `n` symbols.
+    pub fn selection_for(&self, n: usize) -> Selection {
+        select(&self.props, n, &self.policy.thresholds)
+    }
+
+    /// The adapter serving requests of `n` symbols (resolves Auto).
+    fn adapter_for(&self, n: usize) -> Result<(&dyn Matcher, Option<Selection>)> {
+        let missing = |what: &str| {
+            anyhow::anyhow!("{what} adapter not built for engine {:?}", self.engine)
+        };
+        Ok(match &self.engine {
+            Engine::Auto => {
+                let sel = self.selection_for(n);
+                let m: &dyn Matcher = match sel.kind {
+                    EngineKind::Sequential => &self.seq,
+                    EngineKind::Speculative => {
+                        self.spec.as_ref().ok_or_else(|| missing("spec"))?
+                    }
+                    EngineKind::Simd => {
+                        self.simd.as_ref().ok_or_else(|| missing("simd"))?
+                    }
+                    EngineKind::Cloud => {
+                        self.cloud.as_ref().ok_or_else(|| missing("cloud"))?
+                    }
+                    // Auto never picks the comparator engines
+                    _ => &self.seq,
+                };
+                (m, Some(sel))
+            }
+            Engine::Sequential => (&self.seq, None),
+            Engine::Speculative { .. } => {
+                (self.spec.as_ref().ok_or_else(|| missing("spec"))?, None)
+            }
+            Engine::Simd { .. } => {
+                (self.simd.as_ref().ok_or_else(|| missing("simd"))?, None)
+            }
+            Engine::Cloud { .. } => {
+                (self.cloud.as_ref().ok_or_else(|| missing("cloud"))?, None)
+            }
+            Engine::HolubStekr => {
+                (self.holub.as_ref().ok_or_else(|| missing("holub"))?, None)
+            }
+            Engine::Backtracking => (
+                self.backtrack.as_ref().ok_or_else(|| missing("backtrack"))?,
+                None,
+            ),
+            Engine::GrepLike => {
+                (self.grep.as_ref().ok_or_else(|| missing("grep"))?, None)
+            }
+        })
+    }
+}
+
+impl Matcher for CompiledMatcher {
+    fn describe(&self) -> String {
+        let engine = match &self.engine {
+            Engine::Auto => format!(
+                "auto (thresholds: seq<{}, gamma<={:.2}, cloud>={}, \
+                 simd I_max<={})",
+                self.policy.thresholds.seq_max_n,
+                self.policy.thresholds.gamma_max,
+                self.policy.thresholds.cloud_min_n,
+                self.policy.thresholds.simd_max_i_max,
+            ),
+            other => format!("{other:?}"),
+        };
+        format!(
+            "engine {engine} over DFA |Q|={} |Sigma|={} I_max,{}={} \
+             gamma={:.3}",
+            self.props.q, self.props.sigma, self.props.r, self.props.i_max,
+            self.props.gamma
+        )
+    }
+
+    fn run_syms(&self, syms: &[u32]) -> Result<Outcome> {
+        let (m, sel) = self.adapter_for(syms.len())?;
+        let mut out = m.run_syms(syms)?;
+        out.selection = sel;
+        Ok(out)
+    }
+
+    fn run_bytes(&self, bytes: &[u8]) -> Result<Outcome> {
+        let (m, sel) = self.adapter_for(bytes.len())?;
+        let mut out = m.run_bytes(bytes)?;
+        out.selection = sel;
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> ExecPolicy {
+        ExecPolicy { processors: 4, lookahead: 2, ..ExecPolicy::default() }
+    }
+
+    #[test]
+    fn explicit_engines_agree_on_membership() {
+        let pattern = Pattern::Regex("(ab|cd)+e?".to_string());
+        let inputs: [&[u8]; 4] =
+            [b"", b"abcd", b"xxabcdezz", b"cdabcdabe"];
+        let engines = [
+            Engine::Sequential,
+            Engine::speculative(),
+            Engine::simd(),
+            Engine::Cloud { nodes: 2 },
+            Engine::HolubStekr,
+            Engine::Backtracking,
+            Engine::GrepLike,
+        ];
+        for input in inputs {
+            let want = CompiledMatcher::compile(
+                &pattern,
+                Engine::Sequential,
+                policy(),
+            )
+            .unwrap()
+            .run_bytes(input)
+            .unwrap();
+            for e in &engines {
+                let cm =
+                    CompiledMatcher::compile(&pattern, e.clone(), policy())
+                        .unwrap();
+                let out = cm.run_bytes(input).unwrap();
+                assert_eq!(out.accepted, want.accepted, "{e:?} {input:?}");
+                if let (Some(a), Some(b)) = (out.final_state, want.final_state)
+                {
+                    assert_eq!(a, b, "{e:?} {input:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn auto_runs_and_reports_selection() {
+        let cm = CompiledMatcher::compile(
+            &Pattern::Regex("needle".to_string()),
+            Engine::Auto,
+            ExecPolicy::default(),
+        )
+        .unwrap();
+        let out = cm.run_bytes(b"hay needle hay").unwrap();
+        assert!(out.accepted);
+        assert_eq!(out.engine, EngineKind::Sequential); // tiny input
+        let sel = out.selection.expect("auto must report a selection");
+        assert_eq!(sel.kind, EngineKind::Sequential);
+        assert_eq!(sel.n, 14);
+        assert!(!sel.reason.is_empty());
+    }
+
+    #[test]
+    fn run_syms_equals_run_bytes_through_the_facade() {
+        let pattern = Pattern::Regex("a+b".to_string());
+        for e in [Engine::Sequential, Engine::speculative(), Engine::simd()] {
+            let cm =
+                CompiledMatcher::compile(&pattern, e, policy()).unwrap();
+            let bytes = b"xxaaabyy";
+            let syms = cm.dfa().map_input(bytes);
+            let a = cm.run_bytes(bytes).unwrap();
+            let b = cm.run_syms(&syms).unwrap();
+            assert_eq!(a.accepted, b.accepted);
+            assert_eq!(a.final_state, b.final_state);
+        }
+    }
+
+    #[test]
+    fn anchored_patterns_reject_ast_engines() {
+        let pattern = Pattern::Regex("^abc$".to_string());
+        for e in [Engine::Backtracking, Engine::GrepLike] {
+            let err = CompiledMatcher::compile(&pattern, e, policy())
+                .err()
+                .expect("anchored pattern must reject AST engines");
+            assert!(format!("{err}").contains("unanchored"), "{err}");
+        }
+        // exact semantics likewise
+        let exact = Pattern::RegexExact("abc".to_string());
+        assert!(CompiledMatcher::compile(
+            &exact,
+            Engine::Backtracking,
+            policy()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn grail_pattern_compiles_without_ast() {
+        let fig6 = "(START) |- 0\n0 0 1\n0 1 2\n1 0 1\n1 1 3\n2 0 3\n\
+                    2 1 2\n3 0 3\n3 1 3\n3 -| (FINAL)\n";
+        let cm = CompiledMatcher::compile(
+            &Pattern::Grail(fig6.to_string()),
+            Engine::speculative(),
+            policy(),
+        )
+        .unwrap();
+        let out = cm.run_syms(&[1, 0, 1, 0]).unwrap();
+        assert!(out.final_state.is_some());
+        assert!(
+            CompiledMatcher::compile(
+                &Pattern::Grail(fig6.to_string()),
+                Engine::GrepLike,
+                policy()
+            )
+            .is_err()
+        );
+    }
+
+    #[test]
+    fn engine_parse_roundtrip() {
+        assert_eq!(Engine::parse("auto").unwrap(), Engine::Auto);
+        assert_eq!(Engine::parse("seq").unwrap(), Engine::Sequential);
+        assert_eq!(Engine::parse("spec").unwrap(), Engine::speculative());
+        assert_eq!(Engine::parse("simd").unwrap(), Engine::simd());
+        assert_eq!(Engine::parse("cloud").unwrap(), Engine::cloud());
+        assert_eq!(Engine::parse("holub").unwrap(), Engine::HolubStekr);
+        assert_eq!(
+            Engine::parse("backtrack").unwrap(),
+            Engine::Backtracking
+        );
+        assert_eq!(Engine::parse("grep").unwrap(), Engine::GrepLike);
+        assert!(Engine::parse("warp-drive").is_err());
+    }
+
+    #[test]
+    fn policy_weights_must_match_processors() {
+        let pattern = Pattern::Regex("abc".to_string());
+        let bad = ExecPolicy {
+            processors: 4,
+            weights: Some(vec![1.0, 1.0]),
+            ..ExecPolicy::default()
+        };
+        assert!(CompiledMatcher::compile(
+            &pattern,
+            Engine::speculative(),
+            bad
+        )
+        .is_err());
+    }
+}

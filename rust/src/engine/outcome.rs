@@ -1,0 +1,140 @@
+//! The unified result type every engine adapter returns.
+//!
+//! Before this module, each substrate reported its own struct
+//! (`SeqOutcome`, `MatchOutcome`, `SimdOutcome`, `CloudOutcome`,
+//! `HolubStekrOutcome`, `BacktrackStats`, `GrepStats`) with four
+//! incompatible field sets.  [`Outcome`] carries the telemetry they all
+//! share — membership verdict, work model, wall time — while the
+//! [`Detail`] enum keeps every engine-specific record intact for callers
+//! that need substrate depth (experiment regenerators, benches).
+
+use std::fmt;
+
+use crate::baseline::backtracking::BacktrackStats;
+use crate::baseline::greplike::GrepStats;
+use crate::baseline::holub_stekr::HolubStekrOutcome;
+use crate::baseline::sequential::SeqOutcome;
+use crate::cluster::CloudOutcome;
+use crate::runtime::simd::SimdOutcome;
+use crate::speculative::matcher::MatchOutcome;
+
+use super::select::Selection;
+
+/// Which substrate executed a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum EngineKind {
+    /// Listing-1 scalar loop (Algorithm 1).
+    Sequential,
+    /// The paper's speculative multicore matcher (Algorithms 2/3).
+    Speculative,
+    /// Lane-parallel vector unit (Listing 2 / §5.1).
+    Simd,
+    /// Simulated-EC2 distributed matcher (§5.2).
+    Cloud,
+    /// Holub–Štekr prior-work comparator.
+    HolubStekr,
+    /// Perl-style backtracking (ScanProsite stand-in).
+    Backtracking,
+    /// grep-style literal-prefilter engine.
+    GrepLike,
+}
+
+impl EngineKind {
+    /// Stable short name (CLI `--engine` vocabulary).
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Sequential => "seq",
+            EngineKind::Speculative => "spec",
+            EngineKind::Simd => "simd",
+            EngineKind::Cloud => "cloud",
+            EngineKind::HolubStekr => "holub",
+            EngineKind::Backtracking => "backtrack",
+            EngineKind::GrepLike => "grep",
+        }
+    }
+}
+
+impl fmt::Display for EngineKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Engine-specific result record, preserved verbatim.
+#[derive(Clone, Debug)]
+pub enum Detail {
+    Sequential(SeqOutcome),
+    Speculative(MatchOutcome),
+    Simd(SimdOutcome),
+    Cloud(CloudOutcome),
+    HolubStekr(HolubStekrOutcome),
+    Backtracking(BacktrackStats),
+    GrepLike(GrepStats),
+}
+
+/// Unified outcome of one membership test, whichever engine ran it.
+#[derive(Clone, Debug)]
+pub struct Outcome {
+    /// Engine that actually executed (for `Engine::Auto`, the selected
+    /// substrate — see [`Outcome::selection`]).
+    pub engine: EngineKind,
+    /// Input length in symbols.
+    pub n: usize,
+    /// Membership verdict: final state ∈ F.
+    pub accepted: bool,
+    /// `delta*(q0, input)`; `None` for the AST engines (backtracking,
+    /// grep-like), which decide membership without running the DFA.
+    pub final_state: Option<u32>,
+    /// Parallel makespan in work units — symbols stepped by the busiest
+    /// worker for the DFA engines (`n` exactly for sequential), engine
+    /// work units (match steps / inspected bytes) for the AST engines.
+    pub makespan: usize,
+    /// Redundant work introduced by speculation, in symbols (0 for the
+    /// non-speculative engines).
+    pub overhead_syms: usize,
+    /// Per-worker symbols of real matching work, where the engine tracks
+    /// it (speculative, cloud, Holub–Štekr; single entry for sequential;
+    /// empty for the lockstep-lane and AST engines — see `detail`).
+    pub per_worker_syms: Vec<usize>,
+    /// Measured wall time of this run, seconds.
+    pub wall_s: f64,
+    /// For `Engine::Auto` runs: why this engine was selected.
+    pub selection: Option<Selection>,
+    /// The engine's native result record.
+    pub detail: Detail,
+}
+
+impl Outcome {
+    /// Work-model speedup over the sequential yardstick:
+    /// `n / makespan` (1.0 for sequential by construction).
+    pub fn model_speedup(&self) -> f64 {
+        self.n as f64 / self.makespan.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_names_are_cli_vocabulary() {
+        let all = [
+            EngineKind::Sequential,
+            EngineKind::Speculative,
+            EngineKind::Simd,
+            EngineKind::Cloud,
+            EngineKind::HolubStekr,
+            EngineKind::Backtracking,
+            EngineKind::GrepLike,
+        ];
+        let names: Vec<&str> = all.iter().map(|k| k.name()).collect();
+        assert_eq!(
+            names,
+            ["seq", "spec", "simd", "cloud", "holub", "backtrack", "grep"]
+        );
+        // names are distinct and Display matches name()
+        for k in all {
+            assert_eq!(format!("{k}"), k.name());
+        }
+    }
+}

@@ -1,0 +1,283 @@
+//! `Engine::Auto` substrate selection from DFA structure and input size.
+//!
+//! The paper frames engine choice as a function of two quantities this
+//! codebase already computes but the bespoke APIs never used for
+//! dispatch:
+//!
+//!  * **γ = I_max,r / |Q|** (Eq. 18) — the structural speculation-
+//!    friendliness of the DFA.  Speedup is bounded by 1 + (|P|−1)/I_max,
+//!    so γ near 1 means no parallel substrate can beat Listing 1.
+//!  * **n** — the input length, which decides whether the per-run
+//!    parallel overhead (thread spawn + merge, or network round trips)
+//!    amortizes.
+//!
+//! The thresholds are calibrated against the host symbol rate measured by
+//! `speculative::profile` / `experiments::calibrate` (see
+//! [`AutoThresholds::calibrated`]); the defaults bake in the 500 sym/µs
+//! ballpark of the paper-era hardware.
+
+use crate::automata::Dfa;
+use crate::speculative::lookahead::Lookahead;
+
+use super::outcome::EngineKind;
+
+/// Structural properties of a compiled pattern's DFA, computed once at
+/// `CompiledMatcher::compile` time and reused for every dispatch.
+#[derive(Clone, Debug)]
+pub struct DfaProps {
+    /// |Q|
+    pub q: usize,
+    /// |Σ| (dense symbol classes)
+    pub sigma: usize,
+    /// lookahead depth the analysis used (≥ 1)
+    pub r: usize,
+    /// I_max,r (Eq. 12)
+    pub i_max: usize,
+    /// γ = I_max,r / |Q| (Eq. 18)
+    pub gamma: f64,
+}
+
+impl DfaProps {
+    /// Analyze a DFA with `r` reverse-lookahead symbols (clamped to ≥ 1;
+    /// r = 0 callers still need γ for the *decision*, and Lemma 1 makes
+    /// the r = 1 value a sound conservative stand-in).
+    pub fn analyze(dfa: &Dfa, r: usize) -> DfaProps {
+        let la = Lookahead::analyze(dfa, r.max(1));
+        DfaProps::from_lookahead(dfa, &la)
+    }
+
+    /// Build from an existing analysis (avoids re-running the BFS).
+    pub fn from_lookahead(dfa: &Dfa, la: &Lookahead) -> DfaProps {
+        let q = dfa.num_states as usize;
+        DfaProps {
+            q,
+            sigma: dfa.num_symbols as usize,
+            r: la.r,
+            i_max: la.i_max,
+            gamma: la.i_max as f64 / q.max(1) as f64,
+        }
+    }
+}
+
+/// Dispatch thresholds for [`select`].  All comparisons are documented on
+/// the fields; [`select`] applies them in rule order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AutoThresholds {
+    /// Rule 1 — below this input length the run is served sequentially:
+    /// the parallel plan costs ~120 µs (thread spawn + L-vector merge),
+    /// which at the calibrated symbol rate equals this many symbols.
+    pub seq_max_n: usize,
+    /// Rule 2 — above this γ the run is served sequentially: speculative
+    /// speedup is bounded by 1 + (|P|−1)/I_max (Eq. 18), which for
+    /// γ > 1/2 cannot reach 2× on same-|Q|-scale processor counts.
+    pub gamma_max: f64,
+    /// Rule 3 — at or above this input length the cloud substrate wins:
+    /// the ~362 µs inter-node hops (×nodes) stay under ~2 % of the
+    /// sequential matching time.
+    pub cloud_min_n: usize,
+    /// Rule 4 — the vector unit is preferred when every speculative chunk
+    /// fits its initial states into one 8-lane register pass
+    /// (I_max ≤ lanes − 1, chunk 0 taking the remaining lane) ...
+    pub simd_max_i_max: usize,
+    /// ... and the input is small enough that a single vector unit beats
+    /// fanning out to |P| cores.
+    pub simd_max_n: usize,
+}
+
+impl Default for AutoThresholds {
+    fn default() -> AutoThresholds {
+        AutoThresholds {
+            seq_max_n: 1 << 16,
+            gamma_max: 0.5,
+            cloud_min_n: 1 << 23,
+            simd_max_i_max: 7,
+            simd_max_n: 1 << 20,
+        }
+    }
+}
+
+impl AutoThresholds {
+    /// Scale the input-size thresholds to a measured host symbol rate
+    /// (`experiments::calibrate::host_syms_per_us`).  The defaults equal
+    /// `calibrated(500.0)` rounded to powers of two.
+    pub fn calibrated(syms_per_us: f64) -> AutoThresholds {
+        let rate = syms_per_us.max(1.0);
+        AutoThresholds {
+            // ~120 µs of parallel plan overhead
+            seq_max_n: (rate * 120.0) as usize,
+            // ~16 ms of sequential work before ~20 × 362 µs of network
+            // hops drop under a few percent
+            cloud_min_n: (rate * 16_000.0) as usize,
+            ..AutoThresholds::default()
+        }
+    }
+}
+
+/// Why `Engine::Auto` picked a substrate for one request.
+#[derive(Clone, Debug)]
+pub struct Selection {
+    pub kind: EngineKind,
+    /// the quantities the decision used
+    pub q: usize,
+    pub i_max: usize,
+    pub gamma: f64,
+    pub n: usize,
+    /// human-readable rule that fired
+    pub reason: String,
+}
+
+impl std::fmt::Display for Selection {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} (gamma={:.3}, |Q|={}, I_max={}, n={}): {}",
+            self.kind, self.gamma, self.q, self.i_max, self.n, self.reason
+        )
+    }
+}
+
+/// Pick the substrate for one request.  Rules, in order:
+///
+/// 1. `n < seq_max_n`                      → Sequential (overhead dominates)
+/// 2. `gamma > gamma_max`                  → Sequential (structure hostile)
+/// 3. `n >= cloud_min_n`                   → Cloud (network cost amortized)
+/// 4. `i_max <= simd_max_i_max && n <= simd_max_n`
+///                                         → Simd (one register pass/chunk)
+/// 5. otherwise                            → Speculative multicore
+pub fn select(props: &DfaProps, n: usize, t: &AutoThresholds) -> Selection {
+    let mk = |kind: EngineKind, reason: String| Selection {
+        kind,
+        q: props.q,
+        i_max: props.i_max,
+        gamma: props.gamma,
+        n,
+        reason,
+    };
+    if n < t.seq_max_n {
+        return mk(
+            EngineKind::Sequential,
+            format!(
+                "n={n} < {} — parallel plan overhead would dominate",
+                t.seq_max_n
+            ),
+        );
+    }
+    if props.gamma > t.gamma_max {
+        return mk(
+            EngineKind::Sequential,
+            format!(
+                "gamma={:.3} > {:.3} — Eq. 18 bounds parallel speedup \
+                 below break-even",
+                props.gamma, t.gamma_max
+            ),
+        );
+    }
+    if n >= t.cloud_min_n {
+        return mk(
+            EngineKind::Cloud,
+            format!(
+                "n={n} >= {} — inter-node latency amortized, cluster \
+                 capacity wins",
+                t.cloud_min_n
+            ),
+        );
+    }
+    if props.i_max <= t.simd_max_i_max && n <= t.simd_max_n {
+        return mk(
+            EngineKind::Simd,
+            format!(
+                "I_max={} <= {} and n={n} <= {} — every chunk's initial \
+                 states fit one vector register pass",
+                props.i_max, t.simd_max_i_max, t.simd_max_n
+            ),
+        );
+    }
+    mk(
+        EngineKind::Speculative,
+        format!(
+            "gamma={:.3} <= {:.3} at multicore scale — speculative \
+             chunk-parallel matching",
+            props.gamma, t.gamma_max
+        ),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::regex::compile::{compile_prosite, compile_search};
+
+    #[test]
+    fn rules_fire_in_order_on_a_structured_dfa() {
+        // literal search DFA: tiny I_max, gamma well under 1/2
+        let dfa = compile_search("needle").unwrap();
+        let props = DfaProps::analyze(&dfa, 4);
+        assert!(props.i_max <= 4, "I_max {}", props.i_max);
+        assert!(props.gamma <= 0.5, "gamma {}", props.gamma);
+        let t = AutoThresholds::default();
+
+        assert_eq!(select(&props, 1 << 10, &t).kind, EngineKind::Sequential);
+        assert_eq!(select(&props, 1 << 18, &t).kind, EngineKind::Simd);
+        assert_eq!(select(&props, 1 << 21, &t).kind, EngineKind::Speculative);
+        assert_eq!(select(&props, 1 << 24, &t).kind, EngineKind::Cloud);
+    }
+
+    #[test]
+    fn hostile_structure_stays_sequential_at_any_size() {
+        // force gamma = 1 by disabling lookahead benefits: a DFA where the
+        // analysis keeps I_max = |Q| is hard to construct portably, so
+        // emulate with explicit props.
+        let props = DfaProps {
+            q: 100,
+            sigma: 4,
+            r: 4,
+            i_max: 80,
+            gamma: 0.8,
+        };
+        let t = AutoThresholds::default();
+        for n in [1 << 12, 1 << 18, 1 << 24, 1 << 27] {
+            assert_eq!(select(&props, n, &t).kind, EngineKind::Sequential);
+        }
+    }
+
+    #[test]
+    fn prosite_signatures_are_speculation_friendly() {
+        // the paper's headline workload: PROSITE DFAs have I_max << |Q|
+        let dfa = compile_prosite("C-x(2)-C-x(3)-[LIVMFYWC].").unwrap();
+        let props = DfaProps::analyze(&dfa, 4);
+        assert!(
+            props.i_max < props.q,
+            "lookahead found no structure: I_max {} |Q| {}",
+            props.i_max,
+            props.q
+        );
+        let t = AutoThresholds::default();
+        let sel = select(&props, 1 << 22, &t);
+        if props.gamma <= t.gamma_max {
+            assert_eq!(sel.kind, EngineKind::Speculative, "{sel}");
+        } else {
+            assert_eq!(sel.kind, EngineKind::Sequential, "{sel}");
+        }
+    }
+
+    #[test]
+    fn calibration_scales_input_thresholds() {
+        let slow = AutoThresholds::calibrated(50.0);
+        let fast = AutoThresholds::calibrated(5000.0);
+        assert!(slow.seq_max_n < fast.seq_max_n);
+        assert!(slow.cloud_min_n < fast.cloud_min_n);
+        assert_eq!(slow.gamma_max, fast.gamma_max);
+    }
+
+    #[test]
+    fn selection_reports_the_decision_inputs() {
+        let dfa = compile_search("abc").unwrap();
+        let props = DfaProps::analyze(&dfa, 2);
+        let sel = select(&props, 10, &AutoThresholds::default());
+        assert_eq!(sel.n, 10);
+        assert_eq!(sel.q, props.q);
+        let line = format!("{sel}");
+        assert!(line.contains("gamma="), "{line}");
+        assert!(line.contains("seq"), "{line}");
+    }
+}

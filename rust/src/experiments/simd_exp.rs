@@ -18,7 +18,7 @@ use super::multicore::spread_by_q;
 pub fn fig13() -> Vec<Table> {
     let vu = match VectorUnit::load(VectorUnit::default_dir(), "lane8_main")
     {
-        Ok(vu) => vu,
+        Ok(vu) => std::sync::Arc::new(vu),
         Err(e) => {
             let mut t = Table::new("Fig. 13 — SKIPPED", &["reason"]);
             t.row(vec![format!("{e:#}")]);

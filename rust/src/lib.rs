@@ -4,8 +4,37 @@
 //! Membership Test for Multicore, SIMD and Cloud Computing Environments"*
 //! (Ko, Jung, Han, Burgstaller; Int. J. Parallel Programming, 2012).
 //!
-//! The library is organized as the paper's system plus every substrate it
-//! depends on (see DESIGN.md):
+//! ## The engine facade
+//!
+//! The public API is the [`engine`] module: compile a [`engine::Pattern`]
+//! once into a [`engine::CompiledMatcher`], then serve membership tests
+//! through one request path whatever substrate runs them:
+//!
+//! ```no_run
+//! use specdfa::engine::{CompiledMatcher, Engine, ExecPolicy, Matcher, Pattern};
+//!
+//! let cm = CompiledMatcher::compile(
+//!     &Pattern::Regex("GET /[a-z]+ HTTP/1\\.[01]".into()),
+//!     Engine::Auto,
+//!     ExecPolicy::default(),
+//! )?;
+//! let out = cm.run_bytes(b"GET /index HTTP/1.1")?;
+//! println!("accepted={} via {}", out.accepted, out.engine);
+//! # anyhow::Result::<()>::Ok(())
+//! ```
+//!
+//! * [`engine::Engine::Auto`] picks the substrate per request from the
+//!   DFA's structural properties (γ = I_max,r/|Q|, Eq. 18) and the input
+//!   length — small probes stay on the Listing-1 scalar loop, structured
+//!   patterns go to the vector unit or the multicore speculative matcher,
+//!   corpus-scale scans go to the cluster.
+//! * [`engine::CompiledMatcher::match_many`] serves batches, amortizing
+//!   compilation and plan construction across requests.
+//! * Every adapter implements [`engine::Matcher`] and returns the unified
+//!   [`engine::Outcome`]; failure-freedom (identical results to
+//!   sequential matching) is enforced by construction and property tests.
+//!
+//! ## The substrates underneath
 //!
 //! * [`regex`] / [`automata`] — pattern frontends and the Grail+-substitute
 //!   toolchain (Thompson NFA, subset construction, Hopcroft minimization,
@@ -16,8 +45,9 @@
 //!   parallel matching with I_max,r reverse-lookahead optimization,
 //!   weighted partitioning and L-vector merging.
 //! * [`cluster`] — simulated cloud computing environment (EC2 analog).
-//! * [`runtime`] — PJRT vector unit: loads the AOT-compiled Pallas lane
-//!   matcher (the AVX2-gather analog) and drives it from the match path.
+//! * [`runtime`] — the vector unit (the AVX2-gather analog): an emulated
+//!   lane kernel by default, the AOT-compiled Pallas artifact on PJRT
+//!   under the `xla-pjrt` feature.
 //! * [`workload`] — PCRE-like and PROSITE-like benchmark suites and input
 //!   generators.
 //! * [`experiments`] — regenerators for every table and figure in §6.
@@ -25,6 +55,7 @@
 pub mod automata;
 pub mod baseline;
 pub mod cluster;
+pub mod engine;
 pub mod experiments;
 pub mod regex;
 pub mod workload;
@@ -34,6 +65,10 @@ pub mod util;
 
 pub use automata::{Dfa, FlatDfa};
 pub use baseline::sequential::SequentialMatcher;
+pub use engine::{
+    CompiledMatcher, Engine, EngineKind, ExecPolicy, Matcher, Outcome,
+    Pattern, Selection,
+};
 pub use regex::compile::{compile_exact, compile_prosite, compile_search};
 pub use speculative::matcher::{MatchOutcome, MatchPlan};
 pub use speculative::merge::MergeStrategy;

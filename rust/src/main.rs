@@ -11,9 +11,13 @@
 //!   cloud       run the simulated-EC2 matcher
 
 use std::process::ExitCode;
+use std::sync::Arc;
 
 use specdfa::automata::grail;
 use specdfa::cluster::{CloudMatcher, ClusterSpec};
+use specdfa::engine::{
+    CompiledMatcher, Engine, ExecPolicy, Matcher, Pattern,
+};
 use specdfa::experiments;
 use specdfa::regex::compile::{compile_prosite, compile_search};
 use specdfa::runtime::pjrt::VectorUnit;
@@ -59,7 +63,11 @@ fn print_usage() {
          \n\
          USAGE:\n\
          \x20 specdfa match   (--regex PAT | --prosite PAT) \
-         [--file F | --gen N] [--procs P] [--lookahead R]\n\
+         [--file F | --gen N]\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 \
+         [--engine auto|seq|spec|simd|cloud|holub|backtrack|grep]\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 \
+         [--procs P] [--lookahead R] [--nodes K] [--batch B]\n\
          \x20 specdfa experiment <name>|all      names: {}\n\
          \x20 specdfa suite   [pcre|prosite]\n\
          \x20 specdfa profile\n\
@@ -127,31 +135,85 @@ fn input_from_flags(
 
 fn cmd_match(args: &[String]) -> anyhow::Result<()> {
     let fl = flags(args)?;
-    let dfa = compile_from_flags(&fl)?;
-    let input = input_from_flags(&fl, &dfa, get(&fl, "prosite").is_some())?;
+    let pattern = match (get(&fl, "regex"), get(&fl, "prosite")) {
+        (Some(p), None) => Pattern::Regex(p.to_string()),
+        (None, Some(p)) => Pattern::Prosite(p.to_string()),
+        _ => anyhow::bail!("need exactly one of --regex / --prosite"),
+    };
     let procs: usize = get(&fl, "procs").unwrap_or("8").parse()?;
     let r: usize = get(&fl, "lookahead").unwrap_or("4").parse()?;
+    let nodes: usize = get(&fl, "nodes").unwrap_or("4").parse()?;
+    let batch: usize = get(&fl, "batch").unwrap_or("1").parse()?;
+    anyhow::ensure!(batch >= 1, "--batch must be >= 1");
+    let mut engine = Engine::parse(get(&fl, "engine").unwrap_or("auto"))?;
+    if let Engine::Cloud { nodes: n } = &mut engine {
+        *n = nodes;
+    }
 
-    let la = Lookahead::analyze(&dfa, r.max(1));
-    println!(
-        "DFA: |Q|={} |Sigma|={} I_max,{}={} gamma={:.3}",
-        dfa.num_states, dfa.num_symbols, r.max(1), la.i_max,
-        la.i_max as f64 / dfa.num_states as f64
-    );
+    let policy = ExecPolicy {
+        processors: procs,
+        lookahead: r,
+        cloud_nodes: nodes,
+        ..ExecPolicy::default()
+    };
+    let cm = CompiledMatcher::compile(&pattern, engine.clone(), policy)?;
+    println!("{}", cm.describe());
 
+    let dfa = cm.dfa().clone();
+    let input = input_from_flags(&fl, &dfa, get(&fl, "prosite").is_some())?;
+
+    if batch > 1 {
+        // split the input into `batch` requests through match_many — the
+        // serving path (plan construction amortized across the batch)
+        let chunk = input.len().div_ceil(batch).max(1);
+        let inputs: Vec<&[u8]> = input.chunks(chunk).collect();
+        let out = cm.match_many(&inputs)?;
+        println!(
+            "batch: {} requests, {} total symbols, {:.1} ms wall",
+            out.outcomes.len(),
+            out.total_syms,
+            out.wall_s * 1e3
+        );
+        for (kind, count) in out.by_engine() {
+            println!("  {count:>4} request(s) -> {kind}");
+        }
+        println!(
+            "accepted: {} of {}",
+            out.accepted_count(),
+            out.outcomes.len()
+        );
+        return Ok(());
+    }
+
+    let out = cm.run_bytes(&input)?;
+    if let Some(sel) = &out.selection {
+        println!("auto selected {sel}");
+    }
+
+    // failure-freedom check against the sequential yardstick
     let seq = SequentialMatcher::new(&dfa).run_bytes(&input);
-    let plan = MatchPlan::new(&dfa).processors(procs).lookahead(r);
-    let out = plan.run(&input);
     anyhow::ensure!(out.accepted == seq.accepted, "failure-freedom violated!");
+    if let Some(fs) = out.final_state {
+        anyhow::ensure!(
+            fs == seq.final_state,
+            "failure-freedom violated: state {fs} != {}",
+            seq.final_state
+        );
+    }
     println!(
-        "match: {} (final state {}, n={}, P={procs}, r={r})",
-        out.accepted, out.final_state, input.len()
+        "match: {} via {} (n={}, P={procs}, r={r})",
+        out.accepted,
+        out.engine,
+        input.len()
     );
     println!(
-        "work: makespan {} syms vs sequential {} syms -> model speedup {:.2}x",
-        out.makespan_syms(),
+        "work: makespan {} vs sequential {} syms -> model speedup {:.2}x \
+         (overhead {} syms, wall {:.1} ms)",
+        out.makespan,
         input.len(),
-        input.len() as f64 / out.makespan_syms().max(1) as f64
+        out.model_speedup(),
+        out.overhead_syms,
+        out.wall_s * 1e3
     );
     Ok(())
 }
@@ -235,7 +297,7 @@ fn cmd_simd(args: &[String]) -> anyhow::Result<()> {
     let variant = get(&fl, "variant").unwrap_or("lane8_main");
     let r: usize = get(&fl, "lookahead").unwrap_or("1").parse()?;
     let n: usize = get(&fl, "gen").unwrap_or("65536").parse()?;
-    let vu = VectorUnit::load(VectorUnit::default_dir(), variant)?;
+    let vu = Arc::new(VectorUnit::load(VectorUnit::default_dir(), variant)?);
     println!("vector unit: {} on {} ({} lanes, t={})",
              vu.name, vu.platform(), vu.spec.lanes, vu.spec.t);
     let syms = InputGen::new(0x51D).uniform_syms(&dfa, n);

@@ -1,16 +1,33 @@
-//! PJRT wrapper: load HLO-text artifacts, compile once, execute many.
+//! The system's **vector unit**: the lane-parallel DFA stepping kernel the
+//! 8-wide AVX2 gather loop (Listing 2) plays in the paper.
 //!
-//! Interchange is HLO *text* (see python/compile/aot.py): jax ≥ 0.5 emits
-//! protos with 64-bit instruction ids that xla_extension 0.5.1 rejects;
-//! the text parser reassigns ids.  Pattern follows
-//! /opt/xla-example/src/bin/load_hlo.rs.
+//! Two interchangeable backends stand behind one [`VectorUnit`] API:
+//!
+//!  * **Emulated** (default) — a pure-Rust interpreter of the lane_match /
+//!    compose kernels with exactly the semantics of the AOT-lowered Pallas
+//!    model (python/compile/model.py: per-lane window gather with index
+//!    clipping, `lens`-masked stepping, Eq. (9) composition).  Needs no
+//!    external crates and no compiled artifacts beyond the shape manifest,
+//!    so `cargo test` exercises the full SIMD code path offline.
+//!  * **PJRT** (feature `xla-pjrt`) — loads the HLO-text artifacts
+//!    produced by `python/compile/aot.py` (jax ≥ 0.5 emits protos with
+//!    64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//!    parser reassigns ids), compiles them with the PJRT CPU client and
+//!    executes with concrete buffers.  Requires the unvendored `xla`
+//!    bindings crate.
+//!
+//! Both backends share the artifact manifest (shape metadata) and the
+//! device-resident-table protocol: `set_table` once, then `lane_match`
+//! with an empty table slice (§Perf: re-uploading the padded table per
+//! call — q·s·4 B ≈ 393 KiB for lane8_main — dominated the per-call cost).
 
+use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-/// Static shape configuration of one lane_match artifact (mirrors
+/// Static shape configuration of one lane_match variant (mirrors
 /// python/compile/model.py::VariantSpec).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct VariantSpec {
@@ -24,6 +41,21 @@ pub struct VariantSpec {
     /// input window length
     pub n: usize,
     pub block_t: usize,
+}
+
+impl VariantSpec {
+    /// A spec sized to one concrete DFA, for the emulated backend: no
+    /// padding waste, 8 lanes (the paper's AVX2 width).
+    pub fn sized_to(num_states: usize, num_symbols: usize) -> VariantSpec {
+        VariantSpec {
+            lanes: 8,
+            q: num_states.max(1),
+            s: num_symbols.max(1),
+            t: 4096,
+            n: 4096,
+            block_t: 512,
+        }
+    }
 }
 
 /// Parsed artifacts/manifest.tsv.
@@ -68,25 +100,33 @@ impl ArtifactManifest {
     }
 }
 
-/// A compiled lane_match executable + its shape spec.
+enum Backend {
+    /// Pure-Rust interpreter of the lane_match/compose kernels.
+    Emulated,
+    #[cfg(feature = "xla-pjrt")]
+    Pjrt(xla_backend::PjrtState),
+}
+
+/// A lane_match executable + its shape spec, behind one of two backends.
 pub struct VectorUnit {
-    client: xla::PjRtClient,
-    exe: xla::PjRtLoadedExecutable,
-    compose_exe: Option<xla::PjRtLoadedExecutable>,
-    compose_qp: usize,
+    backend: Backend,
     pub spec: VariantSpec,
     pub name: String,
     /// executions performed (diagnostics / Fig. 13 instruction accounting)
-    pub calls: std::cell::Cell<u64>,
-    /// device-resident transition table (§Perf: uploading the padded
-    /// table per call — q·s·4 B ≈ 393 KiB for lane8_main — dominated the
-    /// per-call cost; `set_table` uploads it once, `lane_match` then only
-    /// moves the small per-call operands)
-    table_buf: std::cell::RefCell<Option<xla::PjRtBuffer>>,
+    pub calls: Cell<u64>,
+    /// unit-resident transition table set by `set_table` (the emulated
+    /// analog of a device-resident buffer)
+    table: RefCell<Option<Vec<i32>>>,
+    /// padded L-vector width of the compose kernel; 0 = unavailable
+    compose_qp: usize,
 }
 
 impl VectorUnit {
     /// Load variant `name` from the artifact directory.
+    ///
+    /// The manifest (shape metadata) is always required; the `.hlo.txt`
+    /// executables are only read under the `xla-pjrt` feature — the
+    /// default build interprets the kernel semantics directly.
     pub fn load(dir: impl AsRef<Path>, name: &str) -> Result<VectorUnit> {
         let dir = dir.as_ref();
         let manifest = ArtifactManifest::load(dir)?;
@@ -94,64 +134,98 @@ impl VectorUnit {
             .lane_match
             .get(name)
             .ok_or_else(|| anyhow!("variant {name:?} not in manifest"))?;
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
-        let exe = compile_hlo(&client, &dir.join(format!("{name}.hlo.txt")))?;
-        let compose_path = dir.join("compose.hlo.txt");
-        let (compose_exe, compose_qp) = if compose_path.exists() {
-            (
-                Some(compile_hlo(&client, &compose_path)?),
-                manifest.compose_qp.unwrap_or(0),
-            )
-        } else {
-            (None, 0)
-        };
+        let compose_qp = manifest.compose_qp.unwrap_or(0);
+        let backend = Self::make_backend(dir, name)?;
         Ok(VectorUnit {
-            client,
-            exe,
-            compose_exe,
-            compose_qp,
+            backend,
             spec,
             name: name.to_string(),
-            calls: std::cell::Cell::new(0),
-            table_buf: std::cell::RefCell::new(None),
+            calls: Cell::new(0),
+            table: RefCell::new(None),
+            compose_qp,
         })
     }
 
-    /// Upload a padded transition table to the device once; subsequent
-    /// `lane_match` calls reuse it (pass `table = &[]`).
+    #[cfg(not(feature = "xla-pjrt"))]
+    fn make_backend(_dir: &Path, _name: &str) -> Result<Backend> {
+        Ok(Backend::Emulated)
+    }
+
+    #[cfg(feature = "xla-pjrt")]
+    fn make_backend(dir: &Path, name: &str) -> Result<Backend> {
+        Ok(Backend::Pjrt(xla_backend::PjrtState::load(dir, name)?))
+    }
+
+    /// An artifact-free emulated unit with the given shapes — what
+    /// [`crate::engine`] uses so the SIMD substrate works out of the box.
+    pub fn emulated(name: &str, spec: VariantSpec) -> VectorUnit {
+        VectorUnit {
+            backend: Backend::Emulated,
+            compose_qp: spec.q,
+            spec,
+            name: name.to_string(),
+            calls: Cell::new(0),
+            table: RefCell::new(None),
+        }
+    }
+
+    /// Upload a padded transition table to the unit once; subsequent
+    /// `lane_match` calls reuse it (pass `table = &[]`).  Re-uploading an
+    /// identical table is a no-op, so per-request callers (the serving
+    /// path calls this once per run) pay one copy total, not one per run.
     pub fn set_table(&self, table: &[i32]) -> Result<()> {
         let sp = &self.spec;
         if table.len() != sp.q * sp.s {
             bail!("table len {} != q*s {}", table.len(), sp.q * sp.s);
         }
-        let buf = self
-            .client
-            .buffer_from_host_buffer(table, &[sp.q * sp.s], None)
-            .map_err(|e| anyhow!("table upload: {e:?}"))?;
-        *self.table_buf.borrow_mut() = Some(buf);
+        if self.table.borrow().as_deref() == Some(table) {
+            return Ok(());
+        }
+        #[cfg(feature = "xla-pjrt")]
+        if let Backend::Pjrt(state) = &self.backend {
+            state.set_table(table)?;
+        }
+        *self.table.borrow_mut() = Some(table.to_vec());
         Ok(())
     }
 
-    /// Default artifact directory: $SPECDFA_ARTIFACTS or ./artifacts.
+    /// Default artifact directory: $SPECDFA_ARTIFACTS, else the first of
+    /// ./artifacts and ./rust/artifacts holding a manifest (so the CLI and
+    /// examples work from both the workspace root and the crate root).
     pub fn default_dir() -> PathBuf {
-        std::env::var_os("SPECDFA_ARTIFACTS")
-            .map(PathBuf::from)
-            .unwrap_or_else(|| PathBuf::from("artifacts"))
+        if let Some(dir) = std::env::var_os("SPECDFA_ARTIFACTS") {
+            return PathBuf::from(dir);
+        }
+        for cand in ["artifacts", "rust/artifacts"] {
+            let p = PathBuf::from(cand);
+            if p.join("manifest.tsv").exists() {
+                return p;
+            }
+        }
+        PathBuf::from("artifacts")
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        match &self.backend {
+            Backend::Emulated => "emulated-cpu".to_string(),
+            #[cfg(feature = "xla-pjrt")]
+            Backend::Pjrt(state) => state.platform(),
+        }
     }
 
     /// One vector step: advance every lane by up to `spec.t` symbols.
     ///
     /// * `table` — padded flat table, len q*s, entries are *state ids*
     ///   (not premultiplied offsets; the kernel indexes [q, s]).  Pass an
-    ///   empty slice to reuse the device-resident table from `set_table`
-    ///   (the fast path — saves ~400 KiB of host->device traffic/call).
+    ///   empty slice to reuse the unit-resident table from `set_table`
+    ///   (the fast path — saves ~400 KiB of host->device traffic/call on
+    ///   the PJRT backend).
     /// * `inp` — symbol window, len n.
     /// * `starts`/`lens`/`init` — per-lane descriptors, len lanes.
+    ///
+    /// Kernel semantics (python/compile/model.py): per-lane gather
+    /// `inp[clip(start + i, 0, n-1)]`, `lens` clipped to `t`, each lane
+    /// stepping `state = table[state, sym]` for `i < len`.
     pub fn lane_match(
         &self,
         table: &[i32],
@@ -175,44 +249,27 @@ impl VectorUnit {
             }
             self.set_table(table)?;
         }
-        let tb = self.table_buf.borrow();
-        let Some(table_dev) = tb.as_ref() else {
-            bail!("no table uploaded: call set_table first");
+        let out = match &self.backend {
+            Backend::Emulated => {
+                let tb = self.table.borrow();
+                let Some(table) = tb.as_ref() else {
+                    bail!("no table uploaded: call set_table first");
+                };
+                emu_lane_match(sp, table, inp, starts, lens, init)
+            }
+            #[cfg(feature = "xla-pjrt")]
+            Backend::Pjrt(state) => state.lane_match(inp, starts, lens, init)?,
         };
-        // small operands go host->device per call; the table stays put
-        let to_dev = |v: &[i32]| -> Result<xla::PjRtBuffer> {
-            self.client
-                .buffer_from_host_buffer(v, &[v.len()], None)
-                .map_err(|e| anyhow!("upload: {e:?}"))
-        };
-        let args = [
-            table_dev,
-            &to_dev(inp)?,
-            &to_dev(starts)?,
-            &to_dev(lens)?,
-            &to_dev(init)?,
-        ];
-        let result = self
-            .exe
-            .execute_b::<&xla::PjRtBuffer>(&args)
-            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-        // aot.py lowers with return_tuple=True: unwrap the 1-tuple
-        let out = result
-            .to_tuple1()
-            .map_err(|e| anyhow!("to_tuple1: {e:?}"))?;
         self.calls.set(self.calls.get() + 1);
-        out.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+        Ok(out)
     }
 
-    /// Eq. (9) composition on the device: out[q] = lb[la[q]].
-    /// Vectors must be padded to the compose artifact's width.
+    /// Eq. (9) composition on the unit: out[q] = lb[la[q]].
+    /// Vectors must be padded to the compose kernel's width.
     pub fn compose(&self, la: &[i32], lb: &[i32]) -> Result<Vec<i32>> {
-        let exe = self
-            .compose_exe
-            .as_ref()
-            .ok_or_else(|| anyhow!("compose artifact not loaded"))?;
+        if self.compose_qp == 0 {
+            bail!("compose artifact not loaded");
+        }
         if la.len() != self.compose_qp || lb.len() != self.compose_qp {
             bail!(
                 "compose args len {}/{} != qp {}",
@@ -221,16 +278,17 @@ impl VectorUnit {
                 self.compose_qp
             );
         }
-        let args = [xla::Literal::vec1(la), xla::Literal::vec1(lb)];
-        let result = exe
-            .execute::<xla::Literal>(&args)
-            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-        let out = result
-            .to_tuple1()
-            .map_err(|e| anyhow!("to_tuple1: {e:?}"))?;
-        out.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+        match &self.backend {
+            Backend::Emulated => Ok(la
+                .iter()
+                .map(|&i| {
+                    let i = (i.max(0) as usize).min(lb.len() - 1);
+                    lb[i]
+                })
+                .collect()),
+            #[cfg(feature = "xla-pjrt")]
+            Backend::Pjrt(state) => state.compose(la, lb),
+        }
     }
 
     pub fn compose_width(&self) -> usize {
@@ -238,19 +296,154 @@ impl VectorUnit {
     }
 }
 
-fn compile_hlo(
-    client: &xla::PjRtClient,
-    path: &Path,
-) -> Result<xla::PjRtLoadedExecutable> {
-    let path_str = path
-        .to_str()
-        .ok_or_else(|| anyhow!("non-utf8 path {path:?}"))?;
-    let proto = xla::HloModuleProto::from_text_file(path_str)
-        .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
-    let comp = xla::XlaComputation::from_proto(&proto);
-    client
-        .compile(&comp)
-        .map_err(|e| anyhow!("compile {path:?}: {e:?}"))
+/// The lane_match kernel reference semantics in pure Rust (mirrors
+/// python/compile/kernels/ref.py::lane_dfa_match_py plus the window
+/// gather + clipping of model.py::lane_match).
+fn emu_lane_match(
+    sp: &VariantSpec,
+    table: &[i32],
+    inp: &[i32],
+    starts: &[i32],
+    lens: &[i32],
+    init: &[i32],
+) -> Vec<i32> {
+    let n = sp.n as i64;
+    (0..sp.lanes)
+        .map(|l| {
+            let mut state = (init[l].max(0) as usize).min(sp.q - 1);
+            let len = lens[l].clamp(0, sp.t as i32);
+            let start = starts[l] as i64;
+            for i in 0..len as i64 {
+                let pos = (start + i).clamp(0, n - 1) as usize;
+                let sym = (inp[pos].max(0) as usize).min(sp.s - 1);
+                state =
+                    (table[state * sp.s + sym].max(0) as usize).min(sp.q - 1);
+            }
+            state as i32
+        })
+        .collect()
+}
+
+#[cfg(feature = "xla-pjrt")]
+mod xla_backend {
+    //! The real PJRT path: HLO-text artifacts compiled with the CPU
+    //! client.  Only built with `--features xla-pjrt`, which additionally
+    //! requires supplying the `xla` bindings crate (not vendored; add it
+    //! as a path dependency next to vendor/anyhow).
+
+    use std::path::Path;
+
+    use anyhow::{anyhow, Result};
+
+    pub struct PjrtState {
+        client: xla::PjRtClient,
+        exe: xla::PjRtLoadedExecutable,
+        compose_exe: Option<xla::PjRtLoadedExecutable>,
+        table_buf: std::cell::RefCell<Option<xla::PjRtBuffer>>,
+    }
+
+    impl PjrtState {
+        pub fn load(dir: &Path, name: &str) -> Result<PjrtState> {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
+            let exe =
+                compile_hlo(&client, &dir.join(format!("{name}.hlo.txt")))?;
+            let compose_path = dir.join("compose.hlo.txt");
+            let compose_exe = if compose_path.exists() {
+                Some(compile_hlo(&client, &compose_path)?)
+            } else {
+                None
+            };
+            Ok(PjrtState {
+                client,
+                exe,
+                compose_exe,
+                table_buf: std::cell::RefCell::new(None),
+            })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        pub fn set_table(&self, table: &[i32]) -> Result<()> {
+            let buf = self
+                .client
+                .buffer_from_host_buffer(table, &[table.len()], None)
+                .map_err(|e| anyhow!("table upload: {e:?}"))?;
+            *self.table_buf.borrow_mut() = Some(buf);
+            Ok(())
+        }
+
+        pub fn lane_match(
+            &self,
+            inp: &[i32],
+            starts: &[i32],
+            lens: &[i32],
+            init: &[i32],
+        ) -> Result<Vec<i32>> {
+            let tb = self.table_buf.borrow();
+            let Some(table_dev) = tb.as_ref() else {
+                return Err(anyhow!("no table uploaded: call set_table first"));
+            };
+            // small operands go host->device per call; the table stays put
+            let to_dev = |v: &[i32]| -> Result<xla::PjRtBuffer> {
+                self.client
+                    .buffer_from_host_buffer(v, &[v.len()], None)
+                    .map_err(|e| anyhow!("upload: {e:?}"))
+            };
+            let args = [
+                table_dev,
+                &to_dev(inp)?,
+                &to_dev(starts)?,
+                &to_dev(lens)?,
+                &to_dev(init)?,
+            ];
+            let result = self
+                .exe
+                .execute_b::<&xla::PjRtBuffer>(&args)
+                .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+            // aot.py lowers with return_tuple=True: unwrap the 1-tuple
+            let out = result
+                .to_tuple1()
+                .map_err(|e| anyhow!("to_tuple1: {e:?}"))?;
+            out.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+        }
+
+        pub fn compose(&self, la: &[i32], lb: &[i32]) -> Result<Vec<i32>> {
+            let exe = self
+                .compose_exe
+                .as_ref()
+                .ok_or_else(|| anyhow!("compose artifact not loaded"))?;
+            let args = [xla::Literal::vec1(la), xla::Literal::vec1(lb)];
+            let result = exe
+                .execute::<xla::Literal>(&args)
+                .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+            let out = result
+                .to_tuple1()
+                .map_err(|e| anyhow!("to_tuple1: {e:?}"))?;
+            out.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+        }
+    }
+
+    fn compile_hlo(
+        client: &xla::PjRtClient,
+        path: &Path,
+    ) -> Result<xla::PjRtLoadedExecutable> {
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 path {path:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {path:?}: {e:?}"))
+    }
 }
 
 /// Pad a DFA's transition table to a variant's (q, s) shape.  Entries are
@@ -335,6 +528,46 @@ mod tests {
         // too big DFAs are rejected
         assert!(pad_table(&table, 5, 2, &spec).is_err());
         assert!(pad_table(&table, 2, 4, &spec).is_err());
+    }
+
+    #[test]
+    fn emulated_lane_match_reference_semantics() {
+        // 2-state 2-symbol toggle DFA: delta(q, 0) = q, delta(q, 1) = 1-q
+        let spec = VariantSpec { lanes: 4, q: 2, s: 2, t: 8, n: 8, block_t: 4 };
+        let vu = VectorUnit::emulated("toggle", spec);
+        let table = vec![0, 1, 1, 0];
+        vu.set_table(&table).unwrap();
+        let inp = vec![1, 1, 0, 1, 0, 0, 1, 1];
+        // lane 0: full window from 0; lane 1: masked to 0 syms;
+        // lane 2: start mid-window; lane 3: start beyond n-1 (clipped)
+        let starts = vec![0, 0, 3, 100];
+        let lens = vec![8, 0, 2, 3];
+        let init = vec![0, 1, 0, 0];
+        let out = vu.lane_match(&[], &inp, &starts, &lens, &init).unwrap();
+        assert_eq!(out[0], 1); // five 1s from state 0
+        assert_eq!(out[1], 1); // untouched
+        assert_eq!(out[2], 1); // syms 1, 0
+        assert_eq!(out[3], 1); // clipped to inp[7]=1 three times: toggles to 1
+        assert_eq!(vu.calls.get(), 1);
+    }
+
+    #[test]
+    fn emulated_compose_is_eq9() {
+        let spec = VariantSpec { lanes: 2, q: 4, s: 2, t: 4, n: 4, block_t: 2 };
+        let vu = VectorUnit::emulated("c", spec);
+        let la = vec![2, 0, 3, 1];
+        let lb = vec![10, 11, 12, 13];
+        assert_eq!(vu.compose(&la, &lb).unwrap(), vec![12, 10, 13, 11]);
+    }
+
+    #[test]
+    fn lane_match_requires_table() {
+        let spec = VariantSpec { lanes: 1, q: 2, s: 2, t: 4, n: 4, block_t: 2 };
+        let vu = VectorUnit::emulated("x", spec);
+        let err = vu
+            .lane_match(&[], &[0; 4], &[0], &[1], &[0])
+            .unwrap_err();
+        assert!(format!("{err}").contains("set_table"));
     }
 
     fn tempdir() -> PathBuf {

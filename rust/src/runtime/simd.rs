@@ -20,6 +20,8 @@
 //! instructions/step (their 8-lane ratio 8·5/9 ≈ 4.4 matches the measured
 //! 4.45× of Fig. 13).
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::automata::Dfa;
@@ -70,27 +72,42 @@ impl SimdOutcome {
     }
 }
 
-pub struct SimdMatcher<'d, 'v> {
-    dfa: &'d Dfa,
-    vu: &'v VectorUnit,
+/// Owns its DFA and shares the (compile-once) vector unit via `Arc`, so a
+/// matcher can be kept hot across requests — the [`crate::engine`] facade
+/// builds one per pattern.
+pub struct SimdMatcher {
+    dfa: Dfa,
+    vu: Arc<VectorUnit>,
     lookahead: Option<Lookahead>,
     padded_table: Vec<i32>,
 }
 
-impl<'d, 'v> SimdMatcher<'d, 'v> {
-    pub fn new(dfa: &'d Dfa, vu: &'v VectorUnit) -> Result<Self> {
+impl SimdMatcher {
+    pub fn new(dfa: &Dfa, vu: &Arc<VectorUnit>) -> Result<Self> {
         let padded_table = pad_table(
             &dfa.table,
             dfa.num_states as usize,
             dfa.num_symbols as usize,
             &vu.spec,
         )?;
-        Ok(SimdMatcher { dfa, vu, lookahead: None, padded_table })
+        Ok(SimdMatcher {
+            dfa: dfa.clone(),
+            vu: Arc::clone(vu),
+            lookahead: None,
+            padded_table,
+        })
     }
 
     pub fn lookahead(mut self, r: usize) -> Self {
         self.lookahead =
-            if r > 0 { Some(Lookahead::analyze(self.dfa, r)) } else { None };
+            if r > 0 { Some(Lookahead::analyze(&self.dfa, r)) } else { None };
+        self
+    }
+
+    /// Inject a precomputed lookahead analysis (must come from this DFA);
+    /// see [`crate::speculative::matcher::MatchPlan::with_lookahead`].
+    pub fn with_lookahead(mut self, la: Option<Lookahead>) -> Self {
+        self.lookahead = la;
         self
     }
 
@@ -100,6 +117,10 @@ impl<'d, 'v> SimdMatcher<'d, 'v> {
             .map(|la| la.i_max)
             .unwrap_or(self.dfa.num_states as usize)
             .max(1)
+    }
+
+    pub fn dfa(&self) -> &Dfa {
+        &self.dfa
     }
 
     pub fn run(&self, input: &[u8]) -> Result<SimdOutcome> {
@@ -133,7 +154,7 @@ impl<'d, 'v> SimdMatcher<'d, 'v> {
                 match &self.lookahead {
                     Some(la) => {
                         let lo = start.saturating_sub(la.r);
-                        la.initial_set(self.dfa, &syms[lo..start])
+                        la.initial_set(&self.dfa, &syms[lo..start])
                             .iter()
                             .map(|s| s as u32)
                             .collect()

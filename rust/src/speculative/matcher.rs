@@ -159,9 +159,13 @@ impl MatchOutcome {
 }
 
 /// Configuration builder for speculative parallel matching.
+///
+/// Owns its (cheaply cloned) DFA plus the flattened table, so a plan can
+/// be built once per pattern and reused across requests — the contract
+/// the [`crate::engine`] facade's batched serving path relies on.
 #[derive(Clone, Debug)]
-pub struct MatchPlan<'d> {
-    dfa: &'d Dfa,
+pub struct MatchPlan {
+    dfa: Dfa,
     flat: FlatDfa,
     processors: usize,
     /// reverse lookahead depth r; 0 = basic Algorithm 2 (match all |Q|)
@@ -173,10 +177,10 @@ pub struct MatchPlan<'d> {
     adaptive: bool,
 }
 
-impl<'d> MatchPlan<'d> {
-    pub fn new(dfa: &'d Dfa) -> Self {
+impl MatchPlan {
+    pub fn new(dfa: &Dfa) -> Self {
         MatchPlan {
-            dfa,
+            dfa: dfa.clone(),
             flat: FlatDfa::from_dfa(dfa),
             processors: 1,
             r: 0,
@@ -211,7 +215,16 @@ impl<'d> MatchPlan<'d> {
     pub fn lookahead(mut self, r: usize) -> Self {
         self.r = r;
         self.lookahead =
-            if r > 0 { Some(Lookahead::analyze(self.dfa, r)) } else { None };
+            if r > 0 { Some(Lookahead::analyze(&self.dfa, r)) } else { None };
+        self
+    }
+
+    /// Inject a precomputed lookahead analysis (must come from this DFA),
+    /// skipping the redundant `Lookahead::analyze` when the caller — e.g.
+    /// the [`crate::engine`] facade — shares one analysis across engines.
+    pub fn with_lookahead(mut self, la: Lookahead) -> Self {
+        self.r = la.r;
+        self.lookahead = Some(la);
         self
     }
 
@@ -253,21 +266,19 @@ impl<'d> MatchPlan<'d> {
     /// Match pre-mapped dense symbols — the paper's measured configuration
     /// (its framework also pre-converts input to the IBase form, Fig. 8d).
     pub fn run_syms(&self, syms: &[u32]) -> MatchOutcome {
-        let n = syms.len();
         let q = self.dfa.num_states as usize;
         let m = self.i_max().max(1);
 
         // chunk layout + per-chunk initial-state sets (Algorithm 3
         // lines 1–7 at plan construction; runtime lookup here)
         let (chunks, sets) = plan_chunks(
-            self.dfa,
+            &self.dfa,
             self.lookahead.as_ref(),
             syms,
             &self.weights,
             m,
             self.adaptive,
         );
-        let _ = n;
 
         let mut results: Vec<(LVector, WorkerWork)> =
             Vec::with_capacity(chunks.len());

@@ -6,11 +6,17 @@
 
 use specdfa::baseline::sequential::SequentialMatcher;
 use specdfa::cluster::{CloudMatcher, ClusterSpec};
+use specdfa::engine::{
+    select, AutoThresholds, CompiledMatcher, DfaProps, Engine, EngineKind,
+    ExecPolicy, Matcher, Pattern,
+};
 use specdfa::regex::compile::{compile_prosite, compile_search};
 use specdfa::speculative::matcher::MatchPlan;
 use specdfa::speculative::merge::MergeStrategy;
 use specdfa::util::prop;
-use specdfa::workload::{pcre_suite_cached, InputGen};
+use specdfa::workload::{
+    pcre_suite_cached, prosite_suite_cached, InputGen,
+};
 
 #[test]
 fn parallel_equals_sequential_across_suite() {
@@ -106,6 +112,138 @@ fn cloud_preserves_sequential_semantics_under_preemption() {
         // preemption slows the simulated clock, never changes the result
         assert_eq!(out.final_state, want.final_state, "seed {seed}");
     }
+}
+
+/// Every engine adapter, one code path: the same (pattern, input) runs
+/// through every `Matcher` via the engine facade and must report the same
+/// membership verdict — and the same final state where the engine tracks
+/// one.  This is the old multicore-only failure-freedom property extended
+/// to the SIMD, cloud, Holub–Štekr and AST engines.
+#[test]
+fn prop_all_engine_adapters_equivalent() {
+    let pats = ["ne{2}dle", "(ab|cd)+e?", "a+b", "[0-9]{2}:[0-9]{2}"];
+    prop::check("facade adapters equivalent", 10, |rng| {
+        let pat = pats[rng.usize_below(pats.len())];
+        let pattern = Pattern::Regex(pat.to_string());
+        let len = rng.range_usize(0, 800);
+        let bytes: Vec<u8> = (0..len)
+            .map(|_| b"abcdne 0123:xy"[rng.usize_below(14)])
+            .collect();
+        let policy = ExecPolicy {
+            processors: rng.range_usize(1, 6),
+            lookahead: rng.range_usize(0, 4),
+            ..ExecPolicy::default()
+        };
+        let engines = [
+            Engine::Sequential,
+            Engine::Speculative { adaptive: false },
+            Engine::Speculative { adaptive: true },
+            Engine::Simd { variant: None },
+            Engine::Cloud { nodes: 2 },
+            Engine::HolubStekr,
+            Engine::Backtracking,
+            Engine::GrepLike,
+        ];
+        let outcomes: Vec<_> = engines
+            .iter()
+            .map(|e| {
+                CompiledMatcher::compile(&pattern, e.clone(), policy.clone())
+                    .expect("compile")
+                    .run_bytes(&bytes)
+                    .expect("run")
+            })
+            .collect();
+        let want = &outcomes[0];
+        assert_eq!(want.engine, EngineKind::Sequential);
+        for out in &outcomes[1..] {
+            assert_eq!(
+                out.accepted, want.accepted,
+                "{} disagrees on {pat} (len {len})",
+                out.engine
+            );
+            if let (Some(a), Some(b)) = (out.final_state, want.final_state) {
+                assert_eq!(a, b, "{} final state, {pat}", out.engine);
+            }
+            assert_eq!(out.n, want.n);
+        }
+    });
+}
+
+/// Acceptance criterion: `Engine::Auto` demonstrably dispatches to at
+/// least 3 different engines across the PCRE-like and PROSITE-like
+/// suites, and every selection is consistent with the documented
+/// γ/|Q|/n threshold rules.
+#[test]
+fn auto_dispatches_at_least_three_engines_across_suites() {
+    let t = AutoThresholds::default();
+    let sizes = [1usize << 10, 1 << 18, 1 << 21, 1 << 24];
+    let mut kinds = std::collections::BTreeSet::new();
+    for suite in [pcre_suite_cached(), prosite_suite_cached()] {
+        for p in suite {
+            let props = DfaProps::analyze(&p.dfa, 4);
+            for n in sizes {
+                let sel = select(&props, n, &t);
+                kinds.insert(sel.kind);
+                // re-derive the decision from gamma/|Q|/n: the published
+                // threshold contract, not the implementation
+                let expected = if n < t.seq_max_n {
+                    EngineKind::Sequential
+                } else if props.gamma > t.gamma_max {
+                    EngineKind::Sequential
+                } else if n >= t.cloud_min_n {
+                    EngineKind::Cloud
+                } else if props.i_max <= t.simd_max_i_max
+                    && n <= t.simd_max_n
+                {
+                    EngineKind::Simd
+                } else {
+                    EngineKind::Speculative
+                };
+                assert_eq!(
+                    sel.kind, expected,
+                    "{} n={n}: {sel}",
+                    p.name
+                );
+            }
+        }
+    }
+    assert!(
+        kinds.len() >= 3,
+        "auto dispatched only {kinds:?} across the suites"
+    );
+    assert!(kinds.contains(&EngineKind::Sequential));
+    assert!(kinds.contains(&EngineKind::Cloud));
+}
+
+/// Deterministic dispatch walk on the paper's Fig. 6 DFA (γ = 1/2): the
+/// same pattern is served by all four Auto substrates as the request size
+/// grows.
+#[test]
+fn auto_walks_all_four_substrates_with_input_size() {
+    let fig6 = "(START) |- 0\n0 0 1\n0 1 2\n1 0 1\n1 1 3\n2 0 3\n\
+                2 1 2\n3 0 3\n3 1 3\n3 -| (FINAL)\n";
+    let cm = CompiledMatcher::compile(
+        &Pattern::Grail(fig6.to_string()),
+        Engine::Auto,
+        ExecPolicy::default(),
+    )
+    .unwrap();
+    let props = cm.props();
+    assert!(props.i_max <= 2, "Fig. 6 I_max,4 is at most 2");
+    assert!(props.gamma <= 0.5);
+    assert_eq!(cm.selection_for(1 << 10).kind, EngineKind::Sequential);
+    assert_eq!(cm.selection_for(1 << 18).kind, EngineKind::Simd);
+    assert_eq!(cm.selection_for(1 << 21).kind, EngineKind::Speculative);
+    assert_eq!(cm.selection_for(1 << 24).kind, EngineKind::Cloud);
+
+    // and the dispatched runs stay failure-free at a representative size
+    let mut gen = InputGen::new(0xA070);
+    let syms = gen.uniform_syms(cm.dfa(), 1 << 18);
+    let out = cm.run_syms(&syms).unwrap();
+    assert_eq!(out.engine, EngineKind::Simd);
+    let want = SequentialMatcher::new(cm.dfa()).run_syms(&syms);
+    assert_eq!(out.final_state, Some(want.final_state));
+    assert_eq!(out.accepted, want.accepted);
 }
 
 #[test]

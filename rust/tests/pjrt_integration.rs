@@ -1,7 +1,7 @@
-//! Integration: rust runtime loads and executes the AOT artifacts and the
-//! vectorized matcher agrees bit-for-bit with the scalar matchers.
-//!
-//! Requires `make artifacts` (the Makefile test target guarantees this).
+//! Integration: rust runtime loads the artifact manifest, executes the
+//! lane kernels (emulated by default; real PJRT under `--features
+//! xla-pjrt` after `make artifacts`) and the vectorized matcher agrees
+//! bit-for-bit with the scalar matchers.
 
 use specdfa::automata::Dfa;
 use specdfa::baseline::sequential::SequentialMatcher;
@@ -16,10 +16,11 @@ fn artifacts_dir() -> std::path::PathBuf {
     VectorUnit::default_dir()
 }
 
-fn require_artifacts() -> VectorUnit {
-    VectorUnit::load(artifacts_dir(), "lane8_small").expect(
-        "artifacts missing — run `make artifacts` before `cargo test`",
-    )
+fn require_artifacts() -> std::sync::Arc<VectorUnit> {
+    std::sync::Arc::new(VectorUnit::load(artifacts_dir(), "lane8_small")
+        .expect(
+            "artifacts missing — run `make artifacts` before `cargo test`",
+        ))
 }
 
 fn random_syms(rng: &mut Rng, dfa: &Dfa, n: usize) -> Vec<u32> {

@@ -1,0 +1,214 @@
+//! Vendored, offline subset of the `anyhow` error-handling API.
+//!
+//! The build environment has no crate registry, so this path dependency
+//! provides the pieces of `anyhow` this workspace actually uses with the
+//! same names and semantics:
+//!
+//!  * [`Error`] — a context chain; `Display` prints the outermost
+//!    message, `{:#}` prints the whole chain joined by `": "`.
+//!  * [`Result<T>`] with the `Error` default type parameter.
+//!  * [`anyhow!`], [`bail!`], [`ensure!`] macros.
+//!  * [`Context`] for attaching lazy context to `Result`s.
+//!  * `From<E: std::error::Error>` so `?` converts concrete errors.
+//!
+//! If the real crates.io `anyhow` becomes available, deleting this
+//! directory and switching the dependency line is a drop-in change.
+
+use std::fmt;
+
+/// Context-chain error. `chain[0]` is the outermost (most recent) message.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a single message (the `anyhow!` constructor).
+    pub fn msg(message: impl fmt::Display) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Prepend a context message (outermost-first ordering).
+    pub fn context(mut self, message: impl fmt::Display) -> Error {
+        self.chain.insert(0, message.to_string());
+        self
+    }
+
+    /// The error chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The root (innermost) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — the full chain, like anyhow
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(err: E) -> Error {
+        let mut chain = vec![err.to_string()];
+        let mut source = err.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` with `Error` default.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to the error branch of a `Result`.
+pub trait Context<T, E> {
+    /// Wrap the error value with additional context.
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    /// Wrap the error value with lazily evaluated context.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for std::result::Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            return ::std::result::Result::Err($crate::Error::msg(
+                ::std::concat!("condition failed: ", ::std::stringify!($cond)),
+            ));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_err() -> Result<u32> {
+        let n: u32 = "zzz".parse().context("parsing zzz")?;
+        Ok(n)
+    }
+
+    #[test]
+    fn context_chain_formats() {
+        let err = parse_err().unwrap_err();
+        assert_eq!(format!("{err}"), "parsing zzz");
+        let full = format!("{err:#}");
+        assert!(full.starts_with("parsing zzz: "), "{full}");
+        assert!(full.contains("invalid digit"), "{full}");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let x = 3;
+        let e = anyhow!("bad value {x}");
+        assert_eq!(e.to_string(), "bad value 3");
+        let e = anyhow!("bad {} value", "x");
+        assert_eq!(e.to_string(), "bad x value");
+
+        fn bails(flag: bool) -> Result<()> {
+            ensure!(flag, "flag was {flag}");
+            bail!("unreachable {}", 7)
+        }
+        assert_eq!(bails(false).unwrap_err().to_string(), "flag was false");
+        assert_eq!(bails(true).unwrap_err().to_string(), "unreachable 7");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn read() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        assert!(read().is_err());
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let ok: std::result::Result<u32, std::num::ParseIntError> =
+            "42".parse();
+        let n = ok.with_context(|| -> String {
+            panic!("context closure must not run on Ok")
+        });
+        assert!(matches!(n, Ok(42)));
+    }
+}
