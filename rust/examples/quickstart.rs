@@ -59,7 +59,8 @@ fn main() -> anyhow::Result<()> {
     //    dispatch — the serving-shaped entry point.
     let inputs: Vec<&[u8]> =
         vec![&probe, &page, b"GET /a HTTP/1.0", &corpus];
-    let batch = cm.match_many(&inputs)?;
+    let batch = cm.match_many(&inputs);
+    assert_eq!(batch.error_count(), 0, "every request has its own slot");
     println!(
         "batch: {} requests, {} B total, {:.1} ms wall",
         batch.outcomes.len(),
@@ -93,5 +94,10 @@ fn main() -> anyhow::Result<()> {
         out.model_speedup()
     );
     println!("failure-freedom verified across all engines");
+
+    // 6. For a long-lived process serving many producers, the async
+    //    serving loop (worker threads + coalescing + pattern cache +
+    //    capacity-calibrated routing) is the next step:
+    //    `cargo run --release --example serve`.
     Ok(())
 }

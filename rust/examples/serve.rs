@@ -1,0 +1,119 @@
+//! Serving walkthrough: the asynchronous batched serving loop.
+//!
+//! Demonstrates the pieces `engine::serve` adds over `match_many`:
+//!  1. capacity calibration at startup (§4.1 offline profiling) feeding
+//!     `Engine::Auto` thresholds,
+//!  2. many producer threads submitting `(pattern, input)` requests,
+//!  3. same-pattern coalescing behind an LRU compiled-pattern cache,
+//!  4. per-request outcome streaming, verified against the synchronous
+//!     `match_many` path.
+//!
+//!     cargo run --release --example serve
+
+use specdfa::engine::{
+    CompiledMatcher, Engine, ExecPolicy, Pattern, ServeConfig, Server,
+};
+use specdfa::workload::InputGen;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Start the server.  `calibrate_on_start` (default) runs the
+    //    offline profiling step, so Auto routing uses this machine's
+    //    measured symbol rate instead of the paper-era ballpark.
+    let server = Server::start(ServeConfig {
+        workers: 4,
+        cache_patterns: 16,
+        recalibrate_every: 0, // one-shot demo: skip periodic re-profiling
+        engine: Engine::Auto,
+        ..ServeConfig::default()
+    })?;
+    let t = server.thresholds();
+    println!(
+        "calibrated: {:.0} sym/us -> sequential below {} syms, cloud at {}",
+        t.calibrated_rate.unwrap_or(0.0),
+        t.seq_max_n,
+        t.cloud_min_n
+    );
+
+    // 2. Three patterns, a shared corpus of requests per pattern.
+    let patterns = [
+        Pattern::Regex(r"GET /[a-z0-9/]+ HTTP/1\.[01]".to_string()),
+        Pattern::Regex("ERROR|FATAL".to_string()),
+        Pattern::Prosite("C-x(2)-C-x(3)-[LIVMFYWC].".to_string()),
+    ];
+    let mut gen = InputGen::new(0x5E12);
+    let mut corpora: Vec<Vec<Vec<u8>>> = Vec::new();
+    for (i, _) in patterns.iter().enumerate() {
+        let mut inputs = Vec::new();
+        for k in 0..24 {
+            let n = 256 << (k % 5); // mixed sizes: 256 B .. 4 KB
+            let mut text = if i == 2 {
+                gen.protein(n)
+            } else {
+                gen.ascii_text(n)
+            };
+            if k % 3 == 0 && i == 1 {
+                gen.plant(&mut text, b"FATAL", 1);
+            }
+            inputs.push(text);
+        }
+        corpora.push(inputs);
+    }
+
+    // 3. Producer threads submit interleaved; each collects its own
+    //    tickets and waits in submission order.
+    let outcomes = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for (pattern, inputs) in patterns.iter().zip(&corpora) {
+            let server = &server;
+            handles.push(scope.spawn(move || {
+                let tickets: Vec<_> = inputs
+                    .iter()
+                    .map(|inp| server.submit(pattern.clone(), inp.clone()))
+                    .collect();
+                tickets
+                    .into_iter()
+                    .map(|t| t.wait().expect("serve must not fail here"))
+                    .collect::<Vec<_>>()
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("producer panicked"))
+            .collect::<Vec<_>>()
+    });
+
+    // 4. Verify the streamed outcomes against the synchronous path.
+    for ((pattern, inputs), served) in
+        patterns.iter().zip(&corpora).zip(&outcomes)
+    {
+        let cm = CompiledMatcher::compile(
+            pattern,
+            Engine::Auto,
+            ExecPolicy::default(),
+        )?;
+        let refs: Vec<&[u8]> =
+            inputs.iter().map(|v| v.as_slice()).collect();
+        let direct = cm.match_many(&refs);
+        assert_eq!(direct.error_count(), 0);
+        assert_eq!(served.len(), direct.outcomes.len());
+        for (a, b) in served.iter().zip(direct.ok_outcomes()) {
+            assert_eq!(a.accepted, b.accepted);
+            assert_eq!(a.final_state, b.final_state);
+        }
+    }
+    println!("streamed outcomes equal the synchronous match_many results");
+
+    let stats = server.shutdown();
+    println!(
+        "served {} requests in {} batches ({:.2} requests/batch); \
+         {} compiles for {} patterns, {} cache hits",
+        stats.served,
+        stats.batches,
+        stats.requests_per_batch(),
+        stats.compiles,
+        3,
+        stats.cache_hits
+    );
+    assert!(stats.compiles < stats.served, "coalescing + cache must win");
+    Ok(())
+}

@@ -6,28 +6,73 @@
 //! With [`Engine::Auto`](super::Engine::Auto), each request in the batch
 //! is dispatched independently: a 4 KB probe goes to the scalar loop
 //! while the 16 MB corpus scan behind it goes to the cluster.
+//!
+//! A failed request (out-of-fuel backtracking run, missing adapter) does
+//! **not** abort the batch: its slot records a [`RequestError`] and every
+//! other request still completes — a server must never drop finished work
+//! because an unrelated request in the same batch failed.
 
-use anyhow::Result;
+use std::fmt;
 
 use super::outcome::{EngineKind, Outcome};
 use super::{CompiledMatcher, Matcher};
 
+/// One request's failure inside a batch.  The batch keeps going; the slot
+/// records what went wrong and at which position.
+#[derive(Clone, Debug)]
+pub struct RequestError {
+    /// Index of the failed request within the batch.
+    pub index: usize,
+    /// The full error chain, `{:#}`-formatted.
+    pub message: String,
+}
+
+impl fmt::Display for RequestError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "request {}: {}", self.index, self.message)
+    }
+}
+
+impl std::error::Error for RequestError {}
+
 /// Results of one batch, plus aggregate serving telemetry.
 #[derive(Clone, Debug)]
 pub struct BatchOutcome {
-    /// Per-request outcomes, in input order.
-    pub outcomes: Vec<Outcome>,
-    /// Total input symbols across the batch.
+    /// Per-request result slots, in input order: `Ok` outcomes for the
+    /// requests that completed, a [`RequestError`] for each that failed.
+    pub outcomes: Vec<Result<Outcome, RequestError>>,
+    /// Total input symbols across the batch (failed slots included).
     pub total_syms: usize,
     /// Wall time of the whole batch, seconds.
     pub wall_s: f64,
 }
 
 impl BatchOutcome {
-    /// How many requests each engine served (insertion-ordered).
+    /// The completed outcomes, in input order.
+    pub fn ok_outcomes(&self) -> impl Iterator<Item = &Outcome> + '_ {
+        self.outcomes.iter().filter_map(|r| r.as_ref().ok())
+    }
+
+    /// The failed slots, in input order.
+    pub fn errors(&self) -> impl Iterator<Item = &RequestError> + '_ {
+        self.outcomes.iter().filter_map(|r| r.as_ref().err())
+    }
+
+    /// How many requests failed.
+    pub fn error_count(&self) -> usize {
+        self.errors().count()
+    }
+
+    /// How many requests completed.
+    pub fn ok_count(&self) -> usize {
+        self.outcomes.len() - self.error_count()
+    }
+
+    /// How many requests each engine served (insertion-ordered; failed
+    /// slots excluded).
     pub fn by_engine(&self) -> Vec<(EngineKind, usize)> {
         let mut tally: Vec<(EngineKind, usize)> = Vec::new();
-        for o in &self.outcomes {
+        for o in self.ok_outcomes() {
             match tally.iter_mut().find(|(k, _)| *k == o.engine) {
                 Some((_, c)) => *c += 1,
                 None => tally.push((o.engine, 1)),
@@ -38,41 +83,60 @@ impl BatchOutcome {
 
     /// How many requests accepted.
     pub fn accepted_count(&self) -> usize {
-        self.outcomes.iter().filter(|o| o.accepted).count()
+        self.ok_outcomes().filter(|o| o.accepted).count()
+    }
+
+    /// Total makespan work units across the completed requests — the
+    /// critical-path cost the batch paid after parallel dispatch.
+    pub fn total_makespan(&self) -> usize {
+        self.ok_outcomes().map(|o| o.makespan).sum()
+    }
+
+    /// Aggregate throughput over the wall time, symbols per second.
+    pub fn syms_per_sec(&self) -> f64 {
+        self.total_syms as f64 / self.wall_s.max(1e-12)
     }
 }
 
 impl CompiledMatcher {
     /// Serve a batch of byte inputs through the compiled pattern.
-    pub fn match_many(&self, inputs: &[&[u8]]) -> Result<BatchOutcome> {
+    /// Infallible at the batch level: per-request failures land in their
+    /// own [`RequestError`] slot.
+    pub fn match_many(&self, inputs: &[&[u8]]) -> BatchOutcome {
         let t0 = std::time::Instant::now();
         let mut outcomes = Vec::with_capacity(inputs.len());
         let mut total_syms = 0usize;
-        for input in inputs {
+        for (index, input) in inputs.iter().enumerate() {
             total_syms += input.len();
-            outcomes.push(self.run_bytes(input)?);
+            outcomes.push(self.run_bytes(input).map_err(|e| RequestError {
+                index,
+                message: format!("{e:#}"),
+            }));
         }
-        Ok(BatchOutcome {
+        BatchOutcome {
             outcomes,
             total_syms,
             wall_s: t0.elapsed().as_secs_f64(),
-        })
+        }
     }
 
     /// Serve a batch of pre-mapped symbol inputs.
-    pub fn match_many_syms(&self, inputs: &[Vec<u32>]) -> Result<BatchOutcome> {
+    pub fn match_many_syms(&self, inputs: &[Vec<u32>]) -> BatchOutcome {
         let t0 = std::time::Instant::now();
         let mut outcomes = Vec::with_capacity(inputs.len());
         let mut total_syms = 0usize;
-        for input in inputs {
+        for (index, input) in inputs.iter().enumerate() {
             total_syms += input.len();
-            outcomes.push(self.run_syms(input)?);
+            outcomes.push(self.run_syms(input).map_err(|e| RequestError {
+                index,
+                message: format!("{e:#}"),
+            }));
         }
-        Ok(BatchOutcome {
+        BatchOutcome {
             outcomes,
             total_syms,
             wall_s: t0.elapsed().as_secs_f64(),
-        })
+        }
     }
 }
 
@@ -95,19 +159,24 @@ mod tests {
         let mut large = gen.ascii_text(300_000);
         gen.plant(&mut large, b"needle", 1);
         let inputs: Vec<&[u8]> = vec![&small, &large, b"needle", b""];
-        let batch = cm.match_many(&inputs).unwrap();
+        let batch = cm.match_many(&inputs);
         assert_eq!(batch.outcomes.len(), 4);
+        assert_eq!(batch.error_count(), 0);
+        assert_eq!(batch.ok_count(), 4);
         assert_eq!(batch.total_syms, 512 + 300_000 + 6);
+        let out: Vec<&Outcome> = batch.ok_outcomes().collect();
         // small inputs stay on the scalar loop; the large scan leaves it
-        assert_eq!(batch.outcomes[0].engine, EngineKind::Sequential);
-        assert_ne!(batch.outcomes[1].engine, EngineKind::Sequential);
-        assert!(batch.outcomes[1].accepted, "planted needle must be found");
-        assert!(batch.outcomes[2].accepted);
-        assert!(!batch.outcomes[3].accepted);
+        assert_eq!(out[0].engine, EngineKind::Sequential);
+        assert_ne!(out[1].engine, EngineKind::Sequential);
+        assert!(out[1].accepted, "planted needle must be found");
+        assert!(out[2].accepted);
+        assert!(!out[3].accepted);
         let total: usize = batch.by_engine().iter().map(|(_, c)| c).sum();
         assert_eq!(total, 4);
         assert!(batch.by_engine().len() >= 2, "{:?}", batch.by_engine());
         assert_eq!(batch.accepted_count(), 2);
+        assert!(batch.total_makespan() > 0);
+        assert!(batch.syms_per_sec() > 0.0);
     }
 
     #[test]
@@ -123,11 +192,43 @@ mod tests {
             .iter()
             .map(|b| cm.dfa().map_input(b))
             .collect();
-        let a = cm.match_many(&byte_inputs).unwrap();
-        let b = cm.match_many_syms(&sym_inputs).unwrap();
-        for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+        let a = cm.match_many(&byte_inputs);
+        let b = cm.match_many_syms(&sym_inputs);
+        for (x, y) in a.ok_outcomes().zip(b.ok_outcomes()) {
             assert_eq!(x.accepted, y.accepted);
             assert_eq!(x.final_state, y.final_state);
         }
+        assert_eq!(a.ok_count(), 3);
+        assert_eq!(b.ok_count(), 3);
+    }
+
+    #[test]
+    fn failed_request_keeps_the_rest_of_the_batch() {
+        // a backtracking engine with almost no fuel: the long all-'a'
+        // input exhausts it, the trivial inputs don't
+        let cm = CompiledMatcher::compile(
+            &Pattern::Regex("a+b".to_string()),
+            Engine::Backtracking,
+            ExecPolicy { backtrack_fuel: 200, ..ExecPolicy::default() },
+        )
+        .unwrap();
+        let pathological = vec![b'a'; 4096]; // a+ with no b: O(n^2) retries
+        let inputs: Vec<&[u8]> = vec![b"ab", &pathological, b"aab"];
+        let batch = cm.match_many(&inputs);
+        assert_eq!(batch.outcomes.len(), 3, "no slot may be dropped");
+        assert!(batch.outcomes[0].is_ok(), "{:?}", batch.outcomes[0]);
+        assert!(batch.outcomes[2].is_ok(), "{:?}", batch.outcomes[2]);
+        let err = batch.outcomes[1]
+            .as_ref()
+            .err()
+            .expect("fuel-starved request must fail alone");
+        assert_eq!(err.index, 1);
+        assert!(err.message.contains("fuel"), "{}", err.message);
+        assert_eq!(batch.error_count(), 1);
+        assert_eq!(batch.ok_count(), 2);
+        assert_eq!(batch.accepted_count(), 2);
+        let errs: Vec<&RequestError> = batch.errors().collect();
+        assert_eq!(errs.len(), 1);
+        assert!(format!("{}", errs[0]).starts_with("request 1:"));
     }
 }

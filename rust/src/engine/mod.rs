@@ -24,13 +24,21 @@
 //!   execution knobs (processors, lookahead depth, weights, merge).
 //! * [`CompiledMatcher`] — pattern compiled once (DFA + lookahead
 //!   analysis + adapters), served many times; [`CompiledMatcher::match_many`]
-//!   amortizes plan construction across a batch of requests.
-//! * [`select`] — the `Engine::Auto` dispatch rule over (γ, |Q|, n).
+//!   amortizes plan construction across a batch of requests, with a
+//!   per-request error slot ([`batch::RequestError`]) so one failed
+//!   request never drops the rest of the batch.
+//! * [`select`] — the `Engine::Auto` dispatch rule over (γ, |Q|, n),
+//!   with thresholds calibrated from measured host capacity
+//!   ([`AutoThresholds::from_profile`]).
+//! * [`serve`] — the asynchronous serving loop: worker threads, a
+//!   coalescing request queue, an LRU compiled-pattern cache, and live
+//!   capacity re-calibration ([`serve::Server`]).
 
 pub mod adapters;
 pub mod batch;
 pub mod outcome;
 pub mod select;
+pub mod serve;
 
 use anyhow::{bail, Result};
 
@@ -40,9 +48,10 @@ use crate::regex::{compile, parser, prosite};
 use crate::speculative::lookahead::Lookahead;
 use crate::speculative::merge::MergeStrategy;
 
-pub use batch::BatchOutcome;
+pub use batch::{BatchOutcome, RequestError};
 pub use outcome::{Detail, EngineKind, Outcome};
 pub use select::{select, AutoThresholds, DfaProps, Selection};
+pub use serve::{ServeConfig, ServeError, ServeStats, Server, Ticket};
 
 use adapters::{
     BacktrackingAdapter, CloudAdapter, GrepLikeAdapter, HolubStekrAdapter,

@@ -18,6 +18,7 @@
 
 use crate::automata::Dfa;
 use crate::speculative::lookahead::Lookahead;
+use crate::speculative::profile::CapacityProfile;
 
 use super::outcome::EngineKind;
 
@@ -82,6 +83,11 @@ pub struct AutoThresholds {
     /// ... and the input is small enough that a single vector unit beats
     /// fanning out to |P| cores.
     pub simd_max_n: usize,
+    /// The measured host rate (symbols/µs) these thresholds were derived
+    /// from, or `None` for the baked-in 500 sym/µs paper-era ballpark.
+    /// Provenance only — [`select`] never reads it — but it lets serving
+    /// telemetry distinguish calibrated routing from the default guess.
+    pub calibrated_rate: Option<f64>,
 }
 
 impl Default for AutoThresholds {
@@ -92,6 +98,7 @@ impl Default for AutoThresholds {
             cloud_min_n: 1 << 23,
             simd_max_i_max: 7,
             simd_max_n: 1 << 20,
+            calibrated_rate: None,
         }
     }
 }
@@ -108,8 +115,22 @@ impl AutoThresholds {
             // ~16 ms of sequential work before ~20 × 362 µs of network
             // hops drop under a few percent
             cloud_min_n: (rate * 16_000.0) as usize,
+            calibrated_rate: Some(rate),
             ..AutoThresholds::default()
         }
+    }
+
+    /// Thresholds from a live §4.1 profiling run
+    /// ([`crate::speculative::profile::profile_host`]) — what
+    /// [`crate::engine::serve`] feeds in at startup and on re-calibration.
+    pub fn from_profile(p: &CapacityProfile) -> AutoThresholds {
+        AutoThresholds::calibrated(p.syms_per_us)
+    }
+
+    /// Whether these thresholds came from a measurement rather than the
+    /// baked-in ballpark.
+    pub fn is_calibrated(&self) -> bool {
+        self.calibrated_rate.is_some()
     }
 }
 
@@ -267,6 +288,17 @@ mod tests {
         assert!(slow.seq_max_n < fast.seq_max_n);
         assert!(slow.cloud_min_n < fast.cloud_min_n);
         assert_eq!(slow.gamma_max, fast.gamma_max);
+    }
+
+    #[test]
+    fn calibration_records_provenance() {
+        assert!(!AutoThresholds::default().is_calibrated());
+        let t = AutoThresholds::calibrated(123.0);
+        assert!(t.is_calibrated());
+        assert_eq!(t.calibrated_rate, Some(123.0));
+        assert_ne!(t, AutoThresholds::default());
+        let p = CapacityProfile { syms_per_us: 123.0, runs: 3, sample_syms: 4096 };
+        assert_eq!(AutoThresholds::from_profile(&p), t);
     }
 
     #[test]

@@ -1,0 +1,597 @@
+//! Asynchronous batched serving on top of [`CompiledMatcher`]: the
+//! request loop the ROADMAP north-star asks for.
+//!
+//! ```text
+//!   producers ──submit(pattern, input)──▶ queue ──▶ worker threads
+//!      ▲                                              │
+//!      │            same-pattern coalescing           │
+//!   Ticket ◀──────── streamed Outcome ◀── LRU compiled-pattern cache
+//!                                              │
+//!                       speculative::profile ──▶ AutoThresholds
+//!                       (startup + periodic re-calibration)
+//! ```
+//!
+//! * Many producer threads [`Server::submit`] `(pattern, input)` requests;
+//!   each gets a [`Ticket`] that streams its own `Result<Outcome, _>` back
+//!   over a channel — no caller ever blocks another.
+//! * Worker threads pop the queue and **coalesce**: a worker taking a
+//!   request also takes every other queued request for the same pattern
+//!   (up to [`ServeConfig::max_batch`]), so one cache lookup and one hot
+//!   transition table serve the whole run — the `match_many` amortization,
+//!   made concurrent.
+//! * Compiled patterns live in an **LRU cache** keyed by the pattern, so
+//!   repeated patterns never recompile (DFA construction + lookahead
+//!   analysis dominate small-request latency).
+//! * At startup — and again every [`ServeConfig::recalibrate_every`]
+//!   requests — the server runs the paper's §4.1 offline profiling step
+//!   ([`crate::speculative::profile::profile_host`]) and installs
+//!   [`AutoThresholds::from_profile`], so `Engine::Auto` routing reflects
+//!   the machine it is on instead of the baked-in 500 sym/µs ballpark.
+//!   Re-calibration bumps an epoch; cached matchers compiled under stale
+//!   thresholds are recompiled on next use.
+//!
+//! Everything is `std` threads and channels — no new dependencies.
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::speculative::profile;
+
+use super::select::AutoThresholds;
+use super::{CompiledMatcher, Engine, ExecPolicy, Matcher, Outcome, Pattern};
+
+/// Serving configuration.  The defaults serve `Engine::Auto` with
+/// calibration on and a cache sized for a medium pattern working set.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Worker threads draining the request queue.
+    pub workers: usize,
+    /// Capacity of the compiled-pattern LRU cache (patterns, not bytes).
+    pub cache_patterns: usize,
+    /// Maximum requests one worker coalesces into a single batch.
+    pub max_batch: usize,
+    /// Re-run the §4.1 profiling step after this many served requests;
+    /// 0 disables periodic re-calibration.
+    pub recalibrate_every: u64,
+    /// Run the profiling step before accepting requests, so the very
+    /// first dispatch already uses measured thresholds.
+    pub calibrate_on_start: bool,
+    /// Timed runs per profiling step (median taken, §4.1).
+    pub profile_runs: usize,
+    /// Symbols per timed profiling run.
+    pub profile_sample_syms: usize,
+    /// Engine every request is served with (normally `Engine::Auto`).
+    pub engine: Engine,
+    /// Execution policy template; its `thresholds` field is replaced by
+    /// the live calibrated thresholds at each compile.
+    pub policy: ExecPolicy,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            workers: 4,
+            cache_patterns: 64,
+            max_batch: 64,
+            recalibrate_every: 4096,
+            calibrate_on_start: true,
+            profile_runs: 5,
+            profile_sample_syms: 1 << 18,
+            engine: Engine::Auto,
+            policy: ExecPolicy::default(),
+        }
+    }
+}
+
+/// A request failure delivered through a [`Ticket`].  Cloneable so one
+/// compile failure can be streamed to every request of a coalesced batch.
+#[derive(Clone, Debug)]
+pub struct ServeError {
+    pub message: String,
+}
+
+impl ServeError {
+    fn new(message: impl Into<String>) -> ServeError {
+        ServeError { message: message.into() }
+    }
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.message)
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// The per-request result stream: one [`Outcome`] (or error) per submit.
+pub type ServeResult = Result<Outcome, ServeError>;
+
+/// Handle to one submitted request.  Dropping it discards the result;
+/// the server keeps running.
+pub struct Ticket {
+    rx: Receiver<ServeResult>,
+}
+
+impl Ticket {
+    /// Block until this request's outcome is streamed back.
+    pub fn wait(self) -> ServeResult {
+        match self.rx.recv() {
+            Ok(res) => res,
+            Err(_) => Err(ServeError::new(
+                "server shut down before serving the request",
+            )),
+        }
+    }
+}
+
+/// Aggregate serving telemetry (monotonic counters since startup).
+#[derive(Clone, Debug)]
+pub struct ServeStats {
+    /// Requests accepted into the queue.
+    pub submitted: u64,
+    /// Requests served with an `Ok` outcome.
+    pub served: u64,
+    /// Requests that streamed an error back.
+    pub failed: u64,
+    /// Coalesced batches executed.
+    pub batches: u64,
+    /// Requests that rode along in a batch after the first (coalescing
+    /// wins: each saved a queue wake-up and a cache lookup).
+    pub coalesced: u64,
+    /// Pattern compilations performed (cache misses + stale recompiles).
+    pub compiles: u64,
+    /// Batches served from an already-compiled cache entry.
+    pub cache_hits: u64,
+    /// LRU evictions.
+    pub evictions: u64,
+    /// Profiling runs performed (startup calibration included).
+    pub recalibrations: u64,
+    /// Patterns currently resident in the cache.
+    pub cached_patterns: usize,
+    /// Requests currently queued, not yet taken by a worker.
+    pub queue_depth: usize,
+    /// The thresholds `Engine::Auto` dispatch currently uses.
+    pub thresholds: AutoThresholds,
+}
+
+impl ServeStats {
+    /// Mean requests per executed batch (1.0 = no coalescing happened).
+    pub fn requests_per_batch(&self) -> f64 {
+        let done = self.served + self.failed;
+        done as f64 / self.batches.max(1) as f64
+    }
+}
+
+struct Request {
+    pattern: Pattern,
+    input: Vec<u8>,
+    reply: Sender<ServeResult>,
+}
+
+struct CacheEntry {
+    pattern: Pattern,
+    /// calibration epoch the matcher was compiled under; stale entries
+    /// are recompiled so Auto routing uses the fresh thresholds
+    epoch: u64,
+    matcher: Arc<CompiledMatcher>,
+    last_used: u64,
+}
+
+/// Tiny LRU keyed by `Pattern` equality.  Linear scan: serving caches
+/// hold tens-to-hundreds of patterns, where a scan beats hashing the
+/// whole pattern string per lookup.
+struct PatternCache {
+    entries: Vec<CacheEntry>,
+    tick: u64,
+}
+
+struct Counters {
+    submitted: AtomicU64,
+    served: AtomicU64,
+    failed: AtomicU64,
+    batches: AtomicU64,
+    coalesced: AtomicU64,
+    compiles: AtomicU64,
+    cache_hits: AtomicU64,
+    evictions: AtomicU64,
+    recalibrations: AtomicU64,
+}
+
+impl Counters {
+    fn new() -> Counters {
+        Counters {
+            submitted: AtomicU64::new(0),
+            served: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+            compiles: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            recalibrations: AtomicU64::new(0),
+        }
+    }
+}
+
+struct Shared {
+    config: ServeConfig,
+    queue: Mutex<VecDeque<Request>>,
+    ready: Condvar,
+    shutdown: AtomicBool,
+    /// live dispatch thresholds, replaced by each calibration
+    thresholds: Mutex<AutoThresholds>,
+    /// bumped by each calibration; cache entries from older epochs are
+    /// recompiled on next use
+    epoch: AtomicU64,
+    /// requests finished (served + failed), drives periodic re-calibration
+    done: AtomicU64,
+    cache: Mutex<PatternCache>,
+    counters: Counters,
+}
+
+/// The serving loop: worker threads, request queue, pattern cache and
+/// capacity calibration behind a submit/stream API.
+pub struct Server {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start the worker threads (and, by default, run the startup
+    /// calibration) and begin accepting requests.
+    pub fn start(config: ServeConfig) -> Result<Server> {
+        anyhow::ensure!(config.workers >= 1, "serve needs >= 1 worker");
+        anyhow::ensure!(
+            config.cache_patterns >= 1,
+            "serve needs a >= 1 pattern cache"
+        );
+        anyhow::ensure!(config.max_batch >= 1, "serve needs max_batch >= 1");
+        let calibrate = config.calibrate_on_start;
+        let workers = config.workers;
+        let shared = Arc::new(Shared {
+            thresholds: Mutex::new(config.policy.thresholds.clone()),
+            queue: Mutex::new(VecDeque::new()),
+            ready: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            epoch: AtomicU64::new(0),
+            done: AtomicU64::new(0),
+            cache: Mutex::new(PatternCache { entries: Vec::new(), tick: 0 }),
+            counters: Counters::new(),
+            config,
+        });
+        if calibrate {
+            recalibrate(&shared);
+        }
+        let mut handles = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let worker_shared = Arc::clone(&shared);
+            let spawned = std::thread::Builder::new()
+                .name(format!("specdfa-serve-{i}"))
+                .spawn(move || worker_loop(&worker_shared));
+            match spawned {
+                Ok(handle) => handles.push(handle),
+                Err(e) => {
+                    // unwind: don't leak the already-spawned workers
+                    // parked forever on the condvar
+                    {
+                        let _queue = shared.queue.lock().unwrap();
+                        shared.shutdown.store(true, Ordering::SeqCst);
+                        shared.ready.notify_all();
+                    }
+                    for handle in handles {
+                        let _ = handle.join();
+                    }
+                    return Err(e.into());
+                }
+            }
+        }
+        Ok(Server { shared, workers: handles })
+    }
+
+    /// Queue one request; the returned [`Ticket`] streams its outcome.
+    pub fn submit(&self, pattern: Pattern, input: impl Into<Vec<u8>>) -> Ticket {
+        let (tx, rx) = channel();
+        let req = Request { pattern, input: input.into(), reply: tx };
+        self.shared.counters.submitted.fetch_add(1, Ordering::Relaxed);
+        self.shared.queue.lock().unwrap().push_back(req);
+        self.shared.ready.notify_one();
+        Ticket { rx }
+    }
+
+    /// Queue many same-pattern requests under one queue lock, maximizing
+    /// the coalescing a single worker can do.
+    pub fn submit_many(
+        &self,
+        pattern: &Pattern,
+        inputs: &[&[u8]],
+    ) -> Vec<Ticket> {
+        let mut tickets = Vec::with_capacity(inputs.len());
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            for input in inputs {
+                let (tx, rx) = channel();
+                q.push_back(Request {
+                    pattern: pattern.clone(),
+                    input: input.to_vec(),
+                    reply: tx,
+                });
+                tickets.push(Ticket { rx });
+            }
+        }
+        self.shared
+            .counters
+            .submitted
+            .fetch_add(inputs.len() as u64, Ordering::Relaxed);
+        self.shared.ready.notify_all();
+        tickets
+    }
+
+    /// Snapshot of the serving telemetry.
+    pub fn stats(&self) -> ServeStats {
+        // one lock at a time: a snapshot must never stall the workers
+        let cached_patterns = self.shared.cache.lock().unwrap().entries.len();
+        let queue_depth = self.shared.queue.lock().unwrap().len();
+        let thresholds = self.shared.thresholds.lock().unwrap().clone();
+        let c = &self.shared.counters;
+        ServeStats {
+            submitted: c.submitted.load(Ordering::Relaxed),
+            served: c.served.load(Ordering::Relaxed),
+            failed: c.failed.load(Ordering::Relaxed),
+            batches: c.batches.load(Ordering::Relaxed),
+            coalesced: c.coalesced.load(Ordering::Relaxed),
+            compiles: c.compiles.load(Ordering::Relaxed),
+            cache_hits: c.cache_hits.load(Ordering::Relaxed),
+            evictions: c.evictions.load(Ordering::Relaxed),
+            recalibrations: c.recalibrations.load(Ordering::Relaxed),
+            cached_patterns,
+            queue_depth,
+            thresholds,
+        }
+    }
+
+    /// The thresholds `Engine::Auto` dispatch currently uses (calibrated
+    /// after startup profiling unless disabled).
+    pub fn thresholds(&self) -> AutoThresholds {
+        self.shared.thresholds.lock().unwrap().clone()
+    }
+
+    /// Drain the queue, stop the workers, and return the final stats.
+    pub fn shutdown(mut self) -> ServeStats {
+        self.finish();
+        self.stats()
+    }
+
+    fn finish(&mut self) {
+        {
+            // flag + notify under the queue lock: a worker between its
+            // shutdown check and Condvar::wait holds this mutex, so the
+            // wakeup can never race into the gap and get lost
+            let _queue = self.shared.queue.lock().unwrap();
+            self.shared.shutdown.store(true, Ordering::SeqCst);
+            self.shared.ready.notify_all();
+        }
+        for handle in self.workers.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.finish();
+    }
+}
+
+/// Worker: take a coalesced batch, serve it, repeat until shutdown with
+/// an empty queue (shutdown drains — queued work is never dropped).
+fn worker_loop(shared: &Shared) {
+    while let Some(batch) = next_batch(shared) {
+        serve_batch(shared, batch);
+    }
+}
+
+fn next_batch(shared: &Shared) -> Option<Vec<Request>> {
+    let mut q = shared.queue.lock().unwrap();
+    loop {
+        if let Some(first) = q.pop_front() {
+            let mut batch = vec![first];
+            // coalesce: take every queued request for the same pattern
+            let mut i = 0;
+            while i < q.len() && batch.len() < shared.config.max_batch {
+                if q[i].pattern == batch[0].pattern {
+                    batch.push(q.remove(i).expect("index checked"));
+                } else {
+                    i += 1;
+                }
+            }
+            return Some(batch);
+        }
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return None;
+        }
+        q = shared.ready.wait(q).unwrap();
+    }
+}
+
+fn serve_batch(shared: &Shared, batch: Vec<Request>) {
+    let c = &shared.counters;
+    c.batches.fetch_add(1, Ordering::Relaxed);
+    c.coalesced.fetch_add((batch.len() - 1) as u64, Ordering::Relaxed);
+    match matcher_for(shared, &batch[0].pattern) {
+        Ok(cm) => {
+            for req in batch {
+                let res = cm
+                    .run_bytes(&req.input)
+                    .map_err(|e| ServeError::new(format!("{e:#}")));
+                match &res {
+                    Ok(_) => c.served.fetch_add(1, Ordering::Relaxed),
+                    Err(_) => c.failed.fetch_add(1, Ordering::Relaxed),
+                };
+                // a dropped Ticket just discards its result
+                let _ = req.reply.send(res);
+                finish_request(shared);
+            }
+        }
+        Err(e) => {
+            for req in batch {
+                c.failed.fetch_add(1, Ordering::Relaxed);
+                let _ = req.reply.send(Err(e.clone()));
+                finish_request(shared);
+            }
+        }
+    }
+}
+
+/// Cache lookup / compile.  Compilation happens under the cache lock on
+/// purpose: two workers racing on the same new pattern would otherwise
+/// both pay the DFA construction, and the loser's work would be thrown
+/// away.
+fn matcher_for(
+    shared: &Shared,
+    pattern: &Pattern,
+) -> std::result::Result<Arc<CompiledMatcher>, ServeError> {
+    let epoch = shared.epoch.load(Ordering::SeqCst);
+    let mut cache = shared.cache.lock().unwrap();
+    cache.tick += 1;
+    let tick = cache.tick;
+    if let Some(pos) =
+        cache.entries.iter().position(|e| &e.pattern == pattern)
+    {
+        if cache.entries[pos].epoch == epoch {
+            let entry = &mut cache.entries[pos];
+            entry.last_used = tick;
+            shared.counters.cache_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(Arc::clone(&entry.matcher));
+        }
+        // compiled under stale thresholds: drop and recompile below
+        cache.entries.swap_remove(pos);
+    }
+    let policy = ExecPolicy {
+        thresholds: shared.thresholds.lock().unwrap().clone(),
+        ..shared.config.policy.clone()
+    };
+    let cm =
+        CompiledMatcher::compile(pattern, shared.config.engine.clone(), policy)
+            .map_err(|e| ServeError::new(format!("compile failed: {e:#}")))?;
+    shared.counters.compiles.fetch_add(1, Ordering::Relaxed);
+    let cm = Arc::new(cm);
+    if cache.entries.len() >= shared.config.cache_patterns {
+        if let Some(lru) = cache
+            .entries
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, e)| e.last_used)
+            .map(|(i, _)| i)
+        {
+            cache.entries.swap_remove(lru);
+            shared.counters.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    cache.entries.push(CacheEntry {
+        pattern: pattern.clone(),
+        epoch,
+        matcher: Arc::clone(&cm),
+        last_used: tick,
+    });
+    Ok(cm)
+}
+
+fn finish_request(shared: &Shared) {
+    let every = shared.config.recalibrate_every;
+    let done = shared.done.fetch_add(1, Ordering::SeqCst) + 1;
+    // `done` values are unique per request, so exactly one worker crosses
+    // each multiple of `every` and triggers the re-calibration
+    if every != 0 && done % every == 0 {
+        recalibrate(shared);
+    }
+}
+
+/// The §4.1 offline profiling step, applied live: measure this host's
+/// matching capacity and install thresholds derived from it.
+fn recalibrate(shared: &Shared) {
+    let p = profile::profile_host(
+        shared.config.profile_runs,
+        shared.config.profile_sample_syms,
+    );
+    *shared.thresholds.lock().unwrap() = AutoThresholds::from_profile(&p);
+    shared.epoch.fetch_add(1, Ordering::SeqCst);
+    shared.counters.recalibrations.fetch_add(1, Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_config() -> ServeConfig {
+        ServeConfig {
+            workers: 2,
+            profile_runs: 1,
+            profile_sample_syms: 4096,
+            recalibrate_every: 0,
+            ..ServeConfig::default()
+        }
+    }
+
+    #[test]
+    fn serves_and_streams_outcomes() {
+        let server = Server::start(quick_config()).unwrap();
+        let pattern = Pattern::Regex("ab+c".to_string());
+        let t1 = server.submit(pattern.clone(), &b"xxabbbcyy"[..]);
+        let t2 = server.submit(pattern.clone(), &b"nothing"[..]);
+        let t3 = server.submit(pattern, &b""[..]);
+        assert!(t1.wait().unwrap().accepted);
+        assert!(!t2.wait().unwrap().accepted);
+        assert!(!t3.wait().unwrap().accepted);
+        let stats = server.shutdown();
+        assert_eq!(stats.submitted, 3);
+        assert_eq!(stats.served, 3);
+        assert_eq!(stats.failed, 0);
+        assert!(stats.compiles >= 1);
+        assert!(stats.compiles < 3, "same pattern must not recompile");
+        assert!(stats.thresholds.is_calibrated());
+        assert_eq!(stats.recalibrations, 1); // the startup profiling
+    }
+
+    #[test]
+    fn bad_pattern_streams_an_error_and_keeps_serving() {
+        let server = Server::start(quick_config()).unwrap();
+        let bad = server.submit(
+            Pattern::Regex("ab[".to_string()),
+            &b"whatever"[..],
+        );
+        let good =
+            server.submit(Pattern::Regex("ok".to_string()), &b"ok"[..]);
+        let err = bad.wait().expect_err("unterminated class must fail");
+        assert!(err.message.contains("compile failed"), "{err}");
+        assert!(good.wait().unwrap().accepted);
+        let stats = server.shutdown();
+        assert_eq!(stats.failed, 1);
+        assert_eq!(stats.served, 1);
+    }
+
+    #[test]
+    fn shutdown_drains_queued_requests() {
+        let server = Server::start(ServeConfig {
+            workers: 1,
+            ..quick_config()
+        })
+        .unwrap();
+        let pattern = Pattern::Regex("x".to_string());
+        let inputs: Vec<&[u8]> = vec![b"x"; 32];
+        let tickets = server.submit_many(&pattern, &inputs);
+        let stats = server.shutdown();
+        assert_eq!(stats.served, 32, "shutdown must not drop queued work");
+        for t in tickets {
+            assert!(t.wait().unwrap().accepted);
+        }
+        assert!(stats.batches <= 32);
+        assert!(stats.requests_per_batch() >= 1.0);
+    }
+}

@@ -29,7 +29,14 @@
 //!   patterns go to the vector unit or the multicore speculative matcher,
 //!   corpus-scale scans go to the cluster.
 //! * [`engine::CompiledMatcher::match_many`] serves batches, amortizing
-//!   compilation and plan construction across requests.
+//!   compilation and plan construction across requests; failed requests
+//!   get their own error slot instead of aborting the batch.
+//! * [`engine::serve::Server`] is the asynchronous serving loop: many
+//!   producers submit `(pattern, input)` requests, worker threads
+//!   coalesce same-pattern requests behind an LRU compiled-pattern
+//!   cache, and `Engine::Auto` routing uses thresholds calibrated from
+//!   the §4.1 offline profiling step (re-run periodically), not the
+//!   baked-in paper-era ballpark.
 //! * Every adapter implements [`engine::Matcher`] and returns the unified
 //!   [`engine::Outcome`]; failure-freedom (identical results to
 //!   sequential matching) is enforced by construction and property tests.
@@ -67,7 +74,7 @@ pub use automata::{Dfa, FlatDfa};
 pub use baseline::sequential::SequentialMatcher;
 pub use engine::{
     CompiledMatcher, Engine, EngineKind, ExecPolicy, Matcher, Outcome,
-    Pattern, Selection,
+    Pattern, Selection, ServeConfig, ServeError, ServeStats, Server, Ticket,
 };
 pub use regex::compile::{compile_exact, compile_prosite, compile_search};
 pub use speculative::matcher::{MatchOutcome, MatchPlan};

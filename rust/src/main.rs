@@ -3,6 +3,7 @@
 //!
 //! Subcommands (hand-rolled parser; the build is offline, no clap):
 //!   match       run a membership test on a file or generated input
+//!   serve       run the async batched serving loop on a request stream
 //!   experiment  regenerate a paper table/figure (or `all`)
 //!   suite       show the benchmark suites with structural properties
 //!   profile     print host calibration (measured symbol rate)
@@ -16,7 +17,8 @@ use std::sync::Arc;
 use specdfa::automata::grail;
 use specdfa::cluster::{CloudMatcher, ClusterSpec};
 use specdfa::engine::{
-    CompiledMatcher, Engine, ExecPolicy, Matcher, Pattern,
+    CompiledMatcher, Engine, ExecPolicy, Matcher, Pattern, ServeConfig,
+    Server,
 };
 use specdfa::experiments;
 use specdfa::regex::compile::{compile_prosite, compile_search};
@@ -32,6 +34,7 @@ fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let result = match args.first().map(String::as_str) {
         Some("match") => cmd_match(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
         Some("experiment") => cmd_experiment(&args[1..]),
         Some("suite") => cmd_suite(&args[1..]),
         Some("profile") => cmd_profile(),
@@ -68,6 +71,14 @@ fn print_usage() {
          [--engine auto|seq|spec|simd|cloud|holub|backtrack|grep]\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 \
          [--procs P] [--lookahead R] [--nodes K] [--batch B]\n\
+         \x20 specdfa serve   [--workers N] [--cache M] [--batch B] \
+         [--recalibrate K]\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 \
+         [--requests FILE|-]   (TAB-separated lines: \
+         KIND PATTERN INPUT;\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 \
+         \x20KIND: regex|regex-exact|prosite; INPUT: text, @file, or \
+         gen:N)\n\
          \x20 specdfa experiment <name>|all      names: {}\n\
          \x20 specdfa suite   [pcre|prosite]\n\
          \x20 specdfa profile\n\
@@ -167,20 +178,26 @@ fn cmd_match(args: &[String]) -> anyhow::Result<()> {
         // serving path (plan construction amortized across the batch)
         let chunk = input.len().div_ceil(batch).max(1);
         let inputs: Vec<&[u8]> = input.chunks(chunk).collect();
-        let out = cm.match_many(&inputs)?;
+        let out = cm.match_many(&inputs);
         println!(
-            "batch: {} requests, {} total symbols, {:.1} ms wall",
+            "batch: {} requests, {} total symbols, {:.1} ms wall \
+             ({:.0} syms/s)",
             out.outcomes.len(),
             out.total_syms,
-            out.wall_s * 1e3
+            out.wall_s * 1e3,
+            out.syms_per_sec()
         );
         for (kind, count) in out.by_engine() {
             println!("  {count:>4} request(s) -> {kind}");
         }
+        for err in out.errors() {
+            println!("  failed: {err}");
+        }
         println!(
-            "accepted: {} of {}",
+            "accepted: {} of {} ({} failed)",
             out.accepted_count(),
-            out.outcomes.len()
+            out.outcomes.len(),
+            out.error_count()
         );
         return Ok(());
     }
@@ -214,6 +231,133 @@ fn cmd_match(args: &[String]) -> anyhow::Result<()> {
         out.model_speedup(),
         out.overhead_syms,
         out.wall_s * 1e3
+    );
+    Ok(())
+}
+
+/// One request line of the serve stream: `KIND \t PATTERN \t INPUT`.
+/// KIND: regex | regex-exact | prosite.  INPUT: literal text, `@path`
+/// (read bytes from a file), or `gen:N` (N seeded random ASCII bytes).
+fn parse_request_line(
+    line: &str,
+    lineno: usize,
+) -> anyhow::Result<(Pattern, Vec<u8>)> {
+    let mut parts = line.splitn(3, '\t');
+    let (kind, pat, input) =
+        match (parts.next(), parts.next(), parts.next()) {
+            (Some(k), Some(p), Some(i)) => (k, p, i),
+            _ => anyhow::bail!(
+                "line {lineno}: expected KIND<TAB>PATTERN<TAB>INPUT"
+            ),
+        };
+    let pattern = match kind {
+        "regex" => Pattern::Regex(pat.to_string()),
+        "regex-exact" => Pattern::RegexExact(pat.to_string()),
+        "prosite" => Pattern::Prosite(pat.to_string()),
+        other => anyhow::bail!(
+            "line {lineno}: unknown kind {other:?} \
+             (expected regex|regex-exact|prosite)"
+        ),
+    };
+    let bytes = if let Some(path) = input.strip_prefix('@') {
+        std::fs::read(path)?
+    } else if let Some(n) = input.strip_prefix("gen:") {
+        let n: usize = n.parse()?;
+        InputGen::new(0x5E1D ^ lineno as u64).ascii_text(n)
+    } else {
+        input.as_bytes().to_vec()
+    };
+    Ok((pattern, bytes))
+}
+
+fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
+    let fl = flags(args)?;
+    let workers: usize = get(&fl, "workers").unwrap_or("4").parse()?;
+    let cache: usize = get(&fl, "cache").unwrap_or("64").parse()?;
+    let max_batch: usize = get(&fl, "batch").unwrap_or("64").parse()?;
+    let recalibrate: u64 =
+        get(&fl, "recalibrate").unwrap_or("4096").parse()?;
+    let source = get(&fl, "requests").unwrap_or("-");
+
+    let text = if source == "-" {
+        let mut buf = String::new();
+        std::io::Read::read_to_string(&mut std::io::stdin(), &mut buf)?;
+        buf
+    } else {
+        std::fs::read_to_string(source)?
+    };
+
+    let server = Server::start(ServeConfig {
+        workers,
+        cache_patterns: cache,
+        max_batch,
+        recalibrate_every: recalibrate,
+        ..ServeConfig::default()
+    })?;
+    let t = server.thresholds();
+    println!(
+        "serving: {workers} worker(s), cache {cache} pattern(s); \
+         calibrated {} sym/us -> seq<{} cloud>={}",
+        t.calibrated_rate
+            .map(|r| format!("{r:.0}"))
+            .unwrap_or_else(|| "off".to_string()),
+        t.seq_max_n,
+        t.cloud_min_n
+    );
+
+    // submit everything up front (the async part), then stream results
+    // back in line order; a malformed line is reported in place and must
+    // never discard the other requests' results
+    let mut tickets = Vec::new();
+    let mut bad_lines = 0usize;
+    for (idx, line) in text.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = line.trim_end_matches('\r');
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        match parse_request_line(line, lineno) {
+            Ok((pattern, input)) => {
+                let n = input.len();
+                tickets.push((lineno, n, server.submit(pattern, input)));
+            }
+            Err(e) => {
+                bad_lines += 1;
+                eprintln!("line {lineno}: bad request: {e:#}");
+            }
+        }
+    }
+
+    for (lineno, n, ticket) in tickets {
+        match ticket.wait() {
+            Ok(out) => println!(
+                "line {lineno}: accepted={} via {} (n={n}, makespan={})",
+                out.accepted, out.engine, out.makespan
+            ),
+            Err(e) => println!("line {lineno}: error: {e}"),
+        }
+    }
+    if bad_lines > 0 {
+        eprintln!("{bad_lines} malformed request line(s) skipped");
+    }
+
+    let stats = server.shutdown();
+    println!(
+        "served {} ok / {} failed in {} batch(es) \
+         ({:.2} requests/batch, {} coalesced)",
+        stats.served,
+        stats.failed,
+        stats.batches,
+        stats.requests_per_batch(),
+        stats.coalesced
+    );
+    println!(
+        "cache: {} compile(s), {} hit(s), {} eviction(s); \
+         {} recalibration(s)",
+        stats.compiles,
+        stats.cache_hits,
+        stats.evictions,
+        stats.recalibrations
     );
     Ok(())
 }

@@ -21,9 +21,10 @@
 //! with an empty table slice (§Perf: re-uploading the padded table per
 //! call — q·s·4 B ≈ 393 KiB for lane8_main — dominated the per-call cost).
 
-use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -112,11 +113,13 @@ pub struct VectorUnit {
     backend: Backend,
     pub spec: VariantSpec,
     pub name: String,
-    /// executions performed (diagnostics / Fig. 13 instruction accounting)
-    pub calls: Cell<u64>,
+    /// executions performed (diagnostics / Fig. 13 instruction accounting);
+    /// atomic so one unit can serve concurrent matcher threads
+    calls: AtomicU64,
     /// unit-resident transition table set by `set_table` (the emulated
-    /// analog of a device-resident buffer)
-    table: RefCell<Option<Vec<i32>>>,
+    /// analog of a device-resident buffer); a mutex because the serving
+    /// path shares one compiled matcher across worker threads
+    table: Mutex<Option<Vec<i32>>>,
     /// padded L-vector width of the compose kernel; 0 = unavailable
     compose_qp: usize,
 }
@@ -140,8 +143,8 @@ impl VectorUnit {
             backend,
             spec,
             name: name.to_string(),
-            calls: Cell::new(0),
-            table: RefCell::new(None),
+            calls: AtomicU64::new(0),
+            table: Mutex::new(None),
             compose_qp,
         })
     }
@@ -164,8 +167,8 @@ impl VectorUnit {
             compose_qp: spec.q,
             spec,
             name: name.to_string(),
-            calls: Cell::new(0),
-            table: RefCell::new(None),
+            calls: AtomicU64::new(0),
+            table: Mutex::new(None),
         }
     }
 
@@ -178,14 +181,15 @@ impl VectorUnit {
         if table.len() != sp.q * sp.s {
             bail!("table len {} != q*s {}", table.len(), sp.q * sp.s);
         }
-        if self.table.borrow().as_deref() == Some(table) {
+        let mut resident = self.table.lock().unwrap();
+        if resident.as_deref() == Some(table) {
             return Ok(());
         }
         #[cfg(feature = "xla-pjrt")]
         if let Backend::Pjrt(state) = &self.backend {
             state.set_table(table)?;
         }
-        *self.table.borrow_mut() = Some(table.to_vec());
+        *resident = Some(table.to_vec());
         Ok(())
     }
 
@@ -243,16 +247,26 @@ impl VectorUnit {
                 bail!("{nm} len {} != lanes {}", v.len(), sp.lanes);
             }
         }
+        // residency check + execution under ONE lock acquisition: two
+        // matchers for different DFAs may share this unit across threads,
+        // and a set_table/lane_match pair that isn't atomic would run one
+        // matcher's input against the other's transition table
+        let mut resident = self.table.lock().unwrap();
         if !table.is_empty() {
             if table.len() != sp.q * sp.s {
                 bail!("table len {} != q*s {}", table.len(), sp.q * sp.s);
             }
-            self.set_table(table)?;
+            if resident.as_deref() != Some(table) {
+                #[cfg(feature = "xla-pjrt")]
+                if let Backend::Pjrt(state) = &self.backend {
+                    state.set_table(table)?;
+                }
+                *resident = Some(table.to_vec());
+            }
         }
         let out = match &self.backend {
             Backend::Emulated => {
-                let tb = self.table.borrow();
-                let Some(table) = tb.as_ref() else {
+                let Some(table) = resident.as_ref() else {
                     bail!("no table uploaded: call set_table first");
                 };
                 emu_lane_match(sp, table, inp, starts, lens, init)
@@ -260,8 +274,14 @@ impl VectorUnit {
             #[cfg(feature = "xla-pjrt")]
             Backend::Pjrt(state) => state.lane_match(inp, starts, lens, init)?,
         };
-        self.calls.set(self.calls.get() + 1);
+        drop(resident);
+        self.calls.fetch_add(1, Ordering::Relaxed);
         Ok(out)
+    }
+
+    /// Executions performed so far (diagnostics / Fig. 13 accounting).
+    pub fn calls(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
     }
 
     /// Eq. (9) composition on the unit: out[q] = lb[la[q]].
@@ -339,7 +359,7 @@ mod xla_backend {
         client: xla::PjRtClient,
         exe: xla::PjRtLoadedExecutable,
         compose_exe: Option<xla::PjRtLoadedExecutable>,
-        table_buf: std::cell::RefCell<Option<xla::PjRtBuffer>>,
+        table_buf: std::sync::Mutex<Option<xla::PjRtBuffer>>,
     }
 
     impl PjrtState {
@@ -358,7 +378,7 @@ mod xla_backend {
                 client,
                 exe,
                 compose_exe,
-                table_buf: std::cell::RefCell::new(None),
+                table_buf: std::sync::Mutex::new(None),
             })
         }
 
@@ -371,7 +391,7 @@ mod xla_backend {
                 .client
                 .buffer_from_host_buffer(table, &[table.len()], None)
                 .map_err(|e| anyhow!("table upload: {e:?}"))?;
-            *self.table_buf.borrow_mut() = Some(buf);
+            *self.table_buf.lock().unwrap() = Some(buf);
             Ok(())
         }
 
@@ -382,7 +402,7 @@ mod xla_backend {
             lens: &[i32],
             init: &[i32],
         ) -> Result<Vec<i32>> {
-            let tb = self.table_buf.borrow();
+            let tb = self.table_buf.lock().unwrap();
             let Some(table_dev) = tb.as_ref() else {
                 return Err(anyhow!("no table uploaded: call set_table first"));
             };
@@ -548,7 +568,7 @@ mod tests {
         assert_eq!(out[1], 1); // untouched
         assert_eq!(out[2], 1); // syms 1, 0
         assert_eq!(out[3], 1); // clipped to inp[7]=1 three times: toggles to 1
-        assert_eq!(vu.calls.get(), 1);
+        assert_eq!(vu.calls(), 1);
     }
 
     #[test]

@@ -144,7 +144,7 @@ impl SimdMatcher {
         self.vu.set_table(&self.padded_table)?;
 
         let t0 = std::time::Instant::now();
-        let calls0 = self.vu.calls.get();
+        let calls0 = self.vu.calls();
         let mut lvecs: Vec<LVector> = Vec::with_capacity(k);
         let mut lane_slots = 0usize;
         for (i, &(start, end)) in bounds.iter().enumerate() {
@@ -185,7 +185,7 @@ impl SimdMatcher {
             vector_steps: (chunk_len_max * passes) as u64,
             lane_slots,
             passes,
-            pjrt_calls: self.vu.calls.get() - calls0,
+            pjrt_calls: self.vu.calls() - calls0,
             wall_s: t0.elapsed().as_secs_f64(),
         })
     }
@@ -214,8 +214,13 @@ impl SimdMatcher {
             let lens: Vec<i32> = (0..lanes)
                 .map(|l| if l < inits.len() { t_eff as i32 } else { 0 })
                 .collect();
-            states =
-                self.vu.lane_match(&[], &inp, &starts, &lens, &states)?;
+            // pass our table every call: lane_match re-asserts residency
+            // atomically (no-op when already resident), so another
+            // matcher sharing this unit can never run us against its
+            // transition table
+            states = self
+                .vu
+                .lane_match(&self.padded_table, &inp, &starts, &lens, &states)?;
             pos += t_eff;
         }
         Ok(states)

@@ -31,6 +31,41 @@ pub fn measure_capacity(flat: &FlatDfa, sample: &[u32], runs: usize) -> f64 {
     stats::median(&rates)
 }
 
+/// One fresh capacity measurement of the calling host, the §4.1 offline
+/// profiling step packaged for the serving path: unlike
+/// `experiments::calibrate::host_syms_per_us` (measured once, cached for
+/// the process), every call re-times the Listing-1 loop, so a server can
+/// re-calibrate periodically as machine load shifts.
+#[derive(Clone, Copy, Debug)]
+pub struct CapacityProfile {
+    /// median matching rate over the timed runs, symbols per microsecond
+    pub syms_per_us: f64,
+    /// timed runs the median was taken over
+    pub runs: usize,
+    /// symbols per timed run
+    pub sample_syms: usize,
+}
+
+/// Profile the calling host with the standard calibration DFA (the same
+/// `(ab|cd)+e?` shape `experiments::calibrate` uses).  `sample_syms` is
+/// clamped to ≥ 4096 so the timer resolution doesn't swamp the rate.
+pub fn profile_host(runs: usize, sample_syms: usize) -> CapacityProfile {
+    let dfa = crate::regex::compile::compile_search("(ab|cd)+e?")
+        .expect("calibration pattern compiles");
+    let flat = FlatDfa::from_dfa(&dfa);
+    let n = sample_syms.max(4096);
+    let mut rng = crate::util::rng::Rng::new(0xCA11B);
+    let sample: Vec<u32> = (0..n)
+        .map(|_| rng.below(dfa.num_symbols as u64) as u32)
+        .collect();
+    let runs = runs.max(1);
+    CapacityProfile {
+        syms_per_us: measure_capacity(&flat, &sample, runs),
+        runs,
+        sample_syms: n,
+    }
+}
+
 /// Eq. (1): normalize capacities by the mean capacity.
 pub fn weights_from_capacities(caps: &[f64]) -> Vec<f64> {
     assert!(!caps.is_empty());
@@ -60,6 +95,26 @@ mod tests {
         let w = weights_from_capacities(&[10.0, 20.0, 40.0, 70.0]);
         let avg = w.iter().sum::<f64>() / w.len() as f64;
         assert!((avg - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn profile_host_measures_fresh_each_call() {
+        let a = profile_host(3, 50_000);
+        let b = profile_host(3, 50_000);
+        for p in [a, b] {
+            assert!(
+                p.syms_per_us > 1.0 && p.syms_per_us < 100_000.0,
+                "rate {}",
+                p.syms_per_us
+            );
+            assert_eq!(p.runs, 3);
+            assert_eq!(p.sample_syms, 50_000);
+        }
+        // clamps degenerate arguments instead of panicking
+        let c = profile_host(0, 0);
+        assert_eq!(c.runs, 1);
+        assert_eq!(c.sample_syms, 4096);
+        assert!(c.syms_per_us > 0.0);
     }
 
     #[test]

@@ -1,0 +1,339 @@
+//! Cross-engine differential test suite: every adapter must agree with
+//! the Listing-1 sequential reference on `accepted` (all engines) and
+//! `final_state` (the DFA engines) over a seeded randomized corpus of
+//! (regex, input) cases — including matches planted to straddle the
+//! chunk boundaries where split/combine bugs live.
+//!
+//! The generator emits a pattern *together with a witness string from
+//! its language*, so planted cases are guaranteed accept cases and the
+//! suite exercises both verdicts without depending on random luck.
+
+use specdfa::engine::{
+    CompiledMatcher, Engine, ExecPolicy, Matcher, Pattern,
+};
+use specdfa::util::rng::Rng;
+
+/// The symbols patterns are built from.
+const ALPHABET: &[u8] = b"abcd";
+/// Input filler: the pattern alphabet plus bytes outside it.
+const FILLER: &[u8] = b"abcdex .";
+
+/// Seeded (pattern, witness) generator.  Repetition is only ever applied
+/// to literal/class/alternation-of-literal bases — never nested — so the
+/// backtracking comparator stays polynomial on every generated pattern.
+struct PatternGen {
+    rng: Rng,
+}
+
+impl PatternGen {
+    fn literal(&mut self, len: usize) -> (String, Vec<u8>) {
+        let mut p = String::new();
+        let mut w = Vec::new();
+        for _ in 0..len.max(1) {
+            let c = ALPHABET[self.rng.usize_below(ALPHABET.len())];
+            p.push(c as char);
+            w.push(c);
+        }
+        (p, w)
+    }
+
+    fn class(&mut self) -> (String, Vec<u8>) {
+        let mut members = ALPHABET.to_vec();
+        self.rng.shuffle(&mut members);
+        let k = 2 + self.rng.usize_below(ALPHABET.len() - 1);
+        members.truncate(k);
+        let p = format!("[{}]", String::from_utf8(members.clone()).unwrap());
+        let w = vec![members[self.rng.usize_below(k)]];
+        (p, w)
+    }
+
+    fn alternation(&mut self) -> (String, Vec<u8>) {
+        let n = 2 + self.rng.usize_below(2);
+        let branches: Vec<(String, Vec<u8>)> = (0..n)
+            .map(|_| self.literal(1 + self.rng.usize_below(3)))
+            .collect();
+        let p = format!(
+            "({})",
+            branches
+                .iter()
+                .map(|(s, _)| s.as_str())
+                .collect::<Vec<_>>()
+                .join("|")
+        );
+        let w = branches[self.rng.usize_below(n)].1.clone();
+        (p, w)
+    }
+
+    /// One concatenation element; the bool says whether the piece can
+    /// match the empty string.
+    fn piece(&mut self) -> (String, Vec<u8>, bool) {
+        let (base_p, base_w) = match self.rng.usize_below(3) {
+            0 => self.literal(1 + self.rng.usize_below(3)),
+            1 => self.class(),
+            _ => self.alternation(),
+        };
+        // the witness of `(x)op` is one copy of x for every op we emit:
+        // `+` needs >= 1 copy, `?` and `*` admit exactly one copy
+        match self.rng.usize_below(6) {
+            0 => (format!("({base_p})+"), base_w, false),
+            1 => (format!("({base_p})?"), base_w, true),
+            2 => (format!("({base_p})*"), base_w, true),
+            _ => (base_p, base_w, false),
+        }
+    }
+
+    /// A full pattern (2..=4 pieces) that cannot match the empty string,
+    /// with a witness from its language.
+    fn pattern(&mut self) -> (String, Vec<u8>) {
+        let pieces = 2 + self.rng.usize_below(3);
+        let mut p = String::new();
+        let mut w = Vec::new();
+        let mut nonempty = false;
+        for _ in 0..pieces {
+            let (pp, ww, can_empty) = self.piece();
+            p.push_str(&pp);
+            w.extend(ww);
+            nonempty |= !can_empty;
+        }
+        if !nonempty {
+            // anchor the language away from epsilon so "search accepts
+            // everything" never trivializes a case
+            let (pp, ww) = self.literal(2);
+            p.push_str(&pp);
+            w.extend(ww);
+        }
+        (p, w)
+    }
+
+    fn text(&mut self, len: usize) -> Vec<u8> {
+        (0..len)
+            .map(|_| FILLER[self.rng.usize_below(FILLER.len())])
+            .collect()
+    }
+}
+
+fn plant(text: &mut [u8], witness: &[u8], pos: usize) {
+    if witness.is_empty() || witness.len() > text.len() {
+        return;
+    }
+    let pos = pos.min(text.len() - witness.len());
+    text[pos..pos + witness.len()].copy_from_slice(witness);
+}
+
+/// The number of processors every multicore engine runs with — chunk
+/// boundaries land at multiples of n/PROCS.
+const PROCS: usize = 4;
+
+fn policy() -> ExecPolicy {
+    ExecPolicy {
+        processors: PROCS,
+        lookahead: 2,
+        // bounded so a pathological backtracking case degrades into a
+        // skipped comparison instead of a hung suite
+        backtrack_fuel: 1 << 22,
+        ..ExecPolicy::default()
+    }
+}
+
+/// All 7 adapters under test (the sequential reference is compiled
+/// separately).
+fn engines() -> Vec<(&'static str, Engine)> {
+    vec![
+        ("seq", Engine::Sequential),
+        ("spec", Engine::Speculative { adaptive: false }),
+        ("spec-adaptive", Engine::Speculative { adaptive: true }),
+        ("simd", Engine::Simd { variant: None }),
+        ("cloud", Engine::Cloud { nodes: 3 }),
+        ("holub", Engine::HolubStekr),
+        ("backtrack", Engine::Backtracking),
+        ("grep", Engine::GrepLike),
+    ]
+}
+
+/// Run one (pattern, input) case through every engine and compare with
+/// the sequential reference.  Returns whether the reference accepted.
+fn check_case(
+    pattern: &str,
+    reference: &CompiledMatcher,
+    matchers: &[(&'static str, CompiledMatcher)],
+    input: &[u8],
+    label: &str,
+) -> bool {
+    let want = reference
+        .run_bytes(input)
+        .unwrap_or_else(|e| panic!("sequential failed on {pattern:?}: {e:#}"));
+    for (name, cm) in matchers {
+        match cm.run_bytes(input) {
+            Ok(out) => {
+                assert_eq!(
+                    out.accepted, want.accepted,
+                    "{name} disagrees on acceptance: pattern={pattern:?} \
+                     case={label} n={}",
+                    input.len()
+                );
+                if let (Some(got), Some(exp)) =
+                    (out.final_state, want.final_state)
+                {
+                    assert_eq!(
+                        got, exp,
+                        "{name} disagrees on final state: \
+                         pattern={pattern:?} case={label} n={}",
+                        input.len()
+                    );
+                }
+            }
+            Err(e) => {
+                // the only tolerated failure is backtracking running out
+                // of its (deliberately small) fuel budget
+                let msg = format!("{e:#}");
+                assert!(
+                    msg.contains("fuel"),
+                    "{name} failed on pattern={pattern:?} case={label}: {msg}"
+                );
+            }
+        }
+    }
+    want.accepted
+}
+
+#[test]
+fn randomized_corpus_all_engines_agree_with_sequential() {
+    let mut gen = PatternGen { rng: Rng::new(0xD1FF_2024) };
+    let mut cases = 0usize;
+    let mut accepts = 0usize;
+    let mut rejects = 0usize;
+
+    // fixed regression patterns with hand-picked witnesses, then the
+    // seeded random corpus
+    let mut corpus: Vec<(String, Vec<u8>)> = vec![
+        ("(ab|cd)+e?".to_string(), b"abcd".to_vec()),
+        ("a+b".to_string(), b"aab".to_vec()),
+        ("needle".to_string(), b"needle".to_vec()),
+        ("[ab]c[cd]".to_string(), b"acd".to_vec()),
+    ];
+    for _ in 0..36 {
+        corpus.push(gen.pattern());
+    }
+
+    for (pattern, witness) in &corpus {
+        let pat = Pattern::Regex(pattern.clone());
+        let reference =
+            CompiledMatcher::compile(&pat, Engine::Sequential, policy())
+                .unwrap_or_else(|e| {
+                    panic!("compile {pattern:?} failed: {e:#}")
+                });
+        let matchers: Vec<(&'static str, CompiledMatcher)> = engines()
+            .into_iter()
+            .map(|(name, engine)| {
+                let cm = CompiledMatcher::compile(&pat, engine, policy())
+                    .unwrap_or_else(|e| {
+                        panic!("compile {pattern:?} for {name}: {e:#}")
+                    });
+                (name, cm)
+            })
+            .collect();
+
+        // 1. empty input
+        // 2. tiny input (shorter than the processor count)
+        // 3. mid-size random input, unplanted
+        // 4. witness planted straddling the first chunk boundary
+        // 5. witness planted at position 0 and at the very end
+        // 6. the witness alone
+        let tiny_len = 1 + gen.rng.usize_below(PROCS);
+        let tiny = gen.text(tiny_len);
+        let unplanted_len = 600 + gen.rng.usize_below(600);
+        let unplanted = gen.text(unplanted_len);
+        let n4 = 1200 + gen.rng.usize_below(400);
+        let mut boundary = gen.text(n4);
+        plant(
+            &mut boundary,
+            witness,
+            (n4 / PROCS).saturating_sub(witness.len() / 2),
+        );
+        let n5 = 1400 + gen.rng.usize_below(400);
+        let mut ends = gen.text(n5);
+        plant(&mut ends, witness, 0);
+        plant(&mut ends, witness, n5.saturating_sub(witness.len()));
+        let inputs: [(&str, &[u8]); 6] = [
+            ("empty", b""),
+            ("tiny", &tiny),
+            ("unplanted", &unplanted),
+            ("boundary-planted", &boundary),
+            ("ends-planted", &ends),
+            ("witness", witness),
+        ];
+        for (label, input) in inputs {
+            let accepted =
+                check_case(pattern, &reference, &matchers, input, label);
+            cases += 1;
+            if accepted {
+                accepts += 1;
+            } else {
+                rejects += 1;
+            }
+            if label == "boundary-planted" || label == "witness" {
+                assert!(
+                    accepted,
+                    "planted witness must be found: pattern={pattern:?} \
+                     case={label}"
+                );
+            }
+        }
+    }
+
+    assert!(cases >= 200, "need >= 200 differential cases, got {cases}");
+    assert!(
+        accepts >= corpus.len() && rejects > 0,
+        "corpus must exercise both verdicts: {accepts} accepts, \
+         {rejects} rejects over {cases} cases"
+    );
+}
+
+#[test]
+fn boundary_sweep_on_a_structured_pattern() {
+    // sweep the planted-match position across every chunk boundary,
+    // +/- 1 symbol, at several processor counts — the exact positions
+    // where L-vector split/combine errors appear
+    let pattern = Pattern::Regex("(ab|cd)+e".to_string());
+    let witness: &[u8] = b"abcde";
+    let n = 4096;
+    for procs in [2, 3, 4, 7, 8] {
+        let pol = ExecPolicy { processors: procs, ..policy() };
+        let reference = CompiledMatcher::compile(
+            &pattern,
+            Engine::Sequential,
+            pol.clone(),
+        )
+        .unwrap();
+        let spec = CompiledMatcher::compile(
+            &pattern,
+            Engine::Speculative { adaptive: false },
+            pol.clone(),
+        )
+        .unwrap();
+        let holub =
+            CompiledMatcher::compile(&pattern, Engine::HolubStekr, pol)
+                .unwrap();
+        let mut rng = Rng::new(procs as u64);
+        for k in 1..procs {
+            let boundary = n * k / procs;
+            for offset in [-1i64, 0, 1] {
+                let pos = (boundary as i64 + offset
+                    - (witness.len() / 2) as i64)
+                    .clamp(0, (n - witness.len()) as i64)
+                    as usize;
+                let mut text: Vec<u8> = (0..n)
+                    .map(|_| FILLER[rng.usize_below(FILLER.len())])
+                    .collect();
+                plant(&mut text, witness, pos);
+                let want = reference.run_bytes(&text).unwrap();
+                assert!(want.accepted, "witness planted at {pos}");
+                for cm in [&spec, &holub] {
+                    let out = cm.run_bytes(&text).unwrap();
+                    assert_eq!(out.accepted, want.accepted);
+                    assert_eq!(out.final_state, want.final_state);
+                }
+            }
+        }
+    }
+}

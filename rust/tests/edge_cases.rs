@@ -1,0 +1,145 @@
+//! Edge-case coverage for degenerate partitions: empty input, inputs
+//! shorter than the processor count, lengths exactly at / off-by-one
+//! around SIMD lane and window multiples, and single-state /
+//! all-accepting DFAs — the places a chunked matcher silently breaks
+//! while looking fine on average-sized inputs.
+
+use specdfa::engine::{
+    CompiledMatcher, Engine, ExecPolicy, Matcher, Pattern,
+};
+use specdfa::workload::InputGen;
+
+fn policy(processors: usize) -> ExecPolicy {
+    ExecPolicy { processors, lookahead: 2, ..ExecPolicy::default() }
+}
+
+/// Every DFA-table engine (the ones that report a final state).
+fn dfa_engines() -> Vec<Engine> {
+    vec![
+        Engine::Sequential,
+        Engine::Speculative { adaptive: false },
+        Engine::Speculative { adaptive: true },
+        Engine::Simd { variant: None },
+        Engine::Cloud { nodes: 3 },
+        Engine::HolubStekr,
+    ]
+}
+
+fn assert_agree(pattern: &Pattern, pol: &ExecPolicy, input: &[u8]) {
+    let want = CompiledMatcher::compile(pattern, Engine::Sequential, pol.clone())
+        .unwrap()
+        .run_bytes(input)
+        .unwrap();
+    for engine in dfa_engines() {
+        let cm = CompiledMatcher::compile(pattern, engine.clone(), pol.clone())
+            .unwrap();
+        let out = cm.run_bytes(input).unwrap();
+        assert_eq!(
+            out.accepted,
+            want.accepted,
+            "{engine:?} n={}",
+            input.len()
+        );
+        assert_eq!(
+            out.final_state,
+            want.final_state,
+            "{engine:?} n={}",
+            input.len()
+        );
+    }
+}
+
+#[test]
+fn empty_input_every_engine() {
+    for pat in ["(ab|cd)+e?", "a*", "needle"] {
+        let pattern = Pattern::Regex(pat.to_string());
+        assert_agree(&pattern, &policy(4), b"");
+    }
+}
+
+#[test]
+fn inputs_shorter_than_processor_count() {
+    // 8 processors, inputs of 0..8 symbols: most chunks are empty, and
+    // the partitioner must not emit out-of-range offsets
+    let pattern = Pattern::Regex("ab".to_string());
+    let pol = policy(8);
+    for n in 0..8usize {
+        let texts: [&[u8]; 2] = [&b"abababab"[..n], &b"xxxxxxxx"[..n]];
+        for text in texts {
+            assert_agree(&pattern, &pol, text);
+        }
+    }
+}
+
+#[test]
+fn lane_width_and_window_multiples() {
+    // the emulated vector unit runs 8 lanes with a 4096-symbol window:
+    // sweep lengths exactly at and off-by-one around both
+    let pattern = Pattern::Regex("needle".to_string());
+    let pol = policy(4);
+    let mut gen = InputGen::new(0x51D3);
+    for n in [7usize, 8, 9, 15, 16, 17, 63, 64, 65, 4095, 4096, 4097] {
+        let mut text = gen.ascii_text(n);
+        assert_agree(&pattern, &pol, &text);
+        if n >= 6 {
+            // plant the needle across the midpoint, then at the tail
+            gen.plant(&mut text, b"needle", 1);
+            assert_agree(&pattern, &pol, &text);
+            let pos = n - 6;
+            text[pos..].copy_from_slice(b"needle");
+            assert_agree(&pattern, &pol, &text);
+        }
+    }
+}
+
+#[test]
+fn single_state_all_accepting_dfa() {
+    // one state, two symbols, accepting: every input (including empty)
+    // is a member and the final state is always 0
+    let grail = "(START) |- 0\n0 0 0\n0 1 0\n0 -| (FINAL)\n";
+    let pattern = Pattern::Grail(grail.to_string());
+    for engine in dfa_engines() {
+        let cm =
+            CompiledMatcher::compile(&pattern, engine.clone(), policy(4))
+                .unwrap();
+        for syms in [vec![], vec![0], vec![1, 0, 1, 0, 1]] {
+            let out = cm.run_syms(&syms).unwrap();
+            assert!(out.accepted, "{engine:?} {syms:?}");
+            assert_eq!(out.final_state, Some(0), "{engine:?} {syms:?}");
+        }
+    }
+}
+
+#[test]
+fn single_state_all_rejecting_dfa() {
+    // same shape without the FINAL marker: nothing is ever a member
+    let grail = "(START) |- 0\n0 0 0\n0 1 0\n";
+    let pattern = Pattern::Grail(grail.to_string());
+    for engine in dfa_engines() {
+        let cm =
+            CompiledMatcher::compile(&pattern, engine.clone(), policy(4))
+                .unwrap();
+        for syms in [vec![], vec![0, 1, 1, 0]] {
+            let out = cm.run_syms(&syms).unwrap();
+            assert!(!out.accepted, "{engine:?} {syms:?}");
+            assert_eq!(out.final_state, Some(0), "{engine:?} {syms:?}");
+        }
+    }
+}
+
+#[test]
+fn exact_star_language_boundary_lengths() {
+    // whole-input semantics for a* — accepts exactly the all-'a' strings,
+    // at lengths around the lane width
+    let pattern = Pattern::RegexExact("a*".to_string());
+    let pol = policy(3);
+    for n in [0usize, 1, 7, 8, 9, 64, 257] {
+        let all_a = vec![b'a'; n];
+        assert_agree(&pattern, &pol, &all_a);
+        if n > 0 {
+            let mut broken = all_a.clone();
+            broken[n / 2] = b'b';
+            assert_agree(&pattern, &pol, &broken);
+        }
+    }
+}

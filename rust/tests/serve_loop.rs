@@ -1,0 +1,228 @@
+//! Integration tests for `engine::serve`: the acceptance criteria of the
+//! async serving subsystem.
+//!
+//!  (a) same-pattern coalescing: compile count < request count, and the
+//!      cache-hit counter proves repeated batches reused the entry;
+//!  (b) capacity calibration: after startup profiling the Auto
+//!      thresholds differ from the baked-in ballpark;
+//!  (c) streamed outcomes are identical to the synchronous
+//!      `match_many` results on the same corpus;
+//!  plus a many-producer concurrency test asserting per-producer
+//!  outcome order.
+
+use specdfa::engine::{
+    CompiledMatcher, Engine, ExecPolicy, Pattern, ServeConfig, Server,
+};
+use specdfa::engine::select::AutoThresholds;
+use specdfa::workload::InputGen;
+
+fn test_config(workers: usize) -> ServeConfig {
+    ServeConfig {
+        workers,
+        profile_runs: 2,
+        profile_sample_syms: 1 << 14,
+        recalibrate_every: 0, // deterministic compile counts
+        ..ServeConfig::default()
+    }
+}
+
+#[test]
+fn coalescing_calibration_and_match_many_equivalence() {
+    let pattern = Pattern::Regex("(ab|cd)+e?".to_string());
+    let mut gen = InputGen::new(0x5EE5);
+    let inputs: Vec<Vec<u8>> = (0..64)
+        .map(|k| {
+            let mut text = gen.ascii_text(200 + 37 * k);
+            if k % 2 == 0 {
+                gen.plant(&mut text, b"abcde", 1);
+            }
+            text
+        })
+        .collect();
+    let refs: Vec<&[u8]> = inputs.iter().map(|v| v.as_slice()).collect();
+
+    let server = Server::start(test_config(3)).unwrap();
+
+    // (b) calibrated thresholds differ from the default ballpark
+    let thresholds = server.thresholds();
+    assert!(thresholds.is_calibrated(), "startup profiling must run");
+    assert_ne!(
+        thresholds,
+        AutoThresholds::default(),
+        "calibrated thresholds must differ from the baked-in ballpark"
+    );
+
+    // submit the whole corpus under one queue lock: a worker must take
+    // it as few coalesced batches, not 64 wake-ups
+    let tickets = server.submit_many(&pattern, &refs);
+    let streamed: Vec<_> = tickets
+        .into_iter()
+        .map(|t| t.wait().expect("request must serve"))
+        .collect();
+
+    // (c) streamed outcomes equal the synchronous match_many results
+    let direct = CompiledMatcher::compile(
+        &pattern,
+        Engine::Auto,
+        ExecPolicy::default(),
+    )
+    .unwrap()
+    .match_many(&refs);
+    assert_eq!(direct.error_count(), 0);
+    assert_eq!(streamed.len(), direct.outcomes.len());
+    for (i, (got, want)) in
+        streamed.iter().zip(direct.ok_outcomes()).enumerate()
+    {
+        assert_eq!(got.accepted, want.accepted, "request {i}");
+        assert_eq!(got.final_state, want.final_state, "request {i}");
+        assert_eq!(got.n, want.n, "request {i}");
+    }
+
+    let stats = server.shutdown();
+    // (a) same-pattern coalescing: one compile served all 64 requests
+    assert_eq!(stats.submitted, 64);
+    assert_eq!(stats.served, 64);
+    assert!(
+        stats.compiles < stats.served,
+        "coalescing failed: {} compiles for {} requests",
+        stats.compiles,
+        stats.served
+    );
+    assert!(
+        stats.batches < stats.submitted,
+        "requests must batch: {} batches for {} requests",
+        stats.batches,
+        stats.submitted
+    );
+    assert!(stats.coalesced > 0);
+    assert!(stats.requests_per_batch() > 1.0);
+    assert!(stats.thresholds.is_calibrated());
+}
+
+#[test]
+fn many_producers_keep_per_producer_order_and_hit_the_cache() {
+    const PRODUCERS: usize = 4;
+    const PER_PRODUCER: usize = 25;
+    let patterns = [
+        Pattern::Regex("(ab|cd)+e?".to_string()),
+        Pattern::Regex("needle".to_string()),
+    ];
+    let server = Server::start(test_config(2)).unwrap();
+
+    let results: Vec<Vec<(usize, bool, Option<u32>)>> =
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for p in 0..PRODUCERS {
+                let server = &server;
+                let patterns = &patterns;
+                handles.push(scope.spawn(move || {
+                    let mut gen = InputGen::new(p as u64 + 1);
+                    // interleave the two patterns request-by-request
+                    let submissions: Vec<_> = (0..PER_PRODUCER)
+                        .map(|k| {
+                            let mut text = gen.ascii_text(64 + 13 * k);
+                            if k % 3 == 0 {
+                                gen.plant(&mut text, b"needle", 1);
+                                gen.plant(&mut text, b"abcd", 1);
+                            }
+                            let pat = patterns[k % 2].clone();
+                            let ticket = server.submit(pat, text.clone());
+                            (k, text, ticket)
+                        })
+                        .collect();
+                    // wait in submission order: the k-th ticket must
+                    // stream the k-th request's outcome
+                    submissions
+                        .into_iter()
+                        .map(|(k, text, ticket)| {
+                            let out = ticket.wait().expect("serve ok");
+                            assert_eq!(
+                                out.n,
+                                text.len(),
+                                "producer {p} request {k}: ticket \
+                                 streamed a different request's outcome"
+                            );
+                            (k, out.accepted, out.final_state)
+                        })
+                        .collect::<Vec<_>>()
+                }));
+            }
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("producer panicked"))
+                .collect()
+        });
+
+    // byte-identical to direct match_many on each producer's corpus
+    let matchers: Vec<CompiledMatcher> = patterns
+        .iter()
+        .map(|p| {
+            CompiledMatcher::compile(p, Engine::Auto, ExecPolicy::default())
+                .unwrap()
+        })
+        .collect();
+    for (p, outcomes) in results.iter().enumerate() {
+        let mut gen = InputGen::new(p as u64 + 1);
+        for &(k, accepted, final_state) in outcomes {
+            let mut text = gen.ascii_text(64 + 13 * k);
+            if k % 3 == 0 {
+                gen.plant(&mut text, b"needle", 1);
+                gen.plant(&mut text, b"abcd", 1);
+            }
+            let direct = matchers[k % 2].match_many(&[text.as_slice()]);
+            let want = direct.ok_outcomes().next().expect("one outcome");
+            assert_eq!(accepted, want.accepted, "producer {p} request {k}");
+            assert_eq!(
+                final_state, want.final_state,
+                "producer {p} request {k}"
+            );
+        }
+    }
+
+    let stats = server.shutdown();
+    let total = (PRODUCERS * PER_PRODUCER) as u64;
+    assert_eq!(stats.submitted, total);
+    assert_eq!(stats.served, total);
+    assert_eq!(stats.failed, 0);
+    // two patterns, one compile each: everything else came from the cache
+    assert!(
+        stats.compiles < total,
+        "{} compiles for {} requests",
+        stats.compiles,
+        stats.served
+    );
+    assert!(
+        stats.cache_hits > 0,
+        "repeated patterns must hit the compiled-pattern cache"
+    );
+    assert!(
+        stats.cached_patterns <= 2,
+        "only two distinct patterns were ever submitted"
+    );
+}
+
+#[test]
+fn recalibration_interval_reprofiles_and_bumps_epoch() {
+    let server = Server::start(ServeConfig {
+        workers: 2,
+        profile_runs: 1,
+        profile_sample_syms: 1 << 13,
+        recalibrate_every: 10,
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let pattern = Pattern::Regex("ab".to_string());
+    let inputs: Vec<&[u8]> = vec![b"ab and more"; 35];
+    for t in server.submit_many(&pattern, &inputs) {
+        assert!(t.wait().unwrap().accepted);
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.served, 35);
+    // startup + one per 10 served requests (3 crossings in 35)
+    assert_eq!(
+        stats.recalibrations,
+        1 + 35 / 10,
+        "periodic re-profiling must fire on the request interval"
+    );
+    assert!(stats.thresholds.is_calibrated());
+}
