@@ -1,15 +1,19 @@
-//! Cloud deployment simulation — the paper's EC2 scenario (§5.2, §6.2):
-//! heterogeneous clusters, offline profiling + weighted partitioning, and
-//! the 2-tier hierarchical merge against its alternatives.
+//! Cloud deployment simulation — the paper's EC2 scenario (§5.2, §6.2)
+//! grown into **hierarchical cross-substrate sharding**: one corpus-scale
+//! input split across cluster nodes *and*, inside every node, across that
+//! node's cores, with Eq. (1) capacity weights at both levels.
 //!
 //!     cargo run --release --example cloud_sim
 
 use specdfa::cluster::{CloudMatcher, ClusterSpec};
 use specdfa::compile_prosite;
+use specdfa::engine::shard::ShardPlan;
 use specdfa::engine::{select, AutoThresholds, DfaProps};
 use specdfa::speculative::merge::MergeStrategy;
+use specdfa::speculative::profile::profile_workers;
 use specdfa::util::bench::Table;
 use specdfa::workload::InputGen;
+use specdfa::SequentialMatcher;
 
 fn main() -> anyhow::Result<()> {
     let dfa = compile_prosite("C-x(2,4)-C-x(3)-[LIVMFYWC]-x(4)-H-x(3,5)-H.")?;
@@ -41,7 +45,78 @@ fn main() -> anyhow::Result<()> {
     }
     t.print();
 
-    // 2. Load balancing across fast/slow instance mixes (Table 3).
+    // 2. Hierarchical sharding (engine::shard): the same corpus is split
+    //    across nodes AND across each node's workers — a two-level
+    //    Eq. (1) partition, merged bottom-up.  Here with a deliberately
+    //    inhomogeneous cluster: a fast 4-worker node, a mixed node with
+    //    one degraded worker, and a slow 2-worker node.
+    let nodes = vec![
+        vec![2.0, 2.0, 2.0, 2.0], // fast node
+        vec![1.0, 1.0, 0.2, 1.0], // one preempted/slow worker
+        vec![0.5, 0.5],           // small slow node
+    ];
+    let plan = ShardPlan::new(&dfa)
+        .node_capacities(nodes.clone())
+        .lookahead(4);
+    let out = plan.run_syms(&syms);
+    let seq = SequentialMatcher::new(&dfa).run_syms(&syms);
+    assert_eq!(out.final_state, seq.final_state, "failure-freedom");
+    let mut t = Table::new(
+        "hierarchical shard: 3 inhomogeneous nodes, per-worker Eq. (1)",
+        &["node", "workers", "capacity", "chunk syms", "share %",
+          "matched syms"],
+    );
+    let per_node = out.per_node_syms();
+    let layout = plan.layout(syms.len());
+    for (i, caps) in nodes.iter().enumerate() {
+        t.row(vec![
+            i.to_string(),
+            caps.len().to_string(),
+            format!("{:.1}", caps.iter().sum::<f64>()),
+            layout.node_chunks[i].len().to_string(),
+            format!(
+                "{:.1}",
+                100.0 * layout.node_chunks[i].len() as f64
+                    / syms.len() as f64
+            ),
+            per_node[i].to_string(),
+        ]);
+    }
+    t.print();
+    println!(
+        "shard makespan {} syms vs sequential {} -> {:.2}x work-model \
+         speedup ({} overhead syms, merge: {} composes, {} inter-node \
+         msgs)\n",
+        out.makespan_syms(),
+        syms.len(),
+        syms.len() as f64 / out.makespan_syms().max(1) as f64,
+        out.speculative_overhead_syms(syms.len()),
+        out.merge_stats.compose_ops,
+        out.merge_stats.inter_node_msgs,
+    );
+
+    // 3. A *measured* per-worker capacity vector (§4.1 profiling, one
+    //    rate per concurrent worker thread of this host) driving the
+    //    intra-node partition — the serving path's configuration.
+    let cv = profile_workers(4, 3, 1 << 16);
+    println!(
+        "measured per-worker capacity vector: {:?} sym/us (skew {:.3})",
+        cv.rates.iter().map(|r| r.round()).collect::<Vec<_>>(),
+        cv.skew()
+    );
+    let measured = ShardPlan::new(&dfa)
+        .capacity_vector(4, &cv)
+        .lookahead(4)
+        .run_syms(&syms);
+    assert_eq!(measured.final_state, seq.final_state);
+    println!(
+        "4 nodes x measured vector: makespan {} syms, {:.2}x work-model \
+         speedup\n",
+        measured.makespan_syms(),
+        syms.len() as f64 / measured.makespan_syms().max(1) as f64
+    );
+
+    // 4. Load balancing across fast/slow instance mixes (Table 3).
     let mut t = Table::new(
         "inhomogeneous clusters: capacity-weighted partitioning (Eq. 1)",
         &["fast", "slow", "balance CV", "speedup"],
@@ -60,7 +135,7 @@ fn main() -> anyhow::Result<()> {
     }
     t.print();
 
-    // 3. The leave-one-core-idle rule vs hypervisor preemption (§5.2).
+    // 5. The leave-one-core-idle rule vs hypervisor preemption (§5.2).
     let mut t = Table::new(
         "hypervisor preemption: allocate 15/16 vs 16/16 cores per node",
         &["allocation", "makespan ms", "speedup"],
@@ -82,10 +157,14 @@ fn main() -> anyhow::Result<()> {
     }
     t.print();
 
-    // 4. Where the unified facade's Engine::Auto places this workload:
-    //    8M symbols on a zinc-finger DFA is cluster territory.
+    // 6. Where the unified facade's Engine::Auto places this workload: at
+    //    8M symbols it is cloud territory; past AutoThresholds::shard_min_n
+    //    the two-level shard engine takes over.
     let props = DfaProps::analyze(&dfa, 4);
-    let sel = select(&props, syms.len(), &AutoThresholds::default());
-    println!("\nEngine::Auto would serve this request via {sel}");
+    let thresholds = AutoThresholds::default();
+    for n in [syms.len(), thresholds.shard_min_n] {
+        let sel = select(&props, n, &thresholds);
+        println!("Engine::Auto at n={n}: {sel}");
+    }
     Ok(())
 }

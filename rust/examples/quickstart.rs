@@ -7,6 +7,7 @@
 use specdfa::engine::{
     CompiledMatcher, Engine, EngineKind, ExecPolicy, Matcher, Pattern,
 };
+use specdfa::speculative::profile::profile_workers;
 use specdfa::workload::InputGen;
 use specdfa::SequentialMatcher;
 
@@ -95,9 +96,39 @@ fn main() -> anyhow::Result<()> {
     );
     println!("failure-freedom verified across all engines");
 
-    // 6. For a long-lived process serving many producers, the async
+    // 6. Corpus-scale inputs go hierarchical: `Engine::Shard` splits one
+    //    input across cluster nodes AND each node's cores (two-level
+    //    Eq. 1 partition), with the intra-node weights taken from a
+    //    *measured* per-worker capacity vector.  `Engine::Auto` picks
+    //    this tier by itself past `AutoThresholds::shard_min_n`.
+    let cv = profile_workers(4, 2, 1 << 15);
+    let shard = CompiledMatcher::compile(
+        &pattern,
+        Engine::Shard { nodes: 3 },
+        ExecPolicy {
+            processors: 4,
+            lookahead: 4,
+            weights: Some(cv.weights()),
+            ..ExecPolicy::default()
+        },
+    )?;
+    let out = shard.run_bytes(&corpus)?;
+    assert_eq!(out.engine, EngineKind::Shard);
+    let seq = SequentialMatcher::new(shard.dfa()).run_bytes(&corpus);
+    assert_eq!(out.accepted, seq.accepted);
+    println!(
+        "hierarchical shard on the corpus (3 nodes x 4 workers, measured \
+         capacity vector, skew {:.3}): makespan {} of {} symbols -> \
+         {:.2}x",
+        cv.skew(),
+        out.makespan,
+        corpus.len(),
+        out.model_speedup()
+    );
+
+    // 7. For a long-lived process serving many producers, the async
     //    serving loop (worker threads + coalescing + pattern cache +
-    //    capacity-calibrated routing) is the next step:
-    //    `cargo run --release --example serve`.
+    //    capacity-calibrated routing + per-worker capacity vectors) is
+    //    the next step: `cargo run --release --example serve`.
     Ok(())
 }

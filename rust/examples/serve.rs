@@ -28,11 +28,20 @@ fn main() -> anyhow::Result<()> {
     })?;
     let t = server.thresholds();
     println!(
-        "calibrated: {:.0} sym/us -> sequential below {} syms, cloud at {}",
+        "calibrated: {:.0} sym/us -> sequential below {} syms, cloud at \
+         {}, shard at {}",
         t.calibrated_rate.unwrap_or(0.0),
         t.seq_max_n,
-        t.cloud_min_n
+        t.cloud_min_n,
+        t.shard_min_n
     );
+    if let Some(rates) = server.stats().worker_rates {
+        println!(
+            "per-worker capacity vector (Eq. 1 weights feed every \
+             partition): {:?} sym/us",
+            rates.iter().map(|r| r.round()).collect::<Vec<_>>()
+        );
+    }
 
     // 2. Three patterns, a shared corpus of requests per pattern.
     let patterns = [

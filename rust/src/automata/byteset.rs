@@ -5,19 +5,27 @@
 //! in a pattern — so ByteSet is the bridge between "PCRE regexes over
 //! bytes" and "DFA over a small dense alphabet".
 
+/// A set of byte values 0..=255 as a 256-bit mask.
 #[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
-pub struct ByteSet(pub [u64; 4]);
+pub struct ByteSet(
+    /// membership mask: 4 × 64 little-endian words
+    pub [u64; 4],
+);
 
 impl ByteSet {
+    /// The empty set.
     pub const EMPTY: ByteSet = ByteSet([0; 4]);
+    /// All 256 byte values.
     pub const ALL: ByteSet = ByteSet([u64::MAX; 4]);
 
+    /// The singleton set {b}.
     pub fn single(b: u8) -> Self {
         let mut s = Self::EMPTY;
         s.insert(b);
         s
     }
 
+    /// The inclusive byte range lo..=hi.
     pub fn range(lo: u8, hi: u8) -> Self {
         let mut s = Self::EMPTY;
         let mut b = lo;
@@ -31,6 +39,7 @@ impl ByteSet {
         s
     }
 
+    /// The set of the given bytes.
     pub fn from_bytes(bytes: &[u8]) -> Self {
         let mut s = Self::EMPTY;
         for &b in bytes {
@@ -39,16 +48,19 @@ impl ByteSet {
         s
     }
 
+    /// Add `b` to the set.
     #[inline]
     pub fn insert(&mut self, b: u8) {
         self.0[(b >> 6) as usize] |= 1u64 << (b & 63);
     }
 
+    /// Whether `b` is a member.
     #[inline]
     pub fn contains(&self, b: u8) -> bool {
         self.0[(b >> 6) as usize] & (1u64 << (b & 63)) != 0
     }
 
+    /// Set union.
     pub fn union(&self, o: &ByteSet) -> ByteSet {
         ByteSet([
             self.0[0] | o.0[0],
@@ -58,18 +70,22 @@ impl ByteSet {
         ])
     }
 
+    /// Set complement.
     pub fn negate(&self) -> ByteSet {
         ByteSet([!self.0[0], !self.0[1], !self.0[2], !self.0[3]])
     }
 
+    /// Whether no byte is a member.
     pub fn is_empty(&self) -> bool {
         self.0 == [0; 4]
     }
 
+    /// Number of member bytes.
     pub fn len(&self) -> usize {
         self.0.iter().map(|w| w.count_ones() as usize).sum()
     }
 
+    /// Iterate members in increasing order.
     pub fn iter(&self) -> impl Iterator<Item = u8> + '_ {
         (0u16..256).filter(|&b| self.contains(b as u8)).map(|b| b as u8)
     }

@@ -12,8 +12,11 @@ use std::collections::HashMap;
 /// Complete deterministic finite automaton over a dense symbol alphabet.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Dfa {
+    /// |Q|
     pub num_states: u32,
+    /// |Σ| (dense symbol classes)
     pub num_symbols: u32,
+    /// q0
     pub start: u32,
     /// accepting[q] — final state indicator (F)
     pub accepting: Vec<bool>,
@@ -41,11 +44,13 @@ impl Dfa {
         Dfa { num_states, num_symbols, start, accepting, table, classes }
     }
 
+    /// One transition: delta(q, sym).
     #[inline]
     pub fn step(&self, q: u32, sym: u32) -> u32 {
         self.table[(q * self.num_symbols + sym) as usize]
     }
 
+    /// Dense symbol class of a raw input byte (the IBase map).
     #[inline]
     pub fn class_of(&self, byte: u8) -> u32 {
         self.classes[byte as usize] as u32
@@ -156,17 +161,22 @@ impl Dfa {
 pub struct FlatDfa {
     /// SBase: flattened table of *row offsets*
     pub sbase: Vec<u32>,
+    /// |Σ| — the row stride
     pub num_symbols: u32,
+    /// |Q|
     pub num_states: u32,
+    /// row offset of q0
     pub start_off: u32,
     /// accepting_by_offset[off / num_symbols]
     accepting: Vec<bool>,
+    /// byte -> dense symbol class (copied from the source Dfa)
     pub classes: [u8; 256],
     /// row offset of the sink, if any (early-exit opportunity)
     pub sink_off: Option<u32>,
 }
 
 impl FlatDfa {
+    /// Flatten a [`Dfa`] into the premultiplied-offset representation.
     pub fn from_dfa(dfa: &Dfa) -> FlatDfa {
         let s = dfa.num_symbols;
         let sbase: Vec<u32> = dfa.table.iter().map(|&t| t * s).collect();
@@ -181,16 +191,19 @@ impl FlatDfa {
         }
     }
 
+    /// State id of a row offset.
     #[inline]
     pub fn state_of(&self, off: u32) -> u32 {
         off / self.num_symbols
     }
 
+    /// Row offset of a state id.
     #[inline]
     pub fn offset_of(&self, state: u32) -> u32 {
         state * self.num_symbols
     }
 
+    /// Whether the state at row offset `off` is accepting.
     #[inline]
     pub fn is_accepting_off(&self, off: u32) -> bool {
         self.accepting[(off / self.num_symbols) as usize]

@@ -15,11 +15,14 @@ pub struct Nfa {
     pub eps: Vec<Vec<u32>>,
     /// trans[s] = labelled edges (set, target)
     pub trans: Vec<Vec<(ByteSet, u32)>>,
+    /// Thompson entry state
     pub start: u32,
+    /// Thompson accept state
     pub accept: u32,
 }
 
 impl Nfa {
+    /// Number of states allocated.
     pub fn num_states(&self) -> usize {
         self.eps.len()
     }

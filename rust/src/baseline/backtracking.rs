@@ -13,23 +13,28 @@
 
 use crate::regex::ast::Ast;
 
+/// Recursive backtracking matcher over a pattern AST.
 pub struct Backtracker<'a> {
     ast: &'a Ast,
     fuel: u64,
 }
 
+/// Result + work metric of one backtracking run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct BacktrackStats {
     /// recursive match() invocations — the work metric
     pub steps: u64,
+    /// whether a match was found
     pub matched: bool,
 }
 
 impl<'a> Backtracker<'a> {
+    /// Unbounded engine (no fuel limit).
     pub fn new(ast: &'a Ast) -> Self {
         Backtracker { ast, fuel: u64::MAX }
     }
 
+    /// Engine with a step budget; exceeding it aborts with `None`.
     pub fn with_fuel(ast: &'a Ast, fuel: u64) -> Self {
         Backtracker { ast, fuel }
     }

@@ -20,24 +20,30 @@ use crate::automata::byteset::ByteSet;
 use crate::baseline::backtracking::Backtracker;
 use crate::regex::ast::Ast;
 
+/// Literal-prefilter engine over a pattern AST.
 pub struct GrepLike<'a> {
     ast: &'a Ast,
     literal: Option<Vec<u8>>,
 }
 
+/// Result + work metric of one grep-like search.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct GrepStats {
+    /// whether a match was found
     pub matched: bool,
     /// bytes inspected by the BMH scan + verifier steps (work metric)
     pub work: u64,
+    /// BMH candidate positions verified
     pub candidates: u64,
 }
 
 impl<'a> GrepLike<'a> {
+    /// Build the engine, extracting the required literal if any.
     pub fn new(ast: &'a Ast) -> Self {
         GrepLike { ast, literal: required_literal(ast) }
     }
 
+    /// The mandatory literal factor the BMH scan uses, if one exists.
     pub fn required_literal(&self) -> Option<&[u8]> {
         self.literal.as_deref()
     }

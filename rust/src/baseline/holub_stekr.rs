@@ -15,21 +15,27 @@ use crate::automata::{Dfa, FlatDfa};
 use crate::speculative::lvector::LVector;
 use crate::speculative::merge::{self, MergeStats, MergeStrategy};
 
+/// Result of one Holub–Štekr run.
 #[derive(Clone, Debug)]
 pub struct HolubStekrOutcome {
+    /// delta*(q0, input)
     pub final_state: u32,
+    /// membership verdict
     pub accepted: bool,
     /// per-processor symbols matched (chunk_len × states matched)
     pub work: Vec<usize>,
+    /// merge op counts
     pub merge_stats: MergeStats,
 }
 
 impl HolubStekrOutcome {
+    /// Max symbols matched by any worker.
     pub fn makespan_syms(&self) -> usize {
         self.work.iter().copied().max().unwrap_or(0)
     }
 }
 
+/// The [19] comparator: uniform chunks × all |Q| states.
 pub struct HolubStekr {
     dfa: Dfa,
     flat: FlatDfa,
@@ -37,6 +43,7 @@ pub struct HolubStekr {
 }
 
 impl HolubStekr {
+    /// Build over `processors` uniform workers.
     pub fn new(dfa: &Dfa, processors: usize) -> Self {
         assert!(processors >= 1);
         HolubStekr {
@@ -46,10 +53,12 @@ impl HolubStekr {
         }
     }
 
+    /// The compiled DFA.
     pub fn dfa(&self) -> &Dfa {
         &self.dfa
     }
 
+    /// Match pre-mapped dense symbols.
     pub fn run_syms(&self, syms: &[u32]) -> HolubStekrOutcome {
         let n = syms.len();
         let p = self.processors;

@@ -18,16 +18,19 @@ pub struct SeqOutcome {
     pub consumed: usize,
 }
 
+/// Listing-1 sequential matcher over the flattened table.
 #[derive(Clone, Debug)]
 pub struct SequentialMatcher {
     flat: FlatDfa,
 }
 
 impl SequentialMatcher {
+    /// Build (and flatten) from a compiled DFA.
     pub fn new(dfa: &Dfa) -> Self {
         SequentialMatcher { flat: FlatDfa::from_dfa(dfa) }
     }
 
+    /// The flattened table (shared with per-chunk matching loops).
     pub fn flat(&self) -> &FlatDfa {
         &self.flat
     }

@@ -31,9 +31,13 @@ const COMPOSE_NS_PER_STATE: f64 = 2.0;
 /// ns per single-state map lookup (Eq. 8 step).
 const LOOKUP_NS: f64 = 50.0;
 
+/// Result of one simulated-cluster run: real matching outcome plus the
+/// priced timing model.
 #[derive(Clone, Debug)]
 pub struct CloudOutcome {
+    /// delta*(q0, input) — identical to the sequential run
     pub final_state: u32,
+    /// membership verdict: final_state ∈ F
     pub accepted: bool,
     /// partitioning parameter (|Q| or I_max,r)
     pub m: usize,
@@ -50,6 +54,7 @@ pub struct CloudOutcome {
 }
 
 impl CloudOutcome {
+    /// Simulated speedup over the one-fast-core sequential yardstick.
     pub fn speedup(&self) -> f64 {
         self.seq_us / self.makespan_us
     }
@@ -86,6 +91,7 @@ pub struct CloudMatcher {
 }
 
 impl CloudMatcher {
+    /// A matcher over `dfa` on the given simulated cluster.
     pub fn new(dfa: &Dfa, cluster: ClusterSpec) -> Self {
         let cores = cluster.cores_per_node();
         CloudMatcher {
@@ -109,6 +115,7 @@ impl CloudMatcher {
         self
     }
 
+    /// Enable the I_max,r optimization with `r` reverse lookahead symbols.
     pub fn lookahead(mut self, r: usize) -> Self {
         self.r = r;
         self.lookahead =
@@ -124,27 +131,32 @@ impl CloudMatcher {
         self
     }
 
+    /// Override the merge strategy (default: Fig. 9 hierarchical).
     pub fn merge_strategy(mut self, s: MergeStrategy) -> Self {
         self.merge = s;
         self
     }
 
+    /// Replace the EC2 latency model.
     pub fn latency_model(mut self, m: LatencyModel) -> Self {
         self.latency = m;
         self
     }
 
+    /// Set the capacity-1.0 single-core matching rate, symbols per µs.
     pub fn base_rate(mut self, syms_per_us: f64) -> Self {
         assert!(syms_per_us > 0.0);
         self.base_syms_per_us = syms_per_us;
         self
     }
 
+    /// Seed for jitter/preemption/latency sampling (determinism).
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self
     }
 
+    /// The partitioning parameter m: I_max,r with lookahead, |Q| without.
     pub fn i_max(&self) -> usize {
         self.lookahead
             .as_ref()
@@ -152,14 +164,17 @@ impl CloudMatcher {
             .unwrap_or(self.dfa.num_states as usize)
     }
 
+    /// The compiled DFA this matcher runs.
     pub fn dfa(&self) -> &Dfa {
         &self.dfa
     }
 
+    /// Match raw bytes (applies the IBase class mapping first).
     pub fn run(&self, input: &[u8]) -> CloudOutcome {
         self.run_syms(&self.dfa.map_input(input))
     }
 
+    /// Match pre-mapped dense symbols on the simulated cluster.
     pub fn run_syms(&self, syms: &[u32]) -> CloudOutcome {
         let mut rng = Rng::new(self.seed);
         let n = syms.len();

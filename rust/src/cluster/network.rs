@@ -6,11 +6,16 @@
 
 use crate::util::rng::Rng;
 
+/// Latency distribution parameters of the simulated cluster, in µs.
 #[derive(Clone, Debug)]
 pub struct LatencyModel {
+    /// mean inter-node L-vector transfer latency, µs
     pub inter_mean_us: f64,
+    /// inter-node stddev as a fraction of the mean
     pub inter_sd_frac: f64,
+    /// mean intra-node (shared-memory) transfer latency, µs
     pub intra_mean_us: f64,
+    /// intra-node stddev as a fraction of the mean
     pub intra_sd_frac: f64,
     /// per-message fixed software overhead (MPI stack), µs
     pub per_msg_overhead_us: f64,
@@ -41,11 +46,13 @@ impl LatencyModel {
         }
     }
 
+    /// Sample one inter-node message latency, µs.
     pub fn sample_inter(&self, rng: &mut Rng) -> f64 {
         sample_pos(rng, self.inter_mean_us, self.inter_sd_frac)
             + self.per_msg_overhead_us
     }
 
+    /// Sample one intra-node message latency, µs.
     pub fn sample_intra(&self, rng: &mut Rng) -> f64 {
         sample_pos(rng, self.intra_mean_us, self.intra_sd_frac)
             + self.per_msg_overhead_us

@@ -14,7 +14,9 @@ pub enum InstanceType {
 /// One cluster node.
 #[derive(Clone, Debug)]
 pub struct NodeSpec {
+    /// EC2 instance family
     pub instance: InstanceType,
+    /// physical cores of the instance
     pub cores: usize,
     /// per-core matching capacity relative to the m2.4xlarge baseline;
     /// the paper measured cc2.8xlarge/m2.4xlarge = 1.41
@@ -22,14 +24,17 @@ pub struct NodeSpec {
 }
 
 impl NodeSpec {
+    /// The paper's "Fast" instance (Table 2).
     pub fn cc2_8xlarge() -> NodeSpec {
         NodeSpec { instance: InstanceType::Cc28xlarge, cores: 16, capacity: 1.41 }
     }
 
+    /// The paper's "Slow" instance (Table 2).
     pub fn m2_4xlarge() -> NodeSpec {
         NodeSpec { instance: InstanceType::M24xlarge, cores: 8, capacity: 1.0 }
     }
 
+    /// An arbitrary node shape for heterogeneous clusters.
     pub fn custom(cores: usize, capacity: f64) -> NodeSpec {
         assert!(cores >= 1 && capacity > 0.0);
         NodeSpec { instance: InstanceType::Custom, cores, capacity }
@@ -39,6 +44,7 @@ impl NodeSpec {
 /// A cluster: a list of nodes plus the allocation policy.
 #[derive(Clone, Debug)]
 pub struct ClusterSpec {
+    /// the cluster's nodes, in worker order
     pub nodes: Vec<NodeSpec>,
     /// §5.2: leave one core per node unallocated to dodge hypervisor
     /// preemption (the paper's finding; default true)
@@ -52,6 +58,7 @@ pub struct ClusterSpec {
 }
 
 impl ClusterSpec {
+    /// A cluster over the given nodes with the paper's default policy.
     pub fn new(nodes: Vec<NodeSpec>) -> ClusterSpec {
         assert!(!nodes.is_empty());
         ClusterSpec {
@@ -74,6 +81,7 @@ impl ClusterSpec {
         ClusterSpec::new(nodes)
     }
 
+    /// Allocate every core (drops the §5.2 leave-one-idle rule).
     pub fn allocate_all_cores(mut self) -> Self {
         self.leave_one_core_idle = false;
         self
@@ -95,6 +103,7 @@ impl ClusterSpec {
         out
     }
 
+    /// Total allocated worker slots across the cluster.
     pub fn total_workers(&self) -> usize {
         self.workers().len()
     }

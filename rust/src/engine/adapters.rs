@@ -24,6 +24,7 @@ use crate::speculative::matcher::MatchPlan;
 use crate::speculative::merge::MergeStrategy;
 
 use super::outcome::{Detail, EngineKind, Outcome};
+use super::shard::ShardPlan;
 use super::Matcher;
 
 /// Representative byte per dense symbol class, so engines that consume
@@ -44,11 +45,13 @@ fn syms_to_bytes(reps: &[u8], syms: &[u32]) -> Vec<u8> {
 
 // ---------------------------------------------------------------- seq --
 
+/// Listing-1 scalar loop behind the [`Matcher`] shape.
 pub struct SequentialAdapter {
     m: SequentialMatcher,
 }
 
 impl SequentialAdapter {
+    /// Build from a compiled DFA.
     pub fn new(dfa: &Dfa) -> SequentialAdapter {
         SequentialAdapter { m: SequentialMatcher::new(dfa) }
     }
@@ -97,11 +100,14 @@ impl Matcher for SequentialAdapter {
 
 // --------------------------------------------------------------- spec --
 
+/// The paper's multicore speculative matcher (Algorithms 2/3).
 pub struct SpeculativeAdapter {
     plan: MatchPlan,
 }
 
 impl SpeculativeAdapter {
+    /// Build a plan sharing the facade's lookahead analysis; `weights`
+    /// are Eq. (1) per-worker weights (len must equal `processors`).
     pub fn new(
         dfa: &Dfa,
         processors: usize,
@@ -170,6 +176,7 @@ impl Matcher for SpeculativeAdapter {
 
 // --------------------------------------------------------------- simd --
 
+/// Lane-parallel vector-unit matcher (Listing 2).
 pub struct SimdAdapter {
     m: SimdMatcher,
 }
@@ -236,11 +243,13 @@ impl Matcher for SimdAdapter {
 
 // -------------------------------------------------------------- cloud --
 
+/// Simulated-EC2 cluster matcher (§5.2).
 pub struct CloudAdapter {
     m: CloudMatcher,
 }
 
 impl CloudAdapter {
+    /// A homogeneous `nodes`-node cluster sharing the facade's analysis.
     pub fn new(
         dfa: &Dfa,
         nodes: usize,
@@ -295,13 +304,106 @@ impl Matcher for CloudAdapter {
     }
 }
 
+// -------------------------------------------------------------- shard --
+
+/// Hierarchical two-level shard matcher ([`ShardPlan`]).
+pub struct ShardAdapter {
+    plan: ShardPlan,
+    nodes: usize,
+    workers_per_node: usize,
+}
+
+impl ShardAdapter {
+    /// `nodes` simulated cluster nodes × `workers_per_node` cores each.
+    /// `weights` is the per-worker capacity vector measured by
+    /// [`crate::speculative::profile::profile_workers`] (len =
+    /// `workers_per_node`); `None` assumes homogeneous workers.
+    pub fn new(
+        dfa: &Dfa,
+        nodes: usize,
+        workers_per_node: usize,
+        lookahead: Option<&Lookahead>,
+        weights: Option<&[f64]>,
+    ) -> Result<ShardAdapter> {
+        anyhow::ensure!(nodes >= 1, "shard engine needs >= 1 node");
+        anyhow::ensure!(
+            workers_per_node >= 1,
+            "shard engine needs >= 1 worker per node"
+        );
+        let per_node: Vec<f64> = match weights {
+            Some(w) => {
+                anyhow::ensure!(
+                    w.len() == workers_per_node,
+                    "capacity vector len {} != workers per node \
+                     {workers_per_node}",
+                    w.len()
+                );
+                w.to_vec()
+            }
+            None => vec![1.0; workers_per_node],
+        };
+        let mut plan = ShardPlan::new(dfa)
+            .node_capacities(vec![per_node; nodes]);
+        if let Some(la) = lookahead {
+            plan = plan.with_lookahead(la.clone());
+        }
+        Ok(ShardAdapter { plan, nodes, workers_per_node })
+    }
+
+    fn convert(
+        &self,
+        n: usize,
+        t0: Instant,
+        out: crate::engine::shard::ShardOutcome,
+    ) -> Outcome {
+        Outcome {
+            engine: EngineKind::Shard,
+            n,
+            accepted: out.accepted,
+            final_state: Some(out.final_state),
+            makespan: out.makespan_syms(),
+            overhead_syms: out.speculative_overhead_syms(n),
+            per_worker_syms: out.work.iter().map(|w| w.syms_matched).collect(),
+            wall_s: t0.elapsed().as_secs_f64(),
+            selection: None,
+            detail: Detail::Shard(out),
+        }
+    }
+}
+
+impl Matcher for ShardAdapter {
+    fn describe(&self) -> String {
+        format!(
+            "hierarchical shard: {} node(s) x {} worker(s), two-level \
+             Eq. (1) partition, m={}",
+            self.nodes,
+            self.workers_per_node,
+            self.plan.i_max()
+        )
+    }
+
+    fn run_syms(&self, syms: &[u32]) -> Result<Outcome> {
+        let t0 = Instant::now();
+        let out = self.plan.run_syms(syms);
+        Ok(self.convert(syms.len(), t0, out))
+    }
+
+    fn run_bytes(&self, bytes: &[u8]) -> Result<Outcome> {
+        let t0 = Instant::now();
+        let out = self.plan.run(bytes);
+        Ok(self.convert(bytes.len(), t0, out))
+    }
+}
+
 // -------------------------------------------------------------- holub --
 
+/// Holub–Štekr prior-work comparator.
 pub struct HolubStekrAdapter {
     m: HolubStekr,
 }
 
 impl HolubStekrAdapter {
+    /// Uniform chunks across `processors` workers, all |Q| states each.
     pub fn new(dfa: &Dfa, processors: usize) -> HolubStekrAdapter {
         HolubStekrAdapter { m: HolubStekr::new(dfa, processors) }
     }
@@ -339,6 +441,7 @@ impl Matcher for HolubStekrAdapter {
 
 // ---------------------------------------------------------- backtrack --
 
+/// Perl-style backtracking engine (ScanProsite stand-in).
 pub struct BacktrackingAdapter {
     ast: Ast,
     fuel: u64,
@@ -346,6 +449,7 @@ pub struct BacktrackingAdapter {
 }
 
 impl BacktrackingAdapter {
+    /// Build over the pattern AST with a step-fuel bound.
     pub fn new(dfa: &Dfa, ast: &Ast, fuel: u64) -> BacktrackingAdapter {
         BacktrackingAdapter {
             ast: ast.clone(),
@@ -389,12 +493,14 @@ impl Matcher for BacktrackingAdapter {
 
 // --------------------------------------------------------------- grep --
 
+/// grep-style literal-prefilter engine.
 pub struct GrepLikeAdapter {
     ast: Ast,
     reps: Vec<u8>,
 }
 
 impl GrepLikeAdapter {
+    /// Build over the pattern AST.
     pub fn new(dfa: &Dfa, ast: &Ast) -> GrepLikeAdapter {
         GrepLikeAdapter { ast: ast.clone(), reps: class_representatives(dfa) }
     }

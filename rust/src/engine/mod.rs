@@ -13,6 +13,8 @@
 //!                            ├─▶ SpeculativeAdapter  (Algorithms 2/3)
 //!                            ├─▶ SimdAdapter         (Listing 2 lanes)
 //!                            ├─▶ CloudAdapter        (simulated EC2)
+//!                            ├─▶ ShardAdapter        (nodes × cores,
+//!                            │                        two-level Eq. 1)
 //!                            └─▶ Holub-Stekr / backtracking / grep-like
 //! ```
 //!
@@ -39,6 +41,7 @@ pub mod batch;
 pub mod outcome;
 pub mod select;
 pub mod serve;
+pub mod shard;
 
 use anyhow::{bail, Result};
 
@@ -52,10 +55,11 @@ pub use batch::{BatchOutcome, RequestError};
 pub use outcome::{Detail, EngineKind, Outcome};
 pub use select::{select, AutoThresholds, DfaProps, Selection};
 pub use serve::{ServeConfig, ServeError, ServeStats, Server, Ticket};
+pub use shard::{ShardLayout, ShardOutcome, ShardPlan, ShardWork};
 
 use adapters::{
     BacktrackingAdapter, CloudAdapter, GrepLikeAdapter, HolubStekrAdapter,
-    SequentialAdapter, SimdAdapter, SpeculativeAdapter,
+    SequentialAdapter, ShardAdapter, SimdAdapter, SpeculativeAdapter,
 };
 
 /// An engine adapter: one substrate behind the unified request shape.
@@ -69,6 +73,28 @@ pub trait Matcher {
 }
 
 /// Which substrate to run, with engine-specific knobs inline.
+///
+/// [`Engine::Auto`] routes per request; every explicit variant pins one
+/// substrate.  All variants produce identical membership verdicts
+/// (failure-freedom):
+///
+/// ```
+/// use specdfa::engine::{CompiledMatcher, Engine, ExecPolicy, Matcher, Pattern};
+///
+/// let pattern = Pattern::Regex("(ab|cd)+e".to_string());
+/// let policy = ExecPolicy { processors: 3, ..ExecPolicy::default() };
+/// let mut verdicts = Vec::new();
+/// for engine in [
+///     Engine::Sequential,
+///     Engine::speculative(),
+///     Engine::Shard { nodes: 2 },
+/// ] {
+///     let cm = CompiledMatcher::compile(&pattern, engine, policy.clone())?;
+///     verdicts.push(cm.run_bytes(b"xxabcdezz")?.accepted);
+/// }
+/// assert_eq!(verdicts, vec![true, true, true]);
+/// # anyhow::Result::<()>::Ok(())
+/// ```
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Engine {
     /// Pick per request from DFA structure + input size ([`select`]).
@@ -86,6 +112,10 @@ pub enum Engine {
     Simd { variant: Option<String> },
     /// Simulated-EC2 cluster with this many nodes.
     Cloud { nodes: usize },
+    /// Hierarchical sharding: this many cluster nodes, each re-split
+    /// across `ExecPolicy::processors` workers — both levels Eq. (1)
+    /// capacity-weighted ([`shard::ShardPlan`]).
+    Shard { nodes: usize },
     /// Prior-work comparator (uniform chunks × all |Q| states).
     HolubStekr,
     /// Perl-style backtracking (needs the pattern AST; search semantics).
@@ -111,7 +141,13 @@ impl Engine {
         Engine::Cloud { nodes: DEFAULT_CLOUD_NODES }
     }
 
-    /// Parse a CLI engine name: auto|seq|spec|simd|cloud|holub|backtrack|grep.
+    /// Default-configured hierarchical shard engine.
+    pub fn shard() -> Engine {
+        Engine::Shard { nodes: DEFAULT_CLOUD_NODES }
+    }
+
+    /// Parse a CLI engine name:
+    /// auto|seq|spec|simd|cloud|shard|holub|backtrack|grep.
     pub fn parse(name: &str) -> Result<Engine> {
         Ok(match name {
             "auto" => Engine::Auto,
@@ -119,12 +155,13 @@ impl Engine {
             "spec" | "speculative" => Engine::speculative(),
             "simd" => Engine::simd(),
             "cloud" => Engine::cloud(),
+            "shard" => Engine::shard(),
             "holub" => Engine::HolubStekr,
             "backtrack" | "backtracking" => Engine::Backtracking,
             "grep" => Engine::GrepLike,
             other => bail!(
                 "unknown engine {other:?} (expected \
-                 auto|seq|spec|simd|cloud|holub|backtrack|grep)"
+                 auto|seq|spec|simd|cloud|shard|holub|backtrack|grep)"
             ),
         })
     }
@@ -174,6 +211,27 @@ impl Default for ExecPolicy {
 }
 
 /// A pattern in one of the supported frontends.
+///
+/// ```
+/// use specdfa::engine::{CompiledMatcher, Engine, ExecPolicy, Matcher, Pattern};
+///
+/// // search semantics: "the input contains a match"
+/// let re = CompiledMatcher::compile(
+///     &Pattern::Regex("ab+c".to_string()),
+///     Engine::Sequential,
+///     ExecPolicy::default(),
+/// )?;
+/// assert!(re.run_bytes(b"xx abbbc yy")?.accepted);
+///
+/// // PROSITE protein signatures compile through the same facade
+/// let sig = CompiledMatcher::compile(
+///     &Pattern::Prosite("C-x(2)-C.".to_string()),
+///     Engine::Sequential,
+///     ExecPolicy::default(),
+/// )?;
+/// assert!(sig.run_bytes(b"AACKLCAA")?.accepted);
+/// # anyhow::Result::<()>::Ok(())
+/// ```
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Pattern {
     /// PCRE-style regex, search ("input contains a match") semantics.
@@ -240,6 +298,7 @@ pub struct CompiledMatcher {
     spec: Option<SpeculativeAdapter>,
     simd: Option<SimdAdapter>,
     cloud: Option<CloudAdapter>,
+    shard: Option<ShardAdapter>,
     holub: Option<HolubStekrAdapter>,
     backtrack: Option<BacktrackingAdapter>,
     grep: Option<GrepLikeAdapter>,
@@ -291,6 +350,7 @@ impl CompiledMatcher {
             spec: None,
             simd: None,
             cloud: None,
+            shard: None,
             holub: None,
             backtrack: None,
             grep: None,
@@ -330,6 +390,19 @@ impl CompiledMatcher {
                 la.as_ref(),
                 cm.policy.merge,
                 false,
+            )?);
+        }
+        if auto || matches!(cm.engine, Engine::Shard { .. }) {
+            let nodes = match cm.engine {
+                Engine::Shard { nodes } => nodes,
+                _ => cm.policy.cloud_nodes,
+            };
+            cm.shard = Some(ShardAdapter::new(
+                &cm.dfa,
+                nodes,
+                cm.policy.processors,
+                la.as_ref(),
+                cm.policy.weights.as_deref(),
             )?);
         }
         if cm.engine == Engine::HolubStekr {
@@ -406,6 +479,9 @@ impl CompiledMatcher {
                     EngineKind::Cloud => {
                         self.cloud.as_ref().ok_or_else(|| missing("cloud"))?
                     }
+                    EngineKind::Shard => {
+                        self.shard.as_ref().ok_or_else(|| missing("shard"))?
+                    }
                     // Auto never picks the comparator engines
                     _ => &self.seq,
                 };
@@ -420,6 +496,9 @@ impl CompiledMatcher {
             }
             Engine::Cloud { .. } => {
                 (self.cloud.as_ref().ok_or_else(|| missing("cloud"))?, None)
+            }
+            Engine::Shard { .. } => {
+                (self.shard.as_ref().ok_or_else(|| missing("shard"))?, None)
             }
             Engine::HolubStekr => {
                 (self.holub.as_ref().ok_or_else(|| missing("holub"))?, None)
@@ -440,10 +519,11 @@ impl Matcher for CompiledMatcher {
         let engine = match &self.engine {
             Engine::Auto => format!(
                 "auto (thresholds: seq<{}, gamma<={:.2}, cloud>={}, \
-                 simd I_max<={})",
+                 shard>={}, simd I_max<={})",
                 self.policy.thresholds.seq_max_n,
                 self.policy.thresholds.gamma_max,
                 self.policy.thresholds.cloud_min_n,
+                self.policy.thresholds.shard_min_n,
                 self.policy.thresholds.simd_max_i_max,
             ),
             other => format!("{other:?}"),
@@ -489,6 +569,7 @@ mod tests {
             Engine::speculative(),
             Engine::simd(),
             Engine::Cloud { nodes: 2 },
+            Engine::Shard { nodes: 2 },
             Engine::HolubStekr,
             Engine::Backtracking,
             Engine::GrepLike,
@@ -596,6 +677,7 @@ mod tests {
         assert_eq!(Engine::parse("spec").unwrap(), Engine::speculative());
         assert_eq!(Engine::parse("simd").unwrap(), Engine::simd());
         assert_eq!(Engine::parse("cloud").unwrap(), Engine::cloud());
+        assert_eq!(Engine::parse("shard").unwrap(), Engine::shard());
         assert_eq!(Engine::parse("holub").unwrap(), Engine::HolubStekr);
         assert_eq!(
             Engine::parse("backtrack").unwrap(),

@@ -19,6 +19,7 @@ use crate::runtime::simd::SimdOutcome;
 use crate::speculative::matcher::MatchOutcome;
 
 use super::select::Selection;
+use super::shard::ShardOutcome;
 
 /// Which substrate executed a request.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -31,6 +32,10 @@ pub enum EngineKind {
     Simd,
     /// Simulated-EC2 distributed matcher (§5.2).
     Cloud,
+    /// Hierarchical cross-substrate sharding: cloud nodes × per-node
+    /// multicore, both levels Eq. (1)-weighted
+    /// ([`crate::engine::shard`]).
+    Shard,
     /// Holub–Štekr prior-work comparator.
     HolubStekr,
     /// Perl-style backtracking (ScanProsite stand-in).
@@ -47,6 +52,7 @@ impl EngineKind {
             EngineKind::Speculative => "spec",
             EngineKind::Simd => "simd",
             EngineKind::Cloud => "cloud",
+            EngineKind::Shard => "shard",
             EngineKind::HolubStekr => "holub",
             EngineKind::Backtracking => "backtrack",
             EngineKind::GrepLike => "grep",
@@ -62,11 +68,13 @@ impl fmt::Display for EngineKind {
 
 /// Engine-specific result record, preserved verbatim.
 #[derive(Clone, Debug)]
+#[allow(missing_docs)] // variant payloads are the engines' native records
 pub enum Detail {
     Sequential(SeqOutcome),
     Speculative(MatchOutcome),
     Simd(SimdOutcome),
     Cloud(CloudOutcome),
+    Shard(ShardOutcome),
     HolubStekr(HolubStekrOutcome),
     Backtracking(BacktrackStats),
     GrepLike(GrepStats),
@@ -123,6 +131,7 @@ mod tests {
             EngineKind::Speculative,
             EngineKind::Simd,
             EngineKind::Cloud,
+            EngineKind::Shard,
             EngineKind::HolubStekr,
             EngineKind::Backtracking,
             EngineKind::GrepLike,
@@ -130,7 +139,8 @@ mod tests {
         let names: Vec<&str> = all.iter().map(|k| k.name()).collect();
         assert_eq!(
             names,
-            ["seq", "spec", "simd", "cloud", "holub", "backtrack", "grep"]
+            ["seq", "spec", "simd", "cloud", "shard", "holub", "backtrack",
+             "grep"]
         );
         // names are distinct and Display matches name()
         for k in all {

@@ -76,6 +76,13 @@ pub struct AutoThresholds {
     /// the ~362 µs inter-node hops (×nodes) stay under ~2 % of the
     /// sequential matching time.
     pub cloud_min_n: usize,
+    /// Rule 3a — at or above this *corpus-scale* input length the
+    /// hierarchical shard engine wins over single-substrate cloud
+    /// dispatch: per-node chunks are long enough that splitting each of
+    /// them again across the node's cores (the two-level Eq. (1)
+    /// partition of [`crate::engine::shard`]) amortizes the extra
+    /// tier-1 merge work.  Checked before the plain cloud rule.
+    pub shard_min_n: usize,
     /// Rule 4 — the vector unit is preferred when every speculative chunk
     /// fits its initial states into one 8-lane register pass
     /// (I_max ≤ lanes − 1, chunk 0 taking the remaining lane) ...
@@ -96,6 +103,7 @@ impl Default for AutoThresholds {
             seq_max_n: 1 << 16,
             gamma_max: 0.5,
             cloud_min_n: 1 << 23,
+            shard_min_n: 1 << 26,
             simd_max_i_max: 7,
             simd_max_n: 1 << 20,
             calibrated_rate: None,
@@ -115,6 +123,9 @@ impl AutoThresholds {
             // ~16 ms of sequential work before ~20 × 362 µs of network
             // hops drop under a few percent
             cloud_min_n: (rate * 16_000.0) as usize,
+            // ~128 ms of sequential work: each node chunk is then long
+            // enough to re-split across the node's cores profitably
+            shard_min_n: (rate * 128_000.0) as usize,
             calibrated_rate: Some(rate),
             ..AutoThresholds::default()
         }
@@ -137,11 +148,15 @@ impl AutoThresholds {
 /// Why `Engine::Auto` picked a substrate for one request.
 #[derive(Clone, Debug)]
 pub struct Selection {
+    /// the substrate Auto picked
     pub kind: EngineKind,
     /// the quantities the decision used
     pub q: usize,
+    /// I_max,r used by the decision
     pub i_max: usize,
+    /// γ = I_max,r / |Q|
     pub gamma: f64,
+    /// input length in symbols
     pub n: usize,
     /// human-readable rule that fired
     pub reason: String,
@@ -161,10 +176,12 @@ impl std::fmt::Display for Selection {
 ///
 /// 1. `n < seq_max_n`                      → Sequential (overhead dominates)
 /// 2. `gamma > gamma_max`                  → Sequential (structure hostile)
-/// 3. `n >= cloud_min_n`                   → Cloud (network cost amortized)
-/// 4. `i_max <= simd_max_i_max && n <= simd_max_n`
+/// 3. `n >= shard_min_n`                   → Shard (two-level node × core
+///                                           partition, corpus scale)
+/// 4. `n >= cloud_min_n`                   → Cloud (network cost amortized)
+/// 5. `i_max <= simd_max_i_max && n <= simd_max_n`
 ///                                         → Simd (one register pass/chunk)
-/// 5. otherwise                            → Speculative multicore
+/// 6. otherwise                            → Speculative multicore
 pub fn select(props: &DfaProps, n: usize, t: &AutoThresholds) -> Selection {
     let mk = |kind: EngineKind, reason: String| Selection {
         kind,
@@ -190,6 +207,16 @@ pub fn select(props: &DfaProps, n: usize, t: &AutoThresholds) -> Selection {
                 "gamma={:.3} > {:.3} — Eq. 18 bounds parallel speedup \
                  below break-even",
                 props.gamma, t.gamma_max
+            ),
+        );
+    }
+    if n >= t.shard_min_n {
+        return mk(
+            EngineKind::Shard,
+            format!(
+                "n={n} >= {} — corpus scale: two-level Eq. (1) partition \
+                 across nodes and each node's cores",
+                t.shard_min_n
             ),
         );
     }
@@ -241,6 +268,20 @@ mod tests {
         assert_eq!(select(&props, 1 << 18, &t).kind, EngineKind::Simd);
         assert_eq!(select(&props, 1 << 21, &t).kind, EngineKind::Speculative);
         assert_eq!(select(&props, 1 << 24, &t).kind, EngineKind::Cloud);
+        assert_eq!(select(&props, 1 << 27, &t).kind, EngineKind::Shard);
+    }
+
+    #[test]
+    fn corpus_scale_prefers_the_hierarchical_shard() {
+        let dfa = compile_search("needle").unwrap();
+        let props = DfaProps::analyze(&dfa, 4);
+        let t = AutoThresholds::default();
+        let sel = select(&props, t.shard_min_n, &t);
+        assert_eq!(sel.kind, EngineKind::Shard, "{sel}");
+        assert!(sel.reason.contains("two-level"), "{}", sel.reason);
+        // just below the corpus threshold the flat cloud engine wins
+        let sel = select(&props, t.shard_min_n - 1, &t);
+        assert_eq!(sel.kind, EngineKind::Cloud, "{sel}");
     }
 
     #[test]
@@ -287,6 +328,8 @@ mod tests {
         let fast = AutoThresholds::calibrated(5000.0);
         assert!(slow.seq_max_n < fast.seq_max_n);
         assert!(slow.cloud_min_n < fast.cloud_min_n);
+        assert!(slow.shard_min_n < fast.shard_min_n);
+        assert!(slow.cloud_min_n < slow.shard_min_n);
         assert_eq!(slow.gamma_max, fast.gamma_max);
     }
 

@@ -29,6 +29,12 @@
 //!   the machine it is on instead of the baked-in 500 sym/µs ballpark.
 //!   Re-calibration bumps an epoch; cached matchers compiled under stale
 //!   thresholds are recompiled on next use.
+//! * The same profiling step also measures a **per-worker capacity
+//!   vector** ([`crate::speculative::profile::profile_workers`]): one
+//!   rate per matcher thread, timed concurrently.  Its Eq. (1) weights
+//!   flow into [`ExecPolicy::weights`], so on inhomogeneous machines the
+//!   multicore and hierarchical-shard partitions follow what each worker
+//!   can actually do instead of assuming uniform cores.
 //!
 //! Everything is `std` threads and channels — no new dependencies.
 
@@ -66,6 +72,11 @@ pub struct ServeConfig {
     pub profile_runs: usize,
     /// Symbols per timed profiling run.
     pub profile_sample_syms: usize,
+    /// Also measure a per-worker capacity vector at each calibration
+    /// (one rate per `policy.processors` worker thread, timed
+    /// concurrently) and feed its Eq. (1) weights into
+    /// [`ExecPolicy::weights`] for every compiled matcher.
+    pub profile_per_worker: bool,
     /// Engine every request is served with (normally `Engine::Auto`).
     pub engine: Engine,
     /// Execution policy template; its `thresholds` field is replaced by
@@ -83,6 +94,7 @@ impl Default for ServeConfig {
             calibrate_on_start: true,
             profile_runs: 5,
             profile_sample_syms: 1 << 18,
+            profile_per_worker: true,
             engine: Engine::Auto,
             policy: ExecPolicy::default(),
         }
@@ -93,6 +105,7 @@ impl Default for ServeConfig {
 /// compile failure can be streamed to every request of a coalesced batch.
 #[derive(Clone, Debug)]
 pub struct ServeError {
+    /// human-readable failure description (the full error chain)
     pub message: String,
 }
 
@@ -159,6 +172,10 @@ pub struct ServeStats {
     pub queue_depth: usize,
     /// The thresholds `Engine::Auto` dispatch currently uses.
     pub thresholds: AutoThresholds,
+    /// The measured per-worker capacity vector (symbols/µs) the current
+    /// Eq. (1) weights derive from; `None` until the first per-worker
+    /// calibration (or when [`ServeConfig::profile_per_worker`] is off).
+    pub worker_rates: Option<Vec<f64>>,
 }
 
 impl ServeStats {
@@ -227,6 +244,9 @@ struct Shared {
     shutdown: AtomicBool,
     /// live dispatch thresholds, replaced by each calibration
     thresholds: Mutex<AutoThresholds>,
+    /// live per-worker capacity vector, replaced by each calibration
+    /// (None until measured or when profile_per_worker is off)
+    capacity: Mutex<Option<profile::CapacityVector>>,
     /// bumped by each calibration; cache entries from older epochs are
     /// recompiled on next use
     epoch: AtomicU64,
@@ -238,6 +258,25 @@ struct Shared {
 
 /// The serving loop: worker threads, request queue, pattern cache and
 /// capacity calibration behind a submit/stream API.
+///
+/// ```
+/// use specdfa::engine::{Pattern, ServeConfig, Server};
+///
+/// let server = Server::start(ServeConfig {
+///     workers: 2,
+///     profile_runs: 1,          // keep the doctest's calibration cheap
+///     profile_sample_syms: 4096,
+///     ..ServeConfig::default()
+/// })?;
+/// let hit = server.submit(Pattern::Regex("ab+c".into()), &b"xabbcx"[..]);
+/// let miss = server.submit(Pattern::Regex("ab+c".into()), &b"nope"[..]);
+/// assert!(hit.wait().unwrap().accepted);
+/// assert!(!miss.wait().unwrap().accepted);
+/// let stats = server.shutdown();
+/// assert_eq!(stats.served, 2);
+/// assert!(stats.thresholds.is_calibrated());
+/// # anyhow::Result::<()>::Ok(())
+/// ```
 pub struct Server {
     shared: Arc<Shared>,
     workers: Vec<JoinHandle<()>>,
@@ -257,6 +296,7 @@ impl Server {
         let workers = config.workers;
         let shared = Arc::new(Shared {
             thresholds: Mutex::new(config.policy.thresholds.clone()),
+            capacity: Mutex::new(None),
             queue: Mutex::new(VecDeque::new()),
             ready: Condvar::new(),
             shutdown: AtomicBool::new(false),
@@ -339,6 +379,13 @@ impl Server {
         let cached_patterns = self.shared.cache.lock().unwrap().entries.len();
         let queue_depth = self.shared.queue.lock().unwrap().len();
         let thresholds = self.shared.thresholds.lock().unwrap().clone();
+        let worker_rates = self
+            .shared
+            .capacity
+            .lock()
+            .unwrap()
+            .as_ref()
+            .map(|cv| cv.rates.clone());
         let c = &self.shared.counters;
         ServeStats {
             submitted: c.submitted.load(Ordering::Relaxed),
@@ -353,6 +400,7 @@ impl Server {
             cached_patterns,
             queue_depth,
             thresholds,
+            worker_rates,
         }
     }
 
@@ -402,15 +450,30 @@ fn next_batch(shared: &Shared) -> Option<Vec<Request>> {
     loop {
         if let Some(first) = q.pop_front() {
             let mut batch = vec![first];
-            // coalesce: take every queued request for the same pattern
-            let mut i = 0;
-            while i < q.len() && batch.len() < shared.config.max_batch {
+            // coalesce: take every queued request for the same pattern.
+            // One scan records the matching indices; the removals then go
+            // back-to-front via swap_remove_back, which is O(1) per hit
+            // (VecDeque::remove would shift O(queue) elements each time).
+            // Removing the largest index first keeps the smaller recorded
+            // indices valid: a swap only disturbs positions at or beyond
+            // the removed index.  Unmatched requests may change relative
+            // order — each request streams to its own ticket, so no
+            // caller can observe the queue's internal order.
+            let mut hits: Vec<usize> = Vec::new();
+            for i in 0..q.len() {
+                if batch.len() + hits.len() >= shared.config.max_batch {
+                    break;
+                }
                 if q[i].pattern == batch[0].pattern {
-                    batch.push(q.remove(i).expect("index checked"));
-                } else {
-                    i += 1;
+                    hits.push(i);
                 }
             }
+            for &i in hits.iter().rev() {
+                batch.push(q.swap_remove_back(i).expect("index checked"));
+            }
+            // the back-to-front removals reversed the hits: restore
+            // submission order within the batch
+            batch[1..].reverse();
             return Some(batch);
         }
         if shared.shutdown.load(Ordering::SeqCst) {
@@ -473,8 +536,19 @@ fn matcher_for(
         // compiled under stale thresholds: drop and recompile below
         cache.entries.swap_remove(pos);
     }
+    // measured per-worker Eq. (1) weights (when available) override the
+    // template's; the multicore and shard partitions then track the
+    // machine's real per-worker capacities
+    let weights = shared
+        .capacity
+        .lock()
+        .unwrap()
+        .as_ref()
+        .map(|cv| cv.weights())
+        .or_else(|| shared.config.policy.weights.clone());
     let policy = ExecPolicy {
         thresholds: shared.thresholds.lock().unwrap().clone(),
+        weights,
         ..shared.config.policy.clone()
     };
     let cm =
@@ -514,13 +588,22 @@ fn finish_request(shared: &Shared) {
 }
 
 /// The §4.1 offline profiling step, applied live: measure this host's
-/// matching capacity and install thresholds derived from it.
+/// matching capacity (and, unless disabled, the per-worker capacity
+/// vector) and install thresholds + Eq. (1) weights derived from them.
 fn recalibrate(shared: &Shared) {
     let p = profile::profile_host(
         shared.config.profile_runs,
         shared.config.profile_sample_syms,
     );
     *shared.thresholds.lock().unwrap() = AutoThresholds::from_profile(&p);
+    if shared.config.profile_per_worker {
+        let cv = profile::profile_workers(
+            shared.config.policy.processors,
+            shared.config.profile_runs,
+            shared.config.profile_sample_syms,
+        );
+        *shared.capacity.lock().unwrap() = Some(cv);
+    }
     shared.epoch.fetch_add(1, Ordering::SeqCst);
     shared.counters.recalibrations.fetch_add(1, Ordering::Relaxed);
 }
@@ -574,6 +657,29 @@ mod tests {
         let stats = server.shutdown();
         assert_eq!(stats.failed, 1);
         assert_eq!(stats.served, 1);
+    }
+
+    #[test]
+    fn per_worker_calibration_feeds_eq1_weights() {
+        let server = Server::start(quick_config()).unwrap();
+        let t = server.submit(Pattern::Regex("ab".to_string()), &b"ab"[..]);
+        assert!(t.wait().unwrap().accepted);
+        let stats = server.shutdown();
+        let rates = stats
+            .worker_rates
+            .expect("per-worker profiling is on by default");
+        assert_eq!(rates.len(), ServeConfig::default().policy.processors);
+        assert!(rates.iter().all(|&r| r > 0.0), "{rates:?}");
+
+        // and it can be disabled
+        let server = Server::start(ServeConfig {
+            profile_per_worker: false,
+            ..quick_config()
+        })
+        .unwrap();
+        let t = server.submit(Pattern::Regex("ab".to_string()), &b"ab"[..]);
+        assert!(t.wait().unwrap().accepted);
+        assert!(server.shutdown().worker_rates.is_none());
     }
 
     #[test]

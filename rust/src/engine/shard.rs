@@ -1,0 +1,662 @@
+//! Hierarchical cross-substrate sharding: one corpus-scale input split
+//! across simulated cloud nodes **and**, within each node, across that
+//! node's multicore speculative matcher.
+//!
+//! `Engine::Auto` used to pick exactly one substrate per request: a
+//! 100 MB scan went either to the cluster (leaving each node's cores
+//! under one chunk) or to the multicore matcher (leaving the other nodes
+//! idle).  [`ShardPlan`] composes both: a **two-level partition** where
+//! each level is the paper's Eq. (1) capacity-weighted split —
+//!
+//! ```text
+//!   input [0, n)                          m = I_max,r
+//!     │  level 1: node spans of the Eq. (1) worker partition —
+//!     │  node shares follow total node capacity
+//!     ├──────────── node 0 ────────────┬──── node 1 ────┬─ node 2 ─┐
+//!     │  level 2: Eq. (1) over the     │                │          │
+//!     │  per-worker capacity vectors   │                │          │
+//!     │  (profile_workers)             │                │          │
+//!     ├── w0 ──┬─ w1 ─┬─ w2 ─┬─ w3 ─┤  ├─ w0 ─┬─ w1 ─┤  ├─ ... ─┤  │
+//! ```
+//!
+//! — and a **bottom-up merge** mirroring the paper's 2-tier scheme
+//! (Fig. 9): each node composes its workers' L-vectors (Eq. 9) into one
+//! node map, then the master threads the start state through the node
+//! maps in order (Eq. 8).  Failure-freedom is inherited from the
+//! single-level matcher: the state entering any chunk is always inside
+//! that chunk's speculated initial-state set (lookahead soundness), so
+//! the sharded outcome is byte-identical to the sequential run —
+//! verified by the differential suite in `tests/sharding.rs`.
+//!
+//! Capacity vectors come from [`crate::speculative::profile`]: node
+//! weights from per-node *total* capacity, intra-node weights from the
+//! node's per-worker rates ([`profile_workers`](
+//! crate::speculative::profile::profile_workers) measures a real one for
+//! the serving path).
+
+use std::time::Instant;
+
+use crate::automata::{Dfa, FlatDfa};
+use crate::cluster::ClusterSpec;
+use crate::speculative::lookahead::Lookahead;
+use crate::speculative::lvector::LVector;
+use crate::speculative::merge::MergeStats;
+use crate::speculative::partition::{partition_with_sizes, Chunk};
+use crate::speculative::profile::{weights_from_capacities, CapacityVector};
+
+/// The two-level chunk layout of one sharded run: which byte range each
+/// (node, worker) pair matches.
+#[derive(Clone, Debug)]
+pub struct ShardLayout {
+    /// Level-1 chunks, one per node (`proc` = node id), tiling `[0, n)`.
+    pub node_chunks: Vec<Chunk>,
+    /// Level-2 chunks per node (`proc` = worker index within the node),
+    /// in **global** input offsets, tiling the node's level-1 chunk.
+    pub worker_chunks: Vec<Vec<Chunk>>,
+}
+
+impl ShardLayout {
+    /// Total worker chunks across all nodes.
+    pub fn total_workers(&self) -> usize {
+        self.worker_chunks.iter().map(Vec::len).sum()
+    }
+}
+
+/// One worker's execution record in a sharded run.
+#[derive(Clone, Debug)]
+pub struct ShardWork {
+    /// node (level-1 shard) this worker belongs to
+    pub node: usize,
+    /// worker index within the node
+    pub worker: usize,
+    /// global start offset of the worker's chunk
+    pub chunk_start: usize,
+    /// chunk length in symbols
+    pub chunk_len: usize,
+    /// initial states matched for this chunk (1 for the very first chunk)
+    pub states_matched: usize,
+    /// chunk_len × states_matched — the worker's real matching work
+    pub syms_matched: usize,
+    /// measured wall time of this worker's matching loop, seconds
+    pub elapsed_s: f64,
+}
+
+/// Result of one hierarchical sharded run.
+#[derive(Clone, Debug)]
+pub struct ShardOutcome {
+    /// `delta*(q0, input)` — identical to the sequential run
+    pub final_state: u32,
+    /// membership verdict: `final_state ∈ F`
+    pub accepted: bool,
+    /// partitioning parameter m (I_max,r, or |Q| without lookahead)
+    pub m: usize,
+    /// per-worker execution records, node-major order
+    pub work: Vec<ShardWork>,
+    /// tier-1 composed L-vector of each node's full chunk
+    pub node_lvectors: Vec<LVector>,
+    /// op/message counts of the bottom-up merge (Fig. 9 accounting)
+    pub merge_stats: MergeStats,
+}
+
+impl ShardOutcome {
+    /// Max symbols matched by any worker — the parallel makespan in
+    /// symbol units.
+    pub fn makespan_syms(&self) -> usize {
+        self.work.iter().map(|w| w.syms_matched).max().unwrap_or(0)
+    }
+
+    /// Total redundant work introduced by speculation, in symbols.
+    pub fn speculative_overhead_syms(&self, n: usize) -> usize {
+        let total: usize = self.work.iter().map(|w| w.syms_matched).sum();
+        total.saturating_sub(n)
+    }
+
+    /// Symbols of real matching work done by each node (level-1 shard).
+    pub fn per_node_syms(&self) -> Vec<usize> {
+        let nodes = self
+            .work
+            .iter()
+            .map(|w| w.node)
+            .max()
+            .map(|m| m + 1)
+            .unwrap_or(0);
+        let mut out = vec![0usize; nodes];
+        for w in &self.work {
+            out[w.node] += w.syms_matched;
+        }
+        out
+    }
+}
+
+/// Configuration builder for hierarchical sharded matching: a cluster of
+/// nodes, each with a per-worker capacity vector, sharing one DFA.
+///
+/// ```
+/// use specdfa::engine::shard::ShardPlan;
+/// use specdfa::{compile_search, SequentialMatcher};
+///
+/// let dfa = compile_search("(ab|cd)+e").unwrap();
+/// let input = b"xxabcde".repeat(40_000);
+/// // 2 nodes: a 4-worker node with one slow worker, a 2-worker node
+/// let plan = ShardPlan::new(&dfa)
+///     .node_capacities(vec![vec![1.0, 1.0, 1.0, 0.25], vec![1.5, 1.5]])
+///     .lookahead(2);
+/// let out = plan.run(&input);
+/// let seq = SequentialMatcher::new(&dfa).run_bytes(&input);
+/// assert_eq!(out.final_state, seq.final_state); // failure-free
+/// assert!(out.accepted);
+/// ```
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    dfa: Dfa,
+    flat: FlatDfa,
+    /// per-node per-worker capacity vectors (rates; any positive unit)
+    nodes: Vec<Vec<f64>>,
+    r: usize,
+    lookahead: Option<Lookahead>,
+    use_threads: bool,
+}
+
+impl ShardPlan {
+    /// A plan over `dfa` with the default topology: 2 nodes × 4 uniform
+    /// workers.  Use the builder methods to shape the cluster.
+    pub fn new(dfa: &Dfa) -> ShardPlan {
+        ShardPlan {
+            dfa: dfa.clone(),
+            flat: FlatDfa::from_dfa(dfa),
+            nodes: vec![vec![1.0; 4]; 2],
+            r: 0,
+            lookahead: None,
+            use_threads: true,
+        }
+    }
+
+    /// Explicit per-node per-worker capacity vectors.  Vector lengths may
+    /// differ per node (heterogeneous clusters); every rate must be > 0.
+    pub fn node_capacities(mut self, nodes: Vec<Vec<f64>>) -> ShardPlan {
+        assert!(!nodes.is_empty(), "need at least one node");
+        for caps in &nodes {
+            assert!(!caps.is_empty(), "every node needs >= 1 worker");
+            assert!(
+                caps.iter().all(|&c| c > 0.0),
+                "capacities must be positive"
+            );
+        }
+        self.nodes = nodes;
+        self
+    }
+
+    /// `nodes` identical nodes, each using the same measured per-worker
+    /// capacity vector — the serving-path shape, where
+    /// [`profile_workers`](crate::speculative::profile::profile_workers)
+    /// measured the local host once.
+    pub fn capacity_vector(self, nodes: usize, cv: &CapacityVector) -> ShardPlan {
+        assert!(nodes >= 1);
+        self.node_capacities(vec![cv.rates.clone(); nodes])
+    }
+
+    /// Derive the topology from a simulated-cluster spec: one worker per
+    /// allocated core, each at the node's per-core capacity.
+    pub fn cluster(self, spec: &ClusterSpec) -> ShardPlan {
+        let mut nodes = Vec::with_capacity(spec.nodes.len());
+        for node in &spec.nodes {
+            let cores = if spec.leave_one_core_idle {
+                node.cores.saturating_sub(1).max(1)
+            } else {
+                node.cores
+            };
+            nodes.push(vec![node.capacity; cores]);
+        }
+        self.node_capacities(nodes)
+    }
+
+    /// Enable the I_max,r optimization (Algorithm 3) with `r` reverse
+    /// lookahead symbols; r = 0 reverts to basic all-|Q| speculation.
+    pub fn lookahead(mut self, r: usize) -> ShardPlan {
+        self.r = r;
+        self.lookahead =
+            if r > 0 { Some(Lookahead::analyze(&self.dfa, r)) } else { None };
+        self
+    }
+
+    /// Inject a precomputed lookahead analysis (must come from this DFA),
+    /// sharing one BFS across adapters like
+    /// [`MatchPlan::with_lookahead`](crate::speculative::matcher::MatchPlan::with_lookahead).
+    pub fn with_lookahead(mut self, la: Lookahead) -> ShardPlan {
+        self.r = la.r;
+        self.lookahead = Some(la);
+        self
+    }
+
+    /// Run workers inline on the calling thread (deterministic for the
+    /// simulation harness) instead of spawning OS threads.
+    pub fn sequential_execution(mut self) -> ShardPlan {
+        self.use_threads = false;
+        self
+    }
+
+    /// The partitioning parameter m: I_max,r with lookahead, |Q| without.
+    pub fn i_max(&self) -> usize {
+        self.lookahead
+            .as_ref()
+            .map(|la| la.i_max)
+            .unwrap_or(self.dfa.num_states as usize)
+    }
+
+    /// The compiled DFA the plan matches with.
+    pub fn dfa(&self) -> &Dfa {
+        &self.dfa
+    }
+
+    /// Total workers across all nodes.
+    pub fn total_workers(&self) -> usize {
+        self.nodes.iter().map(Vec::len).sum()
+    }
+
+    /// Compute the two-level chunk layout for an `n`-symbol input.
+    ///
+    /// One Eq. (1) weighting over the **full worker population** (node-
+    /// major) drives both levels: `partition_with_sizes` balances
+    /// `len·states/weight` across every worker — the very first worker
+    /// matches one state (the known start, Eq. 5's m× stretch), every
+    /// other worker speculates over up to `m` states — and the level-1
+    /// node chunks are the node-major spans of their workers' chunks.
+    /// Node shares therefore follow total node capacity automatically
+    /// (Eq. (1) is normalization-invariant), without the naive
+    /// two-pass scheme's flaw of re-applying the chunk-0 stretch
+    /// per level, which would systematically overload node 0's workers
+    /// for any m > 1.
+    ///
+    /// Invariants (property-tested): worker chunks tile each node chunk
+    /// exactly; node chunks tile `[0, n)` exactly — every symbol is
+    /// matched exactly once per speculated state, whatever the skew of
+    /// the capacity vectors.
+    pub fn layout(&self, n: usize) -> ShardLayout {
+        let m = self.i_max().max(1);
+        let all: Vec<f64> =
+            self.nodes.iter().flatten().copied().collect();
+        let weights = weights_from_capacities(&all);
+        let sizes: Vec<usize> = (0..all.len())
+            .map(|i| if i == 0 { 1 } else { m })
+            .collect();
+        let flat = partition_with_sizes(n, &weights, &sizes);
+
+        let mut node_chunks = Vec::with_capacity(self.nodes.len());
+        let mut worker_chunks = Vec::with_capacity(self.nodes.len());
+        let mut next = 0usize;
+        for (node, caps) in self.nodes.iter().enumerate() {
+            let group: Vec<Chunk> = flat[next..next + caps.len()]
+                .iter()
+                .enumerate()
+                .map(|(worker, c)| Chunk {
+                    proc: worker,
+                    start: c.start,
+                    end: c.end,
+                })
+                .collect();
+            next += caps.len();
+            node_chunks.push(Chunk {
+                proc: node,
+                start: group.first().expect(">=1 worker per node").start,
+                end: group.last().expect(">=1 worker per node").end,
+            });
+            worker_chunks.push(group);
+        }
+        ShardLayout { node_chunks, worker_chunks }
+    }
+
+    /// The speculated initial-state set for a chunk starting at global
+    /// offset `b`: `{q0}` at the input start, the reverse-lookahead set
+    /// of Eq. (13) with lookahead, all live states without.
+    fn initial_set(&self, syms: &[u32], b: usize) -> Vec<u32> {
+        if b == 0 {
+            return vec![self.dfa.start];
+        }
+        match &self.lookahead {
+            Some(la) => {
+                let lo = b.saturating_sub(la.r);
+                la.initial_set(&self.dfa, &syms[lo..b])
+                    .iter()
+                    .map(|s| s as u32)
+                    .collect()
+            }
+            None => (0..self.dfa.num_states).collect(),
+        }
+    }
+
+    /// Match raw bytes (applies the IBase class mapping first).
+    pub fn run(&self, input: &[u8]) -> ShardOutcome {
+        self.run_syms(&self.dfa.map_input(input))
+    }
+
+    /// Match pre-mapped dense symbols: plan the two-level layout, match
+    /// every (node, worker) chunk in parallel, merge bottom-up.
+    pub fn run_syms(&self, syms: &[u32]) -> ShardOutcome {
+        let q = self.dfa.num_states as usize;
+        let m = self.i_max().max(1);
+        let layout = self.layout(syms.len());
+
+        // flatten (node, worker) tasks with their initial-state sets
+        let mut tasks: Vec<(usize, &Chunk, Vec<u32>)> = Vec::new();
+        for (node, chunks) in layout.worker_chunks.iter().enumerate() {
+            for chunk in chunks {
+                tasks.push((node, chunk, self.initial_set(syms, chunk.start)));
+            }
+        }
+
+        let mut results: Vec<(LVector, ShardWork)> =
+            Vec::with_capacity(tasks.len());
+        if self.use_threads {
+            let mut slots: Vec<Option<(LVector, ShardWork)>> =
+                vec![None; tasks.len()];
+            std::thread::scope(|scope| {
+                let flat = &self.flat;
+                for (slot, (node, chunk, set)) in
+                    slots.iter_mut().zip(&tasks)
+                {
+                    scope.spawn(move || {
+                        *slot =
+                            Some(match_chunk(flat, q, *node, chunk, set, syms));
+                    });
+                }
+            });
+            results.extend(slots.into_iter().map(Option::unwrap));
+        } else {
+            for (node, chunk, set) in &tasks {
+                results.push(match_chunk(
+                    &self.flat, q, *node, chunk, set, syms,
+                ));
+            }
+        }
+
+        // ---- bottom-up merge (Fig. 9, generalized to ragged nodes) ----
+        // tier 1: each node composes its workers' L-vectors (Eq. 9)
+        let mut stats = MergeStats::default();
+        let mut node_lvectors: Vec<LVector> = Vec::new();
+        let mut work: Vec<ShardWork> = Vec::with_capacity(results.len());
+        let mut it = results.into_iter();
+        for chunks in &layout.worker_chunks {
+            let (first_lv, first_work) =
+                it.next().expect("one result per planned chunk");
+            work.push(first_work);
+            let mut acc = first_lv;
+            for _ in 1..chunks.len() {
+                let (lv, w) = it.next().expect("one result per chunk");
+                work.push(w);
+                acc = acc.compose(&lv);
+                stats.compose_ops += 1;
+            }
+            stats.intra_node_msgs += chunks.len().saturating_sub(1);
+            node_lvectors.push(acc);
+        }
+        stats.depth += 1;
+        // tier 2: the master threads the start state through the node
+        // maps in chunk order (Eq. 8)
+        let mut state = self.dfa.start;
+        for (i, lv) in node_lvectors.iter().enumerate() {
+            state = lv.get(state);
+            stats.lookup_ops += 1;
+            if i > 0 {
+                stats.inter_node_msgs += 1;
+            }
+        }
+        stats.depth += 1;
+
+        ShardOutcome {
+            final_state: state,
+            accepted: self.dfa.accepting[state as usize],
+            m,
+            work,
+            node_lvectors,
+            merge_stats: stats,
+        }
+    }
+}
+
+/// Match one worker chunk for each speculated initial state (the same
+/// 4-way interleaved inner loop as the multicore matcher).
+fn match_chunk(
+    flat: &FlatDfa,
+    q: usize,
+    node: usize,
+    chunk: &Chunk,
+    set: &[u32],
+    syms: &[u32],
+) -> (LVector, ShardWork) {
+    let t0 = Instant::now();
+    let mut lv = LVector::identity(q);
+    let chunk_syms = &syms[chunk.start..chunk.end];
+    let mut groups = set.chunks_exact(4);
+    for g in &mut groups {
+        let offs = [
+            flat.offset_of(g[0]),
+            flat.offset_of(g[1]),
+            flat.offset_of(g[2]),
+            flat.offset_of(g[3]),
+        ];
+        let fins = flat.run_syms_x4(offs, chunk_syms);
+        for (&init, &fin) in g.iter().zip(&fins) {
+            lv.set(init, flat.state_of(fin));
+        }
+    }
+    for &init in groups.remainder() {
+        let off = flat.run_syms(flat.offset_of(init), chunk_syms);
+        lv.set(init, flat.state_of(off));
+    }
+    (
+        lv,
+        ShardWork {
+            node,
+            worker: chunk.proc,
+            chunk_start: chunk.start,
+            chunk_len: chunk.len(),
+            states_matched: set.len(),
+            syms_matched: chunk.len() * set.len(),
+            elapsed_s: t0.elapsed().as_secs_f64(),
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baseline::sequential::SequentialMatcher;
+    use crate::regex::compile::{compile_prosite, compile_search};
+    use crate::speculative::lookahead::tests::{fig6_dfa, random_dfa};
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn random_syms(rng: &mut Rng, dfa: &Dfa, len: usize) -> Vec<u32> {
+        (0..len).map(|_| rng.below(dfa.num_symbols as u64) as u32).collect()
+    }
+
+    #[test]
+    fn sharded_equals_sequential_on_fig6() {
+        let dfa = fig6_dfa();
+        let mut rng = Rng::new(0x5A4D);
+        let syms = random_syms(&mut rng, &dfa, 20_000);
+        let want = SequentialMatcher::new(&dfa).run_syms(&syms);
+        for nodes in [
+            vec![vec![1.0; 2]; 2],
+            vec![vec![1.5, 0.5], vec![1.0; 3], vec![2.0]],
+            vec![vec![1.0]],
+        ] {
+            for r in [0, 1, 2] {
+                let out = ShardPlan::new(&dfa)
+                    .node_capacities(nodes.clone())
+                    .lookahead(r)
+                    .run_syms(&syms);
+                assert_eq!(out.final_state, want.final_state, "r={r}");
+                assert_eq!(out.accepted, want.accepted);
+            }
+        }
+    }
+
+    #[test]
+    fn prop_sharded_failure_freedom_random_dfas() {
+        prop::check("sharded == sequential (random DFAs)", 40, |rng| {
+            let dfa = random_dfa(rng);
+            let len = rng.range_usize(0, 1500);
+            let syms = random_syms(rng, &dfa, len);
+            let want = SequentialMatcher::new(&dfa).run_syms(&syms);
+            let nodes: Vec<Vec<f64>> = (0..rng.range_usize(1, 5))
+                .map(|_| {
+                    (0..rng.range_usize(1, 5))
+                        .map(|_| 0.25 + rng.f64() * 3.0)
+                        .collect()
+                })
+                .collect();
+            let out = ShardPlan::new(&dfa)
+                .node_capacities(nodes)
+                .lookahead(rng.range_usize(0, 4))
+                .run_syms(&syms);
+            assert_eq!(out.final_state, want.final_state, "len={len}");
+            assert_eq!(out.accepted, want.accepted);
+        });
+    }
+
+    #[test]
+    fn prop_layout_tiles_input_exactly_once() {
+        // skewed capacity vectors must still partition [0, n) exactly:
+        // node chunks tile the input, worker chunks tile each node chunk
+        prop::check("shard layout tiles input", 80, |rng| {
+            let dfa = fig6_dfa();
+            let n = rng.below(3_000_000) as usize;
+            let nodes: Vec<Vec<f64>> = (0..rng.range_usize(1, 6))
+                .map(|_| {
+                    (0..rng.range_usize(1, 9))
+                        .map(|_| if rng.chance(0.3) {
+                            0.01 + rng.f64() * 0.1 // heavily skewed worker
+                        } else {
+                            0.5 + rng.f64() * 4.0
+                        })
+                        .collect()
+                })
+                .collect();
+            let plan = ShardPlan::new(&dfa)
+                .node_capacities(nodes.clone())
+                .lookahead(rng.range_usize(0, 3));
+            let layout = plan.layout(n);
+            assert_eq!(layout.node_chunks.len(), nodes.len());
+            assert_eq!(layout.node_chunks[0].start, 0);
+            assert_eq!(layout.node_chunks.last().unwrap().end, n);
+            for w in layout.node_chunks.windows(2) {
+                assert_eq!(w[0].end, w[1].start);
+            }
+            for (node, chunks) in layout.worker_chunks.iter().enumerate() {
+                let top = &layout.node_chunks[node];
+                assert_eq!(chunks.len(), nodes[node].len());
+                assert_eq!(chunks[0].start, top.start);
+                assert_eq!(chunks.last().unwrap().end, top.end);
+                for w in chunks.windows(2) {
+                    assert_eq!(w[0].end, w[1].start);
+                    assert!(w[0].start <= w[0].end);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn capacity_weights_shift_work_toward_fast_workers() {
+        let dfa = compile_prosite("C-x(2)-C-x(3)-[LIVMFYWC].").unwrap();
+        let mut gen = crate::workload::InputGen::new(0x5A4E);
+        let syms = dfa.map_input(&gen.protein(400_000));
+        // node 1 is 3x the capacity of node 0: it must get more symbols
+        let out = ShardPlan::new(&dfa)
+            .node_capacities(vec![vec![1.0; 2], vec![3.0; 2]])
+            .lookahead(4)
+            .run_syms(&syms);
+        let per_node = out.per_node_syms();
+        assert_eq!(per_node.len(), 2);
+        assert!(
+            per_node[1] > per_node[0],
+            "fast node must do more work: {per_node:?}"
+        );
+        // and the sharded result still equals sequential
+        let want = SequentialMatcher::new(&dfa).run_syms(&syms);
+        assert_eq!(out.final_state, want.final_state);
+    }
+
+    #[test]
+    fn uniform_cluster_balances_work_across_nodes() {
+        // regression: a naive two-pass layout re-applies the chunk-0 m×
+        // stretch inside node 0 and systematically overloads its workers
+        // for m > 1.  With the single Eq. (1) partition, per-worker work
+        // (len × states) must be near-equal on a uniform cluster.  r=1 on
+        // the Fig. 6 DFA pins every speculative set at I_max = 2 exactly,
+        // so the worst-case sizing matches the runtime sets.
+        let dfa = fig6_dfa();
+        let mut rng = Rng::new(0x5A51);
+        let syms = random_syms(&mut rng, &dfa, 1_000_000);
+        let out = ShardPlan::new(&dfa)
+            .node_capacities(vec![vec![1.0; 4]; 2])
+            .lookahead(1)
+            .run_syms(&syms);
+        let works: Vec<usize> =
+            out.work.iter().map(|w| w.syms_matched).collect();
+        let max = *works.iter().max().unwrap() as f64;
+        let min = *works.iter().min().unwrap() as f64;
+        assert!(
+            max / min < 1.05,
+            "unbalanced shard work: {works:?}"
+        );
+    }
+
+    #[test]
+    fn inline_execution_equals_threads() {
+        let dfa = fig6_dfa();
+        let mut rng = Rng::new(0x5A4F);
+        let syms = random_syms(&mut rng, &dfa, 8_000);
+        let plan = ShardPlan::new(&dfa)
+            .node_capacities(vec![vec![1.0, 2.0], vec![1.0; 3]])
+            .lookahead(2);
+        let threaded = plan.clone().run_syms(&syms);
+        let inline = plan.sequential_execution().run_syms(&syms);
+        assert_eq!(threaded.final_state, inline.final_state);
+        assert_eq!(threaded.makespan_syms(), inline.makespan_syms());
+        assert_eq!(threaded.work.len(), inline.work.len());
+    }
+
+    #[test]
+    fn empty_input_and_single_worker() {
+        let dfa = fig6_dfa();
+        let out = ShardPlan::new(&dfa)
+            .node_capacities(vec![vec![1.0]])
+            .run_syms(&[]);
+        assert_eq!(out.final_state, dfa.start);
+        let out =
+            ShardPlan::new(&dfa).lookahead(1).run_syms(&[]);
+        assert_eq!(out.final_state, dfa.start);
+    }
+
+    #[test]
+    fn merge_stats_follow_fig9_shape() {
+        let dfa = fig6_dfa();
+        let mut rng = Rng::new(0x5A50);
+        let syms = random_syms(&mut rng, &dfa, 50_000);
+        // 3 nodes x 4 workers
+        let out = ShardPlan::new(&dfa)
+            .node_capacities(vec![vec![1.0; 4]; 3])
+            .lookahead(1)
+            .run_syms(&syms);
+        assert_eq!(out.node_lvectors.len(), 3);
+        assert_eq!(out.work.len(), 12);
+        assert_eq!(out.merge_stats.compose_ops, 3 * 3);
+        assert_eq!(out.merge_stats.intra_node_msgs, 3 * 3);
+        assert_eq!(out.merge_stats.inter_node_msgs, 2);
+        assert_eq!(out.merge_stats.lookup_ops, 3);
+        assert_eq!(out.merge_stats.depth, 2);
+    }
+
+    #[test]
+    fn cluster_spec_derives_topology() {
+        let dfa = fig6_dfa();
+        let plan = ShardPlan::new(&dfa)
+            .cluster(&ClusterSpec::fast_slow(1, 1));
+        // cc2.8xlarge: 15 allocated cores; m2.4xlarge: 7
+        assert_eq!(plan.total_workers(), 15 + 7);
+        let cv = CapacityVector::uniform(3, 100.0);
+        let plan = ShardPlan::new(&dfa).capacity_vector(4, &cv);
+        assert_eq!(plan.total_workers(), 12);
+    }
+}

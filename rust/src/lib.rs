@@ -27,7 +27,11 @@
 //!   DFA's structural properties (γ = I_max,r/|Q|, Eq. 18) and the input
 //!   length — small probes stay on the Listing-1 scalar loop, structured
 //!   patterns go to the vector unit or the multicore speculative matcher,
-//!   corpus-scale scans go to the cluster.
+//!   large scans go to the cluster, and corpus-scale scans go to the
+//!   hierarchical shard engine ([`engine::shard`]): a two-level Eq. (1)
+//!   partition across cluster nodes *and* each node's cores, driven by
+//!   measured per-worker capacity vectors
+//!   ([`speculative::profile::profile_workers`]).
 //! * [`engine::CompiledMatcher::match_many`] serves batches, amortizing
 //!   compilation and plan construction across requests; failed requests
 //!   get their own error slot instead of aborting the batch.
@@ -58,6 +62,11 @@
 //! * [`workload`] — PCRE-like and PROSITE-like benchmark suites and input
 //!   generators.
 //! * [`experiments`] — regenerators for every table and figure in §6.
+//!
+//! `docs/ARCHITECTURE.md` (repo root) maps every paper section, figure
+//! and equation to the module and bench that implement it.
+
+#![warn(missing_docs)]
 
 pub mod automata;
 pub mod baseline;
@@ -74,7 +83,8 @@ pub use automata::{Dfa, FlatDfa};
 pub use baseline::sequential::SequentialMatcher;
 pub use engine::{
     CompiledMatcher, Engine, EngineKind, ExecPolicy, Matcher, Outcome,
-    Pattern, Selection, ServeConfig, ServeError, ServeStats, Server, Ticket,
+    Pattern, Selection, ServeConfig, ServeError, ServeStats, Server,
+    ShardPlan, Ticket,
 };
 pub use regex::compile::{compile_exact, compile_prosite, compile_search};
 pub use speculative::matcher::{MatchOutcome, MatchPlan};

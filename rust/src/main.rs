@@ -68,7 +68,7 @@ fn print_usage() {
          \x20 specdfa match   (--regex PAT | --prosite PAT) \
          [--file F | --gen N]\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 \
-         [--engine auto|seq|spec|simd|cloud|holub|backtrack|grep]\n\
+         [--engine auto|seq|spec|simd|cloud|shard|holub|backtrack|grep]\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 \
          [--procs P] [--lookahead R] [--nodes K] [--batch B]\n\
          \x20 specdfa serve   [--workers N] [--cache M] [--batch B] \
@@ -157,7 +157,9 @@ fn cmd_match(args: &[String]) -> anyhow::Result<()> {
     let batch: usize = get(&fl, "batch").unwrap_or("1").parse()?;
     anyhow::ensure!(batch >= 1, "--batch must be >= 1");
     let mut engine = Engine::parse(get(&fl, "engine").unwrap_or("auto"))?;
-    if let Engine::Cloud { nodes: n } = &mut engine {
+    if let Engine::Cloud { nodes: n } | Engine::Shard { nodes: n } =
+        &mut engine
+    {
         *n = nodes;
     }
 

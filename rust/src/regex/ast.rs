@@ -6,6 +6,7 @@
 
 use crate::automata::byteset::ByteSet;
 
+/// Regex syntax tree node.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Ast {
     /// Matches nothing (the empty language).
@@ -23,18 +24,22 @@ pub enum Ast {
 }
 
 impl Ast {
+    /// Concatenation of single-byte classes spelling `s`.
     pub fn literal(s: &[u8]) -> Ast {
         Ast::Concat(s.iter().map(|&b| Ast::Class(ByteSet::single(b))).collect())
     }
 
+    /// `node*`
     pub fn star(node: Ast) -> Ast {
         Ast::Repeat { node: Box::new(node), min: 0, max: None }
     }
 
+    /// `node+`
     pub fn plus(node: Ast) -> Ast {
         Ast::Repeat { node: Box::new(node), min: 1, max: None }
     }
 
+    /// `node?`
     pub fn opt(node: Ast) -> Ast {
         Ast::Repeat { node: Box::new(node), min: 0, max: Some(1) }
     }

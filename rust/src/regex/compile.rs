@@ -22,8 +22,11 @@ use crate::automata::Dfa;
 /// A compiled pattern: the minimal DFA plus provenance.
 #[derive(Clone, Debug)]
 pub struct CompiledPattern {
+    /// benchmark name (suite id)
     pub name: String,
+    /// source pattern text
     pub pattern: String,
+    /// minimal search DFA
     pub dfa: Dfa,
 }
 

@@ -20,8 +20,10 @@ use anyhow::{bail, Result};
 use super::ast::Ast;
 use crate::automata::byteset::ByteSet;
 
+/// Parse result: AST plus edge-anchor flags.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ParsedRegex {
+    /// the pattern body
     pub ast: Ast,
     /// pattern started with '^'
     pub anchored_start: bool,
@@ -29,6 +31,7 @@ pub struct ParsedRegex {
     pub anchored_end: bool,
 }
 
+/// Parse a PCRE-style pattern into [`ParsedRegex`].
 pub fn parse(pattern: &str) -> Result<ParsedRegex> {
     let bytes = pattern.as_bytes();
     let mut p = Parser { b: bytes, i: 0 };

@@ -22,12 +22,15 @@ pub const AMINO_ACIDS: &[u8; 20] = b"ACDEFGHIKLMNPQRSTVWY";
 /// Sequence alphabet: amino acids + ambiguity codes seen in SwissProt.
 pub const SEQUENCE_ALPHABET: &[u8; 23] = b"ACDEFGHIKLMNPQRSTVWYBZX";
 
+/// ByteSet of the sequence alphabet (amino acids + ambiguity codes).
 pub fn amino_set() -> ByteSet {
     ByteSet::from_bytes(SEQUENCE_ALPHABET)
 }
 
+/// Parse result: AST plus terminus-anchor flags.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ParsedProsite {
+    /// the signature body
     pub ast: Ast,
     /// `<` present: match must start at the sequence N-terminus
     pub anchored_start: bool,
@@ -35,6 +38,7 @@ pub struct ParsedProsite {
     pub anchored_end: bool,
 }
 
+/// Parse a PROSITE PA-line signature into [`ParsedProsite`].
 pub fn parse(pattern: &str) -> Result<ParsedProsite> {
     let mut text = pattern.trim();
     if let Some(stripped) = text.strip_suffix('.') {

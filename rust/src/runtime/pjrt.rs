@@ -32,6 +32,7 @@ use anyhow::{anyhow, bail, Context, Result};
 /// python/compile/model.py::VariantSpec).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct VariantSpec {
+    /// number of SIMD lanes
     pub lanes: usize,
     /// padded state count of the transition table
     pub q: usize,
@@ -41,6 +42,7 @@ pub struct VariantSpec {
     pub t: usize,
     /// input window length
     pub n: usize,
+    /// kernel block size along t
     pub block_t: usize,
 }
 
@@ -62,12 +64,14 @@ impl VariantSpec {
 /// Parsed artifacts/manifest.tsv.
 #[derive(Clone, Debug, Default)]
 pub struct ArtifactManifest {
+    /// lane_match variants by name
     pub lane_match: HashMap<String, VariantSpec>,
     /// padded L-vector width of the compose artifact
     pub compose_qp: Option<usize>,
 }
 
 impl ArtifactManifest {
+    /// Parse `manifest.tsv` from the artifact directory.
     pub fn load(dir: &Path) -> Result<ArtifactManifest> {
         let path = dir.join("manifest.tsv");
         let text = std::fs::read_to_string(&path)
@@ -111,7 +115,9 @@ enum Backend {
 /// A lane_match executable + its shape spec, behind one of two backends.
 pub struct VectorUnit {
     backend: Backend,
+    /// shape configuration of the loaded variant
     pub spec: VariantSpec,
+    /// variant name (manifest key)
     pub name: String,
     /// executions performed (diagnostics / Fig. 13 instruction accounting);
     /// atomic so one unit can serve concurrent matcher threads
@@ -209,6 +215,7 @@ impl VectorUnit {
         PathBuf::from("artifacts")
     }
 
+    /// Backend platform description ("emulated-cpu" or the PJRT platform).
     pub fn platform(&self) -> String {
         match &self.backend {
             Backend::Emulated => "emulated-cpu".to_string(),
@@ -311,6 +318,7 @@ impl VectorUnit {
         }
     }
 
+    /// Padded L-vector width of the compose kernel (0 = unavailable).
     pub fn compose_width(&self) -> usize {
         self.compose_qp
     }

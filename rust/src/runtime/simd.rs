@@ -38,9 +38,12 @@ pub const SCALAR_OPS_PER_SYM: f64 = 5.0;
 /// cmp from counting down).
 pub const VECTOR_OPS_PER_STEP: f64 = 9.0;
 
+/// Result of one vector-unit run (the work model of §6.1).
 #[derive(Clone, Debug)]
 pub struct SimdOutcome {
+    /// delta*(q0, input)
     pub final_state: u32,
+    /// membership verdict
     pub accepted: bool,
     /// symbols a scalar sequential run would execute (= n)
     pub scalar_syms: u64,
@@ -83,6 +86,7 @@ pub struct SimdMatcher {
 }
 
 impl SimdMatcher {
+    /// Build over `dfa`, padding its table to the unit's shape.
     pub fn new(dfa: &Dfa, vu: &Arc<VectorUnit>) -> Result<Self> {
         let padded_table = pad_table(
             &dfa.table,
@@ -98,6 +102,7 @@ impl SimdMatcher {
         })
     }
 
+    /// Enable the I_max,r optimization with `r` reverse lookahead symbols.
     pub fn lookahead(mut self, r: usize) -> Self {
         self.lookahead =
             if r > 0 { Some(Lookahead::analyze(&self.dfa, r)) } else { None };
@@ -111,6 +116,7 @@ impl SimdMatcher {
         self
     }
 
+    /// The speculation parameter m: I_max,r with lookahead, |Q| without.
     pub fn i_max(&self) -> usize {
         self.lookahead
             .as_ref()
@@ -119,14 +125,17 @@ impl SimdMatcher {
             .max(1)
     }
 
+    /// The compiled DFA.
     pub fn dfa(&self) -> &Dfa {
         &self.dfa
     }
 
+    /// Match raw bytes (applies the IBase class mapping first).
     pub fn run(&self, input: &[u8]) -> Result<SimdOutcome> {
         self.run_syms(&self.dfa.map_input(input))
     }
 
+    /// Match pre-mapped dense symbols on the vector unit.
     pub fn run_syms(&self, syms: &[u32]) -> Result<SimdOutcome> {
         let n = syms.len();
         let lanes = self.vu.spec.lanes;

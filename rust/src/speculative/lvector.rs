@@ -24,29 +24,35 @@ impl LVector {
         }
     }
 
+    /// |Q| — the number of entries.
     pub fn len(&self) -> usize {
         self.map.len()
     }
 
+    /// Whether the map has zero entries.
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }
 
+    /// Record delta*(init, chunk) = fin.
     #[inline]
     pub fn set(&mut self, init: u32, fin: u32) {
         self.map[init as usize] = fin;
         self.matched[init as usize] = true;
     }
 
+    /// The mapped final state for `init` (identity if never set).
     #[inline]
     pub fn get(&self, init: u32) -> u32 {
         self.map[init as usize]
     }
 
+    /// Whether `init` was actually matched (vs the identity default).
     pub fn was_matched(&self, init: u32) -> bool {
         self.matched[init as usize]
     }
 
+    /// Number of grounded (matched) entries.
     pub fn matched_count(&self) -> usize {
         self.matched.iter().filter(|&&m| m).count()
     }

@@ -120,8 +120,11 @@ pub(crate) fn plan_chunks(
 /// Per-worker execution record: the inputs to every cost/speedup model.
 #[derive(Clone, Debug)]
 pub struct WorkerWork {
+    /// worker/processor index
     pub proc: usize,
+    /// chunk start offset in the input
     pub chunk_start: usize,
+    /// chunk length in symbols
     pub chunk_len: usize,
     /// initial states matched for this chunk (1 for chunk 0)
     pub states_matched: usize,
@@ -134,11 +137,15 @@ pub struct WorkerWork {
 /// Result of a speculative parallel run.
 #[derive(Clone, Debug)]
 pub struct MatchOutcome {
+    /// delta*(q0, input) — identical to the sequential run
     pub final_state: u32,
+    /// membership verdict
     pub accepted: bool,
     /// partitioning parameter m used (|Q| or I_max,r)
     pub m: usize,
+    /// per-worker execution records
     pub work: Vec<WorkerWork>,
+    /// merge op counts
     pub merge_stats: MergeStats,
     /// per-chunk L-vectors (kept for inspection; small: |P| × |Q|)
     pub lvectors: Vec<LVector>,
@@ -178,6 +185,7 @@ pub struct MatchPlan {
 }
 
 impl MatchPlan {
+    /// A single-processor plan over `dfa`; shape it with the builders.
     pub fn new(dfa: &Dfa) -> Self {
         MatchPlan {
             dfa: dfa.clone(),
@@ -235,6 +243,7 @@ impl MatchPlan {
         self
     }
 
+    /// Override the merge strategy (default: sequential Eq. 8).
     pub fn merge_strategy(mut self, s: MergeStrategy) -> Self {
         self.merge = s;
         self
@@ -247,6 +256,7 @@ impl MatchPlan {
         self
     }
 
+    /// The partitioning parameter m: I_max,r with lookahead, |Q| without.
     pub fn i_max(&self) -> usize {
         self.lookahead
             .as_ref()
@@ -254,6 +264,7 @@ impl MatchPlan {
             .unwrap_or(self.dfa.num_states as usize)
     }
 
+    /// γ = I_max,r / |Q| (Eq. 18).
     pub fn gamma(&self) -> f64 {
         self.i_max() as f64 / self.dfa.num_states as f64
     }

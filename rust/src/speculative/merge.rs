@@ -16,14 +16,18 @@
 
 use super::lvector::LVector;
 
+/// Which merge schedule combines the per-chunk L-vectors.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum MergeStrategy {
+    /// Eq. (8): left-to-right state propagation.
     Sequential,
+    /// Eq. (9): pairwise composition in ⌈log₂|P|⌉ rounds.
     BinaryTree,
     /// cores_per_node = |C| of Fig. 9 (chunks per node leader)
     Hierarchical { cores_per_node: usize },
 }
 
+/// Operation/message counts of one merge (priced by `cluster/`).
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct MergeStats {
     /// Eq. (9) full-map compositions performed

@@ -13,16 +13,21 @@
 /// (end exclusive) for `states_to_match` initial states.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Chunk {
+    /// processor that matches this chunk
     pub proc: usize,
+    /// start offset (inclusive)
     pub start: usize,
+    /// end offset (exclusive)
     pub end: usize,
 }
 
 impl Chunk {
+    /// Chunk length in symbols.
     pub fn len(&self) -> usize {
         self.end - self.start
     }
 
+    /// Whether the chunk is empty.
     pub fn is_empty(&self) -> bool {
         self.start >= self.end
     }

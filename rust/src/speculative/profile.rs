@@ -46,10 +46,11 @@ pub struct CapacityProfile {
     pub sample_syms: usize,
 }
 
-/// Profile the calling host with the standard calibration DFA (the same
-/// `(ab|cd)+e?` shape `experiments::calibrate` uses).  `sample_syms` is
-/// clamped to ≥ 4096 so the timer resolution doesn't swamp the rate.
-pub fn profile_host(runs: usize, sample_syms: usize) -> CapacityProfile {
+/// The shared §4.1 calibration workload: the standard calibration DFA
+/// (the same `(ab|cd)+e?` shape `experiments::calibrate` uses) and a
+/// seeded symbol sample, clamped to ≥ 4096 symbols so the timer
+/// resolution doesn't swamp the rate.
+fn calibration_workload(sample_syms: usize) -> (FlatDfa, Vec<u32>) {
     let dfa = crate::regex::compile::compile_search("(ab|cd)+e?")
         .expect("calibration pattern compiles");
     let flat = FlatDfa::from_dfa(&dfa);
@@ -58,12 +59,109 @@ pub fn profile_host(runs: usize, sample_syms: usize) -> CapacityProfile {
     let sample: Vec<u32> = (0..n)
         .map(|_| rng.below(dfa.num_symbols as u64) as u32)
         .collect();
+    (flat, sample)
+}
+
+/// Profile the calling host with the standard calibration workload
+/// ([`calibration_workload`]).
+pub fn profile_host(runs: usize, sample_syms: usize) -> CapacityProfile {
+    let (flat, sample) = calibration_workload(sample_syms);
     let runs = runs.max(1);
     CapacityProfile {
         syms_per_us: measure_capacity(&flat, &sample, runs),
         runs,
-        sample_syms: n,
+        sample_syms: sample.len(),
     }
+}
+
+/// A **per-worker capacity vector**: one measured matching rate per
+/// worker thread, not one host-wide rate (ROADMAP: "Per-processor
+/// capacity vectors in serving").
+///
+/// On an inhomogeneous machine (big.LITTLE cores, SMT siblings, noisy
+/// neighbours) the workers of one multicore matcher do not match at the
+/// same speed; Eq. (1) weights derived from this vector let
+/// [`crate::speculative::matcher::MatchPlan::weights`] and the two-level
+/// [`crate::engine::shard::ShardPlan`] partition proportionally to what
+/// each worker can actually do.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CapacityVector {
+    /// median matching rate of each worker, symbols per microsecond
+    pub rates: Vec<f64>,
+    /// timed runs each worker's median was taken over
+    pub runs: usize,
+    /// symbols per timed run
+    pub sample_syms: usize,
+}
+
+impl CapacityVector {
+    /// A synthetic vector of `workers` equal rates (simulation harnesses
+    /// and tests; a real vector comes from [`profile_workers`]).
+    pub fn uniform(workers: usize, syms_per_us: f64) -> CapacityVector {
+        assert!(workers >= 1 && syms_per_us > 0.0);
+        CapacityVector {
+            rates: vec![syms_per_us; workers],
+            runs: 0,
+            sample_syms: 0,
+        }
+    }
+
+    /// Number of workers the vector was measured over.
+    pub fn workers(&self) -> usize {
+        self.rates.len()
+    }
+
+    /// Eq. (1) load-balancing weights: each worker's rate normalized by
+    /// the mean rate (`w_k = m_k / mean(m)`), averaging to 1.
+    pub fn weights(&self) -> Vec<f64> {
+        weights_from_capacities(&self.rates)
+    }
+
+    /// Aggregate capacity of all workers, symbols per microsecond.
+    pub fn total(&self) -> f64 {
+        self.rates.iter().sum()
+    }
+
+    /// Mean per-worker rate, symbols per microsecond.
+    pub fn mean(&self) -> f64 {
+        stats::mean(&self.rates)
+    }
+
+    /// Proportional spread of the vector (coefficient of variation): 0
+    /// on a perfectly homogeneous machine; large when some workers are
+    /// much slower than others and weighting matters.
+    pub fn skew(&self) -> f64 {
+        stats::cv(&self.rates)
+    }
+}
+
+/// Measure a per-worker capacity vector: `workers` OS threads each time
+/// the Listing-1 loop **concurrently**, so cache contention and shared
+/// functional units show up in the measured rates exactly as they will
+/// during a real parallel matching run.  Median over `runs` per worker.
+///
+/// `sample_syms` is clamped to ≥ 4096 per worker (timer resolution), and
+/// `runs`/`workers` to ≥ 1.
+pub fn profile_workers(
+    workers: usize,
+    runs: usize,
+    sample_syms: usize,
+) -> CapacityVector {
+    let workers = workers.max(1);
+    let runs = runs.max(1);
+    let (flat, sample) = calibration_workload(sample_syms);
+    let mut rates = vec![0.0f64; workers];
+    std::thread::scope(|scope| {
+        for slot in rates.iter_mut() {
+            let flat = &flat;
+            let sample = &sample;
+            scope.spawn(move || {
+                *slot = measure_capacity(flat, sample, runs);
+            });
+        }
+    });
+    let sample_syms = sample.len();
+    CapacityVector { rates, runs, sample_syms }
 }
 
 /// Eq. (1): normalize capacities by the mean capacity.
@@ -115,6 +213,36 @@ mod tests {
         assert_eq!(c.runs, 1);
         assert_eq!(c.sample_syms, 4096);
         assert!(c.syms_per_us > 0.0);
+    }
+
+    #[test]
+    fn per_worker_vector_measures_every_worker() {
+        let cv = profile_workers(4, 2, 8192);
+        assert_eq!(cv.workers(), 4);
+        for &r in &cv.rates {
+            assert!(r > 1.0 && r < 100_000.0, "rate {r}");
+        }
+        assert!(cv.total() > cv.mean());
+        assert!(cv.skew() >= 0.0);
+        // Eq. (1) over the vector: weights average to 1
+        let w = cv.weights();
+        assert_eq!(w.len(), 4);
+        let avg = w.iter().sum::<f64>() / 4.0;
+        assert!((avg - 1.0).abs() < 1e-12, "avg weight {avg}");
+        // degenerate arguments clamp instead of panicking
+        let one = profile_workers(0, 0, 0);
+        assert_eq!(one.workers(), 1);
+        assert_eq!(one.runs, 1);
+        assert_eq!(one.sample_syms, 4096);
+    }
+
+    #[test]
+    fn uniform_vector_is_flat() {
+        let cv = CapacityVector::uniform(3, 250.0);
+        assert_eq!(cv.rates, vec![250.0; 3]);
+        assert_eq!(cv.weights(), vec![1.0; 3]);
+        assert!(cv.skew().abs() < 1e-12);
+        assert!((cv.total() - 750.0).abs() < 1e-9);
     }
 
     #[test]

@@ -32,12 +32,16 @@ pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (f64, T) {
 
 /// Simple fixed-width table, printed in the style of the paper's tables.
 pub struct Table {
+    /// table caption
     pub title: String,
+    /// column headers
     pub headers: Vec<String>,
+    /// formatted rows
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// An empty table with the given caption and column headers.
     pub fn new(title: &str, headers: &[&str]) -> Self {
         Table {
             title: title.to_string(),
@@ -46,11 +50,13 @@ impl Table {
         }
     }
 
+    /// Append one row (must match the header arity).
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
         self.rows.push(cells);
     }
 
+    /// Render the table to a fixed-width string.
     pub fn render(&self) -> String {
         let ncol = self.headers.len();
         let mut widths: Vec<usize> =
@@ -84,6 +90,7 @@ impl Table {
         out
     }
 
+    /// Print the rendered table to stdout.
     pub fn print(&self) {
         print!("{}", self.render());
         println!();

@@ -4,6 +4,7 @@
 //! states; |Q| reaches ~1300 for PROSITE, so a u64-word bitset is the right
 //! representation for images, unions and cardinalities.
 
+/// Fixed-capacity set of small integers (DFA state ids).
 #[derive(Clone, PartialEq, Eq, Hash, Debug)]
 pub struct BitSet {
     words: Vec<u64>,
@@ -11,44 +12,53 @@ pub struct BitSet {
 }
 
 impl BitSet {
+    /// An empty set with capacity for `bits` elements.
     pub fn new(bits: usize) -> Self {
         BitSet { words: vec![0; bits.div_ceil(64)], bits }
     }
 
+    /// The fixed capacity (largest storable element + 1).
     pub fn capacity(&self) -> usize {
         self.bits
     }
 
+    /// Add `i` to the set.
     #[inline]
     pub fn insert(&mut self, i: usize) {
         debug_assert!(i < self.bits);
         self.words[i / 64] |= 1u64 << (i % 64);
     }
 
+    /// Remove `i` from the set.
     #[inline]
     pub fn remove(&mut self, i: usize) {
         debug_assert!(i < self.bits);
         self.words[i / 64] &= !(1u64 << (i % 64));
     }
 
+    /// Whether `i` is in the set.
     #[inline]
     pub fn contains(&self, i: usize) -> bool {
         debug_assert!(i < self.bits);
         self.words[i / 64] & (1u64 << (i % 64)) != 0
     }
 
+    /// Number of elements (popcount).
     pub fn len(&self) -> usize {
         self.words.iter().map(|w| w.count_ones() as usize).sum()
     }
 
+    /// Whether the set has no elements.
     pub fn is_empty(&self) -> bool {
         self.words.iter().all(|&w| w == 0)
     }
 
+    /// Remove every element.
     pub fn clear(&mut self) {
         self.words.iter_mut().for_each(|w| *w = 0);
     }
 
+    /// In-place union with `other` (equal capacities).
     pub fn union_with(&mut self, other: &BitSet) {
         debug_assert_eq!(self.bits, other.bits);
         for (a, b) in self.words.iter_mut().zip(&other.words) {
@@ -56,6 +66,7 @@ impl BitSet {
         }
     }
 
+    /// In-place intersection with `other` (equal capacities).
     pub fn intersect_with(&mut self, other: &BitSet) {
         debug_assert_eq!(self.bits, other.bits);
         for (a, b) in self.words.iter_mut().zip(&other.words) {
@@ -63,6 +74,7 @@ impl BitSet {
         }
     }
 
+    /// Iterate the elements in increasing order.
     pub fn iter(&self) -> impl Iterator<Item = usize> + '_ {
         self.words.iter().enumerate().flat_map(|(wi, &w)| {
             let mut w = w;
@@ -78,6 +90,7 @@ impl BitSet {
         })
     }
 
+    /// Build a set of capacity `bits` from the given elements.
     pub fn from_iter_cap(bits: usize, it: impl IntoIterator<Item = usize>) -> Self {
         let mut s = BitSet::new(bits);
         for i in it {

@@ -11,10 +11,12 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// A deterministic stream seeded with `seed`.
     pub fn new(seed: u64) -> Self {
         Rng { state: seed.wrapping_add(0x9E3779B97F4A7C15) }
     }
 
+    /// Next raw 64-bit value.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
@@ -42,6 +44,7 @@ impl Rng {
         (m >> 64) as u64
     }
 
+    /// Uniform usize in [0, bound).
     #[inline]
     pub fn usize_below(&mut self, bound: usize) -> usize {
         self.below(bound as u64) as usize
@@ -53,6 +56,7 @@ impl Rng {
         lo + self.below(hi - lo + 1)
     }
 
+    /// Uniform usize in [lo, hi] inclusive.
     pub fn range_usize(&mut self, lo: usize, hi: usize) -> usize {
         self.range_u64(lo as u64, hi as u64) as usize
     }
@@ -85,10 +89,12 @@ impl Rng {
         mean + sd * self.gauss()
     }
 
+    /// A uniformly chosen element of a non-empty slice.
     pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
         &xs[self.usize_below(xs.len())]
     }
 
+    /// Fisher–Yates shuffle in place.
     pub fn shuffle<T>(&mut self, xs: &mut [T]) {
         for i in (1..xs.len()).rev() {
             let j = self.usize_below(i + 1);

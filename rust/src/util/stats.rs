@@ -1,6 +1,7 @@
 //! Descriptive statistics used by the profiler (median capacities, Eq. 1),
 //! the load-balance evaluation (Table 3 stddevs) and the bench harness.
 
+/// Arithmetic mean; 0 for an empty slice.
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return 0.0;
@@ -29,6 +30,7 @@ pub fn cv(xs: &[f64]) -> f64 {
     }
 }
 
+/// Median; 0 for an empty slice.
 pub fn median(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return 0.0;
@@ -43,10 +45,12 @@ pub fn median(xs: &[f64]) -> f64 {
     }
 }
 
+/// Minimum (+∞ for an empty slice).
 pub fn min(xs: &[f64]) -> f64 {
     xs.iter().cloned().fold(f64::INFINITY, f64::min)
 }
 
+/// Maximum (−∞ for an empty slice).
 pub fn max(xs: &[f64]) -> f64 {
     xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
 }

@@ -5,6 +5,7 @@
 use crate::automata::Dfa;
 use crate::util::rng::Rng;
 
+/// Seeded input corpus generator.
 pub struct InputGen {
     rng: Rng,
 }
@@ -18,6 +19,7 @@ const AA_FREQ: [(u8, u32); 20] = [
 ];
 
 impl InputGen {
+    /// A generator with the given seed.
     pub fn new(seed: u64) -> InputGen {
         InputGen { rng: Rng::new(seed) }
     }

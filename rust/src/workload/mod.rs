@@ -19,6 +19,7 @@ pub fn pcre_suite_cached() -> &'static [BenchPattern] {
     SUITE.get_or_init(pcre_suite)
 }
 
+/// Cached PROSITE-like suite (see [`pcre_suite_cached`]).
 pub fn prosite_suite_cached() -> &'static [BenchPattern] {
     static SUITE: OnceLock<Vec<BenchPattern>> = OnceLock::new();
     SUITE.get_or_init(prosite_suite)
@@ -28,20 +29,27 @@ pub fn prosite_suite_cached() -> &'static [BenchPattern] {
 /// input distribution: protein residues vs ASCII text).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SuiteKind {
+    /// PCRE-like text patterns
     Pcre,
+    /// PROSITE protein signatures
     Prosite,
 }
 
 /// A named benchmark pattern compiled to its minimal search DFA.
 #[derive(Clone, Debug)]
 pub struct BenchPattern {
+    /// suite-unique name
     pub name: String,
+    /// source pattern text
     pub pattern: String,
+    /// compiled minimal search DFA
     pub dfa: crate::automata::Dfa,
+    /// which suite it belongs to
     pub kind: SuiteKind,
 }
 
 impl BenchPattern {
+    /// |Q| of the compiled DFA.
     pub fn q(&self) -> usize {
         self.dfa.num_states as usize
     }

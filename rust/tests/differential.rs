@@ -135,7 +135,7 @@ fn policy() -> ExecPolicy {
     }
 }
 
-/// All 7 adapters under test (the sequential reference is compiled
+/// All 8 adapters under test (the sequential reference is compiled
 /// separately).
 fn engines() -> Vec<(&'static str, Engine)> {
     vec![
@@ -144,6 +144,7 @@ fn engines() -> Vec<(&'static str, Engine)> {
         ("spec-adaptive", Engine::Speculative { adaptive: true }),
         ("simd", Engine::Simd { variant: None }),
         ("cloud", Engine::Cloud { nodes: 3 }),
+        ("shard", Engine::Shard { nodes: 3 }),
         ("holub", Engine::HolubStekr),
         ("backtrack", Engine::Backtracking),
         ("grep", Engine::GrepLike),

@@ -21,6 +21,7 @@ fn dfa_engines() -> Vec<Engine> {
         Engine::Speculative { adaptive: true },
         Engine::Simd { variant: None },
         Engine::Cloud { nodes: 3 },
+        Engine::Shard { nodes: 3 },
         Engine::HolubStekr,
     ]
 }

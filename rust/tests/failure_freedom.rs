@@ -140,6 +140,7 @@ fn prop_all_engine_adapters_equivalent() {
             Engine::Speculative { adaptive: true },
             Engine::Simd { variant: None },
             Engine::Cloud { nodes: 2 },
+            Engine::Shard { nodes: 2 },
             Engine::HolubStekr,
             Engine::Backtracking,
             Engine::GrepLike,
@@ -176,7 +177,7 @@ fn prop_all_engine_adapters_equivalent() {
 #[test]
 fn auto_dispatches_at_least_three_engines_across_suites() {
     let t = AutoThresholds::default();
-    let sizes = [1usize << 10, 1 << 18, 1 << 21, 1 << 24];
+    let sizes = [1usize << 10, 1 << 18, 1 << 21, 1 << 24, 1 << 27];
     let mut kinds = std::collections::BTreeSet::new();
     for suite in [pcre_suite_cached(), prosite_suite_cached()] {
         for p in suite {
@@ -190,6 +191,8 @@ fn auto_dispatches_at_least_three_engines_across_suites() {
                     EngineKind::Sequential
                 } else if props.gamma > t.gamma_max {
                     EngineKind::Sequential
+                } else if n >= t.shard_min_n {
+                    EngineKind::Shard
                 } else if n >= t.cloud_min_n {
                     EngineKind::Cloud
                 } else if props.i_max <= t.simd_max_i_max
@@ -216,10 +219,10 @@ fn auto_dispatches_at_least_three_engines_across_suites() {
 }
 
 /// Deterministic dispatch walk on the paper's Fig. 6 DFA (γ = 1/2): the
-/// same pattern is served by all four Auto substrates as the request size
+/// same pattern is served by all five Auto substrates as the request size
 /// grows.
 #[test]
-fn auto_walks_all_four_substrates_with_input_size() {
+fn auto_walks_all_substrates_with_input_size() {
     let fig6 = "(START) |- 0\n0 0 1\n0 1 2\n1 0 1\n1 1 3\n2 0 3\n\
                 2 1 2\n3 0 3\n3 1 3\n3 -| (FINAL)\n";
     let cm = CompiledMatcher::compile(
@@ -235,6 +238,7 @@ fn auto_walks_all_four_substrates_with_input_size() {
     assert_eq!(cm.selection_for(1 << 18).kind, EngineKind::Simd);
     assert_eq!(cm.selection_for(1 << 21).kind, EngineKind::Speculative);
     assert_eq!(cm.selection_for(1 << 24).kind, EngineKind::Cloud);
+    assert_eq!(cm.selection_for(1 << 27).kind, EngineKind::Shard);
 
     // and the dispatched runs stay failure-free at a representative size
     let mut gen = InputGen::new(0xA070);

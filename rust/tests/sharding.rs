@@ -1,0 +1,241 @@
+//! Acceptance tests for hierarchical cross-substrate sharding
+//! (`engine::shard`): a sharded match over a multi-node simulated
+//! cluster with an inhomogeneous capacity vector must return
+//! byte-identical outcomes to `Engine::Seq` on every differential case —
+//! including matches planted across both node and intra-node chunk
+//! boundaries — and skewed capacity vectors must still partition the
+//! full input exactly once.
+
+use specdfa::engine::shard::ShardPlan;
+use specdfa::engine::{
+    CompiledMatcher, Engine, EngineKind, ExecPolicy, Matcher, Pattern,
+};
+use specdfa::util::rng::Rng;
+use specdfa::workload::InputGen;
+
+/// The inhomogeneous topology used throughout: 3 nodes with different
+/// worker counts and per-worker rates (a fast node, a mixed node with
+/// one very slow worker, and a small slow node).
+fn skewed_nodes() -> Vec<Vec<f64>> {
+    vec![
+        vec![2.0, 2.0, 2.0, 2.0],
+        vec![1.0, 1.0, 0.2, 1.0],
+        vec![0.5, 0.5],
+    ]
+}
+
+#[test]
+fn sharded_equals_sequential_across_all_boundaries() {
+    // plant the witness straddling every node boundary and every
+    // intra-node worker boundary (±1 symbol) — the exact positions where
+    // a two-level split/merge bug would flip the outcome
+    let pattern = Pattern::Regex("(ab|cd)+e".to_string());
+    let witness: &[u8] = b"abcde";
+    let n = 60_000;
+
+    let seq =
+        CompiledMatcher::compile(&pattern, Engine::Sequential, policy())
+            .unwrap();
+    let dfa = seq.dfa().clone();
+    let plan = ShardPlan::new(&dfa)
+        .node_capacities(skewed_nodes())
+        .lookahead(2);
+    let layout = plan.layout(n);
+
+    // collect every level-1 and level-2 boundary
+    let mut boundaries: Vec<usize> = Vec::new();
+    for c in &layout.node_chunks {
+        boundaries.push(c.start);
+    }
+    for chunks in &layout.worker_chunks {
+        for c in chunks {
+            boundaries.push(c.start);
+        }
+    }
+    boundaries.retain(|&b| b > 0 && b < n);
+    boundaries.sort_unstable();
+    boundaries.dedup();
+    assert!(
+        boundaries.len() >= 8,
+        "3 nodes x (4+4+2) workers must give many internal boundaries, \
+         got {boundaries:?}"
+    );
+
+    let mut rng = Rng::new(0x5117);
+    let filler = b"abcdex .";
+    for &b in &boundaries {
+        for offset in [-1i64, 0, 1] {
+            let pos = (b as i64 + offset - (witness.len() / 2) as i64)
+                .clamp(0, (n - witness.len()) as i64)
+                as usize;
+            let mut text: Vec<u8> = (0..n)
+                .map(|_| filler[rng.usize_below(filler.len())])
+                .collect();
+            text[pos..pos + witness.len()].copy_from_slice(witness);
+
+            let want = seq.run_bytes(&text).unwrap();
+            assert!(want.accepted, "witness planted at {pos}");
+            let out = plan.run(&text);
+            assert_eq!(
+                out.final_state,
+                want.final_state.unwrap(),
+                "boundary {b} offset {offset}"
+            );
+            assert_eq!(out.accepted, want.accepted);
+        }
+    }
+}
+
+fn policy() -> ExecPolicy {
+    ExecPolicy { processors: 3, lookahead: 2, ..ExecPolicy::default() }
+}
+
+#[test]
+fn shard_engine_differential_through_the_facade() {
+    // the facade's shard engine vs the sequential reference over a
+    // randomized corpus with planted and unplanted cases
+    let patterns =
+        ["(ab|cd)+e?", "a+b", "needle", "[ab]c[cd]", "(ha|ho)+x"];
+    let mut gen = InputGen::new(0x5118);
+    for pat in patterns {
+        let pattern = Pattern::Regex(pat.to_string());
+        let reference =
+            CompiledMatcher::compile(&pattern, Engine::Sequential, policy())
+                .unwrap();
+        let shard = CompiledMatcher::compile(
+            &pattern,
+            Engine::Shard { nodes: 3 },
+            policy(),
+        )
+        .unwrap();
+        for len in [0usize, 1, 7, 1000, 50_000] {
+            let text = gen.ascii_text(len);
+            let want = reference.run_bytes(&text).unwrap();
+            let out = shard.run_bytes(&text).unwrap();
+            assert_eq!(out.engine, EngineKind::Shard);
+            assert_eq!(
+                out.accepted, want.accepted,
+                "pattern={pat:?} len={len}"
+            );
+            assert_eq!(out.final_state, want.final_state);
+        }
+    }
+}
+
+#[test]
+fn prop_skewed_vectors_partition_exactly_once() {
+    // property: whatever the capacity skew, the two-level layout covers
+    // every input symbol exactly once (no gap, no overlap), and the total
+    // matched work accounts for every symbol at least once
+    let dfa = specdfa::compile_search("(ab|cd)+e").unwrap();
+    let mut rng = Rng::new(0x5119);
+    for case in 0..60 {
+        let n = rng.below(1_000_000) as usize;
+        let nodes: Vec<Vec<f64>> = (0..1 + rng.usize_below(5))
+            .map(|_| {
+                (0..1 + rng.usize_below(8))
+                    .map(|_| {
+                        // up to 400x skew between workers
+                        0.01 + rng.f64() * 4.0
+                    })
+                    .collect()
+            })
+            .collect();
+        let plan = ShardPlan::new(&dfa)
+            .node_capacities(nodes.clone())
+            .lookahead(1 + rng.usize_below(3));
+        let layout = plan.layout(n);
+
+        // flatten all worker chunks: they must tile [0, n) in order
+        let mut covered = 0usize;
+        for (node, chunks) in layout.worker_chunks.iter().enumerate() {
+            assert_eq!(
+                chunks.first().unwrap().start,
+                layout.node_chunks[node].start,
+                "case {case}"
+            );
+            for c in chunks {
+                assert_eq!(c.start, covered, "case {case}: gap or overlap");
+                assert!(c.end >= c.start);
+                covered = c.end;
+            }
+            assert_eq!(covered, layout.node_chunks[node].end);
+        }
+        assert_eq!(covered, n, "case {case}: input not fully covered");
+
+        // and the executed work agrees with the layout
+        let syms: Vec<u32> = (0..n.min(20_000))
+            .map(|_| rng.below(dfa.num_symbols as u64) as u32)
+            .collect();
+        let out = plan.run_syms(&syms);
+        let total_chunk_syms: usize =
+            out.work.iter().map(|w| w.chunk_len).sum();
+        assert_eq!(total_chunk_syms, syms.len(), "case {case}");
+        // every worker matched each of its symbols >= 1 time
+        for w in &out.work {
+            assert!(w.states_matched >= 1, "case {case}");
+            assert_eq!(w.syms_matched, w.chunk_len * w.states_matched);
+        }
+    }
+}
+
+#[test]
+fn auto_routes_corpus_scale_requests_to_the_shard_engine() {
+    // calibrate thresholds so "corpus scale" is cheap to reach in a test,
+    // then check Auto both reports and executes the shard selection
+    let mut policy = ExecPolicy::default();
+    policy.thresholds.shard_min_n = 1 << 16;
+    let cm = CompiledMatcher::compile(
+        &Pattern::Regex("(ab|cd)+e".to_string()),
+        Engine::Auto,
+        policy,
+    )
+    .unwrap();
+    let mut gen = InputGen::new(0x511A);
+    let mut corpus = gen.ascii_text(1 << 17);
+    gen.plant(&mut corpus, b"abcde", 3);
+    let out = cm.run_bytes(&corpus).unwrap();
+    assert_eq!(out.engine, EngineKind::Shard);
+    let sel = out.selection.expect("auto reports the selection");
+    assert_eq!(sel.kind, EngineKind::Shard);
+    assert!(sel.reason.contains("two-level"), "{}", sel.reason);
+    assert!(out.accepted, "planted witness must be found");
+
+    // below the corpus threshold Auto must not shard
+    let small = gen.ascii_text(1 << 12);
+    let out = cm.run_bytes(&small).unwrap();
+    assert_ne!(out.engine, EngineKind::Shard);
+}
+
+#[test]
+fn measured_capacity_vector_drives_the_shard_partition() {
+    // a per-worker capacity vector with one slow worker: the slow
+    // worker's chunks must be shorter than its fast peers' in every node
+    let dfa = specdfa::compile_search("(ab|cd)+e").unwrap();
+    let cv = specdfa::speculative::profile::CapacityVector {
+        rates: vec![400.0, 400.0, 100.0, 400.0],
+        runs: 3,
+        sample_syms: 1 << 16,
+    };
+    let plan = ShardPlan::new(&dfa).capacity_vector(3, &cv).lookahead(2);
+    let layout = plan.layout(10_000_000);
+    for (node, chunks) in layout.worker_chunks.iter().enumerate() {
+        if node == 0 {
+            // node 0's first chunk carries the m x stretch; compare the
+            // speculative workers only
+            assert!(
+                chunks[2].len() < chunks[1].len(),
+                "node 0: slow worker chunk {} !< fast {}",
+                chunks[2].len(),
+                chunks[1].len()
+            );
+        } else {
+            let lens: Vec<usize> = chunks.iter().map(|c| c.len()).collect();
+            assert!(
+                lens[2] < lens[0] && lens[2] < lens[1] && lens[2] < lens[3],
+                "node {node}: slow worker must get the shortest chunk: \
+                 {lens:?}"
+            );
+        }
+    }
+}
