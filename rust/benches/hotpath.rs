@@ -32,7 +32,8 @@ fn main() {
 fn scalar_loop() {
     let mut t = Table::new(
         "L3 scalar hot loop (Listing 1)",
-        &["|Q|", "ns/sym (bytes)", "ns/sym (premapped)", "ns/state-sym (x4)", "MB/s (bytes)"],
+        &["|Q|", "width", "ns/sym (bytes)", "ns/sym (premapped)",
+          "ns/state-sym (x8)", "MB/s (bytes)"],
     );
     let mut rng = Rng::new(0x607);
     for target_q in [8usize, 64, 256, 512, 1024] {
@@ -44,14 +45,15 @@ fn scalar_loop() {
         let syms = p.dfa.map_input(&bytes);
         let tb = time_median(1, 5, || flat.run_bytes(flat.start_off, &bytes));
         let ts = time_median(1, 5, || flat.run_syms(flat.start_off, &syms));
-        let t4 = time_median(1, 5, || {
-            flat.run_syms_x4([flat.start_off; 4], &syms)
+        let t8 = time_median(1, 5, || {
+            flat.run_syms_x8([flat.start_off; 8], &syms)
         });
         t.row(vec![
             p.dfa.num_states.to_string(),
+            flat.width().name().to_string(),
             format!("{:.3}", tb * 1e9 / n as f64),
             format!("{:.3}", ts * 1e9 / n as f64),
-            format!("{:.3}", t4 * 1e9 / (4 * n) as f64),
+            format!("{:.3}", t8 * 1e9 / (8 * n) as f64),
             format!("{:.0}", n as f64 / tb / 1e6),
         ]);
     }

@@ -154,13 +154,250 @@ impl Dfa {
     }
 }
 
+/// Storage width of a premultiplied SBase table.  The matching loop only
+/// ever loads *row offsets*, whose maximum value is
+/// `(num_states - 1) * num_symbols`, so most PCRE/PROSITE DFAs fit u16
+/// (and small ones u8) — halving or quartering the table bytes keeps the
+/// hot rows L1-resident (the Fig. 8c table is the only data the inner
+/// loop touches).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Width {
+    /// row offsets fit in one byte (max offset <= 255)
+    U8,
+    /// row offsets fit in two bytes (max offset <= 65535)
+    U16,
+    /// full-width offsets
+    U32,
+}
+
+impl Width {
+    /// Narrowest width whose range holds every row offset of a
+    /// `num_states` x `num_symbols` table.
+    pub fn for_dfa(num_states: u32, num_symbols: u32) -> Width {
+        let max_off =
+            num_states.saturating_sub(1) as u64 * num_symbols as u64;
+        if max_off <= u8::MAX as u64 {
+            Width::U8
+        } else if max_off <= u16::MAX as u64 {
+            Width::U16
+        } else {
+            Width::U32
+        }
+    }
+
+    /// Whether this width's range holds `max_off` — the single
+    /// authoritative fits-check used by construction, tests and the
+    /// bench tiers.
+    pub fn holds(&self, max_off: u64) -> bool {
+        match self {
+            Width::U8 => max_off <= u8::MAX as u64,
+            Width::U16 => max_off <= u16::MAX as u64,
+            Width::U32 => max_off <= u32::MAX as u64,
+        }
+    }
+
+    /// Bytes per table entry.
+    pub fn bytes(&self) -> usize {
+        match self {
+            Width::U8 => 1,
+            Width::U16 => 2,
+            Width::U32 => 4,
+        }
+    }
+
+    /// Stable lowercase name ("u8" / "u16" / "u32").
+    pub fn name(&self) -> &'static str {
+        match self {
+            Width::U8 => "u8",
+            Width::U16 => "u16",
+            Width::U32 => "u32",
+        }
+    }
+}
+
+/// One table word: a premultiplied row offset in a compact width.
+pub(crate) trait SBaseWord: Copy {
+    /// Widen back to the canonical u32 offset.
+    fn to_u32(self) -> u32;
+}
+
+impl SBaseWord for u8 {
+    #[inline(always)]
+    fn to_u32(self) -> u32 {
+        self as u32
+    }
+}
+
+impl SBaseWord for u16 {
+    #[inline(always)]
+    fn to_u32(self) -> u32 {
+        self as u32
+    }
+}
+
+impl SBaseWord for u32 {
+    #[inline(always)]
+    fn to_u32(self) -> u32 {
+        self
+    }
+}
+
+/// Width-compacted SBase storage: the flattened table of premultiplied
+/// row offsets in the narrowest integer type that holds them.
+#[derive(Clone, Debug)]
+pub enum SBase {
+    /// 1-byte entries
+    U8(Vec<u8>),
+    /// 2-byte entries
+    U16(Vec<u16>),
+    /// 4-byte entries
+    U32(Vec<u32>),
+}
+
+/// Run `$body` with `$tab` bound to the concrete `&[T]` table — the
+/// single width dispatch per run (never per symbol).
+macro_rules! with_sbase {
+    ($sb:expr, $tab:ident => $body:expr) => {
+        match $sb {
+            SBase::U8($tab) => $body,
+            SBase::U16($tab) => $body,
+            SBase::U32($tab) => $body,
+        }
+    };
+}
+pub(crate) use with_sbase;
+
+impl SBase {
+    /// Compact a slice of row offsets into `width` storage (every offset
+    /// must fit; guaranteed when `width` covers the table's max offset).
+    pub(crate) fn compact(offsets: &[u32], width: Width) -> SBase {
+        match width {
+            Width::U8 => {
+                SBase::U8(offsets.iter().map(|&o| o as u8).collect())
+            }
+            Width::U16 => {
+                SBase::U16(offsets.iter().map(|&o| o as u16).collect())
+            }
+            Width::U32 => SBase::U32(offsets.to_vec()),
+        }
+    }
+
+    /// Number of table entries.
+    pub fn len(&self) -> usize {
+        with_sbase!(self, tab => tab.len())
+    }
+
+    /// Whether the table has zero entries.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Storage width of the entries.
+    pub fn width(&self) -> Width {
+        match self {
+            SBase::U8(_) => Width::U8,
+            SBase::U16(_) => Width::U16,
+            SBase::U32(_) => Width::U32,
+        }
+    }
+
+    /// Checked entry read (cold paths only — the hot loops run the
+    /// unchecked generic kernels).
+    pub fn get(&self, i: usize) -> u32 {
+        with_sbase!(self, tab => tab[i].to_u32())
+    }
+}
+
+/// A symbol slice proven in-range for a stride of `stride` symbols:
+/// constructed only by [`FlatDfa::validate`], which checks every symbol
+/// once, so the unchecked inner loops stay sound without re-scanning the
+/// same chunk per initial-state group.
+#[derive(Clone, Copy, Debug)]
+pub struct ValidSyms<'a> {
+    syms: &'a [u32],
+    stride: u32,
+}
+
+impl<'a> ValidSyms<'a> {
+    /// The validated symbols.
+    pub fn as_slice(&self) -> &'a [u32] {
+        self.syms
+    }
+
+    /// Number of symbols.
+    pub fn len(&self) -> usize {
+        self.syms.len()
+    }
+
+    /// Whether the slice is empty.
+    pub fn is_empty(&self) -> bool {
+        self.syms.is_empty()
+    }
+
+    /// The alphabet size the symbols were validated against.
+    pub fn stride(&self) -> u32 {
+        self.stride
+    }
+
+    /// A sub-slice (validity is inherited).
+    pub fn slice(&self, range: std::ops::Range<usize>) -> ValidSyms<'a> {
+        ValidSyms { syms: &self.syms[range], stride: self.stride }
+    }
+}
+
+/// The Listing-1 inner loop, monomorphized per table width.
+///
+/// SAFETY (callers): every table entry is `next_state * stride` with
+/// `next_state < num_states`, `start` is a valid row offset, and every
+/// `sym < stride` — so `off + sym < num_states * stride = tab.len()`.
+#[inline(always)]
+fn run_generic<T: SBaseWord>(tab: &[T], start: u32, syms: &[u32]) -> u32 {
+    let mut off = start;
+    for &sym in syms {
+        debug_assert!(((off + sym) as usize) < tab.len());
+        // one add + one indexed load (cf. Listing 1 line 8)
+        off = unsafe { tab.get_unchecked((off + sym) as usize) }.to_u32();
+    }
+    off
+}
+
+/// Eight interleaved Listing-1 chains over one symbol stream,
+/// monomorphized per table width.  Same safety contract as
+/// [`run_generic`].
+#[inline(always)]
+fn run_generic_x8<T: SBaseWord>(
+    tab: &[T],
+    starts: [u32; 8],
+    syms: &[u32],
+) -> [u32; 8] {
+    let mut off = starts;
+    for &sym in syms {
+        // eight independent serial dependent-load chains per iteration:
+        // the CPU overlaps the L1/L2 loads (the scalar analog of the
+        // paper's 8 SIMD lanes)
+        unsafe {
+            off[0] = tab.get_unchecked((off[0] + sym) as usize).to_u32();
+            off[1] = tab.get_unchecked((off[1] + sym) as usize).to_u32();
+            off[2] = tab.get_unchecked((off[2] + sym) as usize).to_u32();
+            off[3] = tab.get_unchecked((off[3] + sym) as usize).to_u32();
+            off[4] = tab.get_unchecked((off[4] + sym) as usize).to_u32();
+            off[5] = tab.get_unchecked((off[5] + sym) as usize).to_u32();
+            off[6] = tab.get_unchecked((off[6] + sym) as usize).to_u32();
+            off[7] = tab.get_unchecked((off[7] + sym) as usize).to_u32();
+        }
+    }
+    off
+}
+
 /// The paper's 1-D flattened representation (Fig. 8c): entries are
 /// premultiplied row offsets (`state * num_symbols`), so the hot loop is
-/// `off = SBase[off + sym]` — one add, one load, no multiply.
+/// `off = SBase[off + sym]` — one add, one load, no multiply.  The table
+/// is stored at the narrowest width that holds its offsets ([`Width`]),
+/// dispatched once per run.
 #[derive(Clone, Debug)]
 pub struct FlatDfa {
-    /// SBase: flattened table of *row offsets*
-    pub sbase: Vec<u32>,
+    /// SBase: width-compacted flattened table of *row offsets*
+    sbase: SBase,
     /// |Σ| — the row stride
     pub num_symbols: u32,
     /// |Q|
@@ -176,12 +413,28 @@ pub struct FlatDfa {
 }
 
 impl FlatDfa {
-    /// Flatten a [`Dfa`] into the premultiplied-offset representation.
+    /// Flatten a [`Dfa`] into the premultiplied-offset representation at
+    /// the narrowest width that fits.
     pub fn from_dfa(dfa: &Dfa) -> FlatDfa {
+        Self::from_dfa_with_width(
+            dfa,
+            Width::for_dfa(dfa.num_states, dfa.num_symbols),
+        )
+    }
+
+    /// Flatten at a forced storage width (bench tiers compare widths on
+    /// one DFA).  Panics if the table's offsets don't fit `width`.
+    pub fn from_dfa_with_width(dfa: &Dfa, width: Width) -> FlatDfa {
         let s = dfa.num_symbols;
-        let sbase: Vec<u32> = dfa.table.iter().map(|&t| t * s).collect();
+        let max_off = dfa.num_states.saturating_sub(1) as u64 * s as u64;
+        assert!(
+            width.holds(max_off),
+            "max row offset {max_off} exceeds {} storage",
+            width.name()
+        );
+        let offsets: Vec<u32> = dfa.table.iter().map(|&t| t * s).collect();
         FlatDfa {
-            sbase,
+            sbase: SBase::compact(&offsets, width),
             num_symbols: s,
             num_states: dfa.num_states,
             start_off: dfa.start * s,
@@ -189,6 +442,21 @@ impl FlatDfa {
             classes: dfa.classes,
             sink_off: dfa.sink().map(|q| q * s),
         }
+    }
+
+    /// Storage width of the SBase table.
+    pub fn width(&self) -> Width {
+        self.sbase.width()
+    }
+
+    /// Bytes occupied by the SBase table (the hot loop's working set).
+    pub fn table_bytes(&self) -> usize {
+        self.sbase.len() * self.width().bytes()
+    }
+
+    /// The width-compacted table (checked access for cold paths).
+    pub fn sbase(&self) -> &SBase {
+        &self.sbase
     }
 
     /// State id of a row offset.
@@ -209,80 +477,131 @@ impl FlatDfa {
         self.accepting[(off / self.num_symbols) as usize]
     }
 
+    /// Validate a symbol slice once (a separate, vectorizable pass that
+    /// stays off the serial dependent-load chain).  The returned
+    /// [`ValidSyms`] proves every symbol < `num_symbols`, so the
+    /// unchecked hot loops accept it without re-scanning — callers that
+    /// match one chunk for many initial states validate once per chunk,
+    /// not once per state group.
+    #[inline]
+    pub fn validate<'a>(&self, syms: &'a [u32]) -> ValidSyms<'a> {
+        let s = self.num_symbols;
+        assert!(
+            syms.iter().all(|&sym| sym < s),
+            "symbol out of range (not produced by map_input?)"
+        );
+        ValidSyms { syms, stride: s }
+    }
+
+    #[inline]
+    fn check_start(&self, off: u32) {
+        let s = self.num_symbols;
+        assert!(off < self.num_states * s && off % s == 0);
+    }
+
+    #[inline]
+    fn check_valid(&self, syms: &ValidSyms<'_>) {
+        assert_eq!(
+            syms.stride, self.num_symbols,
+            "ValidSyms validated against a different alphabet"
+        );
+    }
+
     /// The Listing-1 hot loop over premapped dense symbols.
     /// Returns the final row offset.
     ///
-    /// SAFETY: every entry of `sbase` is `next_state * num_symbols` with
-    /// `next_state < num_states` (guaranteed by Dfa::new + from_dfa), so
-    /// with `sym < num_symbols` the index `off + sym` stays in bounds.
-    /// The symbol slice is validated up front (a separate, vectorizable
-    /// pass that stays off the serial dependent-load chain); the loop
-    /// body is then the paper's C Listing 1 — 2 adds, 1 indexed load,
-    /// 1 cmp, 1 jump — with no bounds-check branch (§Perf: ~2×, 250→500
-    /// MB/s on this host).
+    /// Validates `syms` first; see [`FlatDfa::run_valid`] for the
+    /// validate-once entry point.  The loop body is the paper's C
+    /// Listing 1 — 2 adds, 1 indexed load, 1 cmp, 1 jump — with no
+    /// bounds-check branch (§Perf: ~2×, 250→500 MB/s on this host), over
+    /// the width-compacted table.
     #[inline]
     pub fn run_syms(&self, start_off: u32, syms: &[u32]) -> u32 {
-        let s = self.num_symbols;
-        assert!(
-            syms.iter().all(|&sym| sym < s),
-            "symbol out of range (not produced by map_input?)"
-        );
-        assert!(start_off < self.num_states * s && start_off % s == 0);
-        let sbase = &self.sbase[..];
-        let mut off = start_off;
-        for &sym in syms {
-            debug_assert!(((off + sym) as usize) < sbase.len());
-            // one add + one indexed load (cf. Listing 1 line 8)
-            off = unsafe { *sbase.get_unchecked((off + sym) as usize) };
-        }
-        off
+        self.run_valid(start_off, self.validate(syms))
     }
 
-    /// Four interleaved Listing-1 runs over the same symbol stream.
+    /// [`FlatDfa::run_syms`] over an already-validated slice: the width
+    /// dispatch happens here, once per run.
+    #[inline]
+    pub fn run_valid(&self, start_off: u32, syms: ValidSyms<'_>) -> u32 {
+        self.check_valid(&syms);
+        self.check_start(start_off);
+        with_sbase!(&self.sbase, tab => {
+            run_generic(tab, start_off, syms.as_slice())
+        })
+    }
+
+    /// Eight interleaved Listing-1 runs over the same symbol stream.
     ///
     /// The speculative matcher matches one chunk for up to I_max initial
-    /// states; each run is an independent serial dependent-load chain, so
-    /// interleaving four of them in one pass over the input hides the
-    /// load latency behind ILP (§Perf: ~2.3× over four separate passes)
-    /// — the scalar analog of the paper's 8 SIMD lanes.
+    /// states; each run is an independent serial dependent-load chain,
+    /// so interleaving eight of them in one pass over the input hides
+    /// the load latency behind ILP — the scalar analog of the paper's 8
+    /// SIMD lanes (Listing 2).
     #[inline]
-    pub fn run_syms_x4(&self, starts: [u32; 4], syms: &[u32]) -> [u32; 4] {
-        let s = self.num_symbols;
-        assert!(
-            syms.iter().all(|&sym| sym < s),
-            "symbol out of range (not produced by map_input?)"
-        );
-        for &o in &starts {
-            assert!(o < self.num_states * s && o % s == 0);
-        }
-        let sbase = &self.sbase[..];
-        let [mut a, mut b, mut c, mut d] = starts;
-        for &sym in syms {
-            // four independent chains per iteration: the CPU overlaps
-            // the four L1/L2 loads
-            unsafe {
-                a = *sbase.get_unchecked((a + sym) as usize);
-                b = *sbase.get_unchecked((b + sym) as usize);
-                c = *sbase.get_unchecked((c + sym) as usize);
-                d = *sbase.get_unchecked((d + sym) as usize);
-            }
-        }
-        [a, b, c, d]
+    pub fn run_syms_x8(&self, starts: [u32; 8], syms: &[u32]) -> [u32; 8] {
+        self.run_valid_x8(starts, self.validate(syms))
     }
 
-    /// Hot loop over raw bytes (class mapping fused).  Same safety
-    /// invariant as `run_syms`; `classes[b] < num_symbols` by Dfa::new.
+    /// [`FlatDfa::run_syms_x8`] over an already-validated slice.
+    #[inline]
+    pub fn run_valid_x8(
+        &self,
+        starts: [u32; 8],
+        syms: ValidSyms<'_>,
+    ) -> [u32; 8] {
+        self.check_valid(&syms);
+        for &o in &starts {
+            self.check_start(o);
+        }
+        with_sbase!(&self.sbase, tab => {
+            run_generic_x8(tab, starts, syms.as_slice())
+        })
+    }
+
+    /// Hot loop over raw bytes (class mapping fused).  Sound without a
+    /// validation pass: `classes[b] < num_symbols` by Dfa::new.
     #[inline]
     pub fn run_bytes(&self, start_off: u32, bytes: &[u8]) -> u32 {
-        let sbase = &self.sbase[..];
+        self.check_start(start_off);
         let classes = &self.classes;
-        let mut off = start_off;
-        for &b in bytes {
-            let sym = classes[b as usize] as u32;
-            debug_assert!(((off + sym) as usize) < sbase.len());
-            off = unsafe { *sbase.get_unchecked((off + sym) as usize) };
-        }
-        off
+        with_sbase!(&self.sbase, tab => {
+            let mut off = start_off;
+            for &b in bytes {
+                let sym = classes[b as usize] as u32;
+                debug_assert!(((off + sym) as usize) < tab.len());
+                off = unsafe { tab.get_unchecked((off + sym) as usize) }
+                    .to_u32();
+            }
+            off
+        })
+    }
+
+    /// Byte scan with the Algorithm-1 early exits: stops after the
+    /// symbol that reaches an accepting state or the sink.  Returns
+    /// `(final row offset, bytes consumed)` — the checked kernel behind
+    /// [`crate::baseline::sequential::SequentialMatcher::run_early_exit`].
+    pub fn run_bytes_until(
+        &self,
+        start_off: u32,
+        bytes: &[u8],
+    ) -> (u32, usize) {
+        self.check_start(start_off);
+        let sink = self.sink_off.unwrap_or(u32::MAX);
+        let classes = &self.classes;
+        with_sbase!(&self.sbase, tab => {
+            let mut off = start_off;
+            for (i, &b) in bytes.iter().enumerate() {
+                let sym = classes[b as usize] as u32;
+                debug_assert!(((off + sym) as usize) < tab.len());
+                off = unsafe { tab.get_unchecked((off + sym) as usize) }
+                    .to_u32();
+                if self.is_accepting_off(off) || off == sink {
+                    return (off, i + 1);
+                }
+            }
+            (off, bytes.len())
+        })
     }
 }
 
@@ -358,6 +677,9 @@ pub(crate) mod tests {
                        dfa.accepting[q as usize]);
         }
         assert_eq!(flat.sink_off, Some(2 * 4));
+        // 3 states x 4 symbols: max offset 8 -> u8 storage
+        assert_eq!(flat.width(), Width::U8);
+        assert_eq!(flat.table_bytes(), 12);
     }
 
     #[test]
@@ -414,38 +736,146 @@ pub(crate) mod tests {
 }
 
 #[cfg(test)]
-mod x4_tests {
+mod kernel_tests {
     use super::tests::fig1_dfa;
     use super::*;
+    use crate::speculative::lookahead::tests::random_dfa;
     use crate::util::prop;
 
     #[test]
-    fn prop_x4_equals_four_single_runs() {
+    fn prop_x8_equals_eight_single_runs() {
         let dfa = fig1_dfa();
         let flat = FlatDfa::from_dfa(&dfa);
-        prop::check("run_syms_x4 == 4x run_syms", 40, |rng| {
+        prop::check("run_syms_x8 == 8x run_syms", 40, |rng| {
             let len = rng.below(300) as usize;
             let syms: Vec<u32> = (0..len)
                 .map(|_| rng.below(dfa.num_symbols as u64) as u32)
                 .collect();
-            let starts = [
-                flat.offset_of(rng.below(3) as u32),
-                flat.offset_of(rng.below(3) as u32),
-                flat.offset_of(rng.below(3) as u32),
-                flat.offset_of(rng.below(3) as u32),
-            ];
-            let got = flat.run_syms_x4(starts, &syms);
-            for i in 0..4 {
-                assert_eq!(got[i], flat.run_syms(starts[i], &syms));
+            let mut starts = [0u32; 8];
+            for s in &mut starts {
+                *s = flat.offset_of(rng.below(3) as u32);
+            }
+            let got = flat.run_syms_x8(starts, &syms);
+            for (i, &g) in got.iter().enumerate() {
+                assert_eq!(g, flat.run_syms(starts[i], &syms));
             }
         });
     }
 
     #[test]
     #[should_panic]
-    fn x4_rejects_bad_symbols() {
+    fn x8_rejects_bad_symbols() {
         let dfa = fig1_dfa();
         let flat = FlatDfa::from_dfa(&dfa);
-        flat.run_syms_x4([0; 4], &[99]);
+        flat.run_syms_x8([0; 8], &[99]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn validate_rejects_out_of_range_symbols() {
+        let dfa = fig1_dfa();
+        let flat = FlatDfa::from_dfa(&dfa);
+        flat.validate(&[0, 1, 4]);
+    }
+
+    #[test]
+    fn valid_syms_slicing_keeps_validity() {
+        let dfa = fig1_dfa();
+        let flat = FlatDfa::from_dfa(&dfa);
+        let syms = [0u32, 1, 2, 3, 0, 1];
+        let vs = flat.validate(&syms);
+        assert_eq!(vs.len(), 6);
+        assert!(!vs.is_empty());
+        assert_eq!(vs.stride(), dfa.num_symbols);
+        let mid = vs.slice(2..5);
+        assert_eq!(mid.as_slice(), &[2, 3, 0]);
+        assert_eq!(
+            flat.run_valid(flat.start_off, mid),
+            flat.run_syms(flat.start_off, &syms[2..5])
+        );
+    }
+
+    #[test]
+    fn width_selection_tracks_max_row_offset() {
+        // (num_states - 1) * num_symbols decides the width
+        assert_eq!(Width::for_dfa(4, 64), Width::U8); // 192
+        assert_eq!(Width::for_dfa(5, 64), Width::U16); // 256
+        assert_eq!(Width::for_dfa(1024, 64), Width::U16); // 65472
+        assert_eq!(Width::for_dfa(1025, 64), Width::U32); // 65536
+        assert_eq!(Width::U8.bytes(), 1);
+        assert_eq!(Width::U16.bytes(), 2);
+        assert_eq!(Width::U32.bytes(), 4);
+        assert_eq!(Width::U16.name(), "u16");
+        assert!(Width::U8.holds(255) && !Width::U8.holds(256));
+        assert!(Width::U16.holds(65535) && !Width::U16.holds(65536));
+        assert!(Width::U32.holds(u32::MAX as u64));
+    }
+
+    #[test]
+    #[should_panic]
+    fn forced_width_too_narrow_is_rejected() {
+        // 300 states x 4 symbols: max row offset 1196 cannot fit u8
+        let mut table = Vec::new();
+        for _ in 0..300 {
+            table.extend_from_slice(&[0, 1, 2, 3]);
+        }
+        let big = Dfa::new(300, 4, 0, vec![false; 300], table, [0u8; 256]);
+        FlatDfa::from_dfa_with_width(&big, Width::U8);
+    }
+
+    #[test]
+    fn prop_forced_widths_are_byte_identical() {
+        // THE compaction property: every width that fits returns exactly
+        // the same offsets as the canonical u32 table, on random DFAs
+        prop::check("u8/u16/u32 kernels agree", 40, |rng| {
+            let dfa = random_dfa(rng);
+            let len = rng.below(400) as usize;
+            let syms: Vec<u32> = (0..len)
+                .map(|_| rng.below(dfa.num_symbols as u64) as u32)
+                .collect();
+            let reference =
+                FlatDfa::from_dfa_with_width(&dfa, Width::U32);
+            let auto = FlatDfa::from_dfa(&dfa);
+            let start = auto.offset_of(rng.below(dfa.num_states as u64) as u32);
+            let want = reference.run_syms(start, &syms);
+            assert_eq!(auto.run_syms(start, &syms), want);
+            for width in [Width::U8, Width::U16] {
+                let max_off = (dfa.num_states - 1) as u64
+                    * dfa.num_symbols as u64;
+                if !width.holds(max_off) {
+                    continue;
+                }
+                let compact = FlatDfa::from_dfa_with_width(&dfa, width);
+                assert_eq!(compact.run_syms(start, &syms), want);
+                let mut starts = [start; 8];
+                for s in &mut starts {
+                    *s = compact
+                        .offset_of(rng.below(dfa.num_states as u64) as u32);
+                }
+                assert_eq!(
+                    compact.run_syms_x8(starts, &syms),
+                    reference.run_syms_x8(starts, &syms)
+                );
+            }
+            // run_bytes goes through the same compacted table
+            let bytes: Vec<u8> =
+                (0..len).map(|_| rng.below(256) as u8).collect();
+            assert_eq!(
+                auto.run_bytes(auto.start_off, &bytes),
+                reference.run_bytes(reference.start_off, &bytes)
+            );
+        });
+    }
+
+    #[test]
+    fn sbase_accessors() {
+        let dfa = fig1_dfa();
+        let flat = FlatDfa::from_dfa(&dfa);
+        let sb = flat.sbase();
+        assert_eq!(sb.len(), 12);
+        assert!(!sb.is_empty());
+        assert_eq!(sb.width(), Width::U8);
+        // entry (q0, b) = q1 -> offset 4
+        assert_eq!(sb.get(1), 4);
     }
 }

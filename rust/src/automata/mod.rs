@@ -11,5 +11,5 @@ pub mod nfa;
 pub mod subset;
 
 pub use byteset::ByteSet;
-pub use dfa::{Dfa, FlatDfa};
+pub use dfa::{Dfa, FlatDfa, SBase, ValidSyms, Width};
 pub use nfa::Nfa;

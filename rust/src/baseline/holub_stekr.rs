@@ -68,29 +68,40 @@ impl HolubStekr {
             .map(|i| (n * i / p, n * (i + 1) / p))
             .collect();
 
+        let all_states: Vec<u32> = (0..q as u32).collect();
         let mut lvecs: Vec<LVector> = Vec::with_capacity(p);
         let mut work = Vec::with_capacity(p);
         let mut slots: Vec<Option<(LVector, usize)>> = vec![None; p];
         std::thread::scope(|scope| {
             let flat = &self.flat;
             let dfa = &self.dfa;
+            let all_states = &all_states;
             for (i, (slot, &(s, e))) in
                 slots.iter_mut().zip(&bounds).enumerate()
             {
                 scope.spawn(move || {
-                    let chunk = &syms[s..e];
+                    // validate once per chunk, then the shared 8-wide
+                    // width-compacted kernel; [19] has no structural
+                    // reduction, so collapsing stays off (interval 0)
+                    let chunk = flat.validate(&syms[s..e]);
                     let mut lv = LVector::identity(q);
                     if i == 0 {
-                        let off =
-                            flat.run_syms(flat.offset_of(dfa.start), chunk);
-                        lv.set(dfa.start, flat.state_of(off));
+                        crate::speculative::chunk::match_chunk_states(
+                            flat,
+                            &mut lv,
+                            &[dfa.start],
+                            chunk,
+                            0,
+                        );
                         *slot = Some((lv, chunk.len()));
                     } else {
-                        for init in 0..q as u32 {
-                            let off =
-                                flat.run_syms(flat.offset_of(init), chunk);
-                            lv.set(init, flat.state_of(off));
-                        }
+                        crate::speculative::chunk::match_chunk_states(
+                            flat,
+                            &mut lv,
+                            all_states,
+                            chunk,
+                            0,
+                        );
                         *slot = Some((lv, chunk.len() * q));
                     }
                 });

@@ -64,36 +64,18 @@ impl SequentialMatcher {
     /// characters once the error state has been reached").
     pub fn run_early_exit(&self, bytes: &[u8]) -> SeqOutcome {
         let flat = &self.flat;
-        let sink = flat.sink_off.unwrap_or(u32::MAX);
-        let mut off = flat.start_off;
-        if flat.is_accepting_off(off) {
+        if flat.is_accepting_off(flat.start_off) {
             return SeqOutcome {
-                final_state: flat.state_of(off),
+                final_state: flat.state_of(flat.start_off),
                 accepted: true,
                 consumed: 0,
             };
         }
-        for (i, &b) in bytes.iter().enumerate() {
-            off = flat.sbase[(off + flat.classes[b as usize] as u32) as usize];
-            if flat.is_accepting_off(off) {
-                return SeqOutcome {
-                    final_state: flat.state_of(off),
-                    accepted: true,
-                    consumed: i + 1,
-                };
-            }
-            if off == sink {
-                return SeqOutcome {
-                    final_state: flat.state_of(off),
-                    accepted: false,
-                    consumed: i + 1,
-                };
-            }
-        }
+        let (off, consumed) = flat.run_bytes_until(flat.start_off, bytes);
         SeqOutcome {
             final_state: flat.state_of(off),
             accepted: flat.is_accepting_off(off),
-            consumed: bytes.len(),
+            consumed,
         }
     }
 }

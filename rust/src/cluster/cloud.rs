@@ -224,12 +224,17 @@ impl CloudMatcher {
         let mut work_syms: Vec<usize> = Vec::with_capacity(p);
         for (chunk, set) in chunks.iter().zip(&sets) {
             let mut lv = LVector::identity(q);
-            let chunk_syms = &syms[chunk.start..chunk.end];
-            for &init in set {
-                let off =
-                    self.flat.run_syms(self.flat.offset_of(init), chunk_syms);
-                lv.set(init, self.flat.state_of(off));
-            }
+            // shared 8-wide kernel, validated once per chunk; collapsing
+            // stays off so the simulated timing below keeps pricing the
+            // planned per-worker work
+            let chunk_syms = self.flat.validate(&syms[chunk.start..chunk.end]);
+            crate::speculative::chunk::match_chunk_states(
+                &self.flat,
+                &mut lv,
+                set,
+                chunk_syms,
+                0,
+            );
             work_syms.push(chunk.len() * set.len());
             lvectors.push(lv);
         }

@@ -107,7 +107,8 @@ pub struct SpeculativeAdapter {
 
 impl SpeculativeAdapter {
     /// Build a plan sharing the facade's lookahead analysis; `weights`
-    /// are Eq. (1) per-worker weights (len must equal `processors`).
+    /// are Eq. (1) per-worker weights (len must equal `processors`),
+    /// `collapse_every` the convergence-collapse interval (0 = off).
     pub fn new(
         dfa: &Dfa,
         processors: usize,
@@ -115,10 +116,12 @@ impl SpeculativeAdapter {
         weights: Option<Vec<f64>>,
         merge: Option<MergeStrategy>,
         adaptive: bool,
+        collapse_every: usize,
     ) -> Result<SpeculativeAdapter> {
         let mut plan = MatchPlan::new(dfa)
             .processors(processors)
-            .adaptive_partition(adaptive);
+            .adaptive_partition(adaptive)
+            .collapse_every(collapse_every);
         if let Some(la) = lookahead {
             plan = plan.with_lookahead(la.clone());
         }
@@ -318,12 +321,14 @@ impl ShardAdapter {
     /// `weights` is the per-worker capacity vector measured by
     /// [`crate::speculative::profile::profile_workers`] (len =
     /// `workers_per_node`); `None` assumes homogeneous workers.
+    /// `collapse_every` is the convergence-collapse interval (0 = off).
     pub fn new(
         dfa: &Dfa,
         nodes: usize,
         workers_per_node: usize,
         lookahead: Option<&Lookahead>,
         weights: Option<&[f64]>,
+        collapse_every: usize,
     ) -> Result<ShardAdapter> {
         anyhow::ensure!(nodes >= 1, "shard engine needs >= 1 node");
         anyhow::ensure!(
@@ -343,7 +348,8 @@ impl ShardAdapter {
             None => vec![1.0; workers_per_node],
         };
         let mut plan = ShardPlan::new(dfa)
-            .node_capacities(vec![per_node; nodes]);
+            .node_capacities(vec![per_node; nodes])
+            .collapse_every(collapse_every);
         if let Some(la) = lookahead {
             plan = plan.with_lookahead(la.clone());
         }

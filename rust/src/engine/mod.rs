@@ -192,9 +192,19 @@ pub struct ExecPolicy {
     pub merge: Option<MergeStrategy>,
     /// Fuel bound for the backtracking engine.
     pub backtrack_fuel: u64,
+    /// Convergence-collapse check interval for the speculative chunk
+    /// kernels, in symbols: chains that have converged are merged and
+    /// drop out of the inner loop (outcome unchanged, work reduced).
+    /// 0 disables collapsing.
+    pub collapse_every: usize,
     /// `Engine::Auto` dispatch thresholds.
     pub thresholds: AutoThresholds,
 }
+
+/// Default [`ExecPolicy::collapse_every`]: frequent enough that a
+/// high-γ DFA's chains die within a few blocks, rare enough that the
+/// dedupe scan is noise next to the matching loop.
+pub const DEFAULT_COLLAPSE_EVERY: usize = 256;
 
 impl Default for ExecPolicy {
     fn default() -> ExecPolicy {
@@ -205,6 +215,7 @@ impl Default for ExecPolicy {
             weights: None,
             merge: None,
             backtrack_fuel: 1 << 34,
+            collapse_every: DEFAULT_COLLAPSE_EVERY,
             thresholds: AutoThresholds::default(),
         }
     }
@@ -370,6 +381,7 @@ impl CompiledMatcher {
                 cm.policy.weights.clone(),
                 cm.policy.merge,
                 adaptive,
+                cm.policy.collapse_every,
             )?);
         }
         if auto || matches!(cm.engine, Engine::Simd { .. }) {
@@ -403,6 +415,7 @@ impl CompiledMatcher {
                 cm.policy.processors,
                 la.as_ref(),
                 cm.policy.weights.as_deref(),
+                cm.policy.collapse_every,
             )?);
         }
         if cm.engine == Engine::HolubStekr {

@@ -21,7 +21,15 @@
 //!   made concurrent.
 //! * Compiled patterns live in an **LRU cache** keyed by the pattern, so
 //!   repeated patterns never recompile (DFA construction + lookahead
-//!   analysis dominate small-request latency).
+//!   analysis dominate small-request latency).  A miss marks the pattern
+//!   **in-flight** and compiles outside the cache mutex, so cache hits
+//!   (and unrelated compiles) proceed while a new pattern is compiling;
+//!   concurrent requests for the same new pattern wait instead of
+//!   compiling twice.
+//! * Results are memoized in a small **(pattern, input) → Outcome LRU**
+//!   ([`ServeConfig::cache_outcomes`]): repeated probes — health checks,
+//!   retried requests, hot keys — skip the matching loop entirely
+//!   ([`ServeStats::outcome_hits`] counts the wins).
 //! * At startup — and again every [`ServeConfig::recalibrate_every`]
 //!   requests — the server runs the paper's §4.1 offline profiling step
 //!   ([`crate::speculative::profile::profile_host`]) and installs
@@ -60,6 +68,15 @@ pub struct ServeConfig {
     pub workers: usize,
     /// Capacity of the compiled-pattern LRU cache (patterns, not bytes).
     pub cache_patterns: usize,
+    /// Capacity of the result-level `(pattern, input) -> Outcome` memo
+    /// cache (entries); 0 disables outcome memoization.  Hits are
+    /// decided by exact input equality (an FNV-1a hash pre-filters) and
+    /// invalidated by each re-calibration epoch.
+    pub cache_outcomes: usize,
+    /// Largest input (bytes) the outcome memo will retain — entries
+    /// store the input for exact comparison, so this bounds the memo's
+    /// memory at `cache_outcomes × cache_outcome_max_bytes`.
+    pub cache_outcome_max_bytes: usize,
     /// Maximum requests one worker coalesces into a single batch.
     pub max_batch: usize,
     /// Re-run the §4.1 profiling step after this many served requests;
@@ -89,6 +106,8 @@ impl Default for ServeConfig {
         ServeConfig {
             workers: 4,
             cache_patterns: 64,
+            cache_outcomes: 256,
+            cache_outcome_max_bytes: 1 << 16,
             max_batch: 64,
             recalibrate_every: 4096,
             calibrate_on_start: true,
@@ -162,12 +181,17 @@ pub struct ServeStats {
     pub compiles: u64,
     /// Batches served from an already-compiled cache entry.
     pub cache_hits: u64,
+    /// Requests answered straight from the outcome memo cache (the
+    /// matching loop never ran).
+    pub outcome_hits: u64,
     /// LRU evictions.
     pub evictions: u64,
     /// Profiling runs performed (startup calibration included).
     pub recalibrations: u64,
     /// Patterns currently resident in the cache.
     pub cached_patterns: usize,
+    /// Outcomes currently resident in the memo cache.
+    pub cached_outcomes: usize,
     /// Requests currently queued, not yet taken by a worker.
     pub queue_depth: usize,
     /// The thresholds `Engine::Auto` dispatch currently uses.
@@ -203,9 +227,45 @@ struct CacheEntry {
 
 /// Tiny LRU keyed by `Pattern` equality.  Linear scan: serving caches
 /// hold tens-to-hundreds of patterns, where a scan beats hashing the
-/// whole pattern string per lookup.
+/// whole pattern string per lookup.  `inflight` marks patterns some
+/// worker is currently compiling *outside* this cache's mutex.
 struct PatternCache {
     entries: Vec<CacheEntry>,
+    inflight: Vec<Pattern>,
+    tick: u64,
+}
+
+/// One memoized `(pattern, input) -> Outcome` result.  The input bytes
+/// are retained so a hit requires exact equality — the hash only
+/// pre-filters (FNV-1a is non-cryptographic; a collision must not
+/// return another request's outcome).
+struct OutcomeEntry {
+    pattern: Pattern,
+    input: Vec<u8>,
+    input_hash: u64,
+    /// calibration epoch the outcome was produced under; stale entries
+    /// never hit (routing may differ after re-calibration)
+    epoch: u64,
+    outcome: Outcome,
+    last_used: u64,
+}
+
+impl OutcomeEntry {
+    /// The memo key predicate: epoch + hash pre-filter, then exact
+    /// input and pattern equality.
+    fn matches(&self, epoch: u64, hash: u64, req: &Request) -> bool {
+        self.epoch == epoch
+            && self.input_hash == hash
+            && self.input == req.input
+            && self.pattern == req.pattern
+    }
+}
+
+/// Result-level memo cache, same linear-scan LRU idiom as
+/// [`PatternCache`]: the hash comparison rejects almost every non-match
+/// before the `Pattern` equality check runs.
+struct OutcomeCache {
+    entries: Vec<OutcomeEntry>,
     tick: u64,
 }
 
@@ -217,6 +277,7 @@ struct Counters {
     coalesced: AtomicU64,
     compiles: AtomicU64,
     cache_hits: AtomicU64,
+    outcome_hits: AtomicU64,
     evictions: AtomicU64,
     recalibrations: AtomicU64,
 }
@@ -231,6 +292,7 @@ impl Counters {
             coalesced: AtomicU64::new(0),
             compiles: AtomicU64::new(0),
             cache_hits: AtomicU64::new(0),
+            outcome_hits: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
             recalibrations: AtomicU64::new(0),
         }
@@ -253,6 +315,10 @@ struct Shared {
     /// requests finished (served + failed), drives periodic re-calibration
     done: AtomicU64,
     cache: Mutex<PatternCache>,
+    /// signalled when an in-flight compile finishes, waking workers that
+    /// queued behind the same new pattern
+    compiled: Condvar,
+    outcomes: Mutex<OutcomeCache>,
     counters: Counters,
 }
 
@@ -302,7 +368,16 @@ impl Server {
             shutdown: AtomicBool::new(false),
             epoch: AtomicU64::new(0),
             done: AtomicU64::new(0),
-            cache: Mutex::new(PatternCache { entries: Vec::new(), tick: 0 }),
+            cache: Mutex::new(PatternCache {
+                entries: Vec::new(),
+                inflight: Vec::new(),
+                tick: 0,
+            }),
+            compiled: Condvar::new(),
+            outcomes: Mutex::new(OutcomeCache {
+                entries: Vec::new(),
+                tick: 0,
+            }),
             counters: Counters::new(),
             config,
         });
@@ -377,6 +452,8 @@ impl Server {
     pub fn stats(&self) -> ServeStats {
         // one lock at a time: a snapshot must never stall the workers
         let cached_patterns = self.shared.cache.lock().unwrap().entries.len();
+        let cached_outcomes =
+            self.shared.outcomes.lock().unwrap().entries.len();
         let queue_depth = self.shared.queue.lock().unwrap().len();
         let thresholds = self.shared.thresholds.lock().unwrap().clone();
         let worker_rates = self
@@ -395,9 +472,11 @@ impl Server {
             coalesced: c.coalesced.load(Ordering::Relaxed),
             compiles: c.compiles.load(Ordering::Relaxed),
             cache_hits: c.cache_hits.load(Ordering::Relaxed),
+            outcome_hits: c.outcome_hits.load(Ordering::Relaxed),
             evictions: c.evictions.load(Ordering::Relaxed),
             recalibrations: c.recalibrations.load(Ordering::Relaxed),
             cached_patterns,
+            cached_outcomes,
             queue_depth,
             thresholds,
             worker_rates,
@@ -487,23 +566,75 @@ fn serve_batch(shared: &Shared, batch: Vec<Request>) {
     let c = &shared.counters;
     c.batches.fetch_add(1, Ordering::Relaxed);
     c.coalesced.fetch_add((batch.len() - 1) as u64, Ordering::Relaxed);
-    match matcher_for(shared, &batch[0].pattern) {
+    // memo pre-pass: hits answer without touching the pattern cache, so
+    // a memoized probe never pays a recompile after pattern eviction.
+    // The hash is computed once per request and reused below.
+    let mut misses: Vec<(Request, Option<u64>)> =
+        Vec::with_capacity(batch.len());
+    for req in batch {
+        let hash = memo_hash(shared, &req);
+        match hash.and_then(|h| cached_outcome(shared, &req, h)) {
+            Some(out) => {
+                c.served.fetch_add(1, Ordering::Relaxed);
+                // a dropped Ticket just discards its result
+                let _ = req.reply.send(Ok(out));
+                finish_request(shared);
+            }
+            None => misses.push((req, hash)),
+        }
+    }
+    if misses.is_empty() {
+        return;
+    }
+    // lock-free duplicate detection: a memo re-check under the outcomes
+    // mutex is only worth it when an *earlier miss in this batch* will
+    // have memoized the identical request by the time we reach this one
+    let dup_of_earlier: Vec<bool> = misses
+        .iter()
+        .enumerate()
+        .map(|(i, (req, hash))| {
+            hash.is_some()
+                && misses[..i].iter().any(|(prev, prev_hash)| {
+                    prev_hash == hash && prev.input == req.input
+                })
+        })
+        .collect();
+    match matcher_for(shared, &misses[0].0.pattern) {
         Ok(cm) => {
-            for req in batch {
-                let res = cm
-                    .run_bytes(&req.input)
-                    .map_err(|e| ServeError::new(format!("{e:#}")));
+            for ((req, hash), dup) in misses.into_iter().zip(dup_of_earlier)
+            {
+                let memo = if dup {
+                    hash.and_then(|h| cached_outcome(shared, &req, h))
+                } else {
+                    None
+                };
+                let res = match memo {
+                    Some(out) => Ok(out),
+                    None => {
+                        // capture the epoch BEFORE matching: if a
+                        // re-calibration lands mid-run, the stale-epoch
+                        // insert below can never hit (preserving the
+                        // purge-on-recalibrate invariant)
+                        let epoch = shared.epoch.load(Ordering::SeqCst);
+                        let res = cm
+                            .run_bytes(&req.input)
+                            .map_err(|e| ServeError::new(format!("{e:#}")));
+                        if let (Ok(out), Some(h)) = (&res, hash) {
+                            remember_outcome(shared, &req, h, epoch, out);
+                        }
+                        res
+                    }
+                };
                 match &res {
                     Ok(_) => c.served.fetch_add(1, Ordering::Relaxed),
                     Err(_) => c.failed.fetch_add(1, Ordering::Relaxed),
                 };
-                // a dropped Ticket just discards its result
                 let _ = req.reply.send(res);
                 finish_request(shared);
             }
         }
         Err(e) => {
-            for req in batch {
+            for (req, _) in misses {
                 c.failed.fetch_add(1, Ordering::Relaxed);
                 let _ = req.reply.send(Err(e.clone()));
                 finish_request(shared);
@@ -512,33 +643,154 @@ fn serve_batch(shared: &Shared, batch: Vec<Request>) {
     }
 }
 
-/// Cache lookup / compile.  Compilation happens under the cache lock on
-/// purpose: two workers racing on the same new pattern would otherwise
-/// both pay the DFA construction, and the loser's work would be thrown
-/// away.
+/// The memo hash for a request, or `None` when the request is not
+/// memoizable (memoization off, or the input exceeds the size cap).
+fn memo_hash(shared: &Shared, req: &Request) -> Option<u64> {
+    if shared.config.cache_outcomes == 0
+        || req.input.len() > shared.config.cache_outcome_max_bytes
+    {
+        return None;
+    }
+    Some(crate::util::fnv1a(&req.input))
+}
+
+/// Outcome memo lookup under the current calibration epoch: the hash
+/// pre-filters, the stored input bytes decide (exact equality — a hash
+/// collision must never return another request's outcome).  The
+/// returned outcome is a clone of the memoized run (its `wall_s` etc.
+/// describe the original run).
+fn cached_outcome(
+    shared: &Shared,
+    req: &Request,
+    hash: u64,
+) -> Option<Outcome> {
+    let epoch = shared.epoch.load(Ordering::SeqCst);
+    let mut cache = shared.outcomes.lock().unwrap();
+    cache.tick += 1;
+    let tick = cache.tick;
+    let hit = cache
+        .entries
+        .iter_mut()
+        .find(|e| e.matches(epoch, hash, req))?;
+    hit.last_used = tick;
+    shared.counters.outcome_hits.fetch_add(1, Ordering::Relaxed);
+    Some(hit.outcome.clone())
+}
+
+/// Insert a freshly computed outcome into the memo LRU.  `epoch` is the
+/// calibration epoch read *before* the match ran — an insert that raced
+/// a re-calibration lands stale and can never hit.
+fn remember_outcome(
+    shared: &Shared,
+    req: &Request,
+    hash: u64,
+    epoch: u64,
+    out: &Outcome,
+) {
+    let cap = shared.config.cache_outcomes;
+    let mut cache = shared.outcomes.lock().unwrap();
+    cache.tick += 1;
+    let tick = cache.tick;
+    if let Some(e) =
+        cache.entries.iter_mut().find(|e| e.matches(epoch, hash, req))
+    {
+        // a concurrent worker memoized the same request first
+        e.last_used = tick;
+        return;
+    }
+    if cache.entries.len() >= cap {
+        if let Some(lru) = cache
+            .entries
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, e)| e.last_used)
+            .map(|(i, _)| i)
+        {
+            cache.entries.swap_remove(lru);
+        }
+    }
+    cache.entries.push(OutcomeEntry {
+        pattern: req.pattern.clone(),
+        input: req.input.clone(),
+        input_hash: hash,
+        epoch,
+        outcome: out.clone(),
+        last_used: tick,
+    });
+}
+
+/// Removes this worker's in-flight compile marker and wakes the waiters
+/// on every exit path — including an unwind out of the compile itself,
+/// which would otherwise strand waiters on the condvar forever.
+struct InflightGuard<'a> {
+    shared: &'a Shared,
+    pattern: &'a Pattern,
+}
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        let mut cache = match self.shared.cache.lock() {
+            Ok(cache) => cache,
+            // a poisoned cache just means some holder panicked; the
+            // marker still has to go so waiters can make progress
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        if let Some(pos) =
+            cache.inflight.iter().position(|p| p == self.pattern)
+        {
+            cache.inflight.swap_remove(pos);
+        }
+        drop(cache);
+        self.shared.compiled.notify_all();
+    }
+}
+
+/// Cache lookup / compile.  A miss marks the pattern in-flight and
+/// compiles *outside* the cache mutex, so hits (and compiles of other
+/// patterns) proceed while the DFA construction runs; workers racing on
+/// the same new pattern wait on the condvar instead of duplicating the
+/// compile.
 fn matcher_for(
     shared: &Shared,
     pattern: &Pattern,
 ) -> std::result::Result<Arc<CompiledMatcher>, ServeError> {
-    let epoch = shared.epoch.load(Ordering::SeqCst);
-    let mut cache = shared.cache.lock().unwrap();
-    cache.tick += 1;
-    let tick = cache.tick;
-    if let Some(pos) =
-        cache.entries.iter().position(|e| &e.pattern == pattern)
-    {
-        if cache.entries[pos].epoch == epoch {
-            let entry = &mut cache.entries[pos];
-            entry.last_used = tick;
-            shared.counters.cache_hits.fetch_add(1, Ordering::Relaxed);
-            return Ok(Arc::clone(&entry.matcher));
+    let epoch = loop {
+        let epoch = shared.epoch.load(Ordering::SeqCst);
+        let mut cache = shared.cache.lock().unwrap();
+        cache.tick += 1;
+        let tick = cache.tick;
+        if let Some(pos) =
+            cache.entries.iter().position(|e| &e.pattern == pattern)
+        {
+            if cache.entries[pos].epoch == epoch {
+                let entry = &mut cache.entries[pos];
+                entry.last_used = tick;
+                shared.counters.cache_hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(Arc::clone(&entry.matcher));
+            }
+            // compiled under stale thresholds: drop and recompile below
+            cache.entries.swap_remove(pos);
         }
-        // compiled under stale thresholds: drop and recompile below
-        cache.entries.swap_remove(pos);
-    }
-    // measured per-worker Eq. (1) weights (when available) override the
-    // template's; the multicore and shard partitions then track the
-    // machine's real per-worker capacities
+        if cache.inflight.contains(pattern) {
+            // another worker is compiling this exact pattern: wait for
+            // its insert (or failure) and re-check.  On failure there is
+            // neither entry nor marker, so this worker becomes the
+            // compiler, fails the same way, and reports its own error —
+            // no retry loop.
+            let woken = shared.compiled.wait(cache).unwrap();
+            drop(woken);
+            continue;
+        }
+        cache.inflight.push(pattern.clone());
+        break epoch;
+    };
+    // from here the marker is cleaned up on EVERY exit — normal return,
+    // compile error, or an unwind out of the compile
+    let _inflight = InflightGuard { shared, pattern };
+    // compile with NO cache lock held.  Measured per-worker Eq. (1)
+    // weights (when available) override the template's; the multicore
+    // and shard partitions then track the machine's real per-worker
+    // capacities.
     let weights = shared
         .capacity
         .lock()
@@ -551,11 +803,14 @@ fn matcher_for(
         weights,
         ..shared.config.policy.clone()
     };
-    let cm =
+    let compiled =
         CompiledMatcher::compile(pattern, shared.config.engine.clone(), policy)
-            .map_err(|e| ServeError::new(format!("compile failed: {e:#}")))?;
+            .map_err(|e| ServeError::new(format!("compile failed: {e:#}")));
+    let cm = Arc::new(compiled?);
     shared.counters.compiles.fetch_add(1, Ordering::Relaxed);
-    let cm = Arc::new(cm);
+    let mut cache = shared.cache.lock().unwrap();
+    cache.tick += 1;
+    let tick = cache.tick;
     if cache.entries.len() >= shared.config.cache_patterns {
         if let Some(lru) = cache
             .entries
@@ -574,6 +829,7 @@ fn matcher_for(
         matcher: Arc::clone(&cm),
         last_used: tick,
     });
+    drop(cache);
     Ok(cm)
 }
 
@@ -605,6 +861,10 @@ fn recalibrate(shared: &Shared) {
         *shared.capacity.lock().unwrap() = Some(cv);
     }
     shared.epoch.fetch_add(1, Ordering::SeqCst);
+    // every memoized outcome is now stale (routing may differ under the
+    // fresh thresholds); purge instead of letting dead entries linger in
+    // the scan until LRU pressure displaces them
+    shared.outcomes.lock().unwrap().entries.clear();
     shared.counters.recalibrations.fetch_add(1, Ordering::Relaxed);
 }
 

@@ -38,6 +38,7 @@ use std::time::Instant;
 
 use crate::automata::{Dfa, FlatDfa};
 use crate::cluster::ClusterSpec;
+use crate::speculative::chunk::match_chunk_states;
 use crate::speculative::lookahead::Lookahead;
 use crate::speculative::lvector::LVector;
 use crate::speculative::merge::MergeStats;
@@ -75,8 +76,13 @@ pub struct ShardWork {
     pub chunk_len: usize,
     /// initial states matched for this chunk (1 for the very first chunk)
     pub states_matched: usize,
-    /// chunk_len × states_matched — the worker's real matching work
+    /// the worker's real matching work in symbol steps:
+    /// `chunk_len × states_matched` minus what convergence collapsing
+    /// removed
     pub syms_matched: usize,
+    /// speculative chains merged by convergence collapsing (0 when the
+    /// plan runs without it)
+    pub collapses: usize,
     /// measured wall time of this worker's matching loop, seconds
     pub elapsed_s: f64,
 }
@@ -109,6 +115,11 @@ impl ShardOutcome {
     pub fn speculative_overhead_syms(&self, n: usize) -> usize {
         let total: usize = self.work.iter().map(|w| w.syms_matched).sum();
         total.saturating_sub(n)
+    }
+
+    /// Total chains merged by convergence collapsing across all workers.
+    pub fn collapses(&self) -> usize {
+        self.work.iter().map(|w| w.collapses).sum()
     }
 
     /// Symbols of real matching work done by each node (level-1 shard).
@@ -155,6 +166,7 @@ pub struct ShardPlan {
     r: usize,
     lookahead: Option<Lookahead>,
     use_threads: bool,
+    collapse_every: usize,
 }
 
 impl ShardPlan {
@@ -168,7 +180,17 @@ impl ShardPlan {
             r: 0,
             lookahead: None,
             use_threads: true,
+            collapse_every: 0,
         }
+    }
+
+    /// Enable convergence collapsing with the given check interval in
+    /// symbols (merged chains drop out of the inner loop; the outcome is
+    /// byte-identical).  0 (the default) disables it — see
+    /// [`crate::speculative::matcher::MatchPlan::collapse_every`].
+    pub fn collapse_every(mut self, every: usize) -> ShardPlan {
+        self.collapse_every = every;
+        self
     }
 
     /// Explicit per-node per-worker capacity vectors.  Vector lengths may
@@ -344,6 +366,7 @@ impl ShardPlan {
             }
         }
 
+        let collapse = self.collapse_every;
         let mut results: Vec<(LVector, ShardWork)> =
             Vec::with_capacity(tasks.len());
         if self.use_threads {
@@ -355,8 +378,9 @@ impl ShardPlan {
                     slots.iter_mut().zip(&tasks)
                 {
                     scope.spawn(move || {
-                        *slot =
-                            Some(match_chunk(flat, q, *node, chunk, set, syms));
+                        *slot = Some(match_chunk(
+                            flat, q, *node, chunk, set, syms, collapse,
+                        ));
                     });
                 }
             });
@@ -364,7 +388,7 @@ impl ShardPlan {
         } else {
             for (node, chunk, set) in &tasks {
                 results.push(match_chunk(
-                    &self.flat, q, *node, chunk, set, syms,
+                    &self.flat, q, *node, chunk, set, syms, collapse,
                 ));
             }
         }
@@ -413,8 +437,9 @@ impl ShardPlan {
     }
 }
 
-/// Match one worker chunk for each speculated initial state (the same
-/// 4-way interleaved inner loop as the multicore matcher).
+/// Match one worker chunk for each speculated initial state — the same
+/// shared 8-wide interleaved kernel (with optional convergence
+/// collapsing) as the multicore matcher, validated once per chunk.
 fn match_chunk(
     flat: &FlatDfa,
     q: usize,
@@ -422,27 +447,13 @@ fn match_chunk(
     chunk: &Chunk,
     set: &[u32],
     syms: &[u32],
+    collapse_every: usize,
 ) -> (LVector, ShardWork) {
     let t0 = Instant::now();
     let mut lv = LVector::identity(q);
-    let chunk_syms = &syms[chunk.start..chunk.end];
-    let mut groups = set.chunks_exact(4);
-    for g in &mut groups {
-        let offs = [
-            flat.offset_of(g[0]),
-            flat.offset_of(g[1]),
-            flat.offset_of(g[2]),
-            flat.offset_of(g[3]),
-        ];
-        let fins = flat.run_syms_x4(offs, chunk_syms);
-        for (&init, &fin) in g.iter().zip(&fins) {
-            lv.set(init, flat.state_of(fin));
-        }
-    }
-    for &init in groups.remainder() {
-        let off = flat.run_syms(flat.offset_of(init), chunk_syms);
-        lv.set(init, flat.state_of(off));
-    }
+    let chunk_syms = flat.validate(&syms[chunk.start..chunk.end]);
+    let work =
+        match_chunk_states(flat, &mut lv, set, chunk_syms, collapse_every);
     (
         lv,
         ShardWork {
@@ -451,7 +462,8 @@ fn match_chunk(
             chunk_start: chunk.start,
             chunk_len: chunk.len(),
             states_matched: set.len(),
-            syms_matched: chunk.len() * set.len(),
+            syms_matched: work.syms_matched,
+            collapses: work.collapses,
             elapsed_s: t0.elapsed().as_secs_f64(),
         },
     )
@@ -615,6 +627,36 @@ mod tests {
         assert_eq!(threaded.final_state, inline.final_state);
         assert_eq!(threaded.makespan_syms(), inline.makespan_syms());
         assert_eq!(threaded.work.len(), inline.work.len());
+    }
+
+    #[test]
+    fn collapsing_preserves_outcome_and_reduces_work() {
+        // gamma = 1 (no lookahead) on an exact-match DFA: all chains
+        // sink quickly, so collapsing strictly cuts the executed work
+        let dfa = crate::regex::compile::compile_exact("abcd").unwrap();
+        let mut rng = Rng::new(0x5A52);
+        let syms = random_syms(&mut rng, &dfa, 300_000);
+        let nodes = vec![vec![1.0; 3]; 2];
+        let plain = ShardPlan::new(&dfa)
+            .node_capacities(nodes.clone())
+            .run_syms(&syms);
+        let collapsed = ShardPlan::new(&dfa)
+            .node_capacities(nodes)
+            .collapse_every(128)
+            .run_syms(&syms);
+        assert_eq!(plain.final_state, collapsed.final_state);
+        assert_eq!(plain.accepted, collapsed.accepted);
+        let total = |o: &ShardOutcome| -> usize {
+            o.work.iter().map(|w| w.syms_matched).sum()
+        };
+        assert!(
+            total(&collapsed) < total(&plain),
+            "{} !< {}",
+            total(&collapsed),
+            total(&plain)
+        );
+        assert!(collapsed.collapses() > 0);
+        assert_eq!(plain.collapses(), 0);
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! Subcommands (hand-rolled parser; the build is offline, no clap):
 //!   match       run a membership test on a file or generated input
 //!   serve       run the async batched serving loop on a request stream
+//!   bench       time the kernel tiers / engines, emit BENCH JSON
 //!   experiment  regenerate a paper table/figure (or `all`)
 //!   suite       show the benchmark suites with structural properties
 //!   profile     print host calibration (measured symbol rate)
@@ -14,27 +15,33 @@
 use std::process::ExitCode;
 use std::sync::Arc;
 
-use specdfa::automata::grail;
+use specdfa::automata::{grail, FlatDfa, Width};
 use specdfa::cluster::{CloudMatcher, ClusterSpec};
 use specdfa::engine::{
     CompiledMatcher, Engine, ExecPolicy, Matcher, Pattern, ServeConfig,
     Server,
 };
 use specdfa::experiments;
-use specdfa::regex::compile::{compile_prosite, compile_search};
+use specdfa::regex::compile::{
+    compile_exact, compile_prosite, compile_search,
+};
 use specdfa::runtime::pjrt::VectorUnit;
 use specdfa::runtime::simd::SimdMatcher;
 use specdfa::speculative::lookahead::Lookahead;
 use specdfa::speculative::matcher::MatchPlan;
-use specdfa::util::bench::Table;
+use specdfa::util::bench::{
+    render_bench_json, time_median, time_once, BenchRecord, Table,
+};
+use specdfa::util::rng::Rng;
 use specdfa::workload::{pcre_suite_cached, prosite_suite_cached, InputGen};
-use specdfa::SequentialMatcher;
+use specdfa::{Dfa, SequentialMatcher};
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let result = match args.first().map(String::as_str) {
         Some("match") => cmd_match(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
+        Some("bench") => cmd_bench(&args[1..]),
         Some("experiment") => cmd_experiment(&args[1..]),
         Some("suite") => cmd_suite(&args[1..]),
         Some("profile") => cmd_profile(),
@@ -79,6 +86,8 @@ fn print_usage() {
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 \
          \x20KIND: regex|regex-exact|prosite; INPUT: text, @file, or \
          gen:N)\n\
+         \x20 specdfa bench   [--suite kernels|engines|all] [--quick] \
+         [--json PATH]\n\
          \x20 specdfa experiment <name>|all      names: {}\n\
          \x20 specdfa suite   [pcre|prosite]\n\
          \x20 specdfa profile\n\
@@ -91,7 +100,11 @@ fn print_usage() {
     );
 }
 
-/// Minimal flag parser: --key value pairs.
+/// Flags that take no value (presence == true); everything else is a
+/// --key value pair.
+const BOOL_FLAGS: &[&str] = &["quick"];
+
+/// Minimal flag parser: --key value pairs, plus valueless [`BOOL_FLAGS`].
 fn flags(args: &[String]) -> anyhow::Result<Vec<(String, String)>> {
     let mut out = Vec::new();
     let mut it = args.iter();
@@ -99,6 +112,10 @@ fn flags(args: &[String]) -> anyhow::Result<Vec<(String, String)>> {
         let Some(key) = k.strip_prefix("--") else {
             anyhow::bail!("expected --flag, got {k:?}");
         };
+        if BOOL_FLAGS.contains(&key) {
+            out.push((key.to_string(), "true".to_string()));
+            continue;
+        }
         let v = it
             .next()
             .ok_or_else(|| anyhow::anyhow!("--{key} needs a value"))?;
@@ -109,6 +126,10 @@ fn flags(args: &[String]) -> anyhow::Result<Vec<(String, String)>> {
 
 fn get<'a>(fl: &'a [(String, String)], key: &str) -> Option<&'a str> {
     fl.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+}
+
+fn has_flag(fl: &[(String, String)], key: &str) -> bool {
+    get(fl, key).is_some()
 }
 
 fn compile_from_flags(
@@ -354,13 +375,315 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         stats.coalesced
     );
     println!(
-        "cache: {} compile(s), {} hit(s), {} eviction(s); \
-         {} recalibration(s)",
+        "cache: {} compile(s), {} hit(s), {} outcome hit(s), \
+         {} eviction(s); {} recalibration(s)",
         stats.compiles,
         stats.cache_hits,
+        stats.outcome_hits,
         stats.evictions,
         stats.recalibrations
     );
+    Ok(())
+}
+
+/// One `bench` workload: a compiled DFA plus a realistic premapped
+/// symbol stream.
+struct BenchWorkload {
+    name: &'static str,
+    dfa: Dfa,
+    syms: Vec<u32>,
+}
+
+/// A dense synthetic DFA whose u32 table is large enough to stress the
+/// cache hierarchy (the regime where width compaction pays).
+fn synthetic_dense_dfa(states: u32, symbols: u32, seed: u64) -> Dfa {
+    let mut rng = Rng::new(seed);
+    let table: Vec<u32> = (0..states as u64 * symbols as u64)
+        .map(|_| rng.below(states as u64) as u32)
+        .collect();
+    let mut classes = [0u8; 256];
+    for (b, c) in classes.iter_mut().enumerate() {
+        *c = (b as u32 % symbols) as u8;
+    }
+    let accepting: Vec<bool> = (0..states).map(|q| q % 97 == 0).collect();
+    Dfa::new(states, symbols, 0, accepting, table, classes)
+}
+
+fn kernel_workloads(quick: bool) -> Vec<BenchWorkload> {
+    let n = if quick { 200_000 } else { 2_000_000 };
+    let mut gen = InputGen::new(0xBE4C);
+    let pcre = compile_search("(ab|cd)+e").expect("static pattern");
+    let pcre_syms = pcre.map_input(&gen.ascii_text(n));
+    let prosite =
+        compile_prosite("C-x(2)-C-x(3)-[LIVMFYWC]-x(4)-H-x(3,5)-H.")
+            .expect("static signature");
+    let prosite_syms = prosite.map_input(&gen.protein(n));
+    let dense = synthetic_dense_dfa(1024, 32, 0xDE45E);
+    let dense_syms = gen.uniform_syms(&dense, n);
+    let sink = compile_exact("abcde").expect("static pattern");
+    let sink_syms = sink.map_input(&gen.ascii_text(n));
+    vec![
+        BenchWorkload { name: "pcre-small", dfa: pcre, syms: pcre_syms },
+        BenchWorkload {
+            name: "prosite-sig",
+            dfa: prosite,
+            syms: prosite_syms,
+        },
+        BenchWorkload { name: "dense-1024q", dfa: dense, syms: dense_syms },
+        BenchWorkload { name: "exact-sink", dfa: sink, syms: sink_syms },
+    ]
+}
+
+/// The `kernels` suite: per-width scalar and 8-wide interleaved
+/// Listing-1 tiers on every workload, plus collapse-on/off speculative
+/// runs on the workloads where chains actually converge.
+fn bench_kernels(quick: bool, records: &mut Vec<BenchRecord>) {
+    let (warmup, reps) = if quick { (1, 2) } else { (1, 5) };
+    let procs = if quick { 4 } else { 8 };
+    let mut table = Table::new(
+        "kernel tiers (syms/sec; see BENCH json for full records)",
+        &["workload", "kernel", "width", "table B", "Msyms/s"],
+    );
+    for w in kernel_workloads(quick) {
+        let n = w.syms.len();
+        let max_off =
+            (w.dfa.num_states - 1) as u64 * w.dfa.num_symbols as u64;
+        for width in [Width::U8, Width::U16, Width::U32] {
+            if !width.holds(max_off) {
+                continue;
+            }
+            let flat = FlatDfa::from_dfa_with_width(&w.dfa, width);
+            let vs = flat.validate(&w.syms);
+            let secs =
+                time_median(warmup, reps, || flat.run_valid(flat.start_off, vs));
+            push_kernel_record(
+                records,
+                &mut table,
+                w.name,
+                &format!("seq_{}", width.name()),
+                &flat,
+                n,
+                reps,
+                secs,
+                n as f64 / secs.max(1e-12),
+            );
+            // 8 interleaved chains from 8 (possibly repeated) states
+            let mut starts = [flat.start_off; 8];
+            for (i, s) in starts.iter_mut().enumerate() {
+                *s = flat.offset_of(i as u32 % w.dfa.num_states);
+            }
+            let secs = time_median(warmup, reps, || {
+                flat.run_valid_x8(starts, vs)
+            });
+            push_kernel_record(
+                records,
+                &mut table,
+                w.name,
+                &format!("x8_{}", width.name()),
+                &flat,
+                n,
+                reps,
+                secs,
+                8.0 * n as f64 / secs.max(1e-12),
+            );
+        }
+        // collapse ablation on the structured workloads: exact-sink is
+        // the high-gamma case (no lookahead, all-|Q| speculation),
+        // prosite-sig the realistic lookahead case
+        if w.name == "exact-sink" || w.name == "prosite-sig" {
+            let r = if w.name == "exact-sink" { 0 } else { 4 };
+            for (kernel, every) in
+                [("spec_nocollapse", 0usize), ("spec_collapse", 256)]
+            {
+                let plan = MatchPlan::new(&w.dfa)
+                    .processors(procs)
+                    .lookahead(r)
+                    .collapse_every(every);
+                // the stats run doubles as the warmup
+                let (_, out) = time_once(|| plan.run_syms(&w.syms));
+                let secs = time_median(0, reps, || plan.run_syms(&w.syms));
+                let matched: u64 = out
+                    .work
+                    .iter()
+                    .map(|wk| wk.syms_matched as u64)
+                    .sum();
+                records.push(BenchRecord {
+                    suite: "kernels".to_string(),
+                    workload: w.name.to_string(),
+                    kernel: kernel.to_string(),
+                    width: None,
+                    table_bytes: None,
+                    n_syms: n,
+                    reps,
+                    secs_per_iter: secs,
+                    syms_per_sec: n as f64 / secs.max(1e-12),
+                    syms_matched: Some(matched),
+                    collapses: Some(out.collapses() as u64),
+                });
+                table.row(vec![
+                    w.name.to_string(),
+                    kernel.to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                    format!("{:.1}", n as f64 / secs.max(1e-12) / 1e6),
+                ]);
+            }
+        }
+    }
+    table.print();
+}
+
+#[allow(clippy::too_many_arguments)]
+fn push_kernel_record(
+    records: &mut Vec<BenchRecord>,
+    table: &mut Table,
+    workload: &str,
+    kernel: &str,
+    flat: &FlatDfa,
+    n: usize,
+    reps: usize,
+    secs: f64,
+    syms_per_sec: f64,
+) {
+    records.push(BenchRecord {
+        suite: "kernels".to_string(),
+        workload: workload.to_string(),
+        kernel: kernel.to_string(),
+        width: Some(flat.width().name().to_string()),
+        table_bytes: Some(flat.table_bytes()),
+        n_syms: n,
+        reps,
+        secs_per_iter: secs,
+        syms_per_sec,
+        syms_matched: None,
+        collapses: None,
+    });
+    table.row(vec![
+        workload.to_string(),
+        kernel.to_string(),
+        flat.width().name().to_string(),
+        flat.table_bytes().to_string(),
+        format!("{:.1}", syms_per_sec / 1e6),
+    ]);
+}
+
+/// The `engines` suite: every engine through the facade on a PCRE-like
+/// and a PROSITE workload (collapse on, the serving default).
+fn bench_engines(quick: bool, records: &mut Vec<BenchRecord>) {
+    let reps = if quick { 2 } else { 5 };
+    let n = if quick { 100_000 } else { 1_000_000 };
+    let mut gen = InputGen::new(0xBE4E);
+    let workloads: Vec<(&str, Pattern, Vec<u8>)> = vec![
+        (
+            "pcre-text",
+            Pattern::Regex("(ab|cd)+e".to_string()),
+            gen.ascii_text(n),
+        ),
+        (
+            "prosite-protein",
+            Pattern::Prosite("C-x(2)-C-x(3)-[LIVMFYWC].".to_string()),
+            gen.protein(n),
+        ),
+    ];
+    let engines: Vec<(&str, Engine)> = vec![
+        ("seq", Engine::Sequential),
+        ("spec", Engine::speculative()),
+        ("simd", Engine::simd()),
+        ("shard", Engine::Shard { nodes: 2 }),
+        ("cloud", Engine::Cloud { nodes: 4 }),
+        ("holub", Engine::HolubStekr),
+    ];
+    let mut table = Table::new(
+        "engines (syms/sec through the facade)",
+        &["workload", "engine", "Msyms/s", "makespan", "overhead"],
+    );
+    for (wname, pattern, input) in &workloads {
+        for (ename, engine) in &engines {
+            let policy = ExecPolicy {
+                processors: if quick { 4 } else { 8 },
+                ..ExecPolicy::default()
+            };
+            let cm = match CompiledMatcher::compile(
+                pattern,
+                engine.clone(),
+                policy,
+            ) {
+                Ok(cm) => cm,
+                Err(e) => {
+                    eprintln!("bench: skip {ename} on {wname}: {e:#}");
+                    continue;
+                }
+            };
+            let syms = cm.dfa().map_input(input);
+            // the stats run doubles as the warmup
+            let (_, first) = time_once(|| cm.run_syms(&syms));
+            let out = match first {
+                Ok(out) => out,
+                Err(e) => {
+                    eprintln!("bench: {ename} failed on {wname}: {e:#}");
+                    continue;
+                }
+            };
+            let secs = time_median(0, reps, || cm.run_syms(&syms));
+            let sps = syms.len() as f64 / secs.max(1e-12);
+            records.push(BenchRecord {
+                suite: "engines".to_string(),
+                workload: wname.to_string(),
+                kernel: ename.to_string(),
+                width: None,
+                table_bytes: None,
+                n_syms: syms.len(),
+                reps,
+                secs_per_iter: secs,
+                syms_per_sec: sps,
+                syms_matched: Some((out.n + out.overhead_syms) as u64),
+                collapses: None,
+            });
+            table.row(vec![
+                wname.to_string(),
+                ename.to_string(),
+                format!("{:.1}", sps / 1e6),
+                out.makespan.to_string(),
+                out.overhead_syms.to_string(),
+            ]);
+        }
+    }
+    table.print();
+}
+
+/// `specdfa bench`: reproducible kernel-tier and engine benchmarks with
+/// machine-readable JSON output (the repo's `BENCH_*.json` trajectory).
+fn cmd_bench(args: &[String]) -> anyhow::Result<()> {
+    let fl = flags(args)?;
+    let suite = get(&fl, "suite").unwrap_or("kernels");
+    let quick = has_flag(&fl, "quick");
+    let mut records: Vec<BenchRecord> = Vec::new();
+    match suite {
+        "kernels" => bench_kernels(quick, &mut records),
+        "engines" => bench_engines(quick, &mut records),
+        "all" => {
+            bench_kernels(quick, &mut records);
+            bench_engines(quick, &mut records);
+        }
+        other => anyhow::bail!(
+            "unknown suite {other:?} (expected kernels|engines|all)"
+        ),
+    }
+    if let Some(path) = get(&fl, "json") {
+        let rate = experiments::calibrate::host_syms_per_us();
+        let doc = render_bench_json(
+            suite,
+            quick,
+            Some(rate),
+            &format!(
+                "specdfa bench --suite {suite}{} on this host",
+                if quick { " --quick" } else { "" }
+            ),
+            &records,
+        );
+        std::fs::write(path, doc)?;
+        println!("wrote {} record(s) to {path}", records.len());
+    }
     Ok(())
 }
 

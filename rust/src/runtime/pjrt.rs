@@ -28,6 +28,8 @@ use std::sync::Mutex;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::automata::dfa::{with_sbase, SBase, SBaseWord, Width};
+
 /// Static shape configuration of one lane_match variant (mirrors
 /// python/compile/model.py::VariantSpec).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -112,6 +114,32 @@ enum Backend {
     Pjrt(xla_backend::PjrtState),
 }
 
+/// The unit-resident transition table: the raw padded i32 form (the
+/// PJRT upload and residency-equality format) plus a width-compacted
+/// *premultiplied* offset table that the emulated backend's in-range
+/// fast path steps through — the same compact SBase kernel shape
+/// (one clamp, one add, one indexed load per symbol) as the scalar
+/// matchers.
+struct ResidentTable {
+    raw: Vec<i32>,
+    fast: SBase,
+}
+
+impl ResidentTable {
+    /// Premultiply and compact `raw` (entries are state ids, clamped to
+    /// [0, q) exactly like the reference kernel does per step).
+    fn new(sp: &VariantSpec, raw: Vec<i32>) -> ResidentTable {
+        let q = sp.q as u32;
+        let s = sp.s as u32;
+        let offsets: Vec<u32> = raw
+            .iter()
+            .map(|&t| (t.max(0) as u32).min(q - 1) * s)
+            .collect();
+        let fast = SBase::compact(&offsets, Width::for_dfa(q, s));
+        ResidentTable { raw, fast }
+    }
+}
+
 /// A lane_match executable + its shape spec, behind one of two backends.
 pub struct VectorUnit {
     backend: Backend,
@@ -125,7 +153,7 @@ pub struct VectorUnit {
     /// unit-resident transition table set by `set_table` (the emulated
     /// analog of a device-resident buffer); a mutex because the serving
     /// path shares one compiled matcher across worker threads
-    table: Mutex<Option<Vec<i32>>>,
+    table: Mutex<Option<ResidentTable>>,
     /// padded L-vector width of the compose kernel; 0 = unavailable
     compose_qp: usize,
 }
@@ -188,14 +216,14 @@ impl VectorUnit {
             bail!("table len {} != q*s {}", table.len(), sp.q * sp.s);
         }
         let mut resident = self.table.lock().unwrap();
-        if resident.as_deref() == Some(table) {
+        if resident.as_ref().map(|r| r.raw.as_slice()) == Some(table) {
             return Ok(());
         }
         #[cfg(feature = "xla-pjrt")]
         if let Backend::Pjrt(state) = &self.backend {
             state.set_table(table)?;
         }
-        *resident = Some(table.to_vec());
+        *resident = Some(ResidentTable::new(&self.spec, table.to_vec()));
         Ok(())
     }
 
@@ -263,12 +291,13 @@ impl VectorUnit {
             if table.len() != sp.q * sp.s {
                 bail!("table len {} != q*s {}", table.len(), sp.q * sp.s);
             }
-            if resident.as_deref() != Some(table) {
+            if resident.as_ref().map(|r| r.raw.as_slice()) != Some(table) {
                 #[cfg(feature = "xla-pjrt")]
                 if let Backend::Pjrt(state) = &self.backend {
                     state.set_table(table)?;
                 }
-                *resident = Some(table.to_vec());
+                *resident =
+                    Some(ResidentTable::new(&self.spec, table.to_vec()));
             }
         }
         let out = match &self.backend {
@@ -327,9 +356,18 @@ impl VectorUnit {
 /// The lane_match kernel reference semantics in pure Rust (mirrors
 /// python/compile/kernels/ref.py::lane_dfa_match_py plus the window
 /// gather + clipping of model.py::lane_match).
+///
+/// When a lane's window lies fully inside the input (the common case —
+/// the matcher always issues in-range windows), the lane runs on the
+/// width-compacted premultiplied table instead: the per-step position
+/// clip and the state/table clamps disappear, leaving one symbol clamp,
+/// one add and one indexed load — the Listing-1 shape on the vector
+/// unit.  The out-of-range reference loop is kept byte-identical
+/// (clamped entries are premultiplied at [`ResidentTable::new`] time),
+/// property-tested below.
 fn emu_lane_match(
     sp: &VariantSpec,
-    table: &[i32],
+    table: &ResidentTable,
     inp: &[i32],
     starts: &[i32],
     lens: &[i32],
@@ -339,13 +377,30 @@ fn emu_lane_match(
     (0..sp.lanes)
         .map(|l| {
             let mut state = (init[l].max(0) as usize).min(sp.q - 1);
-            let len = lens[l].clamp(0, sp.t as i32);
+            let len = lens[l].clamp(0, sp.t as i32) as usize;
             let start = starts[l] as i64;
-            for i in 0..len as i64 {
-                let pos = (start + i).clamp(0, n - 1) as usize;
-                let sym = (inp[pos].max(0) as usize).min(sp.s - 1);
-                state =
-                    (table[state * sp.s + sym].max(0) as usize).min(sp.q - 1);
+            if len > 0 && start >= 0 && start as usize + len <= sp.n {
+                let begin = start as usize;
+                let smax = sp.s - 1;
+                state = with_sbase!(&table.fast, tab => {
+                    let mut off = (state * sp.s) as u32;
+                    for &sym in &inp[begin..begin + len] {
+                        let sym = (sym.max(0) as usize).min(smax) as u32;
+                        // off + sym <= (q-1)*s + s-1 < q*s = tab.len()
+                        off = unsafe {
+                            tab.get_unchecked((off + sym) as usize)
+                        }
+                        .to_u32();
+                    }
+                    off as usize / sp.s
+                });
+            } else {
+                for i in 0..len as i64 {
+                    let pos = (start + i).clamp(0, n - 1) as usize;
+                    let sym = (inp[pos].max(0) as usize).min(sp.s - 1);
+                    state = (table.raw[state * sp.s + sym].max(0) as usize)
+                        .min(sp.q - 1);
+                }
             }
             state as i32
         })
@@ -586,6 +641,55 @@ mod tests {
         let la = vec![2, 0, 3, 1];
         let lb = vec![10, 11, 12, 13];
         assert_eq!(vu.compose(&la, &lb).unwrap(), vec![12, 10, 13, 11]);
+    }
+
+    #[test]
+    fn prop_fast_path_equals_reference_semantics() {
+        // the compact premultiplied fast path must agree with the
+        // clip-everything reference loop on every in-range window,
+        // including degenerate tables and out-of-range symbols/states
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xFA57);
+        for case in 0..40 {
+            let q = rng.range_usize(1, 9);
+            let s = rng.range_usize(1, 5);
+            let n = rng.range_usize(1, 24);
+            let spec = VariantSpec { lanes: 4, q, s, t: 16, n, block_t: 4 };
+            let table: Vec<i32> = (0..q * s)
+                .map(|_| match rng.below(8) {
+                    0 => -3,         // clamped to 0
+                    1 => q as i32 + 5, // clamped to q-1
+                    _ => rng.below(q as u64) as i32,
+                })
+                .collect();
+            let vu = VectorUnit::emulated("prop", spec);
+            vu.set_table(&table).unwrap();
+            let inp: Vec<i32> = (0..n)
+                .map(|_| rng.below(s as u64 + 2) as i32 - 1)
+                .collect();
+            let starts: Vec<i32> = (0..4)
+                .map(|_| rng.below(n as u64 + 6) as i32 - 3)
+                .collect();
+            let lens: Vec<i32> =
+                (0..4).map(|_| rng.below(20) as i32 - 2).collect();
+            let init: Vec<i32> =
+                (0..4).map(|_| rng.below(q as u64 + 4) as i32 - 2).collect();
+            let got =
+                vu.lane_match(&[], &inp, &starts, &lens, &init).unwrap();
+            // straight reference computation, no fast path
+            for l in 0..4usize {
+                let mut state = (init[l].max(0) as usize).min(q - 1);
+                let len = lens[l].clamp(0, spec.t as i32);
+                for i in 0..len as i64 {
+                    let pos =
+                        (starts[l] as i64 + i).clamp(0, n as i64 - 1) as usize;
+                    let sym = (inp[pos].max(0) as usize).min(s - 1);
+                    state =
+                        (table[state * s + sym].max(0) as usize).min(q - 1);
+                }
+                assert_eq!(got[l], state as i32, "case {case} lane {l}");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,252 @@
+//! The shared per-chunk matching kernel: 8-wide interleaved Listing-1
+//! chains with periodic **convergence collapsing**.
+//!
+//! Every speculative engine matches one chunk for a set of possible
+//! initial states.  Two structural facts make that cheaper than
+//! `|set| × chunk_len` symbol steps:
+//!
+//! * the chains are independent serial dependent-load chains, so eight
+//!   of them interleave in one pass over the input with the loads
+//!   overlapped ([`FlatDfa::run_valid_x8`]) — the scalar analog of the
+//!   paper's 8 SIMD lanes;
+//! * a DFA is deterministic, so once two chains occupy the same state
+//!   after the same prefix they are **provably identical forever**
+//!   (δ*(q, w) is a function of q and w).  Checking every
+//!   `collapse_every` symbols, merged chains record an alias for their
+//!   initial states and drop out of the inner loop — a pure win that
+//!   preserves failure-freedom by construction, exploiting the same
+//!   §4.2–4.3 structural properties that keep I_max,r small.
+//!
+//! High-γ DFAs (many live initial states) benefit the most: on
+//! synchronizing inputs all chains collapse to one and the remaining
+//! work is a single sequential scan.
+
+use std::collections::HashMap;
+
+use crate::automata::{FlatDfa, ValidSyms};
+use crate::speculative::lvector::LVector;
+
+/// Work accounting of one chunk-match call.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ChunkWork {
+    /// symbol steps actually executed (= `chunk_len × |set|` when no
+    /// chains collapse)
+    pub syms_matched: usize,
+    /// chains merged into an already-live identical chain
+    pub collapses: usize,
+}
+
+/// Advance every live chain offset over one validated block.
+fn step_all(flat: &FlatDfa, offs: &mut [u32], block: ValidSyms<'_>) {
+    let mut groups = offs.chunks_exact_mut(8);
+    for g in &mut groups {
+        let starts = [g[0], g[1], g[2], g[3], g[4], g[5], g[6], g[7]];
+        let fins = flat.run_valid_x8(starts, block);
+        g.copy_from_slice(&fins);
+    }
+    let rem = groups.into_remainder();
+    match rem.len() {
+        0 => {}
+        1 => rem[0] = flat.run_valid(rem[0], block),
+        k => {
+            // 2..=7 chains: pad the x8 kernel with copies of the last
+            // chain — duplicate lanes load the same table entries, so
+            // the interleave (the ILP win) is kept at ~no extra cost
+            let mut starts = [rem[k - 1]; 8];
+            starts[..k].copy_from_slice(rem);
+            let fins = flat.run_valid_x8(starts, block);
+            rem.copy_from_slice(&fins[..k]);
+        }
+    }
+}
+
+/// Merge chains that have converged onto the same row offset, keeping
+/// first-occurrence order.  Survivors inherit the merged chains' initial
+/// states.
+fn collapse_converged(
+    offs: &mut Vec<u32>,
+    members: &mut Vec<Vec<u32>>,
+    collapses: &mut usize,
+) {
+    let mut seen: HashMap<u32, usize> = HashMap::with_capacity(offs.len());
+    let mut w = 0usize;
+    for i in 0..offs.len() {
+        match seen.entry(offs[i]) {
+            std::collections::hash_map::Entry::Occupied(e) => {
+                let keep = *e.get();
+                let merged = std::mem::take(&mut members[i]);
+                members[keep].extend(merged);
+                *collapses += 1;
+            }
+            std::collections::hash_map::Entry::Vacant(e) => {
+                e.insert(w);
+                offs.swap(w, i);
+                members.swap(w, i);
+                w += 1;
+            }
+        }
+    }
+    offs.truncate(w);
+    members.truncate(w);
+}
+
+/// Match one chunk for each initial state in `set`, recording
+/// `δ*(init, chunk)` into `lv`.  `collapse_every` is the convergence
+/// check interval in symbols; 0 disables collapsing (the result is
+/// byte-identical either way — property-tested).
+pub fn match_chunk_states(
+    flat: &FlatDfa,
+    lv: &mut LVector,
+    set: &[u32],
+    chunk: ValidSyms<'_>,
+    collapse_every: usize,
+) -> ChunkWork {
+    let n = chunk.len();
+    let mut offs: Vec<u32> = set.iter().map(|&q| flat.offset_of(q)).collect();
+    if collapse_every == 0 || set.len() < 2 {
+        // no collapsing possible: one pass of 8-wide interleaved chains
+        step_all(flat, &mut offs, chunk);
+        for (&init, &off) in set.iter().zip(&offs) {
+            lv.set(init, flat.state_of(off));
+        }
+        return ChunkWork { syms_matched: n * set.len(), collapses: 0 };
+    }
+
+    let mut members: Vec<Vec<u32>> = set.iter().map(|&q| vec![q]).collect();
+    let mut work = ChunkWork::default();
+    let mut pos = 0usize;
+    // distinct states may still alias at pos 0 if the caller passed a
+    // set with duplicates; collapse up front so the invariant "live
+    // offsets are pairwise distinct" holds from the start
+    collapse_converged(&mut offs, &mut members, &mut work.collapses);
+    while pos < n {
+        if offs.len() == 1 {
+            // fully converged: one sequential scan finishes the chunk
+            offs[0] = flat.run_valid(offs[0], chunk.slice(pos..n));
+            work.syms_matched += n - pos;
+            pos = n;
+            break;
+        }
+        let end = (pos + collapse_every).min(n);
+        step_all(flat, &mut offs, chunk.slice(pos..end));
+        work.syms_matched += (end - pos) * offs.len();
+        pos = end;
+        collapse_converged(&mut offs, &mut members, &mut work.collapses);
+    }
+    for (chain, &off) in members.iter().zip(&offs) {
+        let fin = flat.state_of(off);
+        for &init in chain {
+            lv.set(init, fin);
+        }
+    }
+    work
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::automata::Dfa;
+    use crate::speculative::lookahead::tests::random_dfa;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn run_both(
+        dfa: &Dfa,
+        set: &[u32],
+        syms: &[u32],
+        every: usize,
+    ) -> (LVector, ChunkWork, LVector, ChunkWork) {
+        let flat = FlatDfa::from_dfa(dfa);
+        let q = dfa.num_states as usize;
+        let chunk = flat.validate(syms);
+        let mut plain = LVector::identity(q);
+        let w_plain = match_chunk_states(&flat, &mut plain, set, chunk, 0);
+        let mut coll = LVector::identity(q);
+        let w_coll = match_chunk_states(&flat, &mut coll, set, chunk, every);
+        (plain, w_plain, coll, w_coll)
+    }
+
+    #[test]
+    fn prop_collapsing_is_byte_identical_to_plain() {
+        // THE collapsing property: same L-vector entries, never more work
+        prop::check("collapse == no-collapse (random DFAs)", 60, |rng| {
+            let dfa = random_dfa(rng);
+            let len = rng.range_usize(0, 800);
+            let syms: Vec<u32> = (0..len)
+                .map(|_| rng.below(dfa.num_symbols as u64) as u32)
+                .collect();
+            let all: Vec<u32> = (0..dfa.num_states).collect();
+            let set = &all[..rng.range_usize(1, all.len())];
+            let every = rng.range_usize(1, 300);
+            let (plain, w_plain, coll, w_coll) =
+                run_both(&dfa, set, &syms, every);
+            for &init in set {
+                assert_eq!(coll.get(init), plain.get(init), "init {init}");
+                assert!(coll.was_matched(init));
+            }
+            assert!(
+                w_coll.syms_matched <= w_plain.syms_matched,
+                "collapsing must never add work: {} > {}",
+                w_coll.syms_matched,
+                w_plain.syms_matched
+            );
+        });
+    }
+
+    #[test]
+    fn sink_dfa_collapses_to_one_chain() {
+        // exact-match DFA: every state falls into the sink on mismatch,
+        // so all chains converge and the work drops to ~chunk_len
+        let dfa = crate::regex::compile::compile_exact("abc").unwrap();
+        let mut rng = Rng::new(0xC0);
+        let syms: Vec<u32> = (0..50_000)
+            .map(|_| rng.below(dfa.num_symbols as u64) as u32)
+            .collect();
+        let set: Vec<u32> = (0..dfa.num_states).collect();
+        let (_, w_plain, _, w_coll) = run_both(&dfa, &set, &syms, 64);
+        assert_eq!(w_plain.syms_matched, syms.len() * set.len());
+        assert!(
+            w_coll.syms_matched < w_plain.syms_matched,
+            "high-gamma DFA must collapse: {} !< {}",
+            w_coll.syms_matched,
+            w_plain.syms_matched
+        );
+        assert!(w_coll.collapses >= set.len() - 1);
+        // all chains dead within a few blocks: near-sequential work
+        assert!(
+            w_coll.syms_matched < syms.len() + 64 * set.len() * set.len(),
+            "work {} not near-sequential",
+            w_coll.syms_matched
+        );
+    }
+
+    #[test]
+    fn duplicate_initial_states_collapse_up_front() {
+        let dfa = crate::regex::compile::compile_search("ab").unwrap();
+        let flat = FlatDfa::from_dfa(&dfa);
+        let syms: Vec<u32> = vec![0; 100];
+        let chunk = flat.validate(&syms);
+        let mut lv = LVector::identity(dfa.num_states as usize);
+        let work =
+            match_chunk_states(&flat, &mut lv, &[0, 0, 0], chunk, 10);
+        assert_eq!(work.collapses, 2);
+        assert_eq!(work.syms_matched, 100);
+    }
+
+    #[test]
+    fn empty_chunk_is_identity() {
+        let dfa = crate::regex::compile::compile_search("ab").unwrap();
+        let flat = FlatDfa::from_dfa(&dfa);
+        let chunk = flat.validate(&[]);
+        let set: Vec<u32> = (0..dfa.num_states).collect();
+        for every in [0usize, 16] {
+            let mut lv = LVector::identity(dfa.num_states as usize);
+            let work =
+                match_chunk_states(&flat, &mut lv, &set, chunk, every);
+            assert_eq!(work.syms_matched, 0);
+            for &q in &set {
+                assert_eq!(lv.get(q), q);
+            }
+        }
+    }
+}

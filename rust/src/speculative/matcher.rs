@@ -16,6 +16,7 @@
 use std::time::Instant;
 
 use crate::automata::{Dfa, FlatDfa};
+use crate::speculative::chunk::match_chunk_states;
 use crate::speculative::lookahead::Lookahead;
 use crate::speculative::lvector::LVector;
 use crate::speculative::merge::{self, MergeStats, MergeStrategy};
@@ -128,8 +129,12 @@ pub struct WorkerWork {
     pub chunk_len: usize,
     /// initial states matched for this chunk (1 for chunk 0)
     pub states_matched: usize,
-    /// chunk_len * states_matched
+    /// symbol steps actually executed: `chunk_len * states_matched`
+    /// minus the work convergence collapsing removed
     pub syms_matched: usize,
+    /// speculative chains merged by convergence collapsing (0 when the
+    /// plan runs without it)
+    pub collapses: usize,
     /// measured wall time of this worker's matching loop, seconds
     pub elapsed_s: f64,
 }
@@ -163,6 +168,11 @@ impl MatchOutcome {
         let total: usize = self.work.iter().map(|w| w.syms_matched).sum();
         total.saturating_sub(n)
     }
+
+    /// Total chains merged by convergence collapsing across all workers.
+    pub fn collapses(&self) -> usize {
+        self.work.iter().map(|w| w.collapses).sum()
+    }
 }
 
 /// Configuration builder for speculative parallel matching.
@@ -182,6 +192,7 @@ pub struct MatchPlan {
     merge: MergeStrategy,
     use_threads: bool,
     adaptive: bool,
+    collapse_every: usize,
 }
 
 impl MatchPlan {
@@ -197,7 +208,18 @@ impl MatchPlan {
             merge: MergeStrategy::Sequential,
             use_threads: true,
             adaptive: false,
+            collapse_every: 0,
         }
+    }
+
+    /// Enable convergence collapsing: every `every` symbols, chains that
+    /// have reached the same state are merged (a DFA is deterministic,
+    /// so converged chains stay identical forever) and drop out of the
+    /// inner loop.  The outcome is byte-identical; only `syms_matched`
+    /// shrinks.  0 (the default) disables the check.
+    pub fn collapse_every(mut self, every: usize) -> Self {
+        self.collapse_every = every;
+        self
     }
 
     /// Enable the adaptive (fixed-point) partition extension: chunk
@@ -291,6 +313,7 @@ impl MatchPlan {
             self.adaptive,
         );
 
+        let collapse = self.collapse_every;
         let mut results: Vec<(LVector, WorkerWork)> =
             Vec::with_capacity(chunks.len());
         if self.use_threads {
@@ -302,14 +325,18 @@ impl MatchPlan {
                     slots.iter_mut().zip(chunks.iter().zip(&sets))
                 {
                     scope.spawn(move || {
-                        *slot = Some(match_chunk(flat, q, chunk, set, syms));
+                        *slot = Some(match_chunk(
+                            flat, q, chunk, set, syms, collapse,
+                        ));
                     });
                 }
             });
             results.extend(slots.into_iter().map(Option::unwrap));
         } else {
             for (chunk, set) in chunks.iter().zip(&sets) {
-                results.push(match_chunk(&self.flat, q, chunk, set, syms));
+                results.push(match_chunk(
+                    &self.flat, q, chunk, set, syms, collapse,
+                ));
             }
         }
 
@@ -330,36 +357,22 @@ impl MatchPlan {
 }
 
 /// Match one chunk for each possible initial state (Algorithm 2/3 inner
-/// loops) and record the work done.
+/// loops) and record the work done.  The chunk is validated once here
+/// (not once per state group) and handed to the shared 8-wide kernel
+/// with optional convergence collapsing.
 fn match_chunk(
     flat: &FlatDfa,
     q: usize,
     chunk: &Chunk,
     set: &[u32],
     syms: &[u32],
+    collapse_every: usize,
 ) -> (LVector, WorkerWork) {
     let t0 = Instant::now();
     let mut lv = LVector::identity(q);
-    let chunk_syms = &syms[chunk.start..chunk.end];
-    // 4-way interleaved chains: one pass matches four initial states
-    // with overlapped loads (§Perf; run_syms_x4)
-    let mut groups = set.chunks_exact(4);
-    for g in &mut groups {
-        let offs = [
-            flat.offset_of(g[0]),
-            flat.offset_of(g[1]),
-            flat.offset_of(g[2]),
-            flat.offset_of(g[3]),
-        ];
-        let fins = flat.run_syms_x4(offs, chunk_syms);
-        for (&init, &fin) in g.iter().zip(&fins) {
-            lv.set(init, flat.state_of(fin));
-        }
-    }
-    for &init in groups.remainder() {
-        let off = flat.run_syms(flat.offset_of(init), chunk_syms);
-        lv.set(init, flat.state_of(off));
-    }
+    let chunk_syms = flat.validate(&syms[chunk.start..chunk.end]);
+    let work =
+        match_chunk_states(flat, &mut lv, set, chunk_syms, collapse_every);
     let elapsed_s = t0.elapsed().as_secs_f64();
     (
         lv,
@@ -368,7 +381,8 @@ fn match_chunk(
             chunk_start: chunk.start,
             chunk_len: chunk.len(),
             states_matched: set.len(),
-            syms_matched: chunk.len() * set.len(),
+            syms_matched: work.syms_matched,
+            collapses: work.collapses,
             elapsed_s,
         },
     )
@@ -536,6 +550,51 @@ mod tests {
             .run_syms(&syms);
         assert_eq!(threaded.final_state, inline.final_state);
         assert_eq!(threaded.makespan_syms(), inline.makespan_syms());
+    }
+
+    #[test]
+    fn prop_collapsing_is_failure_free() {
+        // collapsing must never change the outcome, only the work
+        prop::check("collapse == sequential (random DFAs)", 40, |rng| {
+            let dfa = random_dfa(rng);
+            let len = rng.range_usize(0, 1200);
+            let syms = random_syms(rng, &dfa, len);
+            let want = SequentialMatcher::new(&dfa).run_syms(&syms);
+            let plan = MatchPlan::new(&dfa)
+                .processors(rng.range_usize(1, 8))
+                .lookahead(rng.range_usize(0, 3))
+                .collapse_every(rng.range_usize(1, 200));
+            let out = plan.run_syms(&syms);
+            assert_eq!(out.final_state, want.final_state, "len={len}");
+            assert_eq!(out.accepted, want.accepted);
+        });
+    }
+
+    #[test]
+    fn collapsing_reduces_work_on_high_gamma_dfa() {
+        // exact-match DFA without lookahead: every chunk speculates over
+        // all |Q| states (gamma = 1) and every chain falls into the sink
+        // within a few symbols, so collapsing must strictly cut the work
+        let dfa = crate::regex::compile::compile_exact("abcde").unwrap();
+        let mut rng = Rng::new(0xC011);
+        let syms = random_syms(&mut rng, &dfa, 200_000);
+        let plain = MatchPlan::new(&dfa).processors(8).run_syms(&syms);
+        let collapsed = MatchPlan::new(&dfa)
+            .processors(8)
+            .collapse_every(128)
+            .run_syms(&syms);
+        assert_eq!(plain.final_state, collapsed.final_state);
+        let total = |o: &MatchOutcome| -> usize {
+            o.work.iter().map(|w| w.syms_matched).sum()
+        };
+        assert!(
+            total(&collapsed) < total(&plain),
+            "collapsing must reduce syms_matched: {} !< {}",
+            total(&collapsed),
+            total(&plain)
+        );
+        assert!(collapsed.collapses() > 0);
+        assert_eq!(plain.collapses(), 0);
     }
 }
 

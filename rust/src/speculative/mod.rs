@@ -5,11 +5,14 @@
 //! * [`lookahead`]  — initial-state sets and I_max,r, Eqs. (11)–(13),
 //!   Algorithm 4, Lemma 1
 //! * [`lvector`]    — L-vectors (chunk state maps) and Eq. (9) composition
+//! * [`chunk`]      — the shared per-chunk kernel: 8-wide interleaved
+//!   Listing-1 chains with periodic convergence collapsing
 //! * [`matcher`]    — Algorithms 2 and 3 over a thread pool
 //! * [`merge`]      — sequential (Eq. 8), binary-tree, and the paper's
 //!   2-tier hierarchical merging (Fig. 9)
 //! * [`profile`]    — offline capacity profiling, Eq. (1)
 
+pub mod chunk;
 pub mod lookahead;
 pub mod lvector;
 pub mod matcher;

@@ -1,8 +1,10 @@
 //! Mini benchmark harness (criterion is unavailable offline).
 //!
-//! Provides wall-clock timing with warmup + repetition and a fixed-width
-//! table printer used by every `rust/benches/*.rs` target to print the rows
-//! of the paper's tables and figures.
+//! Provides wall-clock timing with warmup + repetition, a fixed-width
+//! table printer used by every `rust/benches/*.rs` target to print the
+//! rows of the paper's tables and figures, and the machine-readable
+//! JSON emitter behind `specdfa bench --json` (the `BENCH_*.json` perf
+//! trajectory; schema [`BENCH_SCHEMA`]).
 
 use std::time::Instant;
 
@@ -107,6 +109,140 @@ pub fn fmt_speedup(s: f64) -> String {
     }
 }
 
+/// Schema identifier of the `specdfa bench --json` output.  Bump only
+/// with a migration note in docs/ARCHITECTURE.md — CI's bench smoke job
+/// fails on schema drift.
+pub const BENCH_SCHEMA: &str = "specdfa-bench-v1";
+
+/// One benchmark measurement destined for the machine-readable JSON.
+#[derive(Clone, Debug)]
+pub struct BenchRecord {
+    /// suite the record belongs to ("kernels" / "engines")
+    pub suite: String,
+    /// workload name (pattern + input distribution)
+    pub workload: String,
+    /// kernel or engine tier measured (e.g. "seq_u16", "x8_u8", "spec")
+    pub kernel: String,
+    /// SBase storage width, where the tier pins one ("u8"/"u16"/"u32")
+    pub width: Option<String>,
+    /// SBase table bytes (the hot working set), where applicable
+    pub table_bytes: Option<usize>,
+    /// input length in symbols
+    pub n_syms: usize,
+    /// timed repetitions (median taken)
+    pub reps: usize,
+    /// median seconds per iteration
+    pub secs_per_iter: f64,
+    /// symbol steps per second executed by the tier
+    pub syms_per_sec: f64,
+    /// total symbol steps the engine actually matched, where tracked
+    pub syms_matched: Option<u64>,
+    /// convergence collapses, where tracked
+    pub collapses: Option<u64>,
+}
+
+/// Escape a string for a JSON string literal (control chars, quotes,
+/// backslashes).
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn json_opt_u64(v: Option<u64>) -> String {
+    match v {
+        Some(x) => x.to_string(),
+        None => "null".to_string(),
+    }
+}
+
+impl BenchRecord {
+    fn to_json(&self) -> String {
+        format!(
+            "{{\"suite\":\"{}\",\"workload\":\"{}\",\"kernel\":\"{}\",\
+             \"width\":{},\"table_bytes\":{},\"n_syms\":{},\"reps\":{},\
+             \"secs_per_iter\":{},\"syms_per_sec\":{},\
+             \"syms_matched\":{},\"collapses\":{}}}",
+            json_escape(&self.suite),
+            json_escape(&self.workload),
+            json_escape(&self.kernel),
+            match &self.width {
+                Some(w) => format!("\"{}\"", json_escape(w)),
+                None => "null".to_string(),
+            },
+            match self.table_bytes {
+                Some(b) => b.to_string(),
+                None => "null".to_string(),
+            },
+            self.n_syms,
+            self.reps,
+            json_f64(self.secs_per_iter),
+            json_f64(self.syms_per_sec),
+            json_opt_u64(self.syms_matched),
+            json_opt_u64(self.collapses),
+        )
+    }
+}
+
+/// Render the full `specdfa bench` JSON document.  `host_syms_per_us`
+/// is the §4.1 calibration rate (None when profiling was skipped);
+/// `provenance` records how the numbers were produced.
+pub fn render_bench_json(
+    suite: &str,
+    quick: bool,
+    host_syms_per_us: Option<f64>,
+    provenance: &str,
+    records: &[BenchRecord],
+) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str(&format!("  \"schema\": \"{BENCH_SCHEMA}\",\n"));
+    out.push_str(&format!("  \"suite\": \"{}\",\n", json_escape(suite)));
+    out.push_str(&format!("  \"quick\": {quick},\n"));
+    out.push_str(&format!(
+        "  \"host\": {{\"profile_syms_per_us\": {}}},\n",
+        match host_syms_per_us {
+            Some(r) => json_f64(r),
+            None => "null".to_string(),
+        }
+    ));
+    out.push_str(&format!(
+        "  \"provenance\": \"{}\",\n",
+        json_escape(provenance)
+    ));
+    out.push_str("  \"results\": [\n");
+    for (i, r) in records.iter().enumerate() {
+        out.push_str("    ");
+        out.push_str(&r.to_json());
+        if i + 1 < records.len() {
+            out.push(',');
+        }
+        out.push('\n');
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -141,5 +277,67 @@ mod tests {
     fn time_median_positive() {
         let t = time_median(1, 3, || (0..1000).sum::<u64>());
         assert!(t >= 0.0);
+    }
+
+    #[test]
+    fn json_escape_handles_specials() {
+        assert_eq!(json_escape("plain"), "plain");
+        assert_eq!(json_escape("a\"b\\c"), "a\\\"b\\\\c");
+        assert_eq!(json_escape("x\ny\t"), "x\\ny\\t");
+        assert_eq!(json_escape("\u{1}"), "\\u0001");
+    }
+
+    #[test]
+    fn bench_json_shape() {
+        let rec = BenchRecord {
+            suite: "kernels".to_string(),
+            workload: "pcre-small".to_string(),
+            kernel: "seq_u8".to_string(),
+            width: Some("u8".to_string()),
+            table_bytes: Some(64),
+            n_syms: 1000,
+            reps: 3,
+            secs_per_iter: 0.5,
+            syms_per_sec: 2000.0,
+            syms_matched: None,
+            collapses: None,
+        };
+        let doc =
+            render_bench_json("kernels", true, Some(500.0), "test", &[rec]);
+        assert!(doc.contains("\"schema\": \"specdfa-bench-v1\""));
+        assert!(doc.contains("\"suite\": \"kernels\""));
+        assert!(doc.contains("\"quick\": true"));
+        assert!(doc.contains("\"profile_syms_per_us\": 500"));
+        assert!(doc.contains("\"kernel\":\"seq_u8\""));
+        assert!(doc.contains("\"width\":\"u8\""));
+        assert!(doc.contains("\"syms_matched\":null"));
+        // crude well-formedness: balanced braces/brackets, no trailing
+        // comma before the closing bracket
+        let braces =
+            doc.matches('{').count() as i64 - doc.matches('}').count() as i64;
+        assert_eq!(braces, 0);
+        assert!(!doc.contains(",\n  ]"));
+        // non-finite numbers must degrade to null, not break the JSON
+        let nan = BenchRecord {
+            secs_per_iter: f64::NAN,
+            syms_per_sec: f64::INFINITY,
+            ..BenchRecord {
+                suite: "kernels".into(),
+                workload: "w".into(),
+                kernel: "k".into(),
+                width: None,
+                table_bytes: None,
+                n_syms: 0,
+                reps: 0,
+                secs_per_iter: 0.0,
+                syms_per_sec: 0.0,
+                syms_matched: Some(7),
+                collapses: Some(1),
+            }
+        };
+        let doc = render_bench_json("kernels", false, None, "t", &[nan]);
+        assert!(doc.contains("\"secs_per_iter\":null"));
+        assert!(doc.contains("\"syms_per_sec\":null"));
+        assert!(doc.contains("\"syms_matched\":7"));
     }
 }

@@ -1,9 +1,41 @@
 //! Self-contained utilities (the build is offline; no external crates
 //! besides `xla`/`anyhow`): PRNG, statistics, a mini property-testing
-//! harness and a mini benchmark harness.
+//! harness, a mini benchmark harness and a tiny non-cryptographic
+//! hasher.
 
 pub mod bench;
 pub mod bitset;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+
+/// FNV-1a over a byte slice: the request-dedup hash of the serving
+/// path's outcome cache.  Non-cryptographic; collisions are further
+/// guarded by keying on `(pattern, input length, hash)`.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1_0000_0000_01B3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod fnv_tests {
+    use super::fnv1a;
+
+    #[test]
+    fn known_vectors() {
+        // standard FNV-1a test vectors
+        assert_eq!(fnv1a(b""), 0xCBF2_9CE4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xAF63_DC4C_8601_EC8C);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171F73967E8);
+    }
+
+    #[test]
+    fn distinguishes_nearby_inputs() {
+        assert_ne!(fnv1a(b"abc"), fnv1a(b"abd"));
+        assert_ne!(fnv1a(b"abc"), fnv1a(b"abca"));
+    }
+}

@@ -110,6 +110,31 @@ impl PatternGen {
             .map(|_| FILLER[self.rng.usize_below(FILLER.len())])
             .collect()
     }
+
+    /// Nested-repeat piece with its witness, up to `depth` grouping
+    /// levels (e.g. `((ab|c)+d){1,3}`).  Only safe for the DFA-only
+    /// corpus: the backtracking comparator would go exponential here.
+    fn nested(&mut self, depth: usize) -> (String, Vec<u8>) {
+        let (p, w) = if depth == 0 {
+            match self.rng.usize_below(3) {
+                0 => self.literal(1 + self.rng.usize_below(2)),
+                1 => self.class(),
+                _ => self.alternation(),
+            }
+        } else {
+            let (a, mut wa) = self.nested(depth - 1);
+            let (b, wb) = self.nested(depth - 1);
+            wa.extend(wb);
+            (format!("{a}{b}"), wa)
+        };
+        // one copy of the body witnesses every quantifier we emit
+        match self.rng.usize_below(4) {
+            0 => (format!("({p})+"), w),
+            1 => (format!("({p}){{1,3}}"), w),
+            2 => (format!("({p})*"), w),
+            _ => (p, w),
+        }
+    }
 }
 
 fn plant(text: &mut [u8], witness: &[u8], pos: usize) {
@@ -288,6 +313,102 @@ fn randomized_corpus_all_engines_agree_with_sequential() {
         "corpus must exercise both verdicts: {accepts} accepts, \
          {rejects} rejects over {cases} cases"
     );
+}
+
+/// The DFA-table engines (final-state comparable, no pattern AST
+/// needed).  Nested repeats and anchored/exact patterns are fair game
+/// here — the AST comparators that constrain the main corpus are out.
+fn dfa_only_engines() -> Vec<(&'static str, Engine)> {
+    vec![
+        ("seq", Engine::Sequential),
+        ("spec", Engine::Speculative { adaptive: false }),
+        ("spec-adaptive", Engine::Speculative { adaptive: true }),
+        ("simd", Engine::Simd { variant: None }),
+        ("cloud", Engine::Cloud { nodes: 3 }),
+        ("shard", Engine::Shard { nodes: 3 }),
+        ("holub", Engine::HolubStekr),
+    ]
+}
+
+#[test]
+fn dfa_only_corpus_nested_repeats_and_anchors() {
+    // the deepened fuzz mode: nested repeats, start/end anchors, and
+    // whole-input (RegexExact) semantics — checked across every DFA
+    // engine, with the serving default convergence collapsing on
+    let mut gen = PatternGen { rng: Rng::new(0xD1FF_4202) };
+    let mut cases = 0usize;
+    for round in 0..24usize {
+        let (core, witness) = gen.nested(2);
+        let (pattern, assert_planted) = match round % 4 {
+            0 => (Pattern::Regex(core.clone()), true),
+            1 => (Pattern::Regex(format!("^{core}")), false),
+            2 => (Pattern::Regex(format!("{core}$")), false),
+            _ => (Pattern::RegexExact(core.clone()), false),
+        };
+        let reference =
+            CompiledMatcher::compile(&pattern, Engine::Sequential, policy())
+                .unwrap_or_else(|e| panic!("compile {core:?}: {e:#}"));
+        let matchers: Vec<(&'static str, CompiledMatcher)> =
+            dfa_only_engines()
+                .into_iter()
+                .map(|(name, engine)| {
+                    let cm =
+                        CompiledMatcher::compile(&pattern, engine, policy())
+                            .unwrap_or_else(|e| {
+                                panic!("compile {core:?} for {name}: {e:#}")
+                            });
+                    (name, cm)
+                })
+                .collect();
+
+        let n = 900 + gen.rng.usize_below(600);
+        let mut planted = gen.text(n);
+        plant(
+            &mut planted,
+            &witness,
+            (n / PROCS).saturating_sub(witness.len() / 2),
+        );
+        let mut at_start = gen.text(n);
+        plant(&mut at_start, &witness, 0);
+        let unplanted = gen.text(n);
+        let inputs: [(&str, &[u8]); 5] = [
+            ("empty", b""),
+            ("witness", &witness),
+            ("boundary-planted", &planted),
+            ("start-planted", &at_start),
+            ("unplanted", &unplanted),
+        ];
+        for (label, input) in inputs {
+            let label = format!("{label} (round {round})");
+            let accepted = check_case(
+                &core,
+                &reference,
+                &matchers,
+                input,
+                &label,
+            );
+            cases += 1;
+            if assert_planted
+                && !witness.is_empty()
+                && (label.starts_with("boundary-planted")
+                    || label.starts_with("witness"))
+            {
+                assert!(
+                    accepted,
+                    "planted witness must be found: {core:?} {label}"
+                );
+            }
+        }
+        // whole-input semantics: the witness itself is in the language
+        if matches!(pattern, Pattern::RegexExact(_)) {
+            let out = reference.run_bytes(&witness).unwrap();
+            assert!(
+                out.accepted,
+                "witness {witness:?} must satisfy {core:?} exactly"
+            );
+        }
+    }
+    assert!(cases >= 100, "need >= 100 DFA-only cases, got {cases}");
 }
 
 #[test]

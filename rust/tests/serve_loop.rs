@@ -202,6 +202,91 @@ fn many_producers_keep_per_producer_order_and_hit_the_cache() {
 }
 
 #[test]
+fn outcome_cache_memoizes_repeated_probes() {
+    let server = Server::start(test_config(1)).unwrap();
+    let pattern = Pattern::Regex("ab+c".to_string());
+    let first = server
+        .submit(pattern.clone(), &b"xxabbczz"[..])
+        .wait()
+        .unwrap();
+    assert!(first.accepted);
+    // the identical probe again: must be a memo hit with the same verdict
+    let second = server
+        .submit(pattern.clone(), &b"xxabbczz"[..])
+        .wait()
+        .unwrap();
+    assert_eq!(second.accepted, first.accepted);
+    assert_eq!(second.final_state, first.final_state);
+    assert_eq!(second.n, first.n);
+    // a different input must NOT hit
+    let other =
+        server.submit(pattern, &b"nothing here"[..]).wait().unwrap();
+    assert!(!other.accepted);
+    let stats = server.shutdown();
+    assert_eq!(stats.served, 3);
+    assert_eq!(stats.outcome_hits, 1, "exactly the repeated probe hits");
+    assert_eq!(stats.cached_outcomes, 2);
+}
+
+#[test]
+fn outcome_cache_can_be_disabled() {
+    let server = Server::start(ServeConfig {
+        cache_outcomes: 0,
+        ..test_config(1)
+    })
+    .unwrap();
+    let pattern = Pattern::Regex("ab".to_string());
+    for _ in 0..3 {
+        assert!(server
+            .submit(pattern.clone(), &b"ab"[..])
+            .wait()
+            .unwrap()
+            .accepted);
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.served, 3);
+    assert_eq!(stats.outcome_hits, 0);
+    assert_eq!(stats.cached_outcomes, 0);
+}
+
+#[test]
+fn racing_workers_compile_a_new_pattern_once() {
+    // many workers, many concurrent submissions of one brand-new
+    // pattern: the in-flight marker must dedupe the compile without
+    // convoying the other workers
+    let server = Server::start(test_config(4)).unwrap();
+    let pattern = Pattern::Regex("(ab|cd)+ef".to_string());
+    let results: Vec<bool> = std::thread::scope(|scope| {
+        (0..16)
+            .map(|k| {
+                let server = &server;
+                let pattern = pattern.clone();
+                scope.spawn(move || {
+                    let input = if k % 2 == 0 {
+                        &b"xxabcdefzz"[..]
+                    } else {
+                        &b"no match"[..]
+                    };
+                    server.submit(pattern, input).wait().unwrap().accepted
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .collect()
+    });
+    for (k, accepted) in results.iter().enumerate() {
+        assert_eq!(*accepted, k % 2 == 0, "request {k}");
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.served, 16);
+    assert_eq!(
+        stats.compiles, 1,
+        "racing workers must not duplicate the compile"
+    );
+}
+
+#[test]
 fn recalibration_interval_reprofiles_and_bumps_epoch() {
     let server = Server::start(ServeConfig {
         workers: 2,
