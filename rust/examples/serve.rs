@@ -6,22 +6,32 @@
 //!  2. many producer threads submitting `(pattern, input)` requests,
 //!  3. same-pattern coalescing behind an LRU compiled-pattern cache,
 //!  4. per-request outcome streaming, verified against the synchronous
-//!     `match_many` path.
+//!     `match_many` path,
+//!  5. bounded admission (backpressure) + size-aware priorities, and a
+//!     `ServerHandle` that stays safe across shutdown.
 //!
 //!     cargo run --release --example serve
 
 use specdfa::engine::{
-    CompiledMatcher, Engine, ExecPolicy, Pattern, ServeConfig, Server,
+    Admission, CompiledMatcher, Engine, ExecPolicy, Pattern,
+    PriorityPolicy, ServeConfig, ServeError, Server,
 };
 use specdfa::workload::InputGen;
 
 fn main() -> anyhow::Result<()> {
     // 1. Start the server.  `calibrate_on_start` (default) runs the
     //    offline profiling step, so Auto routing uses this machine's
-    //    measured symbol rate instead of the paper-era ballpark.
+    //    measured symbol rate instead of the paper-era ballpark.  The
+    //    queue is bounded: at 256 queued requests, producers block
+    //    until the workers drain space (`Admission::Reject` would shed
+    //    load instead), and small probes are scheduled ahead of corpus
+    //    scans (`PriorityPolicy::SizeAware`, aged so scans still run).
     let server = Server::start(ServeConfig {
         workers: 4,
         cache_patterns: 16,
+        max_queue: 256,
+        admission: Admission::Block,
+        priority: PriorityPolicy::SizeAware,
         recalibrate_every: 0, // one-shot demo: skip periodic re-profiling
         engine: Engine::Auto,
         ..ServeConfig::default()
@@ -112,6 +122,9 @@ fn main() -> anyhow::Result<()> {
     }
     println!("streamed outcomes equal the synchronous match_many results");
 
+    // 5. A handle survives shutdown: late submissions resolve with
+    //    ShuttingDown instead of hanging on a queue nobody drains.
+    let handle = server.handle();
     let stats = server.shutdown();
     println!(
         "served {} requests in {} batches ({:.2} requests/batch); \
@@ -123,6 +136,21 @@ fn main() -> anyhow::Result<()> {
         3,
         stats.cache_hits
     );
+    println!(
+        "queue: peak depth {} (bound 256), {} rejected; probe wait mean \
+         {:.0} us (max {} us), scan wait mean {:.0} us (max {} us)",
+        stats.max_queue_depth,
+        stats.rejected,
+        stats.probe_wait.mean_us(),
+        stats.probe_wait.max_us,
+        stats.scan_wait.mean_us(),
+        stats.scan_wait.max_us
+    );
     assert!(stats.compiles < stats.served, "coalescing + cache must win");
+    let late = handle
+        .submit(Pattern::Regex("too late".to_string()), &b"x"[..])
+        .wait();
+    assert_eq!(late.unwrap_err(), ServeError::ShuttingDown);
+    println!("late submission resolved with ShuttingDown (no hang)");
     Ok(())
 }

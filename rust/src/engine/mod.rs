@@ -54,7 +54,10 @@ use crate::speculative::merge::MergeStrategy;
 pub use batch::{BatchOutcome, RequestError};
 pub use outcome::{Detail, EngineKind, Outcome};
 pub use select::{select, AutoThresholds, DfaProps, Selection};
-pub use serve::{ServeConfig, ServeError, ServeStats, Server, Ticket};
+pub use serve::{
+    Admission, PriorityPolicy, ServeConfig, ServeError, ServeStats, Server,
+    ServerHandle, Ticket, WaitStats,
+};
 pub use shard::{ShardLayout, ShardOutcome, ShardPlan, ShardWork};
 
 use adapters::{
@@ -243,7 +246,7 @@ impl Default for ExecPolicy {
 /// assert!(sig.run_bytes(b"AACKLCAA")?.accepted);
 /// # anyhow::Result::<()>::Ok(())
 /// ```
-#[derive(Clone, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub enum Pattern {
     /// PCRE-style regex, search ("input contains a match") semantics.
     Regex(String),

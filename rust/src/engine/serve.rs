@@ -2,9 +2,9 @@
 //! request loop the ROADMAP north-star asks for.
 //!
 //! ```text
-//!   producers ──submit(pattern, input)──▶ queue ──▶ worker threads
-//!      ▲                                              │
-//!      │            same-pattern coalescing           │
+//!   producers ──submit(pattern, input)──▶ bounded queue ──▶ workers
+//!      ▲            admission at max_queue:  │ per-pattern sub-queues
+//!      │            Block | Reject           │ probe ≺ scan + aging
 //!   Ticket ◀──────── streamed Outcome ◀── LRU compiled-pattern cache
 //!                                              │
 //!                       speculative::profile ──▶ AutoThresholds
@@ -14,11 +14,28 @@
 //! * Many producer threads [`Server::submit`] `(pattern, input)` requests;
 //!   each gets a [`Ticket`] that streams its own `Result<Outcome, _>` back
 //!   over a channel — no caller ever blocks another.
-//! * Worker threads pop the queue and **coalesce**: a worker taking a
-//!   request also takes every other queued request for the same pattern
-//!   (up to [`ServeConfig::max_batch`]), so one cache lookup and one hot
-//!   transition table serve the whole run — the `match_many` amortization,
-//!   made concurrent.
+//! * The queue is **bounded** ([`ServeConfig::max_queue`]).  At the bound
+//!   [`Admission::Block`] parks the producer until a worker drains space;
+//!   [`Admission::Reject`] resolves the ticket immediately with
+//!   [`ServeError::Overloaded`] — either way producers can never grow
+//!   server memory without bound.  Submitting to a shut-down server
+//!   resolves the ticket with [`ServeError::ShuttingDown`] instead of
+//!   queueing work no worker will ever drain.
+//! * Queued requests are **priority-scheduled by size**
+//!   ([`PriorityPolicy::SizeAware`], the default): inputs of at most
+//!   [`ServeConfig::probe_max_bytes`] form the *probe* class, larger
+//!   inputs the *scan* class.  Workers prefer probes — one corpus scan
+//!   can no longer convoy a thousand health checks behind it — but a
+//!   waiting scan is bypassed by at most [`ServeConfig::age_limit`]
+//!   probe batches before it is forced (the starvation bound).
+//! * The queue is a **per-pattern sub-queue index**: one FIFO lane per
+//!   (pattern, class) plus a per-class arrival list, so a worker's
+//!   coalescing take is O(batch) — pop the oldest request of the
+//!   scheduled class, drain its pattern's lane.  Arrival order within
+//!   every (class, pattern) is preserved exactly (the old O(queue) scan
+//!   and its `swap_remove_back` FIFO perturbation are gone), and one
+//!   cache lookup plus one hot transition table still serve the whole
+//!   batch — the `match_many` amortization, made concurrent.
 //! * Compiled patterns live in an **LRU cache** keyed by the pattern, so
 //!   repeated patterns never recompile (DFA construction + lookahead
 //!   analysis dominate small-request latency).  A miss marks the pattern
@@ -46,12 +63,13 @@
 //!
 //! Everything is `std` threads and channels — no new dependencies.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::fmt;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -60,8 +78,69 @@ use crate::speculative::profile;
 use super::select::AutoThresholds;
 use super::{CompiledMatcher, Engine, ExecPolicy, Matcher, Outcome, Pattern};
 
+/// Index of the *probe* class (inputs of at most
+/// [`ServeConfig::probe_max_bytes`]) in per-class telemetry.
+pub const CLASS_PROBE: usize = 0;
+/// Index of the *scan* class (inputs larger than
+/// [`ServeConfig::probe_max_bytes`]) in per-class telemetry.
+pub const CLASS_SCAN: usize = 1;
+/// Number of request classes.
+const CLASSES: usize = 2;
+
+/// What [`Server::submit`] does when the queue already holds
+/// [`ServeConfig::max_queue`] requests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// Park the producer until a worker drains space (backpressure
+    /// propagates to the caller; nothing is ever dropped).
+    Block,
+    /// Resolve the ticket immediately with [`ServeError::Overloaded`]
+    /// (load shedding; the producer decides whether to retry).
+    Reject,
+}
+
+impl Admission {
+    /// Parse a CLI admission name: `block|reject`.
+    pub fn parse(name: &str) -> Result<Admission> {
+        Ok(match name {
+            "block" => Admission::Block,
+            "reject" => Admission::Reject,
+            other => anyhow::bail!(
+                "unknown admission {other:?} (expected block|reject)"
+            ),
+        })
+    }
+}
+
+/// How queued requests are ordered for the workers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PriorityPolicy {
+    /// Strict arrival order (plus same-pattern coalescing), the
+    /// pre-priority behavior: a corpus scan convoys every probe behind
+    /// it.
+    Fifo,
+    /// Size-derived priorities: probe-class requests are taken before
+    /// scan-class requests, bounded by [`ServeConfig::age_limit`] so
+    /// scans cannot starve.
+    SizeAware,
+}
+
+impl PriorityPolicy {
+    /// Parse a CLI priority name: `fifo|size`.
+    pub fn parse(name: &str) -> Result<PriorityPolicy> {
+        Ok(match name {
+            "fifo" => PriorityPolicy::Fifo,
+            "size" | "size-aware" => PriorityPolicy::SizeAware,
+            other => anyhow::bail!(
+                "unknown priority {other:?} (expected fifo|size)"
+            ),
+        })
+    }
+}
+
 /// Serving configuration.  The defaults serve `Engine::Auto` with
-/// calibration on and a cache sized for a medium pattern working set.
+/// calibration on, an unbounded queue, size-aware priorities and a cache
+/// sized for a medium pattern working set.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
     /// Worker threads draining the request queue.
@@ -79,6 +158,21 @@ pub struct ServeConfig {
     pub cache_outcome_max_bytes: usize,
     /// Maximum requests one worker coalesces into a single batch.
     pub max_batch: usize,
+    /// Queue depth bound; 0 = unbounded.  At the bound, `admission`
+    /// decides between producer backpressure and load shedding.
+    pub max_queue: usize,
+    /// Admission policy applied when the queue is at `max_queue`.
+    pub admission: Admission,
+    /// Scheduling policy for queued requests.
+    pub priority: PriorityPolicy,
+    /// Largest input (bytes) classified as a *probe*; larger inputs are
+    /// *scans*.  Under [`PriorityPolicy::SizeAware`] probes are served
+    /// first; the split also keys the per-class wait telemetry.
+    pub probe_max_bytes: usize,
+    /// Starvation bound: how many probe batches may be taken while a
+    /// scan-class request waits before the scan is forced.  0 = scans
+    /// are never bypassed; `u64::MAX` = pure (starvable) priority.
+    pub age_limit: u64,
     /// Re-run the §4.1 profiling step after this many served requests;
     /// 0 disables periodic re-calibration.
     pub recalibrate_every: u64,
@@ -109,6 +203,11 @@ impl Default for ServeConfig {
             cache_outcomes: 256,
             cache_outcome_max_bytes: 1 << 16,
             max_batch: 64,
+            max_queue: 0,
+            admission: Admission::Block,
+            priority: PriorityPolicy::SizeAware,
+            probe_max_bytes: 1 << 16,
+            age_limit: 4,
             recalibrate_every: 4096,
             calibrate_on_start: true,
             profile_runs: 5,
@@ -122,21 +221,45 @@ impl Default for ServeConfig {
 
 /// A request failure delivered through a [`Ticket`].  Cloneable so one
 /// compile failure can be streamed to every request of a coalesced batch.
-#[derive(Clone, Debug)]
-pub struct ServeError {
-    /// human-readable failure description (the full error chain)
-    pub message: String,
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// The queue was at [`ServeConfig::max_queue`] under
+    /// [`Admission::Reject`]; the request was never admitted.
+    Overloaded {
+        /// queue depth observed at the admission decision
+        depth: usize,
+        /// the configured bound the depth had reached
+        max_queue: usize,
+    },
+    /// The server had begun shutting down (or already shut down) when
+    /// the request was submitted or while it waited; it was not served.
+    ShuttingDown,
+    /// Compiling or running the request failed.
+    Failed {
+        /// human-readable failure description (the full error chain)
+        message: String,
+    },
 }
 
 impl ServeError {
-    fn new(message: impl Into<String>) -> ServeError {
-        ServeError { message: message.into() }
+    fn failed(message: impl Into<String>) -> ServeError {
+        ServeError::Failed { message: message.into() }
     }
 }
 
 impl fmt::Display for ServeError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        f.write_str(&self.message)
+        match self {
+            ServeError::Overloaded { depth, max_queue } => write!(
+                f,
+                "server overloaded: {depth} queued at max_queue \
+                 {max_queue} (Reject admission)"
+            ),
+            ServeError::ShuttingDown => f.write_str(
+                "server is shutting down; the request was not served",
+            ),
+            ServeError::Failed { message } => f.write_str(message),
+        }
     }
 }
 
@@ -156,9 +279,47 @@ impl Ticket {
     pub fn wait(self) -> ServeResult {
         match self.rx.recv() {
             Ok(res) => res,
-            Err(_) => Err(ServeError::new(
-                "server shut down before serving the request",
-            )),
+            Err(_) => Err(ServeError::ShuttingDown),
+        }
+    }
+
+    /// Like [`Ticket::wait`], but give up after `timeout` — the
+    /// deadline-aware client shape.  Returns the ticket back on timeout
+    /// so the caller can keep waiting (or drop it to abandon the
+    /// result).
+    pub fn wait_timeout(
+        self,
+        timeout: Duration,
+    ) -> std::result::Result<ServeResult, Ticket> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(res) => Ok(res),
+            Err(RecvTimeoutError::Timeout) => Err(self),
+            Err(RecvTimeoutError::Disconnected) => {
+                Ok(Err(ServeError::ShuttingDown))
+            }
+        }
+    }
+}
+
+/// Queue-wait telemetry for one request class (probe or scan): time
+/// between admission and a worker taking the request.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WaitStats {
+    /// Requests of this class taken by a worker.
+    pub taken: u64,
+    /// Total queue wait across those requests, microseconds.
+    pub total_us: u64,
+    /// Largest single queue wait observed, microseconds.
+    pub max_us: u64,
+}
+
+impl WaitStats {
+    /// Mean queue wait in microseconds (0.0 before any take).
+    pub fn mean_us(&self) -> f64 {
+        if self.taken == 0 {
+            0.0
+        } else {
+            self.total_us as f64 / self.taken as f64
         }
     }
 }
@@ -166,12 +327,16 @@ impl Ticket {
 /// Aggregate serving telemetry (monotonic counters since startup).
 #[derive(Clone, Debug)]
 pub struct ServeStats {
-    /// Requests accepted into the queue.
+    /// Requests accepted into the queue (admission refusals are counted
+    /// in `rejected` instead, never here).
     pub submitted: u64,
     /// Requests served with an `Ok` outcome.
     pub served: u64,
-    /// Requests that streamed an error back.
+    /// Requests that streamed an error back after being admitted.
     pub failed: u64,
+    /// Requests refused at admission: `Overloaded` rejects plus
+    /// submit-after-shutdown refusals.
+    pub rejected: u64,
     /// Coalesced batches executed.
     pub batches: u64,
     /// Requests that rode along in a batch after the first (coalescing
@@ -194,6 +359,13 @@ pub struct ServeStats {
     pub cached_outcomes: usize,
     /// Requests currently queued, not yet taken by a worker.
     pub queue_depth: usize,
+    /// High-water mark of `queue_depth` since startup; never exceeds
+    /// [`ServeConfig::max_queue`] when a bound is configured.
+    pub max_queue_depth: usize,
+    /// Queue-wait telemetry for probe-class requests.
+    pub probe_wait: WaitStats,
+    /// Queue-wait telemetry for scan-class requests.
+    pub scan_wait: WaitStats,
     /// The thresholds `Engine::Auto` dispatch currently uses.
     pub thresholds: AutoThresholds,
     /// The measured per-worker capacity vector (symbols/µs) the current
@@ -214,6 +386,163 @@ struct Request {
     pattern: Pattern,
     input: Vec<u8>,
     reply: Sender<ServeResult>,
+}
+
+/// One admitted request with its scheduling metadata.
+struct Queued {
+    /// admission sequence number (per-queue, monotonic)
+    seq: u64,
+    /// size class ([`CLASS_PROBE`] / [`CLASS_SCAN`]) for wait telemetry
+    class: usize,
+    /// when admission pushed the request (queue-wait telemetry)
+    enqueued: Instant,
+    req: Request,
+}
+
+/// Per-pattern sub-queues: one FIFO lane per scheduling class, each in
+/// admission order.  A worker's take drains one lane, so coalescing no
+/// longer scans the whole queue.
+#[derive(Default)]
+struct Lane {
+    by_class: [VecDeque<Queued>; CLASSES],
+}
+
+/// The request queue: a per-pattern sub-queue index plus per-class
+/// arrival lists.
+///
+/// `arrivals[class]` records `(seq, pattern)` in admission order.  An
+/// entry whose request already rode an earlier coalesced batch is
+/// *stale* and skipped when popped (detected in O(1): the lane head's
+/// seq no longer matches).  Every entry is pushed once and popped once,
+/// so a take is O(batch) amortized — the ROADMAP's "per-pattern
+/// sub-queue index" item.
+struct ReqQueue {
+    lanes: HashMap<Pattern, Lane>,
+    arrivals: [VecDeque<(u64, Pattern)>; CLASSES],
+    /// live (not yet taken) requests per scheduling class
+    live: [usize; CLASSES],
+    /// live requests total — the admission depth
+    len: usize,
+    /// high-water mark of `len`
+    max_depth: usize,
+    next_seq: u64,
+    /// probe batches taken while a scan-class request waited (aging)
+    bypassed: u64,
+}
+
+impl ReqQueue {
+    fn new() -> ReqQueue {
+        ReqQueue {
+            lanes: HashMap::new(),
+            arrivals: [VecDeque::new(), VecDeque::new()],
+            live: [0; CLASSES],
+            len: 0,
+            max_depth: 0,
+            next_seq: 0,
+            bypassed: 0,
+        }
+    }
+
+    /// Admit one request into class `sched` (its telemetry size class is
+    /// `class`; the two differ only under [`PriorityPolicy::Fifo`]).
+    fn push(&mut self, req: Request, class: usize, sched: usize) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.arrivals[sched].push_back((seq, req.pattern.clone()));
+        // this runs under the global queue mutex: clone the pattern for
+        // the lane key only on a lane miss (a contains_key re-probe is
+        // cheaper than an unconditional String allocation)
+        if !self.lanes.contains_key(&req.pattern) {
+            self.lanes.insert(req.pattern.clone(), Lane::default());
+        }
+        self.lanes
+            .get_mut(&req.pattern)
+            .expect("lane ensured above")
+            .by_class[sched]
+            .push_back(Queued {
+                seq,
+                class,
+                enqueued: Instant::now(),
+                req,
+            });
+        self.live[sched] += 1;
+        self.len += 1;
+        self.max_depth = self.max_depth.max(self.len);
+    }
+
+    /// Which class the next batch comes from: probes first, but a
+    /// waiting scan is bypassed at most `age_limit` times.  `None` when
+    /// the queue is empty.
+    fn pick_class(&mut self, age_limit: u64) -> Option<usize> {
+        if self.live[CLASS_SCAN] == 0 {
+            // nothing is waiting to age
+            self.bypassed = 0;
+        }
+        match (self.live[CLASS_PROBE] > 0, self.live[CLASS_SCAN] > 0) {
+            (false, false) => None,
+            (true, false) => Some(CLASS_PROBE),
+            (false, true) => {
+                self.bypassed = 0;
+                Some(CLASS_SCAN)
+            }
+            (true, true) => {
+                if self.bypassed >= age_limit {
+                    self.bypassed = 0;
+                    Some(CLASS_SCAN)
+                } else {
+                    self.bypassed += 1;
+                    Some(CLASS_PROBE)
+                }
+            }
+        }
+    }
+
+    /// Take the next coalesced batch: the oldest live request of the
+    /// scheduled class plus up to `max_batch - 1` same-pattern
+    /// same-class followers, in admission order.
+    fn take_batch(
+        &mut self,
+        age_limit: u64,
+        max_batch: usize,
+    ) -> Option<Vec<Queued>> {
+        loop {
+            let class = self.pick_class(age_limit)?;
+            let batch = self.take(class, max_batch);
+            if !batch.is_empty() {
+                return Some(batch);
+            }
+            // the live counter for `class` was stale (take zeroed it);
+            // re-pick from what actually remains
+        }
+    }
+
+    fn take(&mut self, class: usize, max_batch: usize) -> Vec<Queued> {
+        while let Some((seq, pattern)) = self.arrivals[class].pop_front() {
+            let (batch, lane_empty) = {
+                let Some(lane) = self.lanes.get_mut(&pattern) else {
+                    continue; // stale: the whole lane was drained
+                };
+                let sub = &mut lane.by_class[class];
+                if sub.front().is_none_or(|head| head.seq != seq) {
+                    // stale: this request rode an earlier batch
+                    continue;
+                }
+                let n = sub.len().min(max_batch);
+                let batch: Vec<Queued> = sub.drain(..n).collect();
+                (batch, lane.by_class.iter().all(|d| d.is_empty()))
+            };
+            if lane_empty {
+                self.lanes.remove(&pattern);
+            }
+            self.len = self.len.saturating_sub(batch.len());
+            self.live[class] =
+                self.live[class].saturating_sub(batch.len());
+            return batch;
+        }
+        // no live entry found: the counter was stale, repair it
+        self.live[class] = 0;
+        Vec::new()
+    }
 }
 
 struct CacheEntry {
@@ -273,6 +602,7 @@ struct Counters {
     submitted: AtomicU64,
     served: AtomicU64,
     failed: AtomicU64,
+    rejected: AtomicU64,
     batches: AtomicU64,
     coalesced: AtomicU64,
     compiles: AtomicU64,
@@ -280,6 +610,9 @@ struct Counters {
     outcome_hits: AtomicU64,
     evictions: AtomicU64,
     recalibrations: AtomicU64,
+    wait_taken: [AtomicU64; CLASSES],
+    wait_total_us: [AtomicU64; CLASSES],
+    wait_max_us: [AtomicU64; CLASSES],
 }
 
 impl Counters {
@@ -288,6 +621,7 @@ impl Counters {
             submitted: AtomicU64::new(0),
             served: AtomicU64::new(0),
             failed: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             coalesced: AtomicU64::new(0),
             compiles: AtomicU64::new(0),
@@ -295,14 +629,20 @@ impl Counters {
             outcome_hits: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
             recalibrations: AtomicU64::new(0),
+            wait_taken: [AtomicU64::new(0), AtomicU64::new(0)],
+            wait_total_us: [AtomicU64::new(0), AtomicU64::new(0)],
+            wait_max_us: [AtomicU64::new(0), AtomicU64::new(0)],
         }
     }
 }
 
 struct Shared {
     config: ServeConfig,
-    queue: Mutex<VecDeque<Request>>,
+    queue: Mutex<ReqQueue>,
     ready: Condvar,
+    /// signalled when a worker drains queue space, waking producers
+    /// parked by `Admission::Block`
+    space: Condvar,
     shutdown: AtomicBool,
     /// live dispatch thresholds, replaced by each calibration
     thresholds: Mutex<AutoThresholds>,
@@ -322,8 +662,8 @@ struct Shared {
     counters: Counters,
 }
 
-/// The serving loop: worker threads, request queue, pattern cache and
-/// capacity calibration behind a submit/stream API.
+/// The serving loop: worker threads, a bounded priority request queue,
+/// pattern cache and capacity calibration behind a submit/stream API.
 ///
 /// ```
 /// use specdfa::engine::{Pattern, ServeConfig, Server};
@@ -348,6 +688,67 @@ pub struct Server {
     workers: Vec<JoinHandle<()>>,
 }
 
+/// A cloneable submission handle onto a running [`Server`] — hand these
+/// to producer threads that outlive (or must not own) the server.  A
+/// handle kept past [`Server::shutdown`] stays safe: submissions resolve
+/// immediately with [`ServeError::ShuttingDown`] instead of queueing
+/// work no worker will ever drain.
+///
+/// ```
+/// use specdfa::engine::{Pattern, ServeConfig, ServeError, Server};
+///
+/// let server = Server::start(ServeConfig {
+///     workers: 1,
+///     profile_runs: 1,
+///     profile_sample_syms: 4096,
+///     ..ServeConfig::default()
+/// })?;
+/// let handle = server.handle();
+/// server.shutdown();
+/// let err = handle
+///     .submit(Pattern::Regex("ab".into()), &b"ab"[..])
+///     .wait()
+///     .unwrap_err();
+/// assert_eq!(err, ServeError::ShuttingDown);
+/// # anyhow::Result::<()>::Ok(())
+/// ```
+#[derive(Clone)]
+pub struct ServerHandle {
+    shared: Arc<Shared>,
+}
+
+impl ServerHandle {
+    /// Queue one request; the returned [`Ticket`] streams its outcome.
+    /// See [`Server::submit`].
+    pub fn submit(
+        &self,
+        pattern: Pattern,
+        input: impl Into<Vec<u8>>,
+    ) -> Ticket {
+        do_submit(&self.shared, pattern, input.into())
+    }
+
+    /// Queue many same-pattern requests under one queue lock.  See
+    /// [`Server::submit_many`].
+    pub fn submit_many(
+        &self,
+        pattern: &Pattern,
+        inputs: &[&[u8]],
+    ) -> Vec<Ticket> {
+        do_submit_many(&self.shared, pattern, inputs)
+    }
+
+    /// Snapshot of the serving telemetry.
+    pub fn stats(&self) -> ServeStats {
+        stats_of(&self.shared)
+    }
+
+    /// The thresholds `Engine::Auto` dispatch currently uses.
+    pub fn thresholds(&self) -> AutoThresholds {
+        self.shared.thresholds.lock().unwrap().clone()
+    }
+}
+
 impl Server {
     /// Start the worker threads (and, by default, run the startup
     /// calibration) and begin accepting requests.
@@ -363,8 +764,9 @@ impl Server {
         let shared = Arc::new(Shared {
             thresholds: Mutex::new(config.policy.thresholds.clone()),
             capacity: Mutex::new(None),
-            queue: Mutex::new(VecDeque::new()),
+            queue: Mutex::new(ReqQueue::new()),
             ready: Condvar::new(),
+            space: Condvar::new(),
             shutdown: AtomicBool::new(false),
             epoch: AtomicU64::new(0),
             done: AtomicU64::new(0),
@@ -410,77 +812,36 @@ impl Server {
         Ok(Server { shared, workers: handles })
     }
 
+    /// A cloneable [`ServerHandle`] for producer threads.
+    pub fn handle(&self) -> ServerHandle {
+        ServerHandle { shared: Arc::clone(&self.shared) }
+    }
+
     /// Queue one request; the returned [`Ticket`] streams its outcome.
+    ///
+    /// When the queue is at [`ServeConfig::max_queue`] this applies the
+    /// configured [`Admission`] policy: `Block` parks the caller until a
+    /// worker drains space, `Reject` resolves the ticket immediately
+    /// with [`ServeError::Overloaded`].  After shutdown has begun the
+    /// ticket resolves immediately with [`ServeError::ShuttingDown`].
     pub fn submit(&self, pattern: Pattern, input: impl Into<Vec<u8>>) -> Ticket {
-        let (tx, rx) = channel();
-        let req = Request { pattern, input: input.into(), reply: tx };
-        self.shared.counters.submitted.fetch_add(1, Ordering::Relaxed);
-        self.shared.queue.lock().unwrap().push_back(req);
-        self.shared.ready.notify_one();
-        Ticket { rx }
+        do_submit(&self.shared, pattern, input.into())
     }
 
     /// Queue many same-pattern requests under one queue lock, maximizing
-    /// the coalescing a single worker can do.
+    /// the coalescing a single worker can do.  Admission applies per
+    /// request, exactly as in [`Server::submit`].
     pub fn submit_many(
         &self,
         pattern: &Pattern,
         inputs: &[&[u8]],
     ) -> Vec<Ticket> {
-        let mut tickets = Vec::with_capacity(inputs.len());
-        {
-            let mut q = self.shared.queue.lock().unwrap();
-            for input in inputs {
-                let (tx, rx) = channel();
-                q.push_back(Request {
-                    pattern: pattern.clone(),
-                    input: input.to_vec(),
-                    reply: tx,
-                });
-                tickets.push(Ticket { rx });
-            }
-        }
-        self.shared
-            .counters
-            .submitted
-            .fetch_add(inputs.len() as u64, Ordering::Relaxed);
-        self.shared.ready.notify_all();
-        tickets
+        do_submit_many(&self.shared, pattern, inputs)
     }
 
     /// Snapshot of the serving telemetry.
     pub fn stats(&self) -> ServeStats {
-        // one lock at a time: a snapshot must never stall the workers
-        let cached_patterns = self.shared.cache.lock().unwrap().entries.len();
-        let cached_outcomes =
-            self.shared.outcomes.lock().unwrap().entries.len();
-        let queue_depth = self.shared.queue.lock().unwrap().len();
-        let thresholds = self.shared.thresholds.lock().unwrap().clone();
-        let worker_rates = self
-            .shared
-            .capacity
-            .lock()
-            .unwrap()
-            .as_ref()
-            .map(|cv| cv.rates.clone());
-        let c = &self.shared.counters;
-        ServeStats {
-            submitted: c.submitted.load(Ordering::Relaxed),
-            served: c.served.load(Ordering::Relaxed),
-            failed: c.failed.load(Ordering::Relaxed),
-            batches: c.batches.load(Ordering::Relaxed),
-            coalesced: c.coalesced.load(Ordering::Relaxed),
-            compiles: c.compiles.load(Ordering::Relaxed),
-            cache_hits: c.cache_hits.load(Ordering::Relaxed),
-            outcome_hits: c.outcome_hits.load(Ordering::Relaxed),
-            evictions: c.evictions.load(Ordering::Relaxed),
-            recalibrations: c.recalibrations.load(Ordering::Relaxed),
-            cached_patterns,
-            cached_outcomes,
-            queue_depth,
-            thresholds,
-            worker_rates,
-        }
+        stats_of(&self.shared)
     }
 
     /// The thresholds `Engine::Auto` dispatch currently uses (calibrated
@@ -503,6 +864,9 @@ impl Server {
             let _queue = self.shared.queue.lock().unwrap();
             self.shared.shutdown.store(true, Ordering::SeqCst);
             self.shared.ready.notify_all();
+            // producers parked by Block admission re-check the shutdown
+            // flag and resolve their tickets with ShuttingDown
+            self.shared.space.notify_all();
         }
         for handle in self.workers.drain(..) {
             let _ = handle.join();
@@ -513,6 +877,169 @@ impl Server {
 impl Drop for Server {
     fn drop(&mut self) {
         self.finish();
+    }
+}
+
+/// The admission + enqueue path shared by [`Server`] and
+/// [`ServerHandle`].
+fn do_submit(shared: &Shared, pattern: Pattern, input: Vec<u8>) -> Ticket {
+    let (tx, rx) = channel();
+    let req = Request { pattern, input, reply: tx };
+    let mut q = shared.queue.lock().unwrap();
+    loop {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            drop(q);
+            refuse(shared, req, ServeError::ShuttingDown);
+            return Ticket { rx };
+        }
+        let max = shared.config.max_queue;
+        if max == 0 || q.len < max {
+            break;
+        }
+        match shared.config.admission {
+            Admission::Reject => {
+                let depth = q.len;
+                drop(q);
+                refuse(
+                    shared,
+                    req,
+                    ServeError::Overloaded { depth, max_queue: max },
+                );
+                return Ticket { rx };
+            }
+            Admission::Block => q = shared.space.wait(q).unwrap(),
+        }
+    }
+    enqueue_locked(shared, &mut q, req);
+    drop(q);
+    shared.ready.notify_one();
+    Ticket { rx }
+}
+
+fn do_submit_many(
+    shared: &Shared,
+    pattern: &Pattern,
+    inputs: &[&[u8]],
+) -> Vec<Ticket> {
+    let mut tickets = Vec::with_capacity(inputs.len());
+    let mut q = shared.queue.lock().unwrap();
+    'requests: for input in inputs {
+        let (tx, rx) = channel();
+        tickets.push(Ticket { rx });
+        let req = Request {
+            pattern: pattern.clone(),
+            input: input.to_vec(),
+            reply: tx,
+        };
+        loop {
+            if shared.shutdown.load(Ordering::SeqCst) {
+                refuse(shared, req, ServeError::ShuttingDown);
+                continue 'requests;
+            }
+            let max = shared.config.max_queue;
+            if max == 0 || q.len < max {
+                break;
+            }
+            match shared.config.admission {
+                Admission::Reject => {
+                    let depth = q.len;
+                    refuse(
+                        shared,
+                        req,
+                        ServeError::Overloaded { depth, max_queue: max },
+                    );
+                    continue 'requests;
+                }
+                // waiting releases the queue mutex, so workers drain
+                // (and other producers run) while this batch is parked
+                Admission::Block => q = shared.space.wait(q).unwrap(),
+            }
+        }
+        enqueue_locked(shared, &mut q, req);
+        // wake a worker per admitted request: with Block admission the
+        // rest of this batch may park, and the workers must be able to
+        // drain what is already queued meanwhile
+        shared.ready.notify_one();
+    }
+    drop(q);
+    tickets
+}
+
+/// Resolve a refused request's ticket immediately (admission reject or
+/// submit-after-shutdown) — the request is never queued.
+fn refuse(shared: &Shared, req: Request, err: ServeError) {
+    shared.counters.rejected.fetch_add(1, Ordering::SeqCst);
+    // a dropped Ticket just discards its result
+    let _ = req.reply.send(Err(err));
+}
+
+/// Classify + push one admitted request.  Runs under the queue lock so
+/// a `stats()` snapshot that has seen this request `served` has also
+/// seen it `submitted` (the increment happens-before the worker's take
+/// through this mutex; `SeqCst` orders it against the snapshot loads).
+fn enqueue_locked(shared: &Shared, q: &mut ReqQueue, req: Request) {
+    let class = if req.input.len() <= shared.config.probe_max_bytes {
+        CLASS_PROBE
+    } else {
+        CLASS_SCAN
+    };
+    let sched = match shared.config.priority {
+        PriorityPolicy::Fifo => CLASS_PROBE,
+        PriorityPolicy::SizeAware => class,
+    };
+    q.push(req, class, sched);
+    shared.counters.submitted.fetch_add(1, Ordering::SeqCst);
+}
+
+fn stats_of(shared: &Shared) -> ServeStats {
+    // one lock at a time: a snapshot must never stall the workers
+    let cached_patterns = shared.cache.lock().unwrap().entries.len();
+    let cached_outcomes = shared.outcomes.lock().unwrap().entries.len();
+    let (queue_depth, max_queue_depth) = {
+        let q = shared.queue.lock().unwrap();
+        (q.len, q.max_depth)
+    };
+    let thresholds = shared.thresholds.lock().unwrap().clone();
+    let worker_rates = shared
+        .capacity
+        .lock()
+        .unwrap()
+        .as_ref()
+        .map(|cv| cv.rates.clone());
+    let c = &shared.counters;
+    let wait = |class: usize| WaitStats {
+        taken: c.wait_taken[class].load(Ordering::Relaxed),
+        total_us: c.wait_total_us[class].load(Ordering::Relaxed),
+        max_us: c.wait_max_us[class].load(Ordering::Relaxed),
+    };
+    // completion counters are loaded BEFORE `submitted`: `submitted`
+    // only grows, and each request's submit increment is SeqCst-ordered
+    // before its serve/fail increment, so no snapshot can ever show
+    // served + failed > submitted
+    let served = c.served.load(Ordering::SeqCst);
+    let failed = c.failed.load(Ordering::SeqCst);
+    let rejected = c.rejected.load(Ordering::SeqCst);
+    let submitted = c.submitted.load(Ordering::SeqCst);
+    ServeStats {
+        submitted,
+        served,
+        failed,
+        rejected,
+        batches: c.batches.load(Ordering::Relaxed),
+        coalesced: c.coalesced.load(Ordering::Relaxed),
+        compiles: c.compiles.load(Ordering::Relaxed),
+        cache_hits: c.cache_hits.load(Ordering::Relaxed),
+        outcome_hits: c.outcome_hits.load(Ordering::Relaxed),
+        evictions: c.evictions.load(Ordering::Relaxed),
+        recalibrations: c.recalibrations.load(Ordering::Relaxed),
+        cached_patterns,
+        cached_outcomes,
+        queue_depth,
+        max_queue_depth,
+        probe_wait: wait(CLASS_PROBE),
+        scan_wait: wait(CLASS_SCAN),
+        thresholds,
+        worker_rates,
     }
 }
 
@@ -527,32 +1054,22 @@ fn worker_loop(shared: &Shared) {
 fn next_batch(shared: &Shared) -> Option<Vec<Request>> {
     let mut q = shared.queue.lock().unwrap();
     loop {
-        if let Some(first) = q.pop_front() {
-            let mut batch = vec![first];
-            // coalesce: take every queued request for the same pattern.
-            // One scan records the matching indices; the removals then go
-            // back-to-front via swap_remove_back, which is O(1) per hit
-            // (VecDeque::remove would shift O(queue) elements each time).
-            // Removing the largest index first keeps the smaller recorded
-            // indices valid: a swap only disturbs positions at or beyond
-            // the removed index.  Unmatched requests may change relative
-            // order — each request streams to its own ticket, so no
-            // caller can observe the queue's internal order.
-            let mut hits: Vec<usize> = Vec::new();
-            for i in 0..q.len() {
-                if batch.len() + hits.len() >= shared.config.max_batch {
-                    break;
-                }
-                if q[i].pattern == batch[0].pattern {
-                    hits.push(i);
-                }
+        if let Some(taken) =
+            q.take_batch(shared.config.age_limit, shared.config.max_batch)
+        {
+            drop(q);
+            // queue space freed: wake producers parked by Block admission
+            shared.space.notify_all();
+            let now = Instant::now();
+            let mut batch = Vec::with_capacity(taken.len());
+            for item in taken {
+                record_wait(
+                    shared,
+                    item.class,
+                    now.saturating_duration_since(item.enqueued),
+                );
+                batch.push(item.req);
             }
-            for &i in hits.iter().rev() {
-                batch.push(q.swap_remove_back(i).expect("index checked"));
-            }
-            // the back-to-front removals reversed the hits: restore
-            // submission order within the batch
-            batch[1..].reverse();
             return Some(batch);
         }
         if shared.shutdown.load(Ordering::SeqCst) {
@@ -560,6 +1077,15 @@ fn next_batch(shared: &Shared) -> Option<Vec<Request>> {
         }
         q = shared.ready.wait(q).unwrap();
     }
+}
+
+/// Fold one request's queue wait into the per-class telemetry.
+fn record_wait(shared: &Shared, class: usize, waited: Duration) {
+    let us = u64::try_from(waited.as_micros()).unwrap_or(u64::MAX);
+    let c = &shared.counters;
+    c.wait_taken[class].fetch_add(1, Ordering::Relaxed);
+    c.wait_total_us[class].fetch_add(us, Ordering::Relaxed);
+    c.wait_max_us[class].fetch_max(us, Ordering::Relaxed);
 }
 
 fn serve_batch(shared: &Shared, batch: Vec<Request>) {
@@ -575,7 +1101,7 @@ fn serve_batch(shared: &Shared, batch: Vec<Request>) {
         let hash = memo_hash(shared, &req);
         match hash.and_then(|h| cached_outcome(shared, &req, h)) {
             Some(out) => {
-                c.served.fetch_add(1, Ordering::Relaxed);
+                c.served.fetch_add(1, Ordering::SeqCst);
                 // a dropped Ticket just discards its result
                 let _ = req.reply.send(Ok(out));
                 finish_request(shared);
@@ -618,7 +1144,7 @@ fn serve_batch(shared: &Shared, batch: Vec<Request>) {
                         let epoch = shared.epoch.load(Ordering::SeqCst);
                         let res = cm
                             .run_bytes(&req.input)
-                            .map_err(|e| ServeError::new(format!("{e:#}")));
+                            .map_err(|e| ServeError::failed(format!("{e:#}")));
                         if let (Ok(out), Some(h)) = (&res, hash) {
                             remember_outcome(shared, &req, h, epoch, out);
                         }
@@ -626,8 +1152,8 @@ fn serve_batch(shared: &Shared, batch: Vec<Request>) {
                     }
                 };
                 match &res {
-                    Ok(_) => c.served.fetch_add(1, Ordering::Relaxed),
-                    Err(_) => c.failed.fetch_add(1, Ordering::Relaxed),
+                    Ok(_) => c.served.fetch_add(1, Ordering::SeqCst),
+                    Err(_) => c.failed.fetch_add(1, Ordering::SeqCst),
                 };
                 let _ = req.reply.send(res);
                 finish_request(shared);
@@ -635,7 +1161,7 @@ fn serve_batch(shared: &Shared, batch: Vec<Request>) {
         }
         Err(e) => {
             for (req, _) in misses {
-                c.failed.fetch_add(1, Ordering::Relaxed);
+                c.failed.fetch_add(1, Ordering::SeqCst);
                 let _ = req.reply.send(Err(e.clone()));
                 finish_request(shared);
             }
@@ -805,7 +1331,7 @@ fn matcher_for(
     };
     let compiled =
         CompiledMatcher::compile(pattern, shared.config.engine.clone(), policy)
-            .map_err(|e| ServeError::new(format!("compile failed: {e:#}")));
+            .map_err(|e| ServeError::failed(format!("compile failed: {e:#}")));
     let cm = Arc::new(compiled?);
     shared.counters.compiles.fetch_add(1, Ordering::Relaxed);
     let mut cache = shared.cache.lock().unwrap();
@@ -896,10 +1422,15 @@ mod tests {
         assert_eq!(stats.submitted, 3);
         assert_eq!(stats.served, 3);
         assert_eq!(stats.failed, 0);
+        assert_eq!(stats.rejected, 0);
         assert!(stats.compiles >= 1);
         assert!(stats.compiles < 3, "same pattern must not recompile");
         assert!(stats.thresholds.is_calibrated());
         assert_eq!(stats.recalibrations, 1); // the startup profiling
+        // every request was probe-sized; all three waits were recorded
+        assert_eq!(stats.probe_wait.taken, 3);
+        assert_eq!(stats.scan_wait.taken, 0);
+        assert!(stats.max_queue_depth >= 1);
     }
 
     #[test]
@@ -912,7 +1443,8 @@ mod tests {
         let good =
             server.submit(Pattern::Regex("ok".to_string()), &b"ok"[..]);
         let err = bad.wait().expect_err("unterminated class must fail");
-        assert!(err.message.contains("compile failed"), "{err}");
+        assert!(matches!(err, ServeError::Failed { .. }), "{err:?}");
+        assert!(err.to_string().contains("compile failed"), "{err}");
         assert!(good.wait().unwrap().accepted);
         let stats = server.shutdown();
         assert_eq!(stats.failed, 1);
@@ -959,5 +1491,170 @@ mod tests {
         }
         assert!(stats.batches <= 32);
         assert!(stats.requests_per_batch() >= 1.0);
+    }
+
+    #[test]
+    fn admission_and_priority_parse() {
+        assert_eq!(Admission::parse("block").unwrap(), Admission::Block);
+        assert_eq!(Admission::parse("reject").unwrap(), Admission::Reject);
+        assert!(Admission::parse("drop").is_err());
+        assert_eq!(
+            PriorityPolicy::parse("fifo").unwrap(),
+            PriorityPolicy::Fifo
+        );
+        assert_eq!(
+            PriorityPolicy::parse("size").unwrap(),
+            PriorityPolicy::SizeAware
+        );
+        assert!(PriorityPolicy::parse("deadline").is_err());
+    }
+
+    #[test]
+    fn serve_error_display_names_the_bound() {
+        let e = ServeError::Overloaded { depth: 8, max_queue: 8 };
+        let msg = e.to_string();
+        assert!(msg.contains("overloaded"), "{msg}");
+        assert!(msg.contains("max_queue 8"), "{msg}");
+        assert!(ServeError::ShuttingDown
+            .to_string()
+            .contains("shutting down"));
+    }
+
+    // ---- ReqQueue unit tests: scheduling is a pure data-structure
+    // property, tested without threads or timing ----
+
+    fn test_req(pattern: &Pattern) -> Request {
+        let (tx, _rx) = channel();
+        Request { pattern: pattern.clone(), input: Vec::new(), reply: tx }
+    }
+
+    fn push_class(q: &mut ReqQueue, pattern: &Pattern, class: usize) -> u64 {
+        let seq = q.next_seq;
+        q.push(test_req(pattern), class, class);
+        seq
+    }
+
+    #[test]
+    fn subqueue_coalesces_per_pattern_in_arrival_order() {
+        let a = Pattern::Regex("a".to_string());
+        let b = Pattern::Regex("b".to_string());
+        let mut q = ReqQueue::new();
+        // interleaved: a0 b1 a2 b3 a4
+        for (i, p) in [&a, &b, &a, &b, &a].into_iter().enumerate() {
+            assert_eq!(push_class(&mut q, p, CLASS_PROBE), i as u64);
+        }
+        assert_eq!(q.len, 5);
+        // first take: oldest is a0, coalesces a0 a2 a4
+        let batch = q.take_batch(4, 64).unwrap();
+        let seqs: Vec<u64> = batch.iter().map(|t| t.seq).collect();
+        assert_eq!(seqs, vec![0, 2, 4]);
+        assert!(batch.iter().all(|t| t.req.pattern == a));
+        // second take: b1 b3, still in arrival order
+        let batch = q.take_batch(4, 64).unwrap();
+        let seqs: Vec<u64> = batch.iter().map(|t| t.seq).collect();
+        assert_eq!(seqs, vec![1, 3]);
+        assert_eq!(q.len, 0);
+        assert!(q.take_batch(4, 64).is_none());
+        assert_eq!(q.max_depth, 5);
+    }
+
+    #[test]
+    fn aging_bound_is_deterministic() {
+        let scan = Pattern::Regex("scan".to_string());
+        let probe = Pattern::Regex("probe".to_string());
+        let mut q = ReqQueue::new();
+        let s0 = push_class(&mut q, &scan, CLASS_SCAN);
+        let probes: Vec<u64> = (0..10)
+            .map(|_| push_class(&mut q, &probe, CLASS_PROBE))
+            .collect();
+        // age_limit 2, max_batch 2: two probe batches bypass the scan,
+        // then the scan is forced, then the probes drain
+        let order: Vec<Vec<u64>> = std::iter::from_fn(|| {
+            q.take_batch(2, 2)
+                .map(|b| b.iter().map(|t| t.seq).collect())
+        })
+        .collect();
+        assert_eq!(
+            order,
+            vec![
+                vec![probes[0], probes[1]],
+                vec![probes[2], probes[3]],
+                vec![s0],
+                vec![probes[4], probes[5]],
+                vec![probes[6], probes[7]],
+                vec![probes[8], probes[9]],
+            ]
+        );
+    }
+
+    #[test]
+    fn age_limit_zero_never_bypasses_a_scan() {
+        let scan = Pattern::Regex("scan".to_string());
+        let probe = Pattern::Regex("probe".to_string());
+        let mut q = ReqQueue::new();
+        push_class(&mut q, &probe, CLASS_PROBE);
+        let s = push_class(&mut q, &scan, CLASS_SCAN);
+        // both classes live: age_limit 0 forces the scan first
+        let batch = q.take_batch(0, 64).unwrap();
+        assert_eq!(batch[0].seq, s);
+    }
+
+    #[test]
+    fn prop_take_is_oldest_of_class_and_class_pattern_fifo() {
+        use crate::util::rng::Rng;
+        let patterns = [
+            Pattern::Regex("a".to_string()),
+            Pattern::Regex("b".to_string()),
+            Pattern::Regex("c".to_string()),
+        ];
+        let mut rng = Rng::new(0x5EED_F1F0);
+        let mut q = ReqQueue::new();
+        // mirror of the live queue: (seq, class, pattern index)
+        let mut mirror: Vec<(u64, usize, usize)> = Vec::new();
+        for _ in 0..600 {
+            if mirror.is_empty() || rng.below(10) < 7 {
+                let p = rng.usize_below(patterns.len());
+                let class = if rng.below(4) == 0 {
+                    CLASS_SCAN
+                } else {
+                    CLASS_PROBE
+                };
+                let seq = push_class(&mut q, &patterns[p], class);
+                mirror.push((seq, class, p));
+            } else {
+                let max_batch = 1 + rng.usize_below(5);
+                let age_limit = rng.below(4);
+                let batch = q
+                    .take_batch(age_limit, max_batch)
+                    .expect("mirror is non-empty");
+                let class = batch[0].class;
+                let pat = batch[0].req.pattern.clone();
+                // invariant 1: the batch head is the OLDEST live
+                // request of its class — no within-class queue jumping
+                let oldest = mirror
+                    .iter()
+                    .filter(|&&(_, c, _)| c == class)
+                    .map(|&(s, _, _)| s)
+                    .min()
+                    .expect("class had a live request");
+                assert_eq!(batch[0].seq, oldest);
+                // invariant 2: the batch is exactly the first
+                // min(max_batch, k) live (class, pattern) requests in
+                // arrival order — per-class FIFO is never violated
+                let want: Vec<u64> = mirror
+                    .iter()
+                    .filter(|&&(_, c, p)| {
+                        c == class && patterns[p] == pat
+                    })
+                    .map(|&(s, _, _)| s)
+                    .take(max_batch)
+                    .collect();
+                let got: Vec<u64> =
+                    batch.iter().map(|t| t.seq).collect();
+                assert_eq!(got, want);
+                mirror.retain(|(s, _, _)| !got.contains(s));
+                assert_eq!(q.len, mirror.len());
+            }
+        }
     }
 }

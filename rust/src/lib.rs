@@ -82,9 +82,9 @@ pub mod util;
 pub use automata::{Dfa, FlatDfa};
 pub use baseline::sequential::SequentialMatcher;
 pub use engine::{
-    CompiledMatcher, Engine, EngineKind, ExecPolicy, Matcher, Outcome,
-    Pattern, Selection, ServeConfig, ServeError, ServeStats, Server,
-    ShardPlan, Ticket,
+    Admission, CompiledMatcher, Engine, EngineKind, ExecPolicy, Matcher,
+    Outcome, Pattern, PriorityPolicy, Selection, ServeConfig, ServeError,
+    ServeStats, Server, ServerHandle, ShardPlan, Ticket, WaitStats,
 };
 pub use regex::compile::{compile_exact, compile_prosite, compile_search};
 pub use speculative::matcher::{MatchOutcome, MatchPlan};

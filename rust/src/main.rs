@@ -18,8 +18,8 @@ use std::sync::Arc;
 use specdfa::automata::{grail, FlatDfa, Width};
 use specdfa::cluster::{CloudMatcher, ClusterSpec};
 use specdfa::engine::{
-    CompiledMatcher, Engine, ExecPolicy, Matcher, Pattern, ServeConfig,
-    Server,
+    Admission, CompiledMatcher, Engine, ExecPolicy, Matcher, Pattern,
+    PriorityPolicy, ServeConfig, Server,
 };
 use specdfa::experiments;
 use specdfa::regex::compile::{
@@ -81,13 +81,18 @@ fn print_usage() {
          \x20 specdfa serve   [--workers N] [--cache M] [--batch B] \
          [--recalibrate K]\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 \
+         [--max-queue D] [--admission block|reject] \
+         [--priority fifo|size]\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 \
+         [--age-limit A] [--probe-bytes P]\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 \
          [--requests FILE|-]   (TAB-separated lines: \
          KIND PATTERN INPUT;\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 \
          \x20KIND: regex|regex-exact|prosite; INPUT: text, @file, or \
          gen:N)\n\
-         \x20 specdfa bench   [--suite kernels|engines|all] [--quick] \
-         [--json PATH]\n\
+         \x20 specdfa bench   [--suite kernels|engines|serve|all] \
+         [--quick] [--json PATH]\n\
          \x20 specdfa experiment <name>|all      names: {}\n\
          \x20 specdfa suite   [pcre|prosite]\n\
          \x20 specdfa profile\n\
@@ -295,11 +300,23 @@ fn parse_request_line(
 
 fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
     let fl = flags(args)?;
+    let defaults = ServeConfig::default();
     let workers: usize = get(&fl, "workers").unwrap_or("4").parse()?;
     let cache: usize = get(&fl, "cache").unwrap_or("64").parse()?;
     let max_batch: usize = get(&fl, "batch").unwrap_or("64").parse()?;
     let recalibrate: u64 =
         get(&fl, "recalibrate").unwrap_or("4096").parse()?;
+    let max_queue: usize = get(&fl, "max-queue").unwrap_or("0").parse()?;
+    let admission = Admission::parse(get(&fl, "admission").unwrap_or("block"))?;
+    let priority = PriorityPolicy::parse(get(&fl, "priority").unwrap_or("size"))?;
+    let age_limit: u64 = match get(&fl, "age-limit") {
+        Some(v) => v.parse()?,
+        None => defaults.age_limit,
+    };
+    let probe_max_bytes: usize = match get(&fl, "probe-bytes") {
+        Some(v) => v.parse()?,
+        None => defaults.probe_max_bytes,
+    };
     let source = get(&fl, "requests").unwrap_or("-");
 
     let text = if source == "-" {
@@ -315,12 +332,23 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         cache_patterns: cache,
         max_batch,
         recalibrate_every: recalibrate,
-        ..ServeConfig::default()
+        max_queue,
+        admission,
+        priority,
+        age_limit,
+        probe_max_bytes,
+        ..defaults
     })?;
     let t = server.thresholds();
     println!(
-        "serving: {workers} worker(s), cache {cache} pattern(s); \
+        "serving: {workers} worker(s), cache {cache} pattern(s), \
+         queue {} ({admission:?} admission, {priority:?} priority); \
          calibrated {} sym/us -> seq<{} cloud>={}",
+        if max_queue == 0 {
+            "unbounded".to_string()
+        } else {
+            format!("<= {max_queue}")
+        },
         t.calibrated_rate
             .map(|r| format!("{r:.0}"))
             .unwrap_or_else(|| "off".to_string()),
@@ -366,13 +394,25 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
 
     let stats = server.shutdown();
     println!(
-        "served {} ok / {} failed in {} batch(es) \
-         ({:.2} requests/batch, {} coalesced)",
+        "served {} ok / {} failed / {} rejected in {} batch(es) \
+         ({:.2} requests/batch, {} coalesced, peak depth {})",
         stats.served,
         stats.failed,
+        stats.rejected,
         stats.batches,
         stats.requests_per_batch(),
-        stats.coalesced
+        stats.coalesced,
+        stats.max_queue_depth
+    );
+    println!(
+        "queue wait: probes {} taken, mean {:.0} us, max {} us; \
+         scans {} taken, mean {:.0} us, max {} us",
+        stats.probe_wait.taken,
+        stats.probe_wait.mean_us(),
+        stats.probe_wait.max_us,
+        stats.scan_wait.taken,
+        stats.scan_wait.mean_us(),
+        stats.scan_wait.max_us
     );
     println!(
         "cache: {} compile(s), {} hit(s), {} outcome hit(s), \
@@ -651,8 +691,119 @@ fn bench_engines(quick: bool, records: &mut Vec<BenchRecord>) {
     table.print();
 }
 
-/// `specdfa bench`: reproducible kernel-tier and engine benchmarks with
-/// machine-readable JSON output (the repo's `BENCH_*.json` trajectory).
+/// The `serve` suite: client-observed ticket latency under a mixed load
+/// of corpus scans and small probes, size-aware priority vs FIFO.  One
+/// worker, two corpus scans submitted first, then N 64 B probes: FIFO
+/// convoys every probe behind both scans; size-aware scheduling takes
+/// the queued probes first (aging still finishes the scans).
+fn bench_serve(quick: bool, records: &mut Vec<BenchRecord>) {
+    let probes: usize = if quick { 200 } else { 1000 };
+    let probe_n = 64usize;
+    let scan_n: usize = if quick { 1 << 20 } else { 8 << 20 };
+    let mut table = Table::new(
+        "serve latency (1 worker, 2 scans + N probes)",
+        &["mode", "probe p50 ms", "probe p99 ms", "scan max ms", "MB/s"],
+    );
+    for (mode, priority) in [
+        ("size", PriorityPolicy::SizeAware),
+        ("fifo", PriorityPolicy::Fifo),
+    ] {
+        let server = Server::start(ServeConfig {
+            workers: 1,
+            profile_runs: 1,
+            profile_sample_syms: 1 << 14,
+            recalibrate_every: 0,
+            calibrate_on_start: false,
+            cache_outcomes: 0,
+            engine: Engine::Sequential,
+            priority,
+            // one request per batch (the two scans must not coalesce)
+            // and a huge aging bound: the finite pre-submitted flood
+            // cannot starve anything, and the two modes differ purely
+            // by scheduling order
+            max_batch: 1,
+            age_limit: 1 << 30,
+            ..ServeConfig::default()
+        })
+        .expect("serve bench server");
+        let mut gen = InputGen::new(0x5E7E);
+        // uppercase literal: InputGen::ascii_text emits lowercase only,
+        // so the scan DFA never accepts and must walk the full corpus
+        let scan_pat = Pattern::Regex("ZQZQZQ".to_string());
+        let probe_pat = Pattern::Regex("(ab|cd)+e".to_string());
+        let scan_inputs: Vec<Vec<u8>> =
+            (0..2).map(|_| gen.ascii_text(scan_n)).collect();
+        let probe_inputs: Vec<Vec<u8>> =
+            (0..probes).map(|_| gen.ascii_text(probe_n)).collect();
+        let t0 = std::time::Instant::now();
+        let scan_tickets: Vec<_> = scan_inputs
+            .into_iter()
+            .map(|inp| server.submit(scan_pat.clone(), inp))
+            .collect();
+        let probe_tickets: Vec<_> = probe_inputs
+            .into_iter()
+            .map(|inp| server.submit(probe_pat.clone(), inp))
+            .collect();
+        // resolution order approximates completion: tickets resolved
+        // while we were blocked on an earlier one read back-to-back
+        let mut probe_done: Vec<f64> = probe_tickets
+            .into_iter()
+            .map(|t| {
+                t.wait().expect("probe serves");
+                t0.elapsed().as_secs_f64()
+            })
+            .collect();
+        let scan_done: Vec<f64> = scan_tickets
+            .into_iter()
+            .map(|t| {
+                t.wait().expect("scan serves");
+                t0.elapsed().as_secs_f64()
+            })
+            .collect();
+        let wall = t0.elapsed().as_secs_f64();
+        let _ = server.shutdown();
+        probe_done.sort_by(|a, b| a.total_cmp(b));
+        let pct = |v: &[f64], p: f64| {
+            v[(((v.len() - 1) as f64) * p).round() as usize]
+        };
+        let p50 = pct(&probe_done, 0.50);
+        let p99 = pct(&probe_done, 0.99);
+        let scan_max = scan_done.iter().fold(0.0_f64, |a, &b| a.max(b));
+        let total_bytes = 2 * scan_n + probes * probe_n;
+        let sps = total_bytes as f64 / wall.max(1e-12);
+        for (kernel, secs) in [
+            ("probe_wait_p50", p50),
+            ("probe_wait_p99", p99),
+            ("scan_wait_max", scan_max),
+        ] {
+            records.push(BenchRecord {
+                suite: "serve".to_string(),
+                workload: format!("{mode}-2scan-{probes}probe"),
+                kernel: kernel.to_string(),
+                width: None,
+                table_bytes: None,
+                n_syms: total_bytes,
+                reps: probes,
+                secs_per_iter: secs,
+                syms_per_sec: sps,
+                syms_matched: None,
+                collapses: None,
+            });
+        }
+        table.row(vec![
+            mode.to_string(),
+            format!("{:.2}", p50 * 1e3),
+            format!("{:.2}", p99 * 1e3),
+            format!("{:.2}", scan_max * 1e3),
+            format!("{:.1}", sps / (1 << 20) as f64),
+        ]);
+    }
+    table.print();
+}
+
+/// `specdfa bench`: reproducible kernel-tier, engine and serve-latency
+/// benchmarks with machine-readable JSON output (the repo's
+/// `BENCH_*.json` trajectory).
 fn cmd_bench(args: &[String]) -> anyhow::Result<()> {
     let fl = flags(args)?;
     let suite = get(&fl, "suite").unwrap_or("kernels");
@@ -661,12 +812,14 @@ fn cmd_bench(args: &[String]) -> anyhow::Result<()> {
     match suite {
         "kernels" => bench_kernels(quick, &mut records),
         "engines" => bench_engines(quick, &mut records),
+        "serve" => bench_serve(quick, &mut records),
         "all" => {
             bench_kernels(quick, &mut records);
             bench_engines(quick, &mut records);
+            bench_serve(quick, &mut records);
         }
         other => anyhow::bail!(
-            "unknown suite {other:?} (expected kernels|engines|all)"
+            "unknown suite {other:?} (expected kernels|engines|serve|all)"
         ),
     }
     if let Some(path) = get(&fl, "json") {

@@ -7,11 +7,20 @@
 //!      thresholds differ from the baked-in ballpark;
 //!  (c) streamed outcomes are identical to the synchronous
 //!      `match_many` results on the same corpus;
+//!  (d) admission control: `Reject` overloads exactly at `max_queue`,
+//!      `Block` bounds the depth and unblocks on drain, and submitting
+//!      to a shut-down server resolves immediately;
+//!  (e) priority scheduling: queued probes jump a queued corpus scan,
+//!      and the aging bound keeps a probe flood from starving it;
 //!  plus a many-producer concurrency test asserting per-producer
-//!  outcome order.
+//!  outcome order and a stats-snapshot consistency check.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
 
 use specdfa::engine::{
-    CompiledMatcher, Engine, ExecPolicy, Pattern, ServeConfig, Server,
+    Admission, CompiledMatcher, Engine, ExecPolicy, Pattern, ServeConfig,
+    ServeError, Server, Ticket,
 };
 use specdfa::engine::select::AutoThresholds;
 use specdfa::workload::InputGen;
@@ -24,6 +33,50 @@ fn test_config(workers: usize) -> ServeConfig {
         recalibrate_every: 0, // deterministic compile counts
         ..ServeConfig::default()
     }
+}
+
+/// Config for the admission/priority tests: one deterministic engine,
+/// no calibration, no memoization — queue behavior only.
+fn bounded_config(workers: usize) -> ServeConfig {
+    ServeConfig {
+        workers,
+        calibrate_on_start: false,
+        recalibrate_every: 0,
+        cache_outcomes: 0,
+        profile_per_worker: false,
+        engine: Engine::Sequential,
+        ..ServeConfig::default()
+    }
+}
+
+/// Spin until `cond` holds (30 s hard cap: hitting it means the serving
+/// loop wedged, which is itself a failure).
+fn wait_until(mut cond: impl FnMut() -> bool) {
+    let t0 = Instant::now();
+    while !cond() {
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "condition timed out"
+        );
+        std::thread::yield_now();
+    }
+}
+
+/// Park the only worker on a corpus-scale scan and return its ticket.
+/// The pattern is an uppercase literal and `InputGen::ascii_text` emits
+/// lowercase only, so the sequential engine can never accept early and
+/// must walk the full input — the worker stays busy for milliseconds
+/// while the test performs microsecond-scale submissions.
+fn wedge(server: &Server, n: usize) -> Ticket {
+    let t = server.submit(
+        Pattern::Regex("ZQZQZQ".to_string()),
+        InputGen::new(0x3ED6E).ascii_text(n),
+    );
+    wait_until(|| {
+        let s = server.stats();
+        s.batches >= 1 && s.queue_depth == 0
+    });
+    t
 }
 
 #[test]
@@ -310,4 +363,253 @@ fn recalibration_interval_reprofiles_and_bumps_epoch() {
         "periodic re-profiling must fire on the request interval"
     );
     assert!(stats.thresholds.is_calibrated());
+}
+
+#[test]
+fn submit_after_shutdown_resolves_immediately() {
+    let server = Server::start(bounded_config(1)).unwrap();
+    let handle = server.handle();
+    assert!(handle
+        .submit(Pattern::Regex("ab".to_string()), &b"xaby"[..])
+        .wait()
+        .unwrap()
+        .accepted);
+    let stats = server.shutdown();
+    assert_eq!(stats.served, 1);
+    // regression: this used to push onto a queue no worker will ever
+    // drain, so Ticket::wait blocked forever
+    let ticket =
+        handle.submit(Pattern::Regex("ab".to_string()), &b"xaby"[..]);
+    match ticket.wait_timeout(Duration::from_secs(30)) {
+        Ok(res) => {
+            assert!(matches!(res, Err(ServeError::ShuttingDown)), "{res:?}")
+        }
+        Err(_) => panic!("submit-after-shutdown ticket never resolved"),
+    }
+    let tickets = handle.submit_many(
+        &Pattern::Regex("ab".to_string()),
+        &[&b"x"[..], &b"y"[..]],
+    );
+    for t in tickets {
+        assert!(matches!(t.wait(), Err(ServeError::ShuttingDown)));
+    }
+    let s = handle.stats();
+    assert_eq!(s.rejected, 3);
+    assert_eq!(s.submitted, 1, "refused requests are never 'submitted'");
+}
+
+#[test]
+fn stats_snapshots_never_show_served_ahead_of_submitted() {
+    let server = Server::start(bounded_config(4)).unwrap();
+    let done = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        let server = &server;
+        let done = &done;
+        // regression: `submitted` used to be incremented after the
+        // queue lock was released, so a snapshot could observe a
+        // request served before it was counted as submitted
+        let poller = scope.spawn(move || {
+            let mut checks = 0u64;
+            while !done.load(Ordering::Relaxed) {
+                let s = server.stats();
+                assert!(
+                    s.served + s.failed <= s.submitted,
+                    "torn snapshot: served {} + failed {} > submitted {}",
+                    s.served,
+                    s.failed,
+                    s.submitted
+                );
+                checks += 1;
+            }
+            checks
+        });
+        let producers: Vec<_> = (0..3)
+            .map(|p| {
+                scope.spawn(move || {
+                    let pattern = Pattern::Regex(format!("a{p}b"));
+                    let inputs: Vec<Vec<u8>> =
+                        (0..16).map(|k| vec![b'a'; 8 + k]).collect();
+                    let refs: Vec<&[u8]> =
+                        inputs.iter().map(|v| v.as_slice()).collect();
+                    for _ in 0..40 {
+                        for t in server.submit_many(&pattern, &refs) {
+                            assert!(t.wait().is_ok());
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in producers {
+            h.join().unwrap();
+        }
+        done.store(true, Ordering::Relaxed);
+        assert!(poller.join().unwrap() > 0, "the poller must have sampled");
+    });
+    let stats = server.shutdown();
+    assert_eq!(stats.submitted, 3 * 40 * 16);
+    assert_eq!(stats.served, stats.submitted);
+    assert_eq!(stats.failed, 0);
+}
+
+#[test]
+fn reject_admission_never_exceeds_max_queue() {
+    let server = Server::start(ServeConfig {
+        max_queue: 4,
+        admission: Admission::Reject,
+        ..bounded_config(1)
+    })
+    .unwrap();
+    let wedge_ticket = wedge(&server, 8 << 20);
+    let probe = Pattern::Regex("ab+c".to_string());
+    let accepted: Vec<_> = (0..4)
+        .map(|_| server.submit(probe.clone(), &b"xabbcx"[..]))
+        .collect();
+    // depth is now exactly max_queue: every further submit must stream
+    // Overloaded through its ticket immediately
+    for _ in 0..4 {
+        let t = server.submit(probe.clone(), &b"xabbcx"[..]);
+        match t.wait_timeout(Duration::from_secs(30)) {
+            Ok(res) => match res {
+                Err(ServeError::Overloaded { depth, max_queue }) => {
+                    assert_eq!(max_queue, 4);
+                    assert_eq!(depth, 4);
+                }
+                other => panic!(
+                    "expected Overloaded, got {:?}",
+                    other.map(|o| o.accepted)
+                ),
+            },
+            Err(_) => panic!("rejected ticket never resolved"),
+        }
+    }
+    assert!(wedge_ticket.wait().is_ok());
+    for t in accepted {
+        assert!(t.wait().unwrap().accepted);
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.rejected, 4);
+    assert_eq!(stats.submitted, 5);
+    assert_eq!(stats.served, 5);
+    assert!(
+        stats.max_queue_depth <= 4,
+        "Reject admission let the depth reach {}",
+        stats.max_queue_depth
+    );
+}
+
+#[test]
+fn block_admission_bounds_depth_and_unblocks_on_drain() {
+    let server = Server::start(ServeConfig {
+        max_queue: 2,
+        admission: Admission::Block,
+        ..bounded_config(1)
+    })
+    .unwrap();
+    let pattern = Pattern::Regex("ab".to_string());
+    let tickets: Vec<_> = (0..64)
+        .map(|k| server.submit(pattern.clone(), vec![b'a'; 1 + k % 7]))
+        .collect();
+    for t in tickets {
+        assert!(t.wait().is_ok());
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.submitted, 64);
+    assert_eq!(stats.served, 64);
+    assert_eq!(stats.rejected, 0);
+    assert!(
+        stats.max_queue_depth <= 2,
+        "Block admission let the depth reach {}",
+        stats.max_queue_depth
+    );
+}
+
+#[test]
+fn probe_flood_cannot_starve_a_queued_scan() {
+    let server = Server::start(ServeConfig {
+        max_queue: 8,
+        admission: Admission::Block,
+        max_batch: 4,
+        age_limit: 2,
+        ..bounded_config(1)
+    })
+    .unwrap();
+    // generate the scan corpus BEFORE parking the worker: the wedge
+    // window must not race millisecond-scale input generation
+    let scan_input = InputGen::new(0x5CA9).ascii_text(4 << 20);
+    let wedge_ticket = wedge(&server, 4 << 20);
+    let scan_ticket =
+        server.submit(Pattern::Regex("ZQZQZQ".to_string()), scan_input);
+    let scan_resolved = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        let server = &server;
+        let scan_resolved = &scan_resolved;
+        let flooder = scope.spawn(move || {
+            let probe = Pattern::Regex("ab+c".to_string());
+            let mut sent = 0u64;
+            while !scan_resolved.load(Ordering::Relaxed) {
+                // Block admission paces the flood to the service rate,
+                // so probes are always queued when the worker picks its
+                // next batch — without aging the scan would never run
+                drop(server.submit(probe.clone(), &b"xabbcx"[..]));
+                sent += 1;
+            }
+            sent
+        });
+        match scan_ticket.wait_timeout(Duration::from_secs(60)) {
+            Ok(res) => assert!(res.expect("scan serves").n > 0),
+            Err(_) => panic!("a probe flood starved the queued scan"),
+        }
+        scan_resolved.store(true, Ordering::Relaxed);
+        assert!(flooder.join().unwrap() > 0);
+    });
+    assert!(wedge_ticket.wait().is_ok());
+    let stats = server.shutdown();
+    assert_eq!(stats.scan_wait.taken, 2, "the wedge + the aged scan");
+    assert!(stats.probe_wait.taken > 0);
+}
+
+#[test]
+fn queued_probes_jump_a_queued_scan() {
+    let server = Server::start(ServeConfig {
+        max_batch: 1024,
+        age_limit: 1000,
+        ..bounded_config(1)
+    })
+    .unwrap();
+    // generate every input BEFORE parking the worker: submissions in
+    // the wedge window must be microsecond-scale lock operations, not
+    // millisecond-scale corpus generation
+    let scan_input = InputGen::new(0x77).ascii_text(4 << 20);
+    let probe = Pattern::Regex("ab+c".to_string());
+    let inputs: Vec<Vec<u8>> = (0..500)
+        .map(|k| {
+            let mut v = vec![b'x'; 8 + (k % 11)];
+            if k % 2 == 0 {
+                v.extend_from_slice(b"abbc");
+            }
+            v
+        })
+        .collect();
+    let refs: Vec<&[u8]> = inputs.iter().map(|v| v.as_slice()).collect();
+    let wedge_ticket = wedge(&server, 4 << 20);
+    // the scan is submitted BEFORE any probe...
+    let scan_ticket =
+        server.submit(Pattern::Regex("ZQZQZQ".to_string()), scan_input);
+    let tickets = server.submit_many(&probe, &refs);
+    for (k, t) in tickets.into_iter().enumerate() {
+        assert_eq!(t.wait().unwrap().accepted, k % 2 == 0, "probe {k}");
+    }
+    assert!(scan_ticket.wait().is_ok());
+    assert!(wedge_ticket.wait().is_ok());
+    let stats = server.shutdown();
+    assert_eq!(stats.probe_wait.taken, 500);
+    assert_eq!(stats.scan_wait.taken, 2);
+    // ...yet all 500 probes were taken in one batch before it: the
+    // scan's take-time wait must dominate every probe's
+    assert!(
+        stats.scan_wait.max_us > stats.probe_wait.max_us,
+        "scan max wait {} us <= probe max wait {} us",
+        stats.scan_wait.max_us,
+        stats.probe_wait.max_us
+    );
 }
