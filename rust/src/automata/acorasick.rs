@@ -1,0 +1,194 @@
+//! Aho–Corasick multi-literal scanner: the prefilter tier of the
+//! pattern-set engine ([`crate::engine::patternset`]).
+//!
+//! Each pattern with a *required literal* (a byte string every match must
+//! contain, [`crate::baseline::greplike::required_literal`]) registers
+//! that literal here; one linear pass over the input then decides, for
+//! every registered literal at once, whether it occurs.  A pattern whose
+//! required literal is absent cannot match — it is *cleared* without any
+//! DFA work.  This is the classic grep/Hyperscan architecture: a cheap
+//! necessary-condition tier in front of the exact automaton.
+//!
+//! The automaton is the textbook construction — trie + BFS failure links
+//! — collapsed into a dense `state × 256` goto table so the scan is one
+//! table load per input byte, the same memory shape as the flattened
+//! SBase DFA tables ([`super::dfa::FlatDfa`]).
+
+/// Sentinel for "no trie child".
+const NONE: u32 = u32::MAX;
+
+/// A dense-table Aho–Corasick automaton over raw bytes.
+///
+/// Built once per compiled pattern set from `(literal, id)` pairs; the
+/// ids are small dense indices chosen by the caller (the pattern-set
+/// compiler uses positions into its unique-pattern table).  Duplicate
+/// literals are fine: each occurrence reports every id registered for
+/// it.
+pub struct AhoCorasick {
+    /// dense goto table: `next[state * 256 + byte]`
+    next: Vec<u32>,
+    /// ids whose literal ends at this state (failure-closure included)
+    out: Vec<Vec<u32>>,
+    /// number of distinct ids registered
+    num_ids: usize,
+}
+
+impl AhoCorasick {
+    /// Build the automaton from `(literal, id)` pairs.  Empty literals
+    /// are rejected (they would "occur" everywhere and clear nothing);
+    /// `num_ids` sizes the presence vector returned by
+    /// [`AhoCorasick::presence`] and must exceed every registered id.
+    pub fn new(literals: &[(&[u8], u32)], num_ids: usize) -> AhoCorasick {
+        assert!(
+            literals.iter().all(|(lit, _)| !lit.is_empty()),
+            "empty prefilter literal"
+        );
+        assert!(
+            literals.iter().all(|&(_, id)| (id as usize) < num_ids),
+            "prefilter id out of range"
+        );
+        // 1. trie
+        let mut children: Vec<[u32; 256]> = vec![[NONE; 256]];
+        let mut out: Vec<Vec<u32>> = vec![Vec::new()];
+        for (lit, id) in literals {
+            let mut s = 0usize;
+            for &b in *lit {
+                let t = children[s][b as usize];
+                s = if t == NONE {
+                    children.push([NONE; 256]);
+                    out.push(Vec::new());
+                    let fresh = (children.len() - 1) as u32;
+                    children[s][b as usize] = fresh;
+                    fresh as usize
+                } else {
+                    t as usize
+                };
+            }
+            out[s].push(*id);
+        }
+        // 2. BFS failure links, collapsed into a dense goto function:
+        //    next[s][b] = child if present, else next[fail(s)][b].
+        let states = children.len();
+        let mut next = vec![0u32; states * 256];
+        let mut fail = vec![0u32; states];
+        let mut queue = std::collections::VecDeque::new();
+        for b in 0..256 {
+            let c = children[0][b];
+            if c != NONE {
+                fail[c as usize] = 0;
+                queue.push_back(c);
+                next[b] = c;
+            } // else next[b] stays 0 (root self-loop)
+        }
+        while let Some(s) = queue.pop_front() {
+            let f = fail[s as usize];
+            // outputs of the failure state are also outputs here (a
+            // suffix of the current match ends another literal)
+            let inherited = out[f as usize].clone();
+            out[s as usize].extend(inherited);
+            for b in 0..256 {
+                let c = children[s as usize][b];
+                if c != NONE {
+                    fail[c as usize] = next[f as usize * 256 + b];
+                    queue.push_back(c);
+                    next[s as usize * 256 + b] = c;
+                } else {
+                    next[s as usize * 256 + b] = next[f as usize * 256 + b];
+                }
+            }
+        }
+        AhoCorasick { next, out, num_ids }
+    }
+
+    /// Number of automaton states (trie nodes).
+    pub fn num_states(&self) -> usize {
+        self.out.len()
+    }
+
+    /// Bytes of the dense goto table (the prefilter's working set).
+    pub fn table_bytes(&self) -> usize {
+        self.next.len() * std::mem::size_of::<u32>()
+    }
+
+    /// One pass over `haystack`: `presence[id]` is true iff some literal
+    /// registered under `id` occurs in the input.  Exits early once every
+    /// registered id has been seen.
+    pub fn presence(&self, haystack: &[u8]) -> Vec<bool> {
+        let mut present = vec![false; self.num_ids];
+        let mut remaining = self.num_ids;
+        let mut s = 0usize;
+        for &b in haystack {
+            s = self.next[s * 256 + b as usize] as usize;
+            if !self.out[s].is_empty() {
+                for &id in &self.out[s] {
+                    if !present[id as usize] {
+                        present[id as usize] = true;
+                        remaining -= 1;
+                    }
+                }
+                if remaining == 0 {
+                    break;
+                }
+            }
+        }
+        present
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finds_each_literal_independently() {
+        let ac = AhoCorasick::new(
+            &[(b"he", 0), (b"she", 1), (b"his", 2), (b"hers", 3)],
+            4,
+        );
+        assert_eq!(ac.presence(b"ushers"), vec![true, true, false, true]);
+        assert_eq!(ac.presence(b"his"), vec![false, false, true, false]);
+        assert_eq!(ac.presence(b""), vec![false; 4]);
+        assert_eq!(ac.presence(b"xyz"), vec![false; 4]);
+    }
+
+    #[test]
+    fn overlapping_and_duplicate_literals() {
+        // two patterns share one literal; both ids must report
+        let ac = AhoCorasick::new(&[(b"abc", 0), (b"abc", 1), (b"bc", 2)], 3);
+        assert_eq!(ac.presence(b"zabcz"), vec![true, true, true]);
+        assert_eq!(ac.presence(b"zbcz"), vec![false, false, true]);
+    }
+
+    #[test]
+    fn presence_matches_naive_contains() {
+        crate::util::prop::check("ac presence == contains", 40, |rng| {
+            let nlits = rng.range_usize(1, 5);
+            let lits: Vec<Vec<u8>> = (0..nlits)
+                .map(|_| {
+                    let len = rng.range_usize(1, 4);
+                    (0..len).map(|_| b'a' + rng.below(3) as u8).collect()
+                })
+                .collect();
+            let pairs: Vec<(&[u8], u32)> = lits
+                .iter()
+                .enumerate()
+                .map(|(i, l)| (l.as_slice(), i as u32))
+                .collect();
+            let ac = AhoCorasick::new(&pairs, nlits);
+            let hay: Vec<u8> = (0..rng.range_usize(0, 64))
+                .map(|_| b'a' + rng.below(3) as u8)
+                .collect();
+            let got = ac.presence(&hay);
+            for (i, lit) in lits.iter().enumerate() {
+                let want = hay.windows(lit.len()).any(|w| w == &lit[..]);
+                assert_eq!(got[i], want, "lit {lit:?} hay {hay:?}");
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_empty_literal() {
+        AhoCorasick::new(&[(b"", 0)], 1);
+    }
+}

@@ -3,13 +3,17 @@
 //! Hopcroft minimization, the flattened SBase/IBase DFA representation of
 //! Fig. 8, and Grail+-style text I/O.
 
+pub mod acorasick;
 pub mod byteset;
 pub mod dfa;
 pub mod grail;
 pub mod minimize;
 pub mod nfa;
+pub mod product;
 pub mod subset;
 
+pub use acorasick::AhoCorasick;
 pub use byteset::ByteSet;
 pub use dfa::{Dfa, FlatDfa, SBase, ValidSyms, Width};
 pub use nfa::Nfa;
+pub use product::{fuse, ProductDfa};

@@ -1,0 +1,251 @@
+//! Product ("fused") DFA construction for multi-pattern matching.
+//!
+//! A set of k DFAs is fused into one automaton whose states are k-tuples
+//! of component states, reachable from the tuple of start states — the
+//! Simultaneous Finite Automata idea (Sin'ya et al., arXiv 1405.0562):
+//! one pass over the input advances *all* patterns at once, and the
+//! final product state projects back to every component's final state.
+//! Construction is a BFS over reachable tuples; following Jung &
+//! Burgstaller (arXiv 1512.09228) the successor computation of each BFS
+//! frontier is embarrassingly parallel (their Rabin fingerprints play
+//! the role our tuple hash map plays here), while interning stays
+//! sequential so state ids are deterministic.
+//!
+//! Reachable product size is usually far below the |Q₁|·…·|Qₖ| worst
+//! case but *can* blow up, so [`fuse`] takes a `state_budget` and
+//! returns `None` instead of thrashing — the caller spills patterns back
+//! to per-pattern matching, keeping the engine failure-free (the same
+//! "never wrong, only slower" discipline as the speculative kernel).
+
+use std::collections::HashMap;
+
+use super::dfa::Dfa;
+use crate::util::bitset::BitSet;
+
+/// A fused product DFA plus the bookkeeping to project verdicts back to
+/// the component automata.
+#[derive(Clone, Debug)]
+pub struct ProductDfa {
+    /// the fused automaton (accepting = "some component accepts")
+    pub dfa: Dfa,
+    /// per product state: which components accept there (bit i ↔ dfas[i])
+    pub accept_masks: Vec<BitSet>,
+    /// per product state: the component-state tuple (`proj[p][i]` is
+    /// component i's state when the product is in state p)
+    pub proj: Vec<Vec<u32>>,
+}
+
+impl ProductDfa {
+    /// Number of fused components.
+    pub fn components(&self) -> usize {
+        self.proj.first().map_or(0, |t| t.len())
+    }
+}
+
+/// Fuse `dfas` into a reachable product DFA.
+///
+/// `state_budget` caps the number of product states (0 = unlimited);
+/// when the reachable product exceeds it the construction aborts and
+/// returns `None` so the caller can spill patterns instead of failing.
+/// `threads` bounds the worker threads used for frontier expansion;
+/// results are identical for any thread count (state ids are assigned
+/// by a sequential interning pass in frontier order).
+pub fn fuse(dfas: &[&Dfa], state_budget: usize, threads: usize) -> Option<ProductDfa> {
+    assert!(!dfas.is_empty(), "fuse of an empty DFA set");
+    let k = dfas.len();
+    let budget = if state_budget == 0 { usize::MAX } else { state_budget };
+
+    // 1. Combined byte classes: two bytes share a class iff every
+    //    component classes them identically.  At most 256 classes, so
+    //    the signature interning always fits the u8 class table.
+    let mut sig_ids: HashMap<Vec<u8>, u8> = HashMap::new();
+    let mut classes = [0u8; 256];
+    let mut reps: Vec<u8> = Vec::new();
+    for b in 0..=255u8 {
+        let sig: Vec<u8> = dfas.iter().map(|d| d.classes[b as usize]).collect();
+        let id = *sig_ids.entry(sig).or_insert_with(|| {
+            reps.push(b);
+            (reps.len() - 1) as u8
+        });
+        classes[b as usize] = id;
+    }
+    let sigma = reps.len() as u32;
+    // per-component view of each combined class (via its representative)
+    let comp_sym: Vec<Vec<u32>> = dfas
+        .iter()
+        .map(|d| reps.iter().map(|&r| d.class_of(r)).collect())
+        .collect();
+
+    // 2. BFS over reachable tuples.  Frontier successor tuples are
+    //    computed in parallel; interning is sequential in (frontier,
+    //    symbol) order so discovery order — hence state ids and the
+    //    row-major table layout — is deterministic.
+    let start: Vec<u32> = dfas.iter().map(|d| d.start).collect();
+    let mut ids: HashMap<Vec<u32>, u32> = HashMap::new();
+    let mut tuples: Vec<Vec<u32>> = vec![start.clone()];
+    ids.insert(start, 0);
+    let mut table: Vec<u32> = Vec::new();
+    let mut explored = 0usize;
+    let succ_of = |tuple: &[u32]| -> Vec<Vec<u32>> {
+        (0..sigma as usize)
+            .map(|c| {
+                tuple
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &q)| dfas[i].step(q, comp_sym[i][c]))
+                    .collect()
+            })
+            .collect()
+    };
+    while explored < tuples.len() {
+        let frontier: Vec<Vec<u32>> = tuples[explored..].to_vec();
+        explored = tuples.len();
+        let workers = threads.max(1).min(frontier.len());
+        let succs: Vec<Vec<Vec<u32>>> = if workers <= 1 || frontier.len() < 64 {
+            frontier.iter().map(|t| succ_of(t)).collect()
+        } else {
+            let chunk = frontier.len().div_ceil(workers);
+            let succ_of = &succ_of;
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = frontier
+                    .chunks(chunk)
+                    .map(|ch| {
+                        scope.spawn(move || {
+                            ch.iter().map(|t| succ_of(t)).collect::<Vec<_>>()
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .flat_map(|h| h.join().expect("fuse worker panicked"))
+                    .collect()
+            })
+        };
+        for row in succs {
+            for tuple in row {
+                let next_id = match ids.get(&tuple) {
+                    Some(&id) => id,
+                    None => {
+                        if tuples.len() >= budget {
+                            return None; // over budget: caller spills
+                        }
+                        let id = tuples.len() as u32;
+                        ids.insert(tuple.clone(), id);
+                        tuples.push(tuple);
+                        id
+                    }
+                };
+                table.push(next_id);
+            }
+        }
+    }
+
+    // 3. Accepting structure: the fused DFA accepts where any component
+    //    does; the per-state mask records exactly which ones.
+    let mut accepting = Vec::with_capacity(tuples.len());
+    let mut accept_masks = Vec::with_capacity(tuples.len());
+    for t in &tuples {
+        let mask = BitSet::from_iter_cap(
+            k,
+            t.iter()
+                .enumerate()
+                .filter(|&(i, &q)| dfas[i].accepting[q as usize])
+                .map(|(i, _)| i),
+        );
+        accepting.push(!mask.is_empty());
+        accept_masks.push(mask);
+    }
+    let dfa =
+        Dfa::new(tuples.len() as u32, sigma, 0, accepting, table, classes);
+    Some(ProductDfa { dfa, accept_masks, proj: tuples })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Accepts strings containing the byte `b` (2 states).
+    fn contains_byte(b: u8) -> Dfa {
+        let mut classes = [0u8; 256];
+        classes[b as usize] = 1;
+        Dfa::new(2, 2, 0, vec![false, true], vec![0, 1, 1, 1], classes)
+    }
+
+    /// Accepts strings of even length (2 states, 1 symbol).
+    fn even_length() -> Dfa {
+        Dfa::new(2, 1, 0, vec![true, false], vec![1, 0], [0u8; 256])
+    }
+
+    #[test]
+    fn fused_pair_tracks_both_components() {
+        let d1 = contains_byte(b'a');
+        let d2 = even_length();
+        let p = fuse(&[&d1, &d2], 0, 1).unwrap();
+        assert_eq!(p.components(), 2);
+        for input in [&b""[..], b"a", b"xx", b"xa", b"aaa", b"bbbb"] {
+            let fs = p.dfa.run_bytes(p.dfa.start, input);
+            let mask = &p.accept_masks[fs as usize];
+            assert_eq!(mask.contains(0), d1.accepts_bytes(input));
+            assert_eq!(mask.contains(1), d2.accepts_bytes(input));
+            // projection agrees with the standalone runs
+            assert_eq!(p.proj[fs as usize][0], d1.run_bytes(d1.start, input));
+            assert_eq!(p.proj[fs as usize][1], d2.run_bytes(d2.start, input));
+        }
+    }
+
+    #[test]
+    fn budget_overflow_returns_none() {
+        let d1 = contains_byte(b'a');
+        let d2 = even_length();
+        // reachable product has 4 states; a budget of 2 must abort
+        assert!(fuse(&[&d1, &d2], 2, 1).is_none());
+        assert!(fuse(&[&d1, &d2], 4, 1).is_some());
+    }
+
+    #[test]
+    fn parallel_construction_is_deterministic() {
+        let ds: Vec<Dfa> =
+            [b'a', b'b', b'c', b'd'].iter().map(|&b| contains_byte(b)).collect();
+        let refs: Vec<&Dfa> = ds.iter().collect();
+        let serial = fuse(&refs, 0, 1).unwrap();
+        let parallel = fuse(&refs, 0, 4).unwrap();
+        assert_eq!(serial.dfa, parallel.dfa);
+        assert_eq!(serial.proj, parallel.proj);
+        assert_eq!(serial.accept_masks, parallel.accept_masks);
+    }
+
+    #[test]
+    fn fused_matches_lockstep_on_random_dfas() {
+        crate::util::prop::check("product == lockstep", 30, |rng| {
+            // random complete 2-symbol DFAs over bytes a/b
+            let k = rng.range_usize(1, 3);
+            let ds: Vec<Dfa> = (0..k)
+                .map(|_| {
+                    let n = rng.range_u64(1, 4) as u32;
+                    let table: Vec<u32> =
+                        (0..n * 2).map(|_| rng.below(n as u64) as u32).collect();
+                    let accepting: Vec<bool> =
+                        (0..n).map(|_| rng.chance(0.4)).collect();
+                    let mut classes = [0u8; 256];
+                    classes[b'b' as usize] = 1;
+                    Dfa::new(n, 2, rng.below(n as u64) as u32, accepting,
+                             table, classes)
+                })
+                .collect();
+            let refs: Vec<&Dfa> = ds.iter().collect();
+            let p = fuse(&refs, 0, 2).unwrap();
+            let input: Vec<u8> = (0..rng.range_usize(0, 40))
+                .map(|_| if rng.chance(0.5) { b'a' } else { b'b' })
+                .collect();
+            let fs = p.dfa.run_bytes(p.dfa.start, &input);
+            for (i, d) in ds.iter().enumerate() {
+                let qi = d.run_bytes(d.start, &input);
+                assert_eq!(p.proj[fs as usize][i], qi);
+                assert_eq!(
+                    p.accept_masks[fs as usize].contains(i),
+                    d.accepting[qi as usize]
+                );
+            }
+        });
+    }
+}

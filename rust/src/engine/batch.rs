@@ -12,6 +12,7 @@
 //! other request still completes — a server must never drop finished work
 //! because an unrelated request in the same batch failed.
 
+use std::collections::HashMap;
 use std::fmt;
 
 use super::outcome::{EngineKind, Outcome};
@@ -102,11 +103,23 @@ impl CompiledMatcher {
     /// Serve a batch of byte inputs through the compiled pattern.
     /// Infallible at the batch level: per-request failures land in their
     /// own [`RequestError`] slot.
+    ///
+    /// Slots with byte-identical inputs run **once**: later duplicates
+    /// clone the first slot's result (the matcher is deterministic, so
+    /// the outcome is too).  [`BatchOutcome::total_syms`] counts only the
+    /// work actually executed — duplicate slots add nothing.
     pub fn match_many(&self, inputs: &[&[u8]]) -> BatchOutcome {
         let t0 = std::time::Instant::now();
-        let mut outcomes = Vec::with_capacity(inputs.len());
+        let mut outcomes: Vec<Result<Outcome, RequestError>> =
+            Vec::with_capacity(inputs.len());
         let mut total_syms = 0usize;
+        let mut first_of: HashMap<&[u8], usize> = HashMap::new();
         for (index, input) in inputs.iter().enumerate() {
+            if let Some(&prev) = first_of.get(*input) {
+                outcomes.push(reuse_slot(&outcomes[prev], index));
+                continue;
+            }
+            first_of.insert(input, index);
             total_syms += input.len();
             outcomes.push(self.run_bytes(input).map_err(|e| RequestError {
                 index,
@@ -120,12 +133,20 @@ impl CompiledMatcher {
         }
     }
 
-    /// Serve a batch of pre-mapped symbol inputs.
+    /// Serve a batch of pre-mapped symbol inputs.  Duplicate inputs are
+    /// matched once and share the result, as in [`Self::match_many`].
     pub fn match_many_syms(&self, inputs: &[Vec<u32>]) -> BatchOutcome {
         let t0 = std::time::Instant::now();
-        let mut outcomes = Vec::with_capacity(inputs.len());
+        let mut outcomes: Vec<Result<Outcome, RequestError>> =
+            Vec::with_capacity(inputs.len());
         let mut total_syms = 0usize;
+        let mut first_of: HashMap<&[u32], usize> = HashMap::new();
         for (index, input) in inputs.iter().enumerate() {
+            if let Some(&prev) = first_of.get(input.as_slice()) {
+                outcomes.push(reuse_slot(&outcomes[prev], index));
+                continue;
+            }
+            first_of.insert(input.as_slice(), index);
             total_syms += input.len();
             outcomes.push(self.run_syms(input).map_err(|e| RequestError {
                 index,
@@ -137,6 +158,18 @@ impl CompiledMatcher {
             total_syms,
             wall_s: t0.elapsed().as_secs_f64(),
         }
+    }
+}
+
+/// Clone an earlier slot's result for a duplicate input, re-indexed so a
+/// cloned [`RequestError`] still points at its own slot.
+fn reuse_slot(
+    prev: &Result<Outcome, RequestError>,
+    index: usize,
+) -> Result<Outcome, RequestError> {
+    match prev {
+        Ok(o) => Ok(o.clone()),
+        Err(e) => Err(RequestError { index, message: e.message.clone() }),
     }
 }
 
@@ -200,6 +233,65 @@ mod tests {
         }
         assert_eq!(a.ok_count(), 3);
         assert_eq!(b.ok_count(), 3);
+    }
+
+    #[test]
+    fn duplicate_inputs_run_once_and_share_the_result() {
+        let cm = CompiledMatcher::compile(
+            &Pattern::Regex("needle".to_string()),
+            Engine::Sequential,
+            ExecPolicy::default(),
+        )
+        .unwrap();
+        let mut gen = InputGen::new(0xD0D0);
+        let mut hay = gen.ascii_text(4096);
+        gen.plant(&mut hay, b"needle", 1);
+        let inputs: Vec<&[u8]> = vec![&hay, b"miss", &hay, &hay, b"miss"];
+        let batch = cm.match_many(&inputs);
+        assert_eq!(batch.outcomes.len(), 5);
+        assert_eq!(batch.error_count(), 0);
+        // only the two distinct inputs contribute work
+        assert_eq!(batch.total_syms, 4096 + 4);
+        let out: Vec<&Outcome> = batch.ok_outcomes().collect();
+        for dup in [2usize, 3] {
+            assert_eq!(out[dup].accepted, out[0].accepted);
+            assert_eq!(out[dup].final_state, out[0].final_state);
+            assert_eq!(out[dup].makespan, out[0].makespan);
+        }
+        assert!(out[0].accepted);
+        assert!(!out[1].accepted);
+        assert_eq!(out[4].accepted, out[1].accepted);
+
+        // the syms path dedupes the same way
+        let sym_inputs: Vec<Vec<u32>> = inputs
+            .iter()
+            .map(|b| cm.dfa().map_input(b))
+            .collect();
+        let sb = cm.match_many_syms(&sym_inputs);
+        assert_eq!(sb.total_syms, 4096 + 4);
+        for (x, y) in batch.ok_outcomes().zip(sb.ok_outcomes()) {
+            assert_eq!(x.accepted, y.accepted);
+        }
+    }
+
+    #[test]
+    fn duplicate_of_a_failed_input_clones_the_error_with_its_own_index() {
+        let cm = CompiledMatcher::compile(
+            &Pattern::Regex("a+b".to_string()),
+            Engine::Backtracking,
+            ExecPolicy { backtrack_fuel: 200, ..ExecPolicy::default() },
+        )
+        .unwrap();
+        let pathological = vec![b'a'; 4096];
+        let inputs: Vec<&[u8]> = vec![&pathological, b"ab", &pathological];
+        let batch = cm.match_many(&inputs);
+        assert_eq!(batch.error_count(), 2);
+        let errs: Vec<&RequestError> = batch.errors().collect();
+        assert_eq!(errs[0].index, 0);
+        assert_eq!(errs[1].index, 2, "cloned error must carry its slot");
+        assert_eq!(errs[0].message, errs[1].message);
+        // the failed run still paid for its symbols exactly once
+        assert_eq!(batch.total_syms, 4096 + 2);
     }
 
     #[test]

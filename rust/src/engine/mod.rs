@@ -35,10 +35,16 @@
 //! * [`serve`] — the asynchronous serving loop: worker threads, a
 //!   coalescing request queue, an LRU compiled-pattern cache, and live
 //!   capacity re-calibration ([`serve::Server`]).
+//! * [`patternset`] — multi-pattern matching: a [`PatternSet`] compiles
+//!   to a literal prefilter + fused product DFA + spill tiers
+//!   ([`CompiledSetMatcher`]) so one input pass answers k membership
+//!   queries; the serve loop coalesces different-pattern requests over
+//!   one input into a single fused pass.
 
 pub mod adapters;
 pub mod batch;
 pub mod outcome;
+pub mod patternset;
 pub mod select;
 pub mod serve;
 pub mod shard;
@@ -53,6 +59,9 @@ use crate::speculative::merge::MergeStrategy;
 
 pub use batch::{BatchOutcome, RequestError};
 pub use outcome::{Detail, EngineKind, Outcome};
+pub use patternset::{
+    CompiledSetMatcher, PatternSet, SetConfig, SetOutcome, SetTier,
+};
 pub use select::{select, AutoThresholds, DfaProps, Selection};
 pub use serve::{
     Admission, PriorityPolicy, ServeConfig, ServeError, ServeStats, Server,

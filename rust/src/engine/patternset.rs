@@ -1,0 +1,639 @@
+//! Multi-pattern matching: one input pass answers k membership queries.
+//!
+//! Scanning one corpus against k patterns naively costs k full passes.
+//! This module compiles a [`PatternSet`] into a [`CompiledSetMatcher`]
+//! that answers all k queries with (at most) one prefilter pass plus one
+//! fused-DFA pass, organised as three tiers:
+//!
+//! 1. **Prefilter** — every pattern with a *required literal*
+//!    ([`crate::baseline::greplike::required_literal`]) registers it in
+//!    one Aho–Corasick automaton ([`crate::automata::AhoCorasick`]); a
+//!    single cheap pass clears each pattern whose literal is absent
+//!    (verdict: reject) before any DFA runs.
+//! 2. **Fused** — the surviving patterns' DFAs are fused into one
+//!    product automaton ([`crate::automata::product::fuse`], the
+//!    Simultaneous-FA construction of arXiv 1405.0562, built with the
+//!    frontier-parallel scheme of arXiv 1512.09228) carrying a
+//!    per-pattern accept bitmask ([`crate::util::bitset::BitSet`]).  The
+//!    product is just another [`Dfa`](crate::automata::Dfa), so it runs
+//!    through the existing [`CompiledMatcher`] stack — including
+//!    [`Engine::Auto`] dispatch on the *fused* γ/|Q| and the speculative
+//!    `FlatDfa`/`match_chunk_states` chunk kernel — and one traversal
+//!    yields every pattern's final state by projection.
+//! 3. **Spill** — fusing can blow up (reachable product ≤ ∏|Qᵢ|), so a
+//!    `state_budget` caps it; patterns that don't fit are *spilled* back
+//!    to ordinary per-pattern matchers, largest DFA first, until the
+//!    rest fits.  Compilation therefore never fails on size — the same
+//!    failure-freedom discipline as the speculative kernel (never wrong,
+//!    only slower).
+//!
+//! Duplicate patterns in the set compile once and share an accept bit;
+//! the per-slot outcomes are fanned back out in input order.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::automata::acorasick::AhoCorasick;
+use crate::automata::product::fuse;
+use crate::automata::Dfa;
+use crate::baseline::greplike::{required_literal, GrepStats};
+use crate::regex::ast::Ast;
+use crate::util::bitset::BitSet;
+
+use super::outcome::{Detail, EngineKind, Outcome};
+use super::select::DfaProps;
+use super::{CompiledMatcher, Engine, ExecPolicy, Matcher, Pattern};
+
+/// Default [`SetConfig::state_budget`]: comfortably holds every fused
+/// set the bench suites produce while bounding worst-case construction
+/// to a few MB of product table.
+pub const DEFAULT_STATE_BUDGET: usize = 1 << 14;
+
+/// An ordered collection of patterns matched together against one input.
+///
+/// Duplicates are allowed (each slot gets its own verdict) but compile
+/// only once.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PatternSet {
+    patterns: Vec<Pattern>,
+}
+
+impl PatternSet {
+    /// An empty set.
+    pub fn new() -> PatternSet {
+        PatternSet::default()
+    }
+
+    /// Build from a list of patterns (order = verdict order).
+    pub fn from_patterns(patterns: Vec<Pattern>) -> PatternSet {
+        PatternSet { patterns }
+    }
+
+    /// Append a pattern (its verdict slot is the current length).
+    pub fn push(&mut self, pattern: Pattern) {
+        self.patterns.push(pattern);
+    }
+
+    /// Number of pattern slots (duplicates counted).
+    pub fn len(&self) -> usize {
+        self.patterns.len()
+    }
+
+    /// Whether the set has no patterns.
+    pub fn is_empty(&self) -> bool {
+        self.patterns.is_empty()
+    }
+
+    /// The pattern slots in verdict order.
+    pub fn patterns(&self) -> &[Pattern] {
+        &self.patterns
+    }
+}
+
+/// Knobs for compiling a [`PatternSet`].
+#[derive(Clone, Debug)]
+pub struct SetConfig {
+    /// Engine for the fused pass and the spilled per-pattern matchers.
+    /// `Engine::Auto` dispatches on the *fused* DFA's γ/|Q|, so a fused
+    /// set can route to a different substrate than its members would
+    /// alone.  The AST engines (backtracking, grep-like) are rejected:
+    /// a product DFA has no pattern AST.
+    pub engine: Engine,
+    /// Shared execution knobs; `policy.processors` also bounds the
+    /// threads used for parallel product construction.
+    pub policy: ExecPolicy,
+    /// Product-state cap for the fused tier (0 = unlimited).  Overflow
+    /// spills patterns instead of failing.
+    pub state_budget: usize,
+    /// Whether to build the Aho–Corasick literal prefilter tier.
+    pub prefilter: bool,
+}
+
+impl Default for SetConfig {
+    fn default() -> SetConfig {
+        SetConfig {
+            engine: Engine::Auto,
+            policy: ExecPolicy::default(),
+            state_budget: DEFAULT_STATE_BUDGET,
+            prefilter: true,
+        }
+    }
+}
+
+/// Which tier decided a pattern's verdict on one run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SetTier {
+    /// Required literal absent — rejected by the prefilter, no DFA ran.
+    PrefilterCleared,
+    /// Decided by the fused product pass.
+    Fused,
+    /// Decided by a per-pattern matcher (over `state_budget`).
+    Spilled,
+}
+
+/// Per-pattern verdicts from one set run, plus set-level telemetry.
+#[derive(Clone, Debug)]
+pub struct SetOutcome {
+    /// One [`Outcome`] per pattern slot, in [`PatternSet`] order
+    /// (duplicate slots share the underlying result).
+    pub outcomes: Vec<Outcome>,
+    /// Which tier decided each slot.
+    pub tiers: Vec<SetTier>,
+    /// The raw fused-pass outcome, when the fused tier ran.
+    pub fused_pass: Option<Outcome>,
+    /// Unique patterns cleared by the prefilter on this input.
+    pub prefilter_cleared: usize,
+    /// Input length in bytes.
+    pub n: usize,
+    /// Wall time of the whole set run, seconds.
+    pub wall_s: f64,
+}
+
+impl SetOutcome {
+    /// Membership verdicts only, in slot order.
+    pub fn accepted(&self) -> Vec<bool> {
+        self.outcomes.iter().map(|o| o.accepted).collect()
+    }
+}
+
+/// How a unique pattern is matched after compilation.
+enum UniqTier {
+    /// component `comp` of the fused product
+    Fused { comp: usize },
+    /// standalone matcher (over budget, or fusing was impossible)
+    Spilled { cm: Box<CompiledMatcher> },
+}
+
+/// One deduplicated pattern with its tier assignment.
+struct UniqPattern {
+    pattern: Pattern,
+    literal: Option<Vec<u8>>,
+    tier: UniqTier,
+}
+
+/// The fused product tier: one matcher whose outcome projects back to
+/// every fused component.
+struct FusedTier {
+    cm: CompiledMatcher,
+    /// per product state: which components accept
+    masks: Vec<BitSet>,
+    /// per product state: component-state tuple
+    proj: Vec<Vec<u32>>,
+    /// component index -> unique-pattern index
+    comps: Vec<usize>,
+}
+
+/// A [`PatternSet`] compiled for serving: prefilter + fused product +
+/// spilled matchers, built once and reused across inputs.
+///
+/// ```
+/// use specdfa::engine::{Matcher, Pattern};
+/// use specdfa::engine::patternset::{CompiledSetMatcher, PatternSet, SetConfig};
+///
+/// let set = PatternSet::from_patterns(vec![
+///     Pattern::Regex("cat".into()),
+///     Pattern::Regex("d[ou]g".into()),
+/// ]);
+/// let csm = CompiledSetMatcher::compile(&set, SetConfig::default())?;
+/// let out = csm.run_bytes(b"hot dog stand")?;
+/// assert_eq!(out.accepted(), vec![false, true]);
+/// # anyhow::Result::<()>::Ok(())
+/// ```
+pub struct CompiledSetMatcher {
+    /// pattern slot -> unique-pattern index
+    slot_of: Vec<usize>,
+    uniq: Vec<UniqPattern>,
+    prefilter: Option<AhoCorasick>,
+    /// Aho–Corasick literal id -> unique-pattern index
+    lit_uniq: Vec<usize>,
+    fused: Option<FusedTier>,
+    config: SetConfig,
+}
+
+impl CompiledSetMatcher {
+    /// Compile a pattern set under the given configuration.  Never fails
+    /// on product size (overflow spills); fails only on invalid patterns
+    /// or an AST-engine request.
+    pub fn compile(set: &PatternSet, config: SetConfig) -> Result<CompiledSetMatcher> {
+        if matches!(config.engine, Engine::Backtracking | Engine::GrepLike) {
+            bail!(
+                "pattern-set matching needs a DFA engine; the AST engines \
+                 (backtrack, grep) cannot run a fused product DFA"
+            );
+        }
+
+        // 1. Dedupe: identical patterns share one compile + accept bit.
+        let mut uniq_of: HashMap<&Pattern, usize> = HashMap::new();
+        let mut slot_of = Vec::with_capacity(set.len());
+        let mut sources: Vec<&Pattern> = Vec::new();
+        for p in set.patterns() {
+            let u = *uniq_of.entry(p).or_insert_with(|| {
+                sources.push(p);
+                sources.len() - 1
+            });
+            slot_of.push(u);
+        }
+
+        // 2. Per-unique compile: minimal DFA + optional AST + required
+        //    literal.  The literal is a *necessary* condition only for
+        //    unanchored search patterns (exactly when the AST survives
+        //    `Pattern::compile`), so clearing on its absence is sound.
+        struct Working {
+            pattern: Pattern,
+            dfa: Option<Dfa>,
+            ast: Option<Ast>,
+            literal: Option<Vec<u8>>,
+        }
+        let mut work: Vec<Working> = Vec::with_capacity(sources.len());
+        for p in &sources {
+            let parts = p.compile()?;
+            let literal =
+                parts.ast.as_ref().and_then(|ast| required_literal(ast));
+            work.push(Working {
+                pattern: (*p).clone(),
+                dfa: Some(parts.dfa),
+                ast: parts.ast,
+                literal,
+            });
+        }
+
+        // 3. Fuse with spill-retry: try the whole set; on budget
+        //    overflow spill the largest DFA and retry.  Terminates (the
+        //    candidate list shrinks every round) and never fails.
+        let threads = config.policy.processors.max(1);
+        let mut fuse_order: Vec<usize> = (0..work.len()).collect();
+        fuse_order.sort_by_key(|&u| {
+            (work[u].dfa.as_ref().expect("dfa present").num_states, u)
+        });
+        let mut spilled_idx: Vec<usize> = Vec::new();
+        let mut product = None;
+        while !fuse_order.is_empty() {
+            let dfas: Vec<&Dfa> = fuse_order
+                .iter()
+                .map(|&u| work[u].dfa.as_ref().expect("dfa present"))
+                .collect();
+            match fuse(&dfas, config.state_budget, threads) {
+                Some(p) => {
+                    product = Some(p);
+                    break;
+                }
+                None => spilled_idx.push(
+                    fuse_order.pop().expect("non-empty fuse candidates"),
+                ),
+            }
+        }
+
+        // 4. Assemble the tiers.
+        let fused = match product {
+            Some(p) => {
+                let cm = CompiledMatcher::from_dfa(
+                    p.dfa,
+                    config.engine.clone(),
+                    config.policy.clone(),
+                )?;
+                Some(FusedTier {
+                    cm,
+                    masks: p.accept_masks,
+                    proj: p.proj,
+                    comps: fuse_order.clone(),
+                })
+            }
+            None => None,
+        };
+        let mut tier_of: Vec<Option<UniqTier>> =
+            (0..work.len()).map(|_| None).collect();
+        if let Some(f) = &fused {
+            for (comp, &u) in f.comps.iter().enumerate() {
+                tier_of[u] = Some(UniqTier::Fused { comp });
+            }
+        }
+        for &u in &spilled_idx {
+            let dfa = work[u].dfa.take().expect("spilled dfa");
+            let ast = work[u].ast.take();
+            let cm = CompiledMatcher::from_parts(
+                dfa,
+                ast,
+                config.engine.clone(),
+                config.policy.clone(),
+            )?;
+            tier_of[u] = Some(UniqTier::Spilled { cm: Box::new(cm) });
+        }
+        let uniq: Vec<UniqPattern> = work
+            .into_iter()
+            .zip(tier_of)
+            .map(|(w, t)| UniqPattern {
+                pattern: w.pattern,
+                literal: w.literal,
+                tier: t.expect("every unique pattern got a tier"),
+            })
+            .collect();
+
+        // 5. Prefilter over every unique pattern that has a literal.
+        let mut lit_uniq = Vec::new();
+        let prefilter = if config.prefilter {
+            let mut pairs: Vec<(&[u8], u32)> = Vec::new();
+            for (u, up) in uniq.iter().enumerate() {
+                if let Some(lit) = &up.literal {
+                    if !lit.is_empty() {
+                        pairs.push((lit.as_slice(), lit_uniq.len() as u32));
+                        lit_uniq.push(u);
+                    }
+                }
+            }
+            if pairs.is_empty() {
+                None
+            } else {
+                Some(AhoCorasick::new(&pairs, lit_uniq.len()))
+            }
+        } else {
+            None
+        };
+
+        Ok(CompiledSetMatcher { slot_of, uniq, prefilter, lit_uniq, fused, config })
+    }
+
+    /// Run every pattern against `input` in one coordinated pass:
+    /// prefilter scan, at most one fused traversal, then the spilled
+    /// stragglers.
+    pub fn run_bytes(&self, input: &[u8]) -> Result<SetOutcome> {
+        let t0 = Instant::now();
+
+        // Tier 1: literal presence clears patterns outright.
+        let mut cleared = vec![false; self.uniq.len()];
+        let mut prefilter_cleared = 0usize;
+        if let Some(ac) = &self.prefilter {
+            let present = ac.presence(input);
+            for (id, &u) in self.lit_uniq.iter().enumerate() {
+                if !present[id] {
+                    cleared[u] = true;
+                    prefilter_cleared += 1;
+                }
+            }
+        }
+
+        // Tier 2: one fused traversal, skipped when the prefilter
+        // already cleared every fused component.
+        let fused_pass = match &self.fused {
+            Some(f) if f.comps.iter().any(|&u| !cleared[u]) => {
+                Some(f.cm.run_bytes(input)?)
+            }
+            _ => None,
+        };
+        let fused_state = match &fused_pass {
+            Some(out) => match out.final_state {
+                Some(q) => Some(q as usize),
+                None => bail!(
+                    "fused pass reported no final state (engine {})",
+                    out.engine
+                ),
+            },
+            None => None,
+        };
+
+        // Tier 3 + assembly: per-unique outcomes.
+        let mut per_uniq: Vec<(Outcome, SetTier)> =
+            Vec::with_capacity(self.uniq.len());
+        for (u, up) in self.uniq.iter().enumerate() {
+            if cleared[u] {
+                per_uniq.push((
+                    cleared_outcome(input.len()),
+                    SetTier::PrefilterCleared,
+                ));
+                continue;
+            }
+            match &up.tier {
+                UniqTier::Fused { comp } => {
+                    let f = self.fused.as_ref().expect("fused tier present");
+                    let q = fused_state.expect("fused pass ran");
+                    let mut out = fused_pass
+                        .as_ref()
+                        .expect("fused pass ran")
+                        .clone();
+                    out.accepted = f.masks[q].contains(*comp);
+                    out.final_state = Some(f.proj[q][*comp]);
+                    per_uniq.push((out, SetTier::Fused));
+                }
+                UniqTier::Spilled { cm } => {
+                    per_uniq.push((cm.run_bytes(input)?, SetTier::Spilled));
+                }
+            }
+        }
+
+        // Fan unique results back out to the original slots.
+        let mut outcomes = Vec::with_capacity(self.slot_of.len());
+        let mut tiers = Vec::with_capacity(self.slot_of.len());
+        for &u in &self.slot_of {
+            outcomes.push(per_uniq[u].0.clone());
+            tiers.push(per_uniq[u].1);
+        }
+        Ok(SetOutcome {
+            outcomes,
+            tiers,
+            fused_pass,
+            prefilter_cleared,
+            n: input.len(),
+            wall_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Human-readable description of the compiled tiers.
+    pub fn describe(&self) -> String {
+        let fused_q = self
+            .fused
+            .as_ref()
+            .map(|f| f.cm.dfa().num_states)
+            .unwrap_or(0);
+        format!(
+            "patternset: {} slots, {} unique ({} fused over |Q|={} product, \
+             {} spilled), {} prefilter literals, budget {}",
+            self.slot_of.len(),
+            self.uniq.len(),
+            self.fused_patterns(),
+            fused_q,
+            self.spilled_patterns(),
+            self.lit_uniq.len(),
+            self.config.state_budget,
+        )
+    }
+
+    /// Number of unique patterns after dedupe.
+    pub fn unique_patterns(&self) -> usize {
+        self.uniq.len()
+    }
+
+    /// Unique patterns matched by the fused product tier.
+    pub fn fused_patterns(&self) -> usize {
+        self.fused.as_ref().map_or(0, |f| f.comps.len())
+    }
+
+    /// Unique patterns spilled to per-pattern matchers.
+    pub fn spilled_patterns(&self) -> usize {
+        self.uniq
+            .iter()
+            .filter(|u| matches!(u.tier, UniqTier::Spilled { .. }))
+            .count()
+    }
+
+    /// Unique patterns guarded by a prefilter literal.
+    pub fn prefiltered_patterns(&self) -> usize {
+        self.lit_uniq.len()
+    }
+
+    /// |Q| of the fused product DFA, when the fused tier exists.
+    pub fn product_states(&self) -> Option<usize> {
+        self.fused.as_ref().map(|f| f.cm.dfa().num_states as usize)
+    }
+
+    /// Structural properties of the fused product (γ, |Q|, I_max,r) —
+    /// what `Engine::Auto` dispatches on for the fused pass.
+    pub fn fused_props(&self) -> Option<&DfaProps> {
+        self.fused.as_ref().map(|f| f.cm.props())
+    }
+
+    /// The unique patterns in first-appearance order.
+    pub fn uniq_patterns(&self) -> impl Iterator<Item = &Pattern> {
+        self.uniq.iter().map(|u| &u.pattern)
+    }
+
+    /// The configuration this set was compiled under.
+    pub fn config(&self) -> &SetConfig {
+        &self.config
+    }
+}
+
+/// The synthesized reject verdict for a prefilter-cleared pattern: the
+/// prefilter *is* a grep-like engine (literal scan, no DFA), so the
+/// outcome reports [`EngineKind::GrepLike`] with the scan length as its
+/// work, and no final state (the DFA never ran).
+fn cleared_outcome(n: usize) -> Outcome {
+    Outcome {
+        engine: EngineKind::GrepLike,
+        n,
+        accepted: false,
+        final_state: None,
+        makespan: n,
+        overhead_syms: 0,
+        per_worker_syms: Vec::new(),
+        wall_s: 0.0,
+        selection: None,
+        detail: Detail::GrepLike(GrepStats {
+            matched: false,
+            work: n as u64,
+            candidates: 0,
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn regexes(pats: &[&str]) -> PatternSet {
+        PatternSet::from_patterns(
+            pats.iter().map(|p| Pattern::Regex(p.to_string())).collect(),
+        )
+    }
+
+    fn quick() -> SetConfig {
+        SetConfig {
+            policy: ExecPolicy { processors: 2, ..ExecPolicy::default() },
+            ..SetConfig::default()
+        }
+    }
+
+    #[test]
+    fn empty_set_runs_and_returns_nothing() {
+        let csm =
+            CompiledSetMatcher::compile(&PatternSet::new(), quick()).unwrap();
+        let out = csm.run_bytes(b"anything").unwrap();
+        assert!(out.outcomes.is_empty());
+        assert!(out.fused_pass.is_none());
+        assert_eq!(out.prefilter_cleared, 0);
+    }
+
+    #[test]
+    fn fused_set_reports_per_pattern_verdicts() {
+        let set = regexes(&["cat", "dog", "bird"]);
+        let csm = CompiledSetMatcher::compile(&set, quick()).unwrap();
+        assert_eq!(csm.fused_patterns(), 3);
+        assert_eq!(csm.spilled_patterns(), 0);
+        let out = csm.run_bytes(b"the dog chased the bird").unwrap();
+        assert_eq!(out.accepted(), vec![false, true, true]);
+        // "cat" was cleared by the prefilter (literal absent)
+        assert_eq!(out.tiers[0], SetTier::PrefilterCleared);
+        assert_eq!(out.tiers[1], SetTier::Fused);
+        assert!(out.fused_pass.is_some());
+        assert_eq!(out.prefilter_cleared, 1);
+    }
+
+    #[test]
+    fn duplicates_share_a_compile_and_a_verdict() {
+        let set = regexes(&["ab+", "cd", "ab+"]);
+        let csm = CompiledSetMatcher::compile(&set, quick()).unwrap();
+        assert_eq!(csm.unique_patterns(), 2);
+        let out = csm.run_bytes(b"xxabbxx").unwrap();
+        assert_eq!(out.accepted(), vec![true, false, true]);
+        assert_eq!(out.outcomes.len(), 3);
+        assert_eq!(out.tiers[0], out.tiers[2]);
+    }
+
+    #[test]
+    fn tiny_budget_spills_everything_but_still_answers() {
+        let set = regexes(&["cat", "dog"]);
+        let cfg = SetConfig { state_budget: 1, ..quick() };
+        let csm = CompiledSetMatcher::compile(&set, cfg).unwrap();
+        assert_eq!(csm.fused_patterns(), 0);
+        assert_eq!(csm.spilled_patterns(), 2);
+        assert!(csm.product_states().is_none());
+        let out = csm.run_bytes(b"hot dog").unwrap();
+        assert_eq!(out.accepted(), vec![false, true]);
+        assert_eq!(out.tiers[1], SetTier::Spilled);
+    }
+
+    #[test]
+    fn prefilter_can_be_disabled() {
+        let set = regexes(&["cat"]);
+        let cfg = SetConfig { prefilter: false, ..quick() };
+        let csm = CompiledSetMatcher::compile(&set, cfg).unwrap();
+        assert_eq!(csm.prefiltered_patterns(), 0);
+        let out = csm.run_bytes(b"no felines here").unwrap();
+        assert_eq!(out.accepted(), vec![false]);
+        assert_eq!(out.tiers[0], SetTier::Fused); // DFA decided, not prefilter
+    }
+
+    #[test]
+    fn ast_engines_are_rejected() {
+        let set = regexes(&["cat"]);
+        for engine in [Engine::Backtracking, Engine::GrepLike] {
+            let cfg = SetConfig { engine, ..SetConfig::default() };
+            assert!(CompiledSetMatcher::compile(&set, cfg).is_err());
+        }
+    }
+
+    #[test]
+    fn fused_final_states_project_to_sequential_runs() {
+        let set = regexes(&["ab|ba", "a+b", "(ab)+"]);
+        let cfg = SetConfig {
+            engine: Engine::Sequential,
+            prefilter: false, // force every pattern through the product
+            ..quick()
+        };
+        let csm = CompiledSetMatcher::compile(&set, cfg).unwrap();
+        for input in [&b""[..], b"ab", b"aab", b"abab", b"bbba"] {
+            let out = csm.run_bytes(input).unwrap();
+            for (slot, p) in set.patterns().iter().enumerate() {
+                let solo = CompiledMatcher::compile(
+                    p,
+                    Engine::Sequential,
+                    ExecPolicy::default(),
+                )
+                .unwrap();
+                let want = solo.run_bytes(input).unwrap();
+                assert_eq!(out.outcomes[slot].accepted, want.accepted);
+                assert_eq!(out.outcomes[slot].final_state, want.final_state);
+            }
+        }
+    }
+}

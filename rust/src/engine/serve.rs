@@ -47,6 +47,15 @@
 //!   ([`ServeConfig::cache_outcomes`]): repeated probes — health checks,
 //!   retried requests, hot keys — skip the matching loop entirely
 //!   ([`ServeStats::outcome_hits`] counts the wins).
+//! * **Cross-pattern coalescing**: when a worker takes a batch, other
+//!   queued requests over the *same input* — whatever their pattern —
+//!   are drained along with it and served by one fused
+//!   [`CompiledSetMatcher`](super::patternset::CompiledSetMatcher) pass:
+//!   prefilter + product DFA + spill, the inverse of same-pattern
+//!   coalescing (k patterns × 1 input instead of 1 pattern × k inputs).
+//!   [`ServeStats::fused_passes`], [`ServeStats::patterns_fused`] and
+//!   [`ServeStats::prefilter_clears`] count the wins;
+//!   [`ServeConfig::fuse_cross_pattern`] turns the path off.
 //! * At startup — and again every [`ServeConfig::recalibrate_every`]
 //!   requests — the server runs the paper's §4.1 offline profiling step
 //!   ([`crate::speculative::profile::profile_host`]) and installs
@@ -75,6 +84,9 @@ use anyhow::Result;
 
 use crate::speculative::profile;
 
+use super::patternset::{
+    CompiledSetMatcher, PatternSet, SetConfig, DEFAULT_STATE_BUDGET,
+};
 use super::select::AutoThresholds;
 use super::{CompiledMatcher, Engine, ExecPolicy, Matcher, Outcome, Pattern};
 
@@ -188,6 +200,13 @@ pub struct ServeConfig {
     /// concurrently) and feed its Eq. (1) weights into
     /// [`ExecPolicy::weights`] for every compiled matcher.
     pub profile_per_worker: bool,
+    /// Coalesce different-pattern requests over one identical input into
+    /// a single fused pattern-set pass
+    /// ([`super::patternset::CompiledSetMatcher`]).
+    pub fuse_cross_pattern: bool,
+    /// Product-state budget for the fused pass; overflowing patterns
+    /// spill to per-pattern matching (0 = unlimited).
+    pub fuse_state_budget: usize,
     /// Engine every request is served with (normally `Engine::Auto`).
     pub engine: Engine,
     /// Execution policy template; its `thresholds` field is replaced by
@@ -213,6 +232,8 @@ impl Default for ServeConfig {
             profile_runs: 5,
             profile_sample_syms: 1 << 18,
             profile_per_worker: true,
+            fuse_cross_pattern: true,
+            fuse_state_budget: DEFAULT_STATE_BUDGET,
             engine: Engine::Auto,
             policy: ExecPolicy::default(),
         }
@@ -349,6 +370,15 @@ pub struct ServeStats {
     /// Requests answered straight from the outcome memo cache (the
     /// matching loop never ran).
     pub outcome_hits: u64,
+    /// Fused product-DFA passes executed for cross-pattern coalesced
+    /// groups (each replaced k per-pattern traversals with one).
+    pub fused_passes: u64,
+    /// Unique patterns answered by fused product passes, summed across
+    /// groups (the k's behind `fused_passes`).
+    pub patterns_fused: u64,
+    /// Unique patterns rejected by the Aho–Corasick literal prefilter
+    /// during cross-pattern groups (no DFA ran for them at all).
+    pub prefilter_clears: u64,
     /// LRU evictions.
     pub evictions: u64,
     /// Profiling runs performed (startup calibration included).
@@ -516,6 +546,66 @@ impl ReqQueue {
         }
     }
 
+    /// Remove up to `max` live requests whose input equals `input` —
+    /// any pattern, any class, oldest first — for cross-pattern fused
+    /// serving.  Returned in admission order.  Arrival-list entries of
+    /// drained requests go stale and are skipped by [`ReqQueue::take`]'s
+    /// head-seq check, exactly like entries that rode an earlier
+    /// coalesced batch.
+    fn drain_same_input(&mut self, input: &[u8], max: usize) -> Vec<Queued> {
+        if max == 0 || self.len == 0 {
+            return Vec::new();
+        }
+        // pass 1: the admission seqs of the oldest `max` matches (lane
+        // hash order must not decide who rides the fused pass)
+        let mut seqs: Vec<u64> = self
+            .lanes
+            .values()
+            .flat_map(|lane| lane.by_class.iter())
+            .flatten()
+            .filter(|item| item.req.input.as_slice() == input)
+            .map(|item| item.seq)
+            .collect();
+        if seqs.is_empty() {
+            return Vec::new();
+        }
+        seqs.sort_unstable();
+        seqs.truncate(max);
+        let cutoff = *seqs.last().expect("non-empty seq list");
+        // pass 2: remove exactly those requests
+        let mut taken: Vec<Queued> = Vec::new();
+        let mut emptied: Vec<Pattern> = Vec::new();
+        for (pattern, lane) in self.lanes.iter_mut() {
+            for class in 0..CLASSES {
+                let sub = &mut lane.by_class[class];
+                if sub.is_empty() {
+                    continue;
+                }
+                let mut kept = VecDeque::with_capacity(sub.len());
+                while let Some(item) = sub.pop_front() {
+                    if item.seq <= cutoff
+                        && item.req.input.as_slice() == input
+                    {
+                        self.live[class] = self.live[class].saturating_sub(1);
+                        self.len = self.len.saturating_sub(1);
+                        taken.push(item);
+                    } else {
+                        kept.push_back(item);
+                    }
+                }
+                *sub = kept;
+            }
+            if lane.by_class.iter().all(|d| d.is_empty()) {
+                emptied.push(pattern.clone());
+            }
+        }
+        for p in emptied {
+            self.lanes.remove(&p);
+        }
+        taken.sort_by_key(|t| t.seq);
+        taken
+    }
+
     fn take(&mut self, class: usize, max_batch: usize) -> Vec<Queued> {
         while let Some((seq, pattern)) = self.arrivals[class].pop_front() {
             let (batch, lane_empty) = {
@@ -608,6 +698,9 @@ struct Counters {
     compiles: AtomicU64,
     cache_hits: AtomicU64,
     outcome_hits: AtomicU64,
+    fused_passes: AtomicU64,
+    patterns_fused: AtomicU64,
+    prefilter_clears: AtomicU64,
     evictions: AtomicU64,
     recalibrations: AtomicU64,
     wait_taken: [AtomicU64; CLASSES],
@@ -627,6 +720,9 @@ impl Counters {
             compiles: AtomicU64::new(0),
             cache_hits: AtomicU64::new(0),
             outcome_hits: AtomicU64::new(0),
+            fused_passes: AtomicU64::new(0),
+            patterns_fused: AtomicU64::new(0),
+            prefilter_clears: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
             recalibrations: AtomicU64::new(0),
             wait_taken: [AtomicU64::new(0), AtomicU64::new(0)],
@@ -1030,6 +1126,9 @@ fn stats_of(shared: &Shared) -> ServeStats {
         compiles: c.compiles.load(Ordering::Relaxed),
         cache_hits: c.cache_hits.load(Ordering::Relaxed),
         outcome_hits: c.outcome_hits.load(Ordering::Relaxed),
+        fused_passes: c.fused_passes.load(Ordering::Relaxed),
+        patterns_fused: c.patterns_fused.load(Ordering::Relaxed),
+        prefilter_clears: c.prefilter_clears.load(Ordering::Relaxed),
         evictions: c.evictions.load(Ordering::Relaxed),
         recalibrations: c.recalibrations.load(Ordering::Relaxed),
         cached_patterns,
@@ -1045,32 +1144,72 @@ fn stats_of(shared: &Shared) -> ServeStats {
 
 /// Worker: take a coalesced batch, serve it, repeat until shutdown with
 /// an empty queue (shutdown drains — queued work is never dropped).
+/// When the take picked up a cross-pattern same-input group, the group
+/// runs through one fused pattern-set pass and the rest of the batch is
+/// served normally.
 fn worker_loop(shared: &Shared) {
-    while let Some(batch) = next_batch(shared) {
-        serve_batch(shared, batch);
+    while let Some((batch, fused)) = next_batch(shared) {
+        if !batch.is_empty() {
+            serve_batch(shared, batch);
+        }
+        if !fused.is_empty() {
+            serve_fused_group(shared, fused);
+        }
     }
 }
 
-fn next_batch(shared: &Shared) -> Option<Vec<Request>> {
+/// Take the next unit of work: `(same_pattern_batch, same_input_group)`.
+/// The group is non-empty only when cross-pattern fusion found other
+/// queued requests over the batch head's exact input; it then contains
+/// every taken request with that input (whatever its pattern) and the
+/// batch keeps the rest.
+fn next_batch(shared: &Shared) -> Option<(Vec<Request>, Vec<Request>)> {
     let mut q = shared.queue.lock().unwrap();
     loop {
         if let Some(taken) =
             q.take_batch(shared.config.age_limit, shared.config.max_batch)
         {
+            // cross-pattern coalescing: drain other queued requests over
+            // this exact input so one fused pass can answer all of them
+            let extras = if shared.config.fuse_cross_pattern && q.len > 0 {
+                q.drain_same_input(
+                    &taken[0].req.input,
+                    shared.config.max_batch,
+                )
+            } else {
+                Vec::new()
+            };
             drop(q);
             // queue space freed: wake producers parked by Block admission
             shared.space.notify_all();
             let now = Instant::now();
-            let mut batch = Vec::with_capacity(taken.len());
-            for item in taken {
+            let same_input: Vec<bool> = taken
+                .iter()
+                .map(|t| t.req.input == taken[0].req.input)
+                .collect();
+            let mut batch = Vec::new();
+            let mut group = Vec::new();
+            for (item, same) in taken.into_iter().zip(same_input) {
                 record_wait(
                     shared,
                     item.class,
                     now.saturating_duration_since(item.enqueued),
                 );
-                batch.push(item.req);
+                if !extras.is_empty() && same {
+                    group.push(item.req);
+                } else {
+                    batch.push(item.req);
+                }
             }
-            return Some(batch);
+            for item in extras {
+                record_wait(
+                    shared,
+                    item.class,
+                    now.saturating_duration_since(item.enqueued),
+                );
+                group.push(item.req);
+            }
+            return Some((batch, group));
         }
         if shared.shutdown.load(Ordering::SeqCst) {
             return None;
@@ -1092,9 +1231,22 @@ fn serve_batch(shared: &Shared, batch: Vec<Request>) {
     let c = &shared.counters;
     c.batches.fetch_add(1, Ordering::Relaxed);
     c.coalesced.fetch_add((batch.len() - 1) as u64, Ordering::Relaxed);
-    // memo pre-pass: hits answer without touching the pattern cache, so
-    // a memoized probe never pays a recompile after pattern eviction.
-    // The hash is computed once per request and reused below.
+    let misses = memo_prepass(shared, batch);
+    if misses.is_empty() {
+        return;
+    }
+    serve_same_pattern(shared, misses);
+}
+
+/// Memo pre-pass shared by the same-pattern and fused paths: hits answer
+/// without touching the pattern cache, so a memoized probe never pays a
+/// recompile after pattern eviction.  Returns the misses with their
+/// memo hashes (computed once per request and reused downstream).
+fn memo_prepass(
+    shared: &Shared,
+    batch: Vec<Request>,
+) -> Vec<(Request, Option<u64>)> {
+    let c = &shared.counters;
     let mut misses: Vec<(Request, Option<u64>)> =
         Vec::with_capacity(batch.len());
     for req in batch {
@@ -1109,9 +1261,13 @@ fn serve_batch(shared: &Shared, batch: Vec<Request>) {
             None => misses.push((req, hash)),
         }
     }
-    if misses.is_empty() {
-        return;
-    }
+    misses
+}
+
+/// Serve a non-empty list of same-pattern memo misses through one
+/// compiled matcher (the original coalesced-batch path).
+fn serve_same_pattern(shared: &Shared, misses: Vec<(Request, Option<u64>)>) {
+    let c = &shared.counters;
     // lock-free duplicate detection: a memo re-check under the outcomes
     // mutex is only worth it when an *earlier miss in this batch* will
     // have memoized the identical request by the time we reach this one
@@ -1167,6 +1323,111 @@ fn serve_batch(shared: &Shared, batch: Vec<Request>) {
             }
         }
     }
+}
+
+/// Serve a cross-pattern same-input group: one fused pattern-set pass
+/// answers every distinct pattern's membership query over the shared
+/// input (the inverse of same-pattern coalescing).  Falls back to the
+/// per-pattern path when fewer than two distinct patterns miss the memo
+/// or when the set fails to compile (e.g. one invalid pattern must not
+/// fail the others).
+fn serve_fused_group(shared: &Shared, group: Vec<Request>) {
+    let c = &shared.counters;
+    c.batches.fetch_add(1, Ordering::Relaxed);
+    c.coalesced.fetch_add((group.len() - 1) as u64, Ordering::Relaxed);
+    let misses = memo_prepass(shared, group);
+    if misses.is_empty() {
+        return;
+    }
+    // distinct patterns in first-appearance order; duplicate requests of
+    // one pattern share its verdict slot
+    let mut distinct: Vec<Pattern> = Vec::new();
+    for (req, _) in &misses {
+        if !distinct.contains(&req.pattern) {
+            distinct.push(req.pattern.clone());
+        }
+    }
+    if distinct.len() < 2 {
+        serve_same_pattern(shared, misses);
+        return;
+    }
+    let set = PatternSet::from_patterns(distinct.clone());
+    let set_config = SetConfig {
+        engine: shared.config.engine.clone(),
+        policy: live_policy(shared),
+        state_budget: shared.config.fuse_state_budget,
+        prefilter: true,
+    };
+    let csm = match CompiledSetMatcher::compile(&set, set_config) {
+        Ok(csm) => csm,
+        Err(_) => {
+            // one bad pattern (or an AST-engine config) must not fail
+            // the whole group: serve each pattern's requests through the
+            // ordinary cached-matcher path instead
+            for (pattern, misses) in by_pattern(misses, &distinct) {
+                debug_assert!(!misses.is_empty(), "{pattern:?}");
+                serve_same_pattern(shared, misses);
+            }
+            return;
+        }
+    };
+    // capture the epoch BEFORE matching, same invariant as the
+    // per-pattern path: a mid-run re-calibration makes the memo inserts
+    // below stale instead of wrong
+    let epoch = shared.epoch.load(Ordering::SeqCst);
+    match csm.run_bytes(&misses[0].0.input) {
+        Ok(setout) => {
+            if setout.fused_pass.is_some() {
+                c.fused_passes.fetch_add(1, Ordering::Relaxed);
+            }
+            c.patterns_fused
+                .fetch_add(csm.fused_patterns() as u64, Ordering::Relaxed);
+            c.prefilter_clears.fetch_add(
+                setout.prefilter_cleared as u64,
+                Ordering::Relaxed,
+            );
+            for (req, hash) in misses {
+                let slot = distinct
+                    .iter()
+                    .position(|p| *p == req.pattern)
+                    .expect("every miss pattern is in the distinct list");
+                let out = setout.outcomes[slot].clone();
+                if let Some(h) = hash {
+                    remember_outcome(shared, &req, h, epoch, &out);
+                }
+                c.served.fetch_add(1, Ordering::SeqCst);
+                let _ = req.reply.send(Ok(out));
+                finish_request(shared);
+            }
+        }
+        Err(e) => {
+            let err = ServeError::failed(format!("{e:#}"));
+            for (req, _) in misses {
+                c.failed.fetch_add(1, Ordering::SeqCst);
+                let _ = req.reply.send(Err(err.clone()));
+                finish_request(shared);
+            }
+        }
+    }
+}
+
+/// Split misses into per-pattern lists, preserving request order within
+/// each pattern (the fused path's fallback shape).
+fn by_pattern(
+    misses: Vec<(Request, Option<u64>)>,
+    distinct: &[Pattern],
+) -> Vec<(Pattern, Vec<(Request, Option<u64>)>)> {
+    let mut split: Vec<(Pattern, Vec<(Request, Option<u64>)>)> =
+        distinct.iter().map(|p| (p.clone(), Vec::new())).collect();
+    for (req, hash) in misses {
+        if let Some((_, list)) =
+            split.iter_mut().find(|(p, _)| *p == req.pattern)
+        {
+            list.push((req, hash));
+        }
+    }
+    split.retain(|(_, list)| !list.is_empty());
+    split
 }
 
 /// The memo hash for a request, or `None` when the request is not
@@ -1313,22 +1574,8 @@ fn matcher_for(
     // from here the marker is cleaned up on EVERY exit — normal return,
     // compile error, or an unwind out of the compile
     let _inflight = InflightGuard { shared, pattern };
-    // compile with NO cache lock held.  Measured per-worker Eq. (1)
-    // weights (when available) override the template's; the multicore
-    // and shard partitions then track the machine's real per-worker
-    // capacities.
-    let weights = shared
-        .capacity
-        .lock()
-        .unwrap()
-        .as_ref()
-        .map(|cv| cv.weights())
-        .or_else(|| shared.config.policy.weights.clone());
-    let policy = ExecPolicy {
-        thresholds: shared.thresholds.lock().unwrap().clone(),
-        weights,
-        ..shared.config.policy.clone()
-    };
+    // compile with NO cache lock held
+    let policy = live_policy(shared);
     let compiled =
         CompiledMatcher::compile(pattern, shared.config.engine.clone(), policy)
             .map_err(|e| ServeError::failed(format!("compile failed: {e:#}")));
@@ -1357,6 +1604,26 @@ fn matcher_for(
     });
     drop(cache);
     Ok(cm)
+}
+
+/// The execution-policy template with the *live* calibrated state
+/// substituted in: current thresholds, plus measured per-worker Eq. (1)
+/// weights (when available) overriding the template's — the multicore
+/// and shard partitions then track the machine's real per-worker
+/// capacities.  Used for every compile, per-pattern and fused alike.
+fn live_policy(shared: &Shared) -> ExecPolicy {
+    let weights = shared
+        .capacity
+        .lock()
+        .unwrap()
+        .as_ref()
+        .map(|cv| cv.weights())
+        .or_else(|| shared.config.policy.weights.clone());
+    ExecPolicy {
+        thresholds: shared.thresholds.lock().unwrap().clone(),
+        weights,
+        ..shared.config.policy.clone()
+    }
 }
 
 fn finish_request(shared: &Shared) {
@@ -1532,6 +1799,52 @@ mod tests {
         let seq = q.next_seq;
         q.push(test_req(pattern), class, class);
         seq
+    }
+
+    #[test]
+    fn drain_same_input_takes_across_lanes_and_leaves_stale_arrivals() {
+        let pats: Vec<Pattern> = ["a", "b", "c"]
+            .iter()
+            .map(|p| Pattern::Regex(p.to_string()))
+            .collect();
+        let mut q = ReqQueue::new();
+        let mut push = |q: &mut ReqQueue, p: &Pattern, input: &[u8]| {
+            let (tx, _rx) = channel();
+            let seq = q.next_seq;
+            q.push(
+                Request {
+                    pattern: p.clone(),
+                    input: input.to_vec(),
+                    reply: tx,
+                },
+                CLASS_PROBE,
+                CLASS_PROBE,
+            );
+            seq
+        };
+        // same input under three patterns, one other input in the middle
+        let s0 = push(&mut q, &pats[0], b"shared");
+        let s1 = push(&mut q, &pats[1], b"shared");
+        let other = push(&mut q, &pats[1], b"other");
+        let s3 = push(&mut q, &pats[2], b"shared");
+        assert_eq!(q.len, 4);
+        let drained = q.drain_same_input(b"shared", 64);
+        let seqs: Vec<u64> = drained.iter().map(|t| t.seq).collect();
+        assert_eq!(seqs, vec![s0, s1, s3], "admission order across lanes");
+        assert_eq!(q.len, 1);
+        // the survivor is still takeable despite its stale lane-mates
+        let batch = q.take_batch(4, 64).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].seq, other);
+        assert_eq!(q.len, 0);
+        assert!(q.take_batch(4, 64).is_none());
+        // a capped drain takes only the oldest matches
+        let t0 = push(&mut q, &pats[0], b"x");
+        let _t1 = push(&mut q, &pats[1], b"x");
+        let drained = q.drain_same_input(b"x", 1);
+        assert_eq!(drained.len(), 1);
+        assert_eq!(drained[0].seq, t0);
+        assert_eq!(q.len, 1);
     }
 
     #[test]

@@ -35,6 +35,11 @@
 //! * [`engine::CompiledMatcher::match_many`] serves batches, amortizing
 //!   compilation and plan construction across requests; failed requests
 //!   get their own error slot instead of aborting the batch.
+//! * [`engine::PatternSet`] compiles k patterns into one
+//!   [`engine::CompiledSetMatcher`] — an Aho–Corasick literal prefilter,
+//!   a fused product DFA with per-pattern accept bitmasks, and a
+//!   budget-bounded spill tier — so one input pass answers every
+//!   pattern's membership query ([`engine::patternset`]).
 //! * [`engine::serve::Server`] is the asynchronous serving loop: many
 //!   producers submit `(pattern, input)` requests, worker threads
 //!   coalesce same-pattern requests behind an LRU compiled-pattern
@@ -82,9 +87,10 @@ pub mod util;
 pub use automata::{Dfa, FlatDfa};
 pub use baseline::sequential::SequentialMatcher;
 pub use engine::{
-    Admission, CompiledMatcher, Engine, EngineKind, ExecPolicy, Matcher,
-    Outcome, Pattern, PriorityPolicy, Selection, ServeConfig, ServeError,
-    ServeStats, Server, ServerHandle, ShardPlan, Ticket, WaitStats,
+    Admission, CompiledMatcher, CompiledSetMatcher, Engine, EngineKind,
+    ExecPolicy, Matcher, Outcome, Pattern, PatternSet, PriorityPolicy,
+    Selection, ServeConfig, ServeError, ServeStats, Server, ServerHandle,
+    SetConfig, SetOutcome, SetTier, ShardPlan, Ticket, WaitStats,
 };
 pub use regex::compile::{compile_exact, compile_prosite, compile_search};
 pub use speculative::matcher::{MatchOutcome, MatchPlan};

@@ -18,8 +18,9 @@ use std::sync::Arc;
 use specdfa::automata::{grail, FlatDfa, Width};
 use specdfa::cluster::{CloudMatcher, ClusterSpec};
 use specdfa::engine::{
-    Admission, CompiledMatcher, Engine, ExecPolicy, Matcher, Pattern,
-    PriorityPolicy, ServeConfig, Server,
+    Admission, CompiledMatcher, CompiledSetMatcher, Engine, ExecPolicy,
+    Matcher, Pattern, PatternSet, PriorityPolicy, ServeConfig, Server,
+    SetConfig, SetTier,
 };
 use specdfa::experiments;
 use specdfa::regex::compile::{
@@ -72,12 +73,17 @@ fn print_usage() {
         "specdfa — speculative parallel DFA membership test\n\
          \n\
          USAGE:\n\
-         \x20 specdfa match   (--regex PAT | --prosite PAT) \
-         [--file F | --gen N]\n\
+         \x20 specdfa match   (--regex PAT | --prosite PAT | \
+         --patterns FILE) [--file F | --gen N]\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 \
          [--engine auto|seq|spec|simd|cloud|shard|holub|backtrack|grep]\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 \
          [--procs P] [--lookahead R] [--nodes K] [--batch B]\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 \
+         (--patterns: one regex per line, '-' for stdin; fused \
+         multi-pattern\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 \
+         \x20matching with [--state-budget Q] [--no-prefilter])\n\
          \x20 specdfa serve   [--workers N] [--cache M] [--batch B] \
          [--recalibrate K]\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 \
@@ -91,7 +97,7 @@ fn print_usage() {
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 \
          \x20KIND: regex|regex-exact|prosite; INPUT: text, @file, or \
          gen:N)\n\
-         \x20 specdfa bench   [--suite kernels|engines|serve|all] \
+         \x20 specdfa bench   [--suite kernels|engines|serve|patternset|all] \
          [--quick] [--json PATH]\n\
          \x20 specdfa experiment <name>|all      names: {}\n\
          \x20 specdfa suite   [pcre|prosite]\n\
@@ -107,7 +113,7 @@ fn print_usage() {
 
 /// Flags that take no value (presence == true); everything else is a
 /// --key value pair.
-const BOOL_FLAGS: &[&str] = &["quick"];
+const BOOL_FLAGS: &[&str] = &["quick", "no-prefilter"];
 
 /// Minimal flag parser: --key value pairs, plus valueless [`BOOL_FLAGS`].
 fn flags(args: &[String]) -> anyhow::Result<Vec<(String, String)>> {
@@ -172,6 +178,13 @@ fn input_from_flags(
 
 fn cmd_match(args: &[String]) -> anyhow::Result<()> {
     let fl = flags(args)?;
+    if let Some(source) = get(&fl, "patterns") {
+        anyhow::ensure!(
+            get(&fl, "regex").is_none() && get(&fl, "prosite").is_none(),
+            "--patterns replaces --regex / --prosite"
+        );
+        return cmd_match_patterns(&fl, source);
+    }
     let pattern = match (get(&fl, "regex"), get(&fl, "prosite")) {
         (Some(p), None) => Pattern::Regex(p.to_string()),
         (None, Some(p)) => Pattern::Prosite(p.to_string()),
@@ -260,6 +273,95 @@ fn cmd_match(args: &[String]) -> anyhow::Result<()> {
         out.overhead_syms,
         out.wall_s * 1e3
     );
+    Ok(())
+}
+
+/// `specdfa match --patterns FILE`: fused multi-pattern matching through
+/// the set engine.  FILE holds one regex per line (`-` = stdin); blank
+/// lines and `#` comments are skipped.  One input pass answers every
+/// pattern, with per-pattern verdicts and tier/counter telemetry.
+fn cmd_match_patterns(
+    fl: &[(String, String)],
+    source: &str,
+) -> anyhow::Result<()> {
+    let text = if source == "-" {
+        let mut buf = String::new();
+        std::io::Read::read_to_string(&mut std::io::stdin(), &mut buf)?;
+        buf
+    } else {
+        std::fs::read_to_string(source)?
+    };
+    let mut set = PatternSet::new();
+    let mut sources: Vec<String> = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        set.push(Pattern::Regex(line.to_string()));
+        sources.push(line.to_string());
+    }
+    anyhow::ensure!(!set.is_empty(), "{source}: no patterns found");
+
+    let procs: usize = get(fl, "procs").unwrap_or("8").parse()?;
+    let r: usize = get(fl, "lookahead").unwrap_or("4").parse()?;
+    let engine = Engine::parse(get(fl, "engine").unwrap_or("auto"))?;
+    let defaults = SetConfig::default();
+    let state_budget: usize = match get(fl, "state-budget") {
+        Some(v) => v.parse()?,
+        None => defaults.state_budget,
+    };
+    let config = SetConfig {
+        engine,
+        policy: ExecPolicy {
+            processors: procs,
+            lookahead: r,
+            ..ExecPolicy::default()
+        },
+        state_budget,
+        prefilter: !has_flag(fl, "no-prefilter"),
+    };
+    let csm = CompiledSetMatcher::compile(&set, config)?;
+    println!("{}", csm.describe());
+
+    let input = if let Some(path) = get(fl, "file") {
+        std::fs::read(path)?
+    } else {
+        let n: usize = get(fl, "gen").unwrap_or("1000000").parse()?;
+        InputGen::new(0xC11).ascii_text(n)
+    };
+    let out = csm.run_bytes(&input)?;
+
+    for (slot, (o, tier)) in
+        out.outcomes.iter().zip(out.tiers.iter()).enumerate()
+    {
+        let tier = match tier {
+            SetTier::PrefilterCleared => "prefilter",
+            SetTier::Fused => "fused",
+            SetTier::Spilled => "spilled",
+        };
+        println!(
+            "pattern {slot}: accepted={} [{tier}] {}",
+            o.accepted, sources[slot]
+        );
+    }
+    println!(
+        "set: {} pattern(s) ({} unique, {} fused, {} spilled, \
+         {} prefiltered); fused passes {}, prefilter cleared {}; \
+         n={}, wall {:.1} ms",
+        out.n,
+        csm.unique_patterns(),
+        csm.fused_patterns(),
+        csm.spilled_patterns(),
+        csm.prefiltered_patterns(),
+        usize::from(out.fused_pass.is_some()),
+        out.prefilter_cleared,
+        input.len(),
+        out.wall_s * 1e3
+    );
+    if let Some(q) = csm.product_states() {
+        println!("fused product DFA: |Q| = {q} (budget {state_budget})");
+    }
     Ok(())
 }
 
@@ -801,6 +903,133 @@ fn bench_serve(quick: bool, records: &mut Vec<BenchRecord>) {
     table.print();
 }
 
+/// The `patternset` suite: k patterns answered over one input — the
+/// fused single-pass set matcher (with and without the literal
+/// prefilter) against the k-pass ablation of k independent sequential
+/// matchers.  Same job on every row (k verdicts over the same bytes),
+/// so `secs_per_iter` is directly comparable.
+fn bench_patternset(quick: bool, records: &mut Vec<BenchRecord>) {
+    let reps = if quick { 2 } else { 5 };
+    let n = if quick { 200_000 } else { 2_000_000 };
+    let procs = if quick { 4 } else { 8 };
+    let mut gen = InputGen::new(0xBE4F);
+    let pcre: Vec<Pattern> = pcre_suite_cached()
+        .iter()
+        .take(6)
+        .map(|p| Pattern::Regex(p.pattern.clone()))
+        .collect();
+    let prosite: Vec<Pattern> = prosite_suite_cached()
+        .iter()
+        .take(4)
+        .map(|p| Pattern::Prosite(p.pattern.clone()))
+        .collect();
+    let sets: Vec<(&str, Vec<Pattern>, Vec<u8>)> = vec![
+        ("pcre-set", pcre, gen.ascii_text(n)),
+        ("prosite-set", prosite, gen.protein(n)),
+    ];
+    let mut table = Table::new(
+        "patternset (fused single pass vs k sequential passes)",
+        &["workload", "kernel", "k", "fused", "spilled", "Msyms/s"],
+    );
+    let policy = ExecPolicy { processors: procs, ..ExecPolicy::default() };
+    for (wname, patterns, input) in &sets {
+        let k = patterns.len();
+        let set = PatternSet::from_patterns(patterns.clone());
+        for (kernel, prefilter) in
+            [("fused_single_pass", true), ("fused_noprefilter", false)]
+        {
+            let config = SetConfig {
+                engine: Engine::Sequential,
+                policy: policy.clone(),
+                prefilter,
+                ..SetConfig::default()
+            };
+            let csm = match CompiledSetMatcher::compile(&set, config) {
+                Ok(csm) => csm,
+                Err(e) => {
+                    eprintln!("bench: skip {kernel} on {wname}: {e:#}");
+                    continue;
+                }
+            };
+            // the verdict run doubles as the warmup
+            let (_, first) = time_once(|| csm.run_bytes(input));
+            if let Err(e) = first {
+                eprintln!("bench: {kernel} failed on {wname}: {e:#}");
+                continue;
+            }
+            let secs = time_median(0, reps, || csm.run_bytes(input));
+            let sps = input.len() as f64 / secs.max(1e-12);
+            records.push(BenchRecord {
+                suite: "patternset".to_string(),
+                workload: wname.to_string(),
+                kernel: kernel.to_string(),
+                width: None,
+                table_bytes: None,
+                n_syms: input.len(),
+                reps,
+                secs_per_iter: secs,
+                syms_per_sec: sps,
+                syms_matched: None,
+                collapses: None,
+            });
+            table.row(vec![
+                wname.to_string(),
+                kernel.to_string(),
+                k.to_string(),
+                csm.fused_patterns().to_string(),
+                csm.spilled_patterns().to_string(),
+                format!("{:.1}", sps / 1e6),
+            ]);
+        }
+        // the ablation: k independent compiled matchers, one pass each
+        let cms: Vec<CompiledMatcher> = patterns
+            .iter()
+            .filter_map(|p| {
+                CompiledMatcher::compile(
+                    p,
+                    Engine::Sequential,
+                    policy.clone(),
+                )
+                .ok()
+            })
+            .collect();
+        if cms.is_empty() {
+            continue;
+        }
+        let secs = time_median(1, reps, || {
+            cms.iter()
+                .map(|cm| {
+                    cm.run_bytes(input).map(|o| o.accepted).unwrap_or(false)
+                })
+                .filter(|&a| a)
+                .count()
+        });
+        let sps = input.len() as f64 / secs.max(1e-12);
+        records.push(BenchRecord {
+            suite: "patternset".to_string(),
+            workload: wname.to_string(),
+            kernel: "kpass_sequential".to_string(),
+            width: None,
+            table_bytes: None,
+            n_syms: input.len(),
+            reps,
+            secs_per_iter: secs,
+            syms_per_sec: sps,
+            syms_matched: None,
+            collapses: None,
+        });
+        table.row(vec![
+            wname.to_string(),
+            "kpass_sequential".to_string(),
+            k.to_string(),
+            "-".to_string(),
+            "-".to_string(),
+            format!("{:.1}", sps / 1e6),
+        ]);
+    }
+    table.print();
+}
+
 /// `specdfa bench`: reproducible kernel-tier, engine and serve-latency
 /// benchmarks with machine-readable JSON output (the repo's
 /// `BENCH_*.json` trajectory).
@@ -813,13 +1042,16 @@ fn cmd_bench(args: &[String]) -> anyhow::Result<()> {
         "kernels" => bench_kernels(quick, &mut records),
         "engines" => bench_engines(quick, &mut records),
         "serve" => bench_serve(quick, &mut records),
+        "patternset" => bench_patternset(quick, &mut records),
         "all" => {
             bench_kernels(quick, &mut records);
             bench_engines(quick, &mut records);
             bench_serve(quick, &mut records);
+            bench_patternset(quick, &mut records);
         }
         other => anyhow::bail!(
-            "unknown suite {other:?} (expected kernels|engines|serve|all)"
+            "unknown suite {other:?} \
+             (expected kernels|engines|serve|patternset|all)"
         ),
     }
     if let Some(path) = get(&fl, "json") {

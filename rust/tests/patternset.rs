@@ -1,0 +1,422 @@
+//! Differential test suite for `engine::patternset`: the fused
+//! multi-pattern matcher must be **observationally identical** to k
+//! independent `Engine::Sequential` runs — per-pattern `accepted`
+//! always, per-pattern `final_state` whenever the set matcher reports
+//! one (prefilter-cleared slots report `None`) — across:
+//!
+//!  * overlapping patterns (shared prefixes/infixes, one input);
+//!  * duplicate patterns (one compile, one shared verdict);
+//!  * the empty set;
+//!  * budget spills (`state_budget` from 1 to unbounded);
+//!  * prefilter on and off;
+//!  * speculative chunk boundaries (witnesses planted at the P-way
+//!    split points of the multicore engine);
+//!
+//! plus the serve-loop acceptance criterion: N different-pattern
+//! requests over one shared input complete with `fused_passes == 1`.
+
+use std::time::{Duration, Instant};
+
+use specdfa::engine::{
+    CompiledMatcher, CompiledSetMatcher, Engine, ExecPolicy, Pattern,
+    PatternSet, ServeConfig, Server, SetConfig, SetTier,
+};
+use specdfa::util::prop;
+use specdfa::util::rng::Rng;
+
+/// The symbols patterns are built from.
+const ALPHABET: &[u8] = b"abcd";
+/// Input filler: the pattern alphabet plus bytes outside it.
+const FILLER: &[u8] = b"abcdex .";
+
+/// One random pattern together with a witness string from its language.
+fn gen_pattern(rng: &mut Rng) -> (String, Vec<u8>) {
+    let lit = |rng: &mut Rng, len: usize| -> (String, Vec<u8>) {
+        let mut p = String::new();
+        let mut w = Vec::new();
+        for _ in 0..len.max(1) {
+            let c = ALPHABET[rng.usize_below(ALPHABET.len())];
+            p.push(c as char);
+            w.push(c);
+        }
+        (p, w)
+    };
+    match rng.usize_below(4) {
+        // plain literal: the prefilter tier's best case
+        0 => lit(rng, 2 + rng.usize_below(3)),
+        // alternation of literals
+        1 => {
+            let (a, wa) = lit(rng, 1 + rng.usize_below(3));
+            let (b, _) = lit(rng, 1 + rng.usize_below(3));
+            (format!("({a}|{b})"), wa)
+        }
+        // literal-class-literal: still has a required literal when the
+        // flanks are long enough, otherwise exercises the no-literal path
+        2 => {
+            let (a, mut w) = lit(rng, 1 + rng.usize_below(2));
+            let (b, wb) = lit(rng, 1 + rng.usize_below(2));
+            let cls = ALPHABET[rng.usize_below(ALPHABET.len())];
+            w.push(cls);
+            w.extend(&wb);
+            (format!("{a}[{}{}]{b}", cls as char, 'e'), w)
+        }
+        // plus-repetition over a literal base
+        _ => {
+            let (a, wa) = lit(rng, 1 + rng.usize_below(2));
+            let (b, wb) = lit(rng, 2);
+            let mut w = wa.clone();
+            w.extend(&wb);
+            (format!("({a})+{b}"), w)
+        }
+    }
+}
+
+fn gen_text(rng: &mut Rng, len: usize) -> Vec<u8> {
+    (0..len)
+        .map(|_| FILLER[rng.usize_below(FILLER.len())])
+        .collect()
+}
+
+fn plant(text: &mut [u8], witness: &[u8], pos: usize) {
+    if witness.is_empty() || witness.len() > text.len() {
+        return;
+    }
+    let pos = pos.min(text.len() - witness.len());
+    text[pos..pos + witness.len()].copy_from_slice(witness);
+}
+
+/// Compare one compiled set against k independent sequential runs on
+/// `input`.  `accepted` must agree on every slot; `final_state` must
+/// agree whenever the set matcher reports one.
+fn assert_set_matches_sequential(
+    csm: &CompiledSetMatcher,
+    patterns: &[Pattern],
+    input: &[u8],
+    label: &str,
+) {
+    let out = csm.run_bytes(input).expect("set run");
+    assert_eq!(out.outcomes.len(), patterns.len(), "{label}: slot count");
+    assert_eq!(out.tiers.len(), patterns.len(), "{label}: tier count");
+    for (slot, pattern) in patterns.iter().enumerate() {
+        let solo = CompiledMatcher::compile(
+            pattern,
+            Engine::Sequential,
+            ExecPolicy::default(),
+        )
+        .expect("solo compile")
+        .run_bytes(input)
+        .expect("solo run");
+        let got = &out.outcomes[slot];
+        assert_eq!(
+            got.accepted, solo.accepted,
+            "{label}: slot {slot} ({pattern:?}) disagrees on acceptance \
+             (tier {:?}, n={})",
+            out.tiers[slot],
+            input.len()
+        );
+        if let (Some(g), Some(w)) = (got.final_state, solo.final_state) {
+            assert_eq!(
+                g, w,
+                "{label}: slot {slot} ({pattern:?}) disagrees on final \
+                 state (tier {:?})",
+                out.tiers[slot]
+            );
+        }
+        // a prefilter clear must never clear an accepting pattern
+        if out.tiers[slot] == SetTier::PrefilterCleared {
+            assert!(
+                !solo.accepted,
+                "{label}: slot {slot} cleared but sequential accepts"
+            );
+        }
+    }
+}
+
+#[test]
+fn random_sets_match_k_sequential_runs() {
+    prop::check("set == k sequential runs", 60, |rng| {
+        let k = 1 + rng.usize_below(4);
+        let mut patterns = Vec::new();
+        let mut witnesses = Vec::new();
+        for _ in 0..k {
+            let (p, w) = gen_pattern(rng);
+            patterns.push(Pattern::Regex(p));
+            witnesses.push(w);
+        }
+        // sometimes duplicate a slot to exercise the dedupe path
+        if k > 1 && rng.chance(0.3) {
+            let dup = rng.usize_below(patterns.len());
+            patterns.push(patterns[dup].clone());
+            witnesses.push(witnesses[dup].clone());
+        }
+        let n = 200 + rng.usize_below(1800);
+        let mut input = gen_text(rng, n);
+        // plant a random subset of witnesses, some at chunk boundaries
+        for w in &witnesses {
+            if rng.chance(0.5) {
+                let pos = if rng.chance(0.5) {
+                    rng.usize_below(n)
+                } else {
+                    // the 4-way split points of the speculative engine
+                    (n / 4) * (1 + rng.usize_below(3))
+                };
+                plant(&mut input, w, pos);
+            }
+        }
+        let config = SetConfig {
+            engine: if rng.chance(0.5) {
+                Engine::Sequential
+            } else {
+                Engine::speculative()
+            },
+            policy: ExecPolicy {
+                processors: 4,
+                lookahead: 2,
+                ..ExecPolicy::default()
+            },
+            state_budget: match rng.usize_below(3) {
+                0 => 1,  // everything spills
+                1 => 24, // partial spill on bigger sets
+                _ => SetConfig::default().state_budget,
+            },
+            prefilter: rng.chance(0.7),
+        };
+        let set = PatternSet::from_patterns(patterns.clone());
+        let csm = CompiledSetMatcher::compile(&set, config)
+            .expect("set compile");
+        assert_set_matches_sequential(&csm, &patterns, &input, "random");
+    });
+}
+
+#[test]
+fn overlapping_patterns_share_one_pass() {
+    // shared prefixes and infixes: the product DFA must keep the
+    // component verdicts independent
+    let patterns: Vec<Pattern> = ["ab+", "ab+c", "(ab|cd)+", "bc"]
+        .iter()
+        .map(|p| Pattern::Regex(p.to_string()))
+        .collect();
+    let set = PatternSet::from_patterns(patterns.clone());
+    let csm = CompiledSetMatcher::compile(&set, SetConfig::default())
+        .expect("set compile");
+    for input in [
+        &b"xxabbbcyy"[..],
+        b"abcdabcd",
+        b"no hits here",
+        b"ab",
+        b"",
+        b"cdcdcdab",
+    ] {
+        assert_set_matches_sequential(&csm, &patterns, input, "overlap");
+    }
+}
+
+#[test]
+fn duplicate_patterns_compile_once_and_share_the_verdict() {
+    let patterns: Vec<Pattern> = ["ab+", "cd", "ab+", "cd", "ab+"]
+        .iter()
+        .map(|p| Pattern::Regex(p.to_string()))
+        .collect();
+    let set = PatternSet::from_patterns(patterns.clone());
+    let csm = CompiledSetMatcher::compile(&set, SetConfig::default())
+        .expect("set compile");
+    assert_eq!(csm.unique_patterns(), 2, "dedupe must collapse to 2");
+    let out = csm.run_bytes(b"xxabbyy").expect("set run");
+    assert_eq!(out.accepted(), vec![true, false, true, false, true]);
+    for dup in [2usize, 4] {
+        assert_eq!(out.outcomes[dup].final_state, out.outcomes[0].final_state);
+        assert_eq!(out.tiers[dup], out.tiers[0]);
+    }
+    assert_set_matches_sequential(&csm, &patterns, b"xxabbyy", "dup");
+    assert_set_matches_sequential(&csm, &patterns, b"cd and ab", "dup");
+}
+
+#[test]
+fn empty_set_yields_empty_outcome() {
+    let csm = CompiledSetMatcher::compile(
+        &PatternSet::new(),
+        SetConfig::default(),
+    )
+    .expect("empty set compiles");
+    let out = csm.run_bytes(b"anything").expect("empty set runs");
+    assert!(out.outcomes.is_empty());
+    assert!(out.tiers.is_empty());
+    assert!(out.fused_pass.is_none());
+    assert_eq!(out.prefilter_cleared, 0);
+    assert_eq!(csm.unique_patterns(), 0);
+}
+
+#[test]
+fn budget_spill_tiers_stay_equivalent() {
+    let patterns: Vec<Pattern> =
+        ["(ab|cd)+e", "ab+c", "cdcd", "a[bc]d", "abcd"]
+            .iter()
+            .map(|p| Pattern::Regex(p.to_string()))
+            .collect();
+    let set = PatternSet::from_patterns(patterns.clone());
+    let mut gen = Rng::new(0x5B1);
+    let mut input = gen_text(&mut gen, 4096);
+    plant(&mut input, b"ababcde", 100);
+    plant(&mut input, b"cdcd", 2048);
+    let mut spilled_at = Vec::new();
+    for budget in [1usize, 8, 24, 64, 0 /* unbounded */] {
+        let csm = CompiledSetMatcher::compile(
+            &set,
+            SetConfig { state_budget: budget, ..SetConfig::default() },
+        )
+        .expect("set compile never fails on size");
+        spilled_at.push(csm.spilled_patterns());
+        let label = format!("budget={budget}");
+        assert_set_matches_sequential(&csm, &patterns, &input, &label);
+        assert_set_matches_sequential(&csm, &patterns, b"", &label);
+        assert_eq!(
+            csm.fused_patterns() + csm.spilled_patterns(),
+            csm.unique_patterns(),
+            "{label}: every unique pattern lands in exactly one tier"
+        );
+    }
+    // budget 1 spills everything; unbounded spills nothing
+    assert_eq!(spilled_at[0], set.len(), "budget 1 must spill all");
+    assert_eq!(*spilled_at.last().unwrap(), 0, "unbounded must fuse all");
+}
+
+#[test]
+fn chunk_boundary_witnesses_survive_fused_speculation() {
+    // witnesses planted exactly at the 4-way split points of the
+    // speculative kernel, matched through the fused product DFA
+    let patterns: Vec<Pattern> = ["abca", "bcab", "cabc"]
+        .iter()
+        .map(|p| Pattern::Regex(p.to_string()))
+        .collect();
+    let set = PatternSet::from_patterns(patterns.clone());
+    let csm = CompiledSetMatcher::compile(
+        &set,
+        SetConfig {
+            engine: Engine::speculative(),
+            policy: ExecPolicy {
+                processors: 4,
+                lookahead: 2,
+                ..ExecPolicy::default()
+            },
+            // no prefilter: force every verdict through the fused pass
+            prefilter: false,
+            ..SetConfig::default()
+        },
+    )
+    .expect("set compile");
+    assert_eq!(csm.fused_patterns(), 3);
+    let n = 8192;
+    let mut gen = Rng::new(0xB0B);
+    for straddle in 0..3usize {
+        let mut input = gen_text(&mut gen, n);
+        // straddle the boundary: 2 bytes before, 2 after
+        let pos = (n / 4) * (straddle + 1) - 2;
+        plant(&mut input, b"abca", pos);
+        let label = format!("straddle boundary {straddle}");
+        assert_set_matches_sequential(&csm, &patterns, &input, &label);
+        let out = csm.run_bytes(&input).expect("set run");
+        assert!(out.outcomes[0].accepted, "{label}: witness lost");
+        assert!(out.fused_pass.is_some(), "{label}: fused pass must run");
+    }
+}
+
+/// Spin until `cond` holds (30 s hard cap).
+fn wait_until(mut cond: impl FnMut() -> bool) {
+    let t0 = Instant::now();
+    while !cond() {
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "condition timed out"
+        );
+        std::thread::yield_now();
+    }
+}
+
+#[test]
+fn serve_coalesces_distinct_patterns_over_one_input_into_one_pass() {
+    let server = Server::start(ServeConfig {
+        workers: 1,
+        calibrate_on_start: false,
+        recalibrate_every: 0,
+        cache_outcomes: 0,
+        profile_per_worker: false,
+        engine: Engine::Sequential,
+        ..ServeConfig::default()
+    })
+    .expect("server");
+    // park the only worker on a corpus scan (uppercase literal never
+    // occurs in lowercase ascii_text) so the probes all queue up
+    let scan = specdfa::workload::InputGen::new(0x3ED6E).ascii_text(8 << 20);
+    let wedge = server.submit(Pattern::Regex("ZQZQZQ".to_string()), scan);
+    wait_until(|| {
+        let s = server.stats();
+        s.batches >= 1 && s.queue_depth == 0
+    });
+    // N distinct patterns, ONE shared input that contains every
+    // pattern's required literal (otherwise the prefilter clears the
+    // whole set and no fused pass is needed)
+    let shared = b"the cat saw a dog chase a bird past a fish".to_vec();
+    let names = ["cat", "dog", "bird", "fish"];
+    let tickets: Vec<_> = names
+        .iter()
+        .map(|p| {
+            server.submit(Pattern::Regex(p.to_string()), shared.clone())
+        })
+        .collect();
+    wait_until(|| server.stats().queue_depth == names.len());
+    for (k, t) in tickets.into_iter().enumerate() {
+        let out = t.wait().expect("probe serves");
+        assert!(out.accepted, "pattern {k} must match the shared input");
+        assert_eq!(out.n, shared.len());
+    }
+    assert!(wedge.wait().is_ok());
+    let stats = server.shutdown();
+    assert_eq!(stats.served, 1 + names.len() as u64);
+    assert_eq!(
+        stats.fused_passes, 1,
+        "{} distinct-pattern requests over one input must collapse \
+         into exactly one fused pass",
+        names.len()
+    );
+    assert_eq!(stats.patterns_fused, names.len() as u64);
+    assert_eq!(
+        stats.prefilter_clears, 0,
+        "every literal is present in the shared input"
+    );
+}
+
+#[test]
+fn serve_cross_pattern_fusing_can_be_disabled() {
+    let server = Server::start(ServeConfig {
+        workers: 1,
+        fuse_cross_pattern: false,
+        calibrate_on_start: false,
+        recalibrate_every: 0,
+        cache_outcomes: 0,
+        profile_per_worker: false,
+        engine: Engine::Sequential,
+        ..ServeConfig::default()
+    })
+    .expect("server");
+    let scan = specdfa::workload::InputGen::new(0x3ED6E).ascii_text(4 << 20);
+    let wedge = server.submit(Pattern::Regex("ZQZQZQ".to_string()), scan);
+    wait_until(|| {
+        let s = server.stats();
+        s.batches >= 1 && s.queue_depth == 0
+    });
+    let shared = b"cat and dog".to_vec();
+    let tickets: Vec<_> = ["cat", "dog"]
+        .iter()
+        .map(|p| {
+            server.submit(Pattern::Regex(p.to_string()), shared.clone())
+        })
+        .collect();
+    wait_until(|| server.stats().queue_depth == 2);
+    for t in tickets {
+        assert!(t.wait().expect("probe serves").accepted);
+    }
+    assert!(wedge.wait().is_ok());
+    let stats = server.shutdown();
+    assert_eq!(stats.fused_passes, 0, "fusing disabled");
+    assert_eq!(stats.patterns_fused, 0);
+}
