@@ -55,6 +55,13 @@ impl SequentialAdapter {
     pub fn new(dfa: &Dfa) -> SequentialAdapter {
         SequentialAdapter { m: SequentialMatcher::new(dfa) }
     }
+
+    /// The flattened transition table, shared with the streaming
+    /// wrapper ([`super::stream::StreamMatcher`]) so segment folds
+    /// reuse the table this adapter already built.
+    pub(crate) fn flat(&self) -> &crate::automata::FlatDfa {
+        self.m.flat()
+    }
 }
 
 impl Matcher for SequentialAdapter {

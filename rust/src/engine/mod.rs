@@ -40,6 +40,11 @@
 //!   ([`CompiledSetMatcher`]) so one input pass answers k membership
 //!   queries; the serve loop coalesces different-pattern requests over
 //!   one input into a single fused pass.
+//! * [`stream`] — segment-streamed, checkpoint-resumable matching
+//!   ([`StreamMatcher`]): feed the input in pieces with constant
+//!   memory, snapshot a [`Checkpoint`] mid-scan, resume it on any
+//!   worker (the serve loop's scan preemption), or serialize it for
+//!   migration ([`Checkpoint::to_bytes`]).
 
 pub mod adapters;
 pub mod batch;
@@ -48,6 +53,7 @@ pub mod patternset;
 pub mod select;
 pub mod serve;
 pub mod shard;
+pub mod stream;
 
 use anyhow::{bail, Result};
 
@@ -68,6 +74,7 @@ pub use serve::{
     ServerHandle, Ticket, WaitStats,
 };
 pub use shard::{ShardLayout, ShardOutcome, ShardPlan, ShardWork};
+pub use stream::{Checkpoint, FeedProgress, StreamMatcher, StreamStats};
 
 use adapters::{
     BacktrackingAdapter, CloudAdapter, GrepLikeAdapter, HolubStekrAdapter,

@@ -20,6 +20,7 @@ use crate::speculative::matcher::MatchOutcome;
 
 use super::select::Selection;
 use super::shard::ShardOutcome;
+use super::stream::StreamStats;
 
 /// Which substrate executed a request.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -42,6 +43,9 @@ pub enum EngineKind {
     Backtracking,
     /// grep-style literal-prefilter engine.
     GrepLike,
+    /// Segment-streamed, checkpoint-resumable matching
+    /// ([`crate::engine::stream::StreamMatcher`]).
+    Stream,
 }
 
 impl EngineKind {
@@ -56,6 +60,7 @@ impl EngineKind {
             EngineKind::HolubStekr => "holub",
             EngineKind::Backtracking => "backtrack",
             EngineKind::GrepLike => "grep",
+            EngineKind::Stream => "stream",
         }
     }
 }
@@ -78,6 +83,7 @@ pub enum Detail {
     HolubStekr(HolubStekrOutcome),
     Backtracking(BacktrackStats),
     GrepLike(GrepStats),
+    Stream(StreamStats),
 }
 
 /// Unified outcome of one membership test, whichever engine ran it.
@@ -135,12 +141,13 @@ mod tests {
             EngineKind::HolubStekr,
             EngineKind::Backtracking,
             EngineKind::GrepLike,
+            EngineKind::Stream,
         ];
         let names: Vec<&str> = all.iter().map(|k| k.name()).collect();
         assert_eq!(
             names,
             ["seq", "spec", "simd", "cloud", "shard", "holub", "backtrack",
-             "grep"]
+             "grep", "stream"]
         );
         // names are distinct and Display matches name()
         for k in all {

@@ -56,6 +56,19 @@
 //!   [`ServeStats::fused_passes`], [`ServeStats::patterns_fused`] and
 //!   [`ServeStats::prefilter_clears`] count the wins;
 //!   [`ServeConfig::fuse_cross_pattern`] turns the path off.
+//! * **Preemptible scans** ([`ServeConfig::preempt_scans`]): scan-class
+//!   requests are served through the streaming wrapper
+//!   ([`super::stream::StreamMatcher`]) one
+//!   [`ServeConfig::preempt_segment_bytes`] segment at a time; when a
+//!   probe-class request is waiting at a segment boundary the scan is
+//!   **parked** — its [`Checkpoint`] is serialized onto the request and
+//!   the request re-queued at scan priority — so probes stop waiting
+//!   behind corpus scans without the PR 5 aging bypass being the only
+//!   fairness lever.  Any worker can resume a parked scan (the
+//!   checkpoint rides the queue, not the worker), the aging bound
+//!   limits how long it stays parked, and shutdown still drains every
+//!   parked scan to completion.  [`ServeStats::preemptions`] /
+//!   [`ServeStats::resumed_scans`] count the park/resume events.
 //! * At startup — and again every [`ServeConfig::recalibrate_every`]
 //!   requests — the server runs the paper's §4.1 offline profiling step
 //!   ([`crate::speculative::profile::profile_host`]) and installs
@@ -85,9 +98,10 @@ use anyhow::Result;
 use crate::speculative::profile;
 
 use super::patternset::{
-    CompiledSetMatcher, PatternSet, SetConfig, DEFAULT_STATE_BUDGET,
+    CompiledSetMatcher, PatternSet, SetConfig, SetTier, DEFAULT_STATE_BUDGET,
 };
 use super::select::AutoThresholds;
+use super::stream::{Checkpoint, StreamMatcher};
 use super::{CompiledMatcher, Engine, ExecPolicy, Matcher, Outcome, Pattern};
 
 /// Index of the *probe* class (inputs of at most
@@ -207,6 +221,16 @@ pub struct ServeConfig {
     /// Product-state budget for the fused pass; overflowing patterns
     /// spill to per-pattern matching (0 = unlimited).
     pub fuse_state_budget: usize,
+    /// Serve scan-class requests preemptibly through the streaming
+    /// wrapper ([`super::stream::StreamMatcher`]): at every
+    /// `preempt_segment_bytes` boundary, a scan parks itself (checkpoint
+    /// serialized onto the request, request re-queued at scan priority)
+    /// whenever a probe-class request is waiting.  Only meaningful under
+    /// [`PriorityPolicy::SizeAware`]; off by default.
+    pub preempt_scans: bool,
+    /// Segment size (bytes) a preemptible scan is fed between park
+    /// checks; clamped to at least 1.
+    pub preempt_segment_bytes: usize,
     /// Engine every request is served with (normally `Engine::Auto`).
     pub engine: Engine,
     /// Execution policy template; its `thresholds` field is replaced by
@@ -234,6 +258,8 @@ impl Default for ServeConfig {
             profile_per_worker: true,
             fuse_cross_pattern: true,
             fuse_state_budget: DEFAULT_STATE_BUDGET,
+            preempt_scans: false,
+            preempt_segment_bytes: 1 << 20,
             engine: Engine::Auto,
             policy: ExecPolicy::default(),
         }
@@ -379,6 +405,13 @@ pub struct ServeStats {
     /// Unique patterns rejected by the Aho–Corasick literal prefilter
     /// during cross-pattern groups (no DFA ran for them at all).
     pub prefilter_clears: u64,
+    /// Scan-class requests parked mid-input because a probe was waiting
+    /// (the checkpoint re-queued; counted once per park, so one scan can
+    /// contribute many).
+    pub preemptions: u64,
+    /// Parked scans picked back up from their serialized checkpoint
+    /// (possibly by a different worker).
+    pub resumed_scans: u64,
     /// LRU evictions.
     pub evictions: u64,
     /// Profiling runs performed (startup calibration included).
@@ -416,6 +449,10 @@ struct Request {
     pattern: Pattern,
     input: Vec<u8>,
     reply: Sender<ServeResult>,
+    /// Serialized [`Checkpoint`] of a preempted scan: progress already
+    /// made over `input`.  `Some` only while a parked scan waits to be
+    /// resumed; such a request never rides a fused group.
+    ckpt: Option<Vec<u8>>,
 }
 
 /// One admitted request with its scheduling metadata.
@@ -551,7 +588,15 @@ impl ReqQueue {
     /// serving.  Returned in admission order.  Arrival-list entries of
     /// drained requests go stale and are skipped by [`ReqQueue::take`]'s
     /// head-seq check, exactly like entries that rode an earlier
-    /// coalesced batch.
+    /// coalesced batch.  Parked scans (`ckpt.is_some()`) never ride: a
+    /// fused product pass cannot resume from a checkpoint.
+    ///
+    /// A non-empty drain is an extra serving pass executed ahead of any
+    /// still-waiting scan, so it **counts against the aging bound**
+    /// exactly like the probe batch it rides behind — without this
+    /// credit, a probe flood whose inputs coalesce cross-pattern would
+    /// serve two passes per `bypassed` increment and stretch the PR 5
+    /// starvation bound to `2 × age_limit`.
     fn drain_same_input(&mut self, input: &[u8], max: usize) -> Vec<Queued> {
         if max == 0 || self.len == 0 {
             return Vec::new();
@@ -563,7 +608,10 @@ impl ReqQueue {
             .values()
             .flat_map(|lane| lane.by_class.iter())
             .flatten()
-            .filter(|item| item.req.input.as_slice() == input)
+            .filter(|item| {
+                item.req.ckpt.is_none()
+                    && item.req.input.as_slice() == input
+            })
             .map(|item| item.seq)
             .collect();
         if seqs.is_empty() {
@@ -584,6 +632,7 @@ impl ReqQueue {
                 let mut kept = VecDeque::with_capacity(sub.len());
                 while let Some(item) = sub.pop_front() {
                     if item.seq <= cutoff
+                        && item.req.ckpt.is_none()
                         && item.req.input.as_slice() == input
                     {
                         self.live[class] = self.live[class].saturating_sub(1);
@@ -601,6 +650,9 @@ impl ReqQueue {
         }
         for p in emptied {
             self.lanes.remove(&p);
+        }
+        if !taken.is_empty() && self.live[CLASS_SCAN] > 0 {
+            self.bypassed += 1;
         }
         taken.sort_by_key(|t| t.seq);
         taken
@@ -701,6 +753,8 @@ struct Counters {
     fused_passes: AtomicU64,
     patterns_fused: AtomicU64,
     prefilter_clears: AtomicU64,
+    preemptions: AtomicU64,
+    resumed_scans: AtomicU64,
     evictions: AtomicU64,
     recalibrations: AtomicU64,
     wait_taken: [AtomicU64; CLASSES],
@@ -723,6 +777,8 @@ impl Counters {
             fused_passes: AtomicU64::new(0),
             patterns_fused: AtomicU64::new(0),
             prefilter_clears: AtomicU64::new(0),
+            preemptions: AtomicU64::new(0),
+            resumed_scans: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
             recalibrations: AtomicU64::new(0),
             wait_taken: [AtomicU64::new(0), AtomicU64::new(0)],
@@ -980,7 +1036,7 @@ impl Drop for Server {
 /// [`ServerHandle`].
 fn do_submit(shared: &Shared, pattern: Pattern, input: Vec<u8>) -> Ticket {
     let (tx, rx) = channel();
-    let req = Request { pattern, input, reply: tx };
+    let req = Request { pattern, input, reply: tx, ckpt: None };
     let mut q = shared.queue.lock().unwrap();
     loop {
         if shared.shutdown.load(Ordering::SeqCst) {
@@ -1026,6 +1082,7 @@ fn do_submit_many(
             pattern: pattern.clone(),
             input: input.to_vec(),
             reply: tx,
+            ckpt: None,
         };
         loop {
             if shared.shutdown.load(Ordering::SeqCst) {
@@ -1129,6 +1186,8 @@ fn stats_of(shared: &Shared) -> ServeStats {
         fused_passes: c.fused_passes.load(Ordering::Relaxed),
         patterns_fused: c.patterns_fused.load(Ordering::Relaxed),
         prefilter_clears: c.prefilter_clears.load(Ordering::Relaxed),
+        preemptions: c.preemptions.load(Ordering::Relaxed),
+        resumed_scans: c.resumed_scans.load(Ordering::Relaxed),
         evictions: c.evictions.load(Ordering::Relaxed),
         recalibrations: c.recalibrations.load(Ordering::Relaxed),
         cached_patterns,
@@ -1195,7 +1254,9 @@ fn next_batch(shared: &Shared) -> Option<(Vec<Request>, Vec<Request>)> {
                     item.class,
                     now.saturating_duration_since(item.enqueued),
                 );
-                if !extras.is_empty() && same {
+                // a parked scan stays on the per-pattern path: a fused
+                // product pass cannot resume its checkpoint
+                if !extras.is_empty() && same && item.req.ckpt.is_none() {
                     group.push(item.req);
                 } else {
                     batch.push(item.req);
@@ -1290,6 +1351,10 @@ fn serve_same_pattern(shared: &Shared, misses: Vec<(Request, Option<u64>)>) {
                 } else {
                     None
                 };
+                if memo.is_none() && preemptible(shared, &req) {
+                    serve_preemptible(shared, &cm, req);
+                    continue;
+                }
                 let res = match memo {
                     Some(out) => Ok(out),
                     None => {
@@ -1323,6 +1388,82 @@ fn serve_same_pattern(shared: &Shared, misses: Vec<(Request, Option<u64>)>) {
             }
         }
     }
+}
+
+/// Whether a request takes the preemptible streaming path: a scan-class
+/// input (or a parked scan carrying a checkpoint) under size-aware
+/// priority with [`ServeConfig::preempt_scans`] on.
+fn preemptible(shared: &Shared, req: &Request) -> bool {
+    shared.config.preempt_scans
+        && shared.config.priority == PriorityPolicy::SizeAware
+        && (req.ckpt.is_some()
+            || req.input.len() > shared.config.probe_max_bytes)
+}
+
+/// Serve one scan through the streaming wrapper, one
+/// [`ServeConfig::preempt_segment_bytes`] segment per park check.  At an
+/// interior segment boundary with a probe-class request waiting, the
+/// scan *parks*: its [`Checkpoint`] is serialized onto the request and
+/// the request re-queued at scan priority, so the probes run now and
+/// the aging bound limits how many probe batches pass before some
+/// worker — any worker, the checkpoint rides the queue — resumes it.
+/// Each service turn makes at least one segment of progress, and
+/// shutdown never parks (queued work drains to completion), so a parked
+/// scan always terminates.  The re-queue bypasses admission on purpose:
+/// the request was admitted once already, and a worker blocking on its
+/// own queue's backpressure would deadlock.
+fn serve_preemptible(shared: &Shared, cm: &CompiledMatcher, mut req: Request) {
+    let c = &shared.counters;
+    let mut sm = match req.ckpt.take() {
+        Some(bytes) => {
+            let resumed = Checkpoint::from_bytes(&bytes)
+                .and_then(|ck| StreamMatcher::from_checkpoint(cm, ck));
+            match resumed {
+                Ok(sm) => {
+                    c.resumed_scans.fetch_add(1, Ordering::Relaxed);
+                    sm
+                }
+                Err(e) => {
+                    // a checkpoint this server serialized always
+                    // round-trips unless the pattern recompiled to a
+                    // different DFA mid-flight; surface the failure
+                    c.failed.fetch_add(1, Ordering::SeqCst);
+                    let _ = req
+                        .reply
+                        .send(Err(ServeError::failed(format!("{e:#}"))));
+                    finish_request(shared);
+                    return;
+                }
+            }
+        }
+        None => StreamMatcher::new(cm),
+    };
+    let seg = shared.config.preempt_segment_bytes.max(1);
+    let mut pos = usize::try_from(sm.offset()).unwrap_or(req.input.len());
+    while pos < req.input.len() {
+        let end = req.input.len().min(pos + seg);
+        sm.feed(&req.input[pos..end]);
+        pos = end;
+        // park only at an interior boundary: a finished scan replies
+        // below, and shutdown drains scans to completion instead of
+        // re-queueing them forever
+        if pos >= req.input.len() || shared.shutdown.load(Ordering::SeqCst) {
+            continue;
+        }
+        let mut q = shared.queue.lock().unwrap();
+        if q.live[CLASS_PROBE] > 0 {
+            req.ckpt = Some(sm.checkpoint().to_bytes());
+            c.preemptions.fetch_add(1, Ordering::Relaxed);
+            q.push(req, CLASS_SCAN, CLASS_SCAN);
+            drop(q);
+            shared.ready.notify_one();
+            return;
+        }
+    }
+    let out = sm.finish();
+    c.served.fetch_add(1, Ordering::SeqCst);
+    let _ = req.reply.send(Ok(out));
+    finish_request(shared);
 }
 
 /// Serve a cross-pattern same-input group: one fused pattern-set pass
@@ -1392,7 +1533,14 @@ fn serve_fused_group(shared: &Shared, group: Vec<Request>) {
                     .position(|p| *p == req.pattern)
                     .expect("every miss pattern is in the distinct list");
                 let out = setout.outcomes[slot].clone();
-                if let Some(h) = hash {
+                // memoize only verdicts a matcher actually computed: a
+                // prefilter-cleared slot is a synthesized reject
+                // (`final_state: None`), and memoizing it would poison
+                // later solo hits for this (pattern, input) with the
+                // degraded outcome
+                let real_verdict =
+                    setout.tiers[slot] != SetTier::PrefilterCleared;
+                if let (true, Some(h)) = (real_verdict, hash) {
                     remember_outcome(shared, &req, h, epoch, &out);
                 }
                 c.served.fetch_add(1, Ordering::SeqCst);
@@ -1792,7 +1940,12 @@ mod tests {
 
     fn test_req(pattern: &Pattern) -> Request {
         let (tx, _rx) = channel();
-        Request { pattern: pattern.clone(), input: Vec::new(), reply: tx }
+        Request {
+            pattern: pattern.clone(),
+            input: Vec::new(),
+            reply: tx,
+            ckpt: None,
+        }
     }
 
     fn push_class(q: &mut ReqQueue, pattern: &Pattern, class: usize) -> u64 {
@@ -1816,6 +1969,7 @@ mod tests {
                     pattern: p.clone(),
                     input: input.to_vec(),
                     reply: tx,
+                    ckpt: None,
                 },
                 CLASS_PROBE,
                 CLASS_PROBE,
@@ -1898,6 +2052,69 @@ mod tests {
                 vec![probes[8], probes[9]],
             ]
         );
+    }
+
+    #[test]
+    fn fused_drains_credit_the_aging_counter() {
+        let a = Pattern::Regex("a".to_string());
+        let b = Pattern::Regex("b".to_string());
+        let scan = Pattern::Regex("scan".to_string());
+        let req = |p: &Pattern, input: &[u8]| {
+            let (tx, _rx) = channel();
+            Request {
+                pattern: p.clone(),
+                input: input.to_vec(),
+                reply: tx,
+                ckpt: None,
+            }
+        };
+        let mut q = ReqQueue::new();
+        // a scan waits (seq 0) while four cross-pattern probe pairs —
+        // each pair sharing one input — flood in (seqs 1..=8)
+        q.push(req(&scan, b"corpus"), CLASS_SCAN, CLASS_SCAN);
+        for i in 0..4u8 {
+            q.push(req(&a, &[b'x', i]), CLASS_PROBE, CLASS_PROBE);
+            q.push(req(&b, &[b'x', i]), CLASS_PROBE, CLASS_PROBE);
+        }
+        // emulate the worker cycle with age_limit 2, max_batch 1: take
+        // a batch, then (as next_batch does) drain the head input's
+        // cross-pattern riders into a fused group
+        let mut order: Vec<u64> = Vec::new();
+        while let Some(batch) = q.take_batch(2, 1) {
+            order.push(batch[0].seq);
+            for rider in q.drain_same_input(&batch[0].req.input, 64) {
+                order.push(rider.seq);
+            }
+        }
+        // each probe cycle serves TWO passes (batch + fused group), so
+        // both count against the aging bound and the scan is forced
+        // after one cycle — not after two, which would stretch the
+        // starvation bound to 2 x age_limit
+        assert_eq!(order, vec![1, 2, 0, 3, 4, 5, 6, 7, 8]);
+    }
+
+    #[test]
+    fn parked_scans_never_ride_a_fused_drain() {
+        let a = Pattern::Regex("a".to_string());
+        let b = Pattern::Regex("b".to_string());
+        let req = |p: &Pattern, ckpt: Option<Vec<u8>>| {
+            let (tx, _rx) = channel();
+            Request {
+                pattern: p.clone(),
+                input: b"shared".to_vec(),
+                reply: tx,
+                ckpt,
+            }
+        };
+        let mut q = ReqQueue::new();
+        q.push(req(&a, None), CLASS_PROBE, CLASS_PROBE);
+        let parked = q.next_seq;
+        q.push(req(&b, Some(vec![1, 2, 3])), CLASS_SCAN, CLASS_SCAN);
+        let drained = q.drain_same_input(b"shared", 64);
+        assert_eq!(drained.len(), 1, "the checkpointed request stays");
+        assert_eq!(q.len, 1);
+        let batch = q.take_batch(0, 64).unwrap();
+        assert_eq!(batch[0].seq, parked);
     }
 
     #[test]

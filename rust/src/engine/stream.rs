@@ -1,0 +1,520 @@
+//! Streaming, checkpoint-resumable matching: [`StreamMatcher`] wraps a
+//! [`CompiledMatcher`] and accepts the input in **segments** instead of
+//! demanding the whole corpus in memory.
+//!
+//! ```text
+//!   feed(seg) ──▶ pending buffer ──fold──▶ chunk kernel ──▶ LVector
+//!                     │                       (Eq. 9 compose per fold)
+//!              checkpoint() ⇄ to_bytes/from_bytes ⇄ another worker
+//!                     │
+//!   finish() ──▶ Outcome (EngineKind::Stream, Detail::Stream)
+//! ```
+//!
+//! The carried state is exactly the paper's combine operand: a composed
+//! L-vector (Fig. 9 / Eq. 9).  The stream seeds it as the *constant map
+//! to the start state* — every entry maps to `q0` — so after folding
+//! bytes `w` every entry equals `δ*(q0, w)`.  Composition preserves the
+//! singleton image, which keeps per-segment work sequential-scale: the
+//! stream pays one chain per fold, not |Q|.
+//!
+//! Three capabilities fall out of that state being small and explicit:
+//!
+//! * **Unbounded tailing** — memory is `O(|Q| + fold threshold)`
+//!   regardless of how many bytes have streamed through.
+//! * **Preempt / resume** — [`StreamMatcher::checkpoint`] snapshots the
+//!   stream; [`StreamMatcher::from_checkpoint`] continues it, on any
+//!   worker.  The serve loop uses this to park long scans when probes
+//!   arrive ([`super::serve::ServeConfig::preempt_scans`]).
+//! * **Migration framing** — [`Checkpoint::to_bytes`] /
+//!   [`Checkpoint::from_bytes`] give the future multi-process cluster a
+//!   versioned wire format for moving a scan between processes.
+//!
+//! Byte-to-symbol mapping is stateless per byte (`Dfa::class_of`), so a
+//! segment boundary can land anywhere; the `pending` buffer only
+//! coalesces small feeds up to the fold threshold so kernel entry cost
+//! is amortized, and [`StreamMatcher::finish`] flushes the remainder.
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::automata::FlatDfa;
+use crate::speculative::chunk::match_chunk_states_resume;
+use crate::speculative::lvector::LVector;
+
+use super::outcome::{Detail, EngineKind, Outcome};
+use super::CompiledMatcher;
+
+/// Default fold threshold in bytes: `feed` buffers until this many
+/// bytes are pending, then folds them through the chunk kernel in one
+/// call.  Large enough to amortize kernel entry, small enough that a
+/// tailing stream stays constant-memory.
+pub const DEFAULT_FOLD_BYTES: usize = 1 << 16;
+
+const CKPT_MAGIC: &[u8; 4] = b"SDCK";
+const CKPT_VERSION: u16 = 1;
+
+/// Work/progress counters of one streamed run, carried inside the
+/// [`Checkpoint`] and reported as [`Detail::Stream`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StreamStats {
+    /// `feed` calls accepted by the stream (across resumes).
+    pub segments: u64,
+    /// Kernel folds executed (each flushes the pending buffer).
+    pub folds: u64,
+    /// Symbol steps executed across all folds.
+    pub syms: u64,
+    /// Chains merged by convergence collapsing inside folds.
+    pub collapses: u64,
+    /// Whether this run was resumed from a serialized checkpoint at
+    /// least once.
+    pub resumed: bool,
+}
+
+/// The compact resumable state of a [`StreamMatcher`]: the composed
+/// L-vector, how many bytes it covers, the not-yet-folded pending
+/// bytes, and the work counters.  Complete by construction — a stream
+/// rebuilt from a checkpoint continues byte-identically, on any worker.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Checkpoint {
+    /// composed state map: entry `q` equals `δ*(q0, folded bytes)` for
+    /// every `q` (constant image — see the module docs)
+    lv: LVector,
+    /// bytes already folded through the chunk kernel
+    folded: u64,
+    /// bytes accepted by `feed` but not yet folded
+    pending: Vec<u8>,
+    stats: StreamStats,
+}
+
+impl Checkpoint {
+    /// Total bytes this checkpoint covers (folded + buffered).
+    pub fn offset(&self) -> u64 {
+        self.folded + self.pending.len() as u64
+    }
+
+    /// Bytes buffered but not yet folded through the kernel.
+    pub fn buffered(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// |Q| of the DFA this checkpoint belongs to (resume validates it).
+    pub fn num_states(&self) -> usize {
+        self.lv.len()
+    }
+
+    /// The carried work counters.
+    pub fn stats(&self) -> StreamStats {
+        self.stats
+    }
+
+    /// Serialize to the versioned `SDCK` wire format (little-endian):
+    /// magic, version, flags, |Q|, the counters, the state map, the
+    /// grounded-entry bitset, and the pending bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let q = self.lv.len();
+        let mut out =
+            Vec::with_capacity(64 + 4 * q + q / 8 + self.pending.len());
+        out.extend_from_slice(CKPT_MAGIC);
+        out.extend_from_slice(&CKPT_VERSION.to_le_bytes());
+        let flags: u16 = u16::from(self.stats.resumed);
+        out.extend_from_slice(&flags.to_le_bytes());
+        out.extend_from_slice(&(q as u32).to_le_bytes());
+        for v in [
+            self.folded,
+            self.stats.segments,
+            self.stats.folds,
+            self.stats.syms,
+            self.stats.collapses,
+        ] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for i in 0..q as u32 {
+            out.extend_from_slice(&self.lv.get(i).to_le_bytes());
+        }
+        // grounded-entry bitset, LSB-first within each byte
+        let mut acc = 0u8;
+        for i in 0..q {
+            if self.lv.was_matched(i as u32) {
+                acc |= 1 << (i % 8);
+            }
+            if i % 8 == 7 {
+                out.push(acc);
+                acc = 0;
+            }
+        }
+        if q % 8 != 0 {
+            out.push(acc);
+        }
+        out.extend_from_slice(&(self.pending.len() as u64).to_le_bytes());
+        out.extend_from_slice(&self.pending);
+        out
+    }
+
+    /// Deserialize a checkpoint written by [`Checkpoint::to_bytes`].
+    /// Every field is validated (magic, version, lengths, state-map
+    /// range) so a corrupt or truncated frame fails loudly instead of
+    /// resuming a scan from garbage.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint> {
+        let mut cur = Cursor { buf: bytes, pos: 0 };
+        if cur.take(4)? != CKPT_MAGIC {
+            bail!("not a specdfa checkpoint (bad magic)");
+        }
+        let version = cur.u16()?;
+        if version != CKPT_VERSION {
+            bail!(
+                "unsupported checkpoint version {version} \
+                 (this build reads v{CKPT_VERSION})"
+            );
+        }
+        let flags = cur.u16()?;
+        if flags > 1 {
+            bail!("unknown checkpoint flags {flags:#06x}");
+        }
+        let q = cur.u32()? as usize;
+        if q == 0 {
+            bail!("checkpoint carries an empty state map");
+        }
+        let folded = cur.u64()?;
+        let stats = StreamStats {
+            segments: cur.u64()?,
+            folds: cur.u64()?,
+            syms: cur.u64()?,
+            collapses: cur.u64()?,
+            resumed: flags & 1 != 0,
+        };
+        let mut map = Vec::with_capacity(q);
+        for _ in 0..q {
+            let entry = cur.u32()?;
+            if entry as usize >= q {
+                bail!("checkpoint state-map entry {entry} out of range");
+            }
+            map.push(entry);
+        }
+        let bits = cur.take(q.div_ceil(8))?;
+        let matched: Vec<bool> =
+            (0..q).map(|i| (bits[i / 8] >> (i % 8)) & 1 != 0).collect();
+        let pending_len = cur.u64()?;
+        let pending_len = usize::try_from(pending_len)
+            .map_err(|_| anyhow::anyhow!("absurd pending length"))?;
+        let pending = cur.take(pending_len)?.to_vec();
+        if cur.pos != bytes.len() {
+            bail!(
+                "{} trailing bytes after the checkpoint frame",
+                bytes.len() - cur.pos
+            );
+        }
+        Ok(Checkpoint {
+            lv: LVector::from_raw(map, matched),
+            folded,
+            pending,
+            stats,
+        })
+    }
+}
+
+/// Bounds-checked little-endian reader for [`Checkpoint::from_bytes`].
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.buf.len() - self.pos < n {
+            bail!("checkpoint truncated at byte {}", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().expect("sized")))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("sized")))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("sized")))
+    }
+}
+
+/// Progress report returned by [`StreamMatcher::feed`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FeedProgress {
+    /// Total bytes accepted so far (folded + buffered).
+    pub offset: u64,
+    /// Bytes already folded through the chunk kernel.
+    pub folded: u64,
+    /// Bytes buffered, awaiting the next fold (`finish` flushes them).
+    pub buffered: usize,
+}
+
+/// Segment-streamed matching over any [`CompiledMatcher`]: `feed`
+/// segments as they arrive, `checkpoint`/resume at will, `finish` for
+/// the [`Outcome`].  See the [module docs](self) for the state model.
+///
+/// ```
+/// use specdfa::engine::{CompiledMatcher, Engine, ExecPolicy, Pattern};
+/// use specdfa::engine::stream::StreamMatcher;
+///
+/// let cm = CompiledMatcher::compile(
+///     &Pattern::Regex("ab+c".to_string()),
+///     Engine::Auto,
+///     ExecPolicy::default(),
+/// )?;
+/// let mut sm = StreamMatcher::new(&cm);
+/// sm.feed(b"xx ab");
+/// sm.feed(b"bbc yy");          // match straddles the boundary
+/// let out = sm.finish();
+/// assert!(out.accepted);
+/// assert_eq!(out.n, 11);
+/// # anyhow::Result::<()>::Ok(())
+/// ```
+pub struct StreamMatcher<'m> {
+    matcher: &'m CompiledMatcher,
+    flat: &'m FlatDfa,
+    ckpt: Checkpoint,
+    fold_bytes: usize,
+    wall_s: f64,
+}
+
+impl<'m> StreamMatcher<'m> {
+    /// Start a fresh stream with the default fold threshold.
+    pub fn new(matcher: &'m CompiledMatcher) -> StreamMatcher<'m> {
+        Self::with_fold_bytes(matcher, DEFAULT_FOLD_BYTES)
+    }
+
+    /// Start a fresh stream folding every `fold_bytes` pending bytes
+    /// (clamped to at least 1; 1 folds on every feed).
+    pub fn with_fold_bytes(
+        matcher: &'m CompiledMatcher,
+        fold_bytes: usize,
+    ) -> StreamMatcher<'m> {
+        let dfa = matcher.dfa();
+        let q = dfa.num_states as usize;
+        // the constant map to q0: after folding bytes w, every entry
+        // equals delta*(q0, w) — the streaming seed (module docs)
+        let lv = LVector::from_raw(vec![dfa.start; q], vec![true; q]);
+        StreamMatcher {
+            matcher,
+            flat: matcher.seq.flat(),
+            ckpt: Checkpoint {
+                lv,
+                folded: 0,
+                pending: Vec::new(),
+                stats: StreamStats::default(),
+            },
+            fold_bytes: fold_bytes.max(1),
+            wall_s: 0.0,
+        }
+    }
+
+    /// Continue a stream from a checkpoint — possibly taken by another
+    /// `StreamMatcher` on another worker (or deserialized from another
+    /// process).  Fails when the checkpoint's |Q| does not match this
+    /// matcher's DFA: resuming under a different pattern is undefined
+    /// and must be refused.
+    pub fn from_checkpoint(
+        matcher: &'m CompiledMatcher,
+        ckpt: Checkpoint,
+    ) -> Result<StreamMatcher<'m>> {
+        let q = matcher.dfa().num_states as usize;
+        if ckpt.lv.len() != q {
+            bail!(
+                "checkpoint is for a {}-state DFA, matcher has {} states",
+                ckpt.lv.len(),
+                q
+            );
+        }
+        let mut ckpt = ckpt;
+        ckpt.stats.resumed = true;
+        Ok(StreamMatcher {
+            matcher,
+            flat: matcher.seq.flat(),
+            ckpt,
+            fold_bytes: DEFAULT_FOLD_BYTES,
+            wall_s: 0.0,
+        })
+    }
+
+    /// Change the fold threshold (clamped to at least 1).
+    pub fn set_fold_bytes(&mut self, fold_bytes: usize) {
+        self.fold_bytes = fold_bytes.max(1);
+    }
+
+    /// Accept one input segment.  The segment may split anywhere —
+    /// byte-to-symbol mapping is stateless — and is folded through the
+    /// kernel once the pending buffer reaches the fold threshold.
+    pub fn feed(&mut self, segment: &[u8]) -> FeedProgress {
+        self.ckpt.stats.segments += 1;
+        self.ckpt.pending.extend_from_slice(segment);
+        if self.ckpt.pending.len() >= self.fold_bytes {
+            self.fold();
+        }
+        FeedProgress {
+            offset: self.ckpt.offset(),
+            folded: self.ckpt.folded,
+            buffered: self.ckpt.pending.len(),
+        }
+    }
+
+    /// Snapshot the resumable state (pending bytes included).
+    pub fn checkpoint(&self) -> Checkpoint {
+        self.ckpt.clone()
+    }
+
+    /// Total bytes accepted so far.
+    pub fn offset(&self) -> u64 {
+        self.ckpt.offset()
+    }
+
+    /// Flush the pending buffer and report the outcome of everything
+    /// streamed so far, as [`EngineKind::Stream`] with the run's
+    /// [`StreamStats`] in [`Detail::Stream`].
+    pub fn finish(mut self) -> Outcome {
+        self.fold();
+        let dfa = self.matcher.dfa();
+        let fin = self.ckpt.lv.get(dfa.start);
+        let n = self.ckpt.folded as usize;
+        let stats = self.ckpt.stats;
+        let syms = stats.syms as usize;
+        Outcome {
+            engine: EngineKind::Stream,
+            n,
+            accepted: dfa.accepting[fin as usize],
+            final_state: Some(fin),
+            makespan: syms,
+            overhead_syms: syms.saturating_sub(n),
+            per_worker_syms: vec![syms],
+            wall_s: self.wall_s,
+            selection: None,
+            detail: Detail::Stream(stats),
+        }
+    }
+
+    /// Fold the pending bytes through the chunk kernel and compose the
+    /// segment's map into the carried L-vector (Eq. 9).
+    fn fold(&mut self) {
+        if self.ckpt.pending.is_empty() {
+            return;
+        }
+        let t0 = Instant::now();
+        let pending = std::mem::take(&mut self.ckpt.pending);
+        let syms = self.matcher.dfa().map_input(&pending);
+        let chunk = self.flat.validate(&syms);
+        let work = match_chunk_states_resume(
+            self.flat,
+            &mut self.ckpt.lv,
+            chunk,
+            self.matcher.policy.collapse_every,
+        );
+        self.ckpt.folded += pending.len() as u64;
+        self.ckpt.stats.folds += 1;
+        self.ckpt.stats.syms += work.syms_matched as u64;
+        self.ckpt.stats.collapses += work.collapses as u64;
+        self.wall_s += t0.elapsed().as_secs_f64();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Engine, ExecPolicy, Matcher, Pattern};
+    use super::*;
+
+    fn compile(pattern: &str) -> CompiledMatcher {
+        CompiledMatcher::compile(
+            &Pattern::Regex(pattern.to_string()),
+            Engine::Sequential,
+            ExecPolicy::default(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn streamed_equals_one_shot_across_boundaries() {
+        let cm = compile("ab+c");
+        let input = b"xx abbbbc yy";
+        let want = cm.run_bytes(input).unwrap();
+        for cut in 0..=input.len() {
+            let mut sm = StreamMatcher::with_fold_bytes(&cm, 4);
+            sm.feed(&input[..cut]);
+            sm.feed(&input[cut..]);
+            let out = sm.finish();
+            assert_eq!(out.accepted, want.accepted, "cut {cut}");
+            assert_eq!(out.final_state, want.final_state, "cut {cut}");
+            assert_eq!(out.n, input.len());
+            assert_eq!(out.engine, EngineKind::Stream);
+        }
+    }
+
+    #[test]
+    fn empty_stream_reports_the_start_state() {
+        let cm = compile("a*");
+        let out = StreamMatcher::new(&cm).finish();
+        assert_eq!(out.n, 0);
+        assert_eq!(out.final_state, Some(cm.dfa().start));
+        // "a*" matches the empty input under search semantics
+        assert!(out.accepted);
+    }
+
+    #[test]
+    fn checkpoint_roundtrips_through_bytes() {
+        let cm = compile("needle");
+        let mut sm = StreamMatcher::with_fold_bytes(&cm, 8);
+        sm.feed(b"hay hay "); // reaches the threshold: folds
+        sm.feed(b"hay nee"); // below it: stays buffered
+        let ckpt = sm.checkpoint();
+        assert!(ckpt.buffered() > 0, "fold threshold leaves a remainder");
+        let decoded = Checkpoint::from_bytes(&ckpt.to_bytes()).unwrap();
+        assert_eq!(decoded, ckpt);
+        // resume from the decoded frame and finish both ways
+        let mut resumed =
+            StreamMatcher::from_checkpoint(&cm, decoded).unwrap();
+        resumed.feed(b"dle hay");
+        sm.feed(b"dle hay");
+        let a = resumed.finish();
+        let b = sm.finish();
+        assert!(a.accepted && b.accepted);
+        assert_eq!(a.final_state, b.final_state);
+        assert_eq!(a.n, b.n);
+        match &a.detail {
+            Detail::Stream(stats) => assert!(stats.resumed),
+            other => panic!("expected stream detail, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn from_bytes_rejects_corrupt_frames() {
+        let cm = compile("abc");
+        let mut sm = StreamMatcher::new(&cm);
+        sm.feed(b"ab");
+        let good = sm.checkpoint().to_bytes();
+        assert!(Checkpoint::from_bytes(b"nope").is_err());
+        assert!(Checkpoint::from_bytes(&good[..good.len() - 1]).is_err());
+        let mut bad_magic = good.clone();
+        bad_magic[0] = b'X';
+        assert!(Checkpoint::from_bytes(&bad_magic).is_err());
+        let mut bad_version = good.clone();
+        bad_version[4] = 99;
+        assert!(Checkpoint::from_bytes(&bad_version).is_err());
+        let mut trailing = good.clone();
+        trailing.push(0);
+        assert!(Checkpoint::from_bytes(&trailing).is_err());
+        assert!(Checkpoint::from_bytes(&good).is_ok());
+    }
+
+    #[test]
+    fn resume_refuses_a_mismatched_matcher() {
+        let small = compile("a");
+        let big = compile("(abc|def)+ghi");
+        let ckpt = StreamMatcher::new(&big).checkpoint();
+        let err = StreamMatcher::from_checkpoint(&small, ckpt)
+            .err()
+            .expect("|Q| mismatch must be refused");
+        assert!(format!("{err}").contains("state"), "{err}");
+    }
+}

@@ -46,6 +46,11 @@
 //!   cache, and `Engine::Auto` routing uses thresholds calibrated from
 //!   the §4.1 offline profiling step (re-run periodically), not the
 //!   baked-in paper-era ballpark.
+//! * [`engine::StreamMatcher`] accepts the input in segments with a
+//!   serializable [`engine::Checkpoint`] ([`engine::stream`]):
+//!   constant-memory tailing of unbounded streams, preempt/resume of
+//!   long scans (the serve loop parks scans when probes arrive), and a
+//!   wire format for migrating a scan between workers or processes.
 //! * Every adapter implements [`engine::Matcher`] and returns the unified
 //!   [`engine::Outcome`]; failure-freedom (identical results to
 //!   sequential matching) is enforced by construction and property tests.
@@ -87,10 +92,11 @@ pub mod util;
 pub use automata::{Dfa, FlatDfa};
 pub use baseline::sequential::SequentialMatcher;
 pub use engine::{
-    Admission, CompiledMatcher, CompiledSetMatcher, Engine, EngineKind,
-    ExecPolicy, Matcher, Outcome, Pattern, PatternSet, PriorityPolicy,
-    Selection, ServeConfig, ServeError, ServeStats, Server, ServerHandle,
-    SetConfig, SetOutcome, SetTier, ShardPlan, Ticket, WaitStats,
+    Admission, Checkpoint, CompiledMatcher, CompiledSetMatcher, Engine,
+    EngineKind, ExecPolicy, FeedProgress, Matcher, Outcome, Pattern,
+    PatternSet, PriorityPolicy, Selection, ServeConfig, ServeError,
+    ServeStats, Server, ServerHandle, SetConfig, SetOutcome, SetTier,
+    ShardPlan, StreamMatcher, StreamStats, Ticket, WaitStats,
 };
 pub use regex::compile::{compile_exact, compile_prosite, compile_search};
 pub use speculative::matcher::{MatchOutcome, MatchPlan};

@@ -20,7 +20,7 @@ use specdfa::cluster::{CloudMatcher, ClusterSpec};
 use specdfa::engine::{
     Admission, CompiledMatcher, CompiledSetMatcher, Engine, ExecPolicy,
     Matcher, Pattern, PatternSet, PriorityPolicy, ServeConfig, Server,
-    SetConfig, SetTier,
+    SetConfig, SetTier, StreamMatcher,
 };
 use specdfa::experiments;
 use specdfa::regex::compile::{
@@ -84,6 +84,11 @@ fn print_usage() {
          multi-pattern\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 \
          \x20matching with [--state-budget Q] [--no-prefilter])\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 \
+         [--stream [--segment-bytes S]]   (feed stdin / --file \
+         incrementally\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 \
+         \x20through the checkpointable segment matcher)\n\
          \x20 specdfa serve   [--workers N] [--cache M] [--batch B] \
          [--recalibrate K]\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 \
@@ -97,7 +102,9 @@ fn print_usage() {
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 \
          \x20KIND: regex|regex-exact|prosite; INPUT: text, @file, or \
          gen:N)\n\
-         \x20 specdfa bench   [--suite kernels|engines|serve|patternset|all] \
+         \x20 specdfa bench   [--suite \
+         kernels|engines|serve|patternset|stream|all]\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 \
          [--quick] [--json PATH]\n\
          \x20 specdfa experiment <name>|all      names: {}\n\
          \x20 specdfa suite   [pcre|prosite]\n\
@@ -113,7 +120,7 @@ fn print_usage() {
 
 /// Flags that take no value (presence == true); everything else is a
 /// --key value pair.
-const BOOL_FLAGS: &[&str] = &["quick", "no-prefilter"];
+const BOOL_FLAGS: &[&str] = &["quick", "no-prefilter", "stream"];
 
 /// Minimal flag parser: --key value pairs, plus valueless [`BOOL_FLAGS`].
 fn flags(args: &[String]) -> anyhow::Result<Vec<(String, String)>> {
@@ -211,6 +218,11 @@ fn cmd_match(args: &[String]) -> anyhow::Result<()> {
     let cm = CompiledMatcher::compile(&pattern, engine.clone(), policy)?;
     println!("{}", cm.describe());
 
+    if has_flag(&fl, "stream") {
+        anyhow::ensure!(batch == 1, "--stream and --batch are exclusive");
+        return cmd_match_stream(&fl, &cm);
+    }
+
     let dfa = cm.dfa().clone();
     let input = input_from_flags(&fl, &dfa, get(&fl, "prosite").is_some())?;
 
@@ -271,6 +283,62 @@ fn cmd_match(args: &[String]) -> anyhow::Result<()> {
         input.len(),
         out.model_speedup(),
         out.overhead_syms,
+        out.wall_s * 1e3
+    );
+    Ok(())
+}
+
+/// `specdfa match --stream`: feed the input through the checkpointable
+/// segment matcher ([`StreamMatcher`]) — stdin by default, `--file F`
+/// to stream a file — in `--segment-bytes` reads.  Memory stays
+/// constant whatever the stream length: each segment folds into the
+/// composed L-vector and is dropped.
+fn cmd_match_stream(
+    fl: &[(String, String)],
+    cm: &CompiledMatcher,
+) -> anyhow::Result<()> {
+    use std::io::Read;
+    anyhow::ensure!(
+        get(fl, "gen").is_none(),
+        "--stream reads stdin or --file, not --gen"
+    );
+    let seg: usize = get(fl, "segment-bytes").unwrap_or("65536").parse()?;
+    anyhow::ensure!(seg >= 1, "--segment-bytes must be >= 1");
+    let mut src: Box<dyn Read> = match get(fl, "file") {
+        Some(path) => Box::new(std::fs::File::open(path)?),
+        None => Box::new(std::io::stdin()),
+    };
+    let mut sm = StreamMatcher::new(cm);
+    let mut buf = vec![0u8; seg];
+    let mut segments = 0u64;
+    loop {
+        // fill a whole segment per feed (short reads are common on
+        // pipes); a short fill means end of stream
+        let mut filled = 0;
+        while filled < seg {
+            let k = src.read(&mut buf[filled..])?;
+            if k == 0 {
+                break;
+            }
+            filled += k;
+        }
+        if filled == 0 {
+            break;
+        }
+        sm.feed(&buf[..filled]);
+        segments += 1;
+        if filled < seg {
+            break;
+        }
+    }
+    let ckpt_bytes = sm.checkpoint().to_bytes().len();
+    let out = sm.finish();
+    println!(
+        "stream match: {} via {} (n={}, {segments} segment(s) of \
+         <= {seg} B, checkpoint {ckpt_bytes} B, wall {:.1} ms)",
+        out.accepted,
+        out.engine,
+        out.n,
         out.wall_s * 1e3
     );
     Ok(())
@@ -1030,6 +1098,113 @@ fn bench_patternset(quick: bool, records: &mut Vec<BenchRecord>) {
     table.print();
 }
 
+/// The `stream` suite: segment-streamed matching (`engine::stream`)
+/// against the one-shot matcher over the same bytes.  The streamed
+/// rows carry the checkpoint wire size in `table_bytes`, so the
+/// trajectory records both the throughput cost of segmentation and
+/// the constant state a preempted or migrated scan has to carry.
+fn bench_stream(quick: bool, records: &mut Vec<BenchRecord>) {
+    let reps = if quick { 2 } else { 5 };
+    let n = if quick { 200_000 } else { 2_000_000 };
+    let mut gen = InputGen::new(0xBE50);
+    let workloads: Vec<(&str, Pattern, Vec<u8>)> = vec![
+        (
+            "pcre-text",
+            Pattern::Regex("(ab|cd)+e".to_string()),
+            gen.ascii_text(n),
+        ),
+        (
+            "prosite-protein",
+            Pattern::Prosite("C-x(2)-C-x(3)-[LIVMFYWC].".to_string()),
+            gen.protein(n),
+        ),
+    ];
+    let mut table = Table::new(
+        "stream (segment-streamed vs one-shot)",
+        &["workload", "kernel", "segment B", "ckpt B", "Msyms/s"],
+    );
+    for (wname, pattern, input) in &workloads {
+        let cm = match CompiledMatcher::compile(
+            pattern,
+            Engine::Sequential,
+            ExecPolicy::default(),
+        ) {
+            Ok(cm) => cm,
+            Err(e) => {
+                eprintln!("bench: skip stream on {wname}: {e:#}");
+                continue;
+            }
+        };
+        // the one-shot yardstick (the verdict run doubles as warmup)
+        let (_, first) = time_once(|| cm.run_bytes(input));
+        if let Err(e) = first {
+            eprintln!("bench: stream one-shot failed on {wname}: {e:#}");
+            continue;
+        }
+        let secs = time_median(0, reps, || cm.run_bytes(input));
+        let sps = input.len() as f64 / secs.max(1e-12);
+        records.push(BenchRecord {
+            suite: "stream".to_string(),
+            workload: wname.to_string(),
+            kernel: "one_shot".to_string(),
+            width: None,
+            table_bytes: None,
+            n_syms: input.len(),
+            reps,
+            secs_per_iter: secs,
+            syms_per_sec: sps,
+            syms_matched: None,
+            collapses: None,
+        });
+        table.row(vec![
+            wname.to_string(),
+            "one_shot".to_string(),
+            "-".to_string(),
+            "-".to_string(),
+            format!("{:.1}", sps / 1e6),
+        ]);
+        for seg in [4usize << 10, 64 << 10] {
+            let run = || {
+                let mut sm = StreamMatcher::new(&cm);
+                for chunk in input.chunks(seg) {
+                    sm.feed(chunk);
+                }
+                sm.finish().accepted
+            };
+            let _ = time_once(run); // warmup
+            let secs = time_median(0, reps, run);
+            let sps = input.len() as f64 / secs.max(1e-12);
+            // checkpoint wire size at mid-stream (it is
+            // segment-size-independent: L-vector + counters)
+            let mut sm = StreamMatcher::new(&cm);
+            sm.feed(&input[..input.len() / 2]);
+            let ckpt_bytes = sm.checkpoint().to_bytes().len();
+            let kernel = format!("stream_seg{}k", seg >> 10);
+            records.push(BenchRecord {
+                suite: "stream".to_string(),
+                workload: wname.to_string(),
+                kernel: kernel.clone(),
+                width: None,
+                table_bytes: Some(ckpt_bytes),
+                n_syms: input.len(),
+                reps,
+                secs_per_iter: secs,
+                syms_per_sec: sps,
+                syms_matched: None,
+                collapses: None,
+            });
+            table.row(vec![
+                wname.to_string(),
+                kernel,
+                seg.to_string(),
+                ckpt_bytes.to_string(),
+                format!("{:.1}", sps / 1e6),
+            ]);
+        }
+    }
+    table.print();
+}
+
 /// `specdfa bench`: reproducible kernel-tier, engine and serve-latency
 /// benchmarks with machine-readable JSON output (the repo's
 /// `BENCH_*.json` trajectory).
@@ -1043,15 +1218,17 @@ fn cmd_bench(args: &[String]) -> anyhow::Result<()> {
         "engines" => bench_engines(quick, &mut records),
         "serve" => bench_serve(quick, &mut records),
         "patternset" => bench_patternset(quick, &mut records),
+        "stream" => bench_stream(quick, &mut records),
         "all" => {
             bench_kernels(quick, &mut records);
             bench_engines(quick, &mut records);
             bench_serve(quick, &mut records);
             bench_patternset(quick, &mut records);
+            bench_stream(quick, &mut records);
         }
         other => anyhow::bail!(
             "unknown suite {other:?} \
-             (expected kernels|engines|serve|patternset|all)"
+             (expected kernels|engines|serve|patternset|stream|all)"
         ),
     }
     if let Some(path) = get(&fl, "json") {

@@ -117,8 +117,12 @@ pub fn match_chunk_states(
     let mut pos = 0usize;
     // distinct states may still alias at pos 0 if the caller passed a
     // set with duplicates; collapse up front so the invariant "live
-    // offsets are pairwise distinct" holds from the start
-    collapse_converged(&mut offs, &mut members, &mut work.collapses);
+    // offsets are pairwise distinct" holds from the start.  An empty
+    // chunk has no future work a merge could save, so it collapses
+    // nothing — `collapses` counts only merges that removed work.
+    if n > 0 {
+        collapse_converged(&mut offs, &mut members, &mut work.collapses);
+    }
     while pos < n {
         if offs.len() == 1 {
             // fully converged: one sequential scan finishes the chunk
@@ -131,7 +135,14 @@ pub fn match_chunk_states(
         step_all(flat, &mut offs, chunk.slice(pos..end));
         work.syms_matched += (end - pos) * offs.len();
         pos = end;
-        collapse_converged(&mut offs, &mut members, &mut work.collapses);
+        // only an interior boundary can save future work; a merge at
+        // the terminal boundary (pos == n) is not a collapse, so the
+        // work model is identical whether convergence lands exactly on
+        // the chunk end or mid-block (the fast path above never counts
+        // it either)
+        if pos < n {
+            collapse_converged(&mut offs, &mut members, &mut work.collapses);
+        }
     }
     for (chain, &off) in members.iter().zip(&offs) {
         let fin = flat.state_of(off);
@@ -139,6 +150,34 @@ pub fn match_chunk_states(
             lv.set(init, fin);
         }
     }
+    work
+}
+
+/// Match one chunk *continuing from* a previously composed L-vector —
+/// the [`engine::stream`](crate::engine::stream) resume entry point.
+///
+/// The live frontier is the distinct image of `prior` (for a stream
+/// seeded from one known state that is a single chain, so per-segment
+/// work stays sequential-scale); the segment's own map is computed at
+/// identity and folded into `prior` by Eq. (9) composition.  Collapsing
+/// applies within the segment exactly as in [`match_chunk_states`].
+pub fn match_chunk_states_resume(
+    flat: &FlatDfa,
+    prior: &mut LVector,
+    chunk: ValidSyms<'_>,
+    collapse_every: usize,
+) -> ChunkWork {
+    let q = prior.len();
+    // distinct image states of the composed map: sorted + deduped so
+    // the frontier size tracks real convergence, not entry count
+    let mut set: Vec<u32> = prior.as_slice().to_vec();
+    set.sort_unstable();
+    set.dedup();
+    let mut seg = LVector::identity(q);
+    let work = match_chunk_states(flat, &mut seg, &set, chunk, collapse_every);
+    // every state `prior` maps into is in `set`, so each entry the
+    // composition consults is grounded
+    *prior = prior.compose(&seg);
     work
 }
 
@@ -166,9 +205,61 @@ mod tests {
         (plain, w_plain, coll, w_coll)
     }
 
+    /// Independent reference work model: replay the collapse cadence
+    /// with naive per-chain scalar scans and first-occurrence dedupe.
+    /// `match_chunk_states` must charge exactly this — not "at most".
+    fn reference_work(
+        flat: &FlatDfa,
+        set: &[u32],
+        chunk: ValidSyms<'_>,
+        every: usize,
+    ) -> ChunkWork {
+        let n = chunk.len();
+        if every == 0 || set.len() < 2 {
+            return ChunkWork { syms_matched: n * set.len(), collapses: 0 };
+        }
+        let mut offs: Vec<u32> =
+            set.iter().map(|&q| flat.offset_of(q)).collect();
+        let mut work = ChunkWork::default();
+        let dedupe = |offs: &mut Vec<u32>, collapses: &mut usize| {
+            let mut kept: Vec<u32> = Vec::with_capacity(offs.len());
+            for &o in offs.iter() {
+                if kept.contains(&o) {
+                    *collapses += 1;
+                } else {
+                    kept.push(o);
+                }
+            }
+            *offs = kept;
+        };
+        let mut pos = 0usize;
+        if n > 0 {
+            dedupe(&mut offs, &mut work.collapses);
+        }
+        while pos < n {
+            if offs.len() == 1 {
+                work.syms_matched += n - pos;
+                break;
+            }
+            let end = (pos + every).min(n);
+            for off in offs.iter_mut() {
+                *off = flat.run_valid(*off, chunk.slice(pos..end));
+            }
+            work.syms_matched += (end - pos) * offs.len();
+            pos = end;
+            if pos < n {
+                dedupe(&mut offs, &mut work.collapses);
+            }
+        }
+        work
+    }
+
     #[test]
     fn prop_collapsing_is_byte_identical_to_plain() {
-        // THE collapsing property: same L-vector entries, never more work
+        // THE collapsing property: same L-vector entries, and the work
+        // accounting is an EXACT function of the convergence trace —
+        // the reference model must agree step for step, whichever of
+        // the block path and the fully-converged fast path ran
         prop::check("collapse == no-collapse (random DFAs)", 60, |rng| {
             let dfa = random_dfa(rng);
             let len = rng.range_usize(0, 800);
@@ -190,6 +281,92 @@ mod tests {
                 w_coll.syms_matched,
                 w_plain.syms_matched
             );
+            let flat = FlatDfa::from_dfa(&dfa);
+            let want =
+                reference_work(&flat, set, flat.validate(&syms), every);
+            assert_eq!(
+                w_coll.syms_matched, want.syms_matched,
+                "work charge must match the reference model exactly"
+            );
+            assert_eq!(
+                w_coll.collapses, want.collapses,
+                "collapse count must match the reference model exactly"
+            );
+        });
+    }
+
+    #[test]
+    fn terminal_boundary_collapse_is_not_counted() {
+        // chains that converge exactly at the end of the chunk save no
+        // future work, so the terminal boundary must not count a
+        // collapse: pre-fix the block path counted it while the
+        // fully-converged fast path never did, making `ChunkWork`
+        // depend on where the last block happened to end
+        let dfa = crate::regex::compile::compile_exact("abc").unwrap();
+        let flat = FlatDfa::from_dfa(&dfa);
+        let set: Vec<u32> = (0..dfa.num_states).collect();
+        let sink = dfa.sink().expect("exact-match DFA has a sink");
+        // one mismatching symbol sends every chain into the sink — all
+        // convergence lands on the terminal boundary
+        let syms = vec![dfa.class_of(b'z')];
+        let chunk = flat.validate(&syms);
+        let mut lv = LVector::identity(dfa.num_states as usize);
+        let work = match_chunk_states(&flat, &mut lv, &set, chunk, 64);
+        assert_eq!(work.syms_matched, set.len());
+        assert_eq!(
+            work.collapses, 0,
+            "a merge at pos == n saved nothing and must not be counted"
+        );
+        for &q in &set {
+            assert_eq!(lv.get(q), sink);
+        }
+    }
+
+    #[test]
+    fn prop_resume_composes_identically_to_one_shot() {
+        // the streaming entry point: split a chunk at a random cut,
+        // match the head from identity, resume the tail from the
+        // composed map — the final L-vector equals the one-shot run
+        prop::check("resume == one-shot (random DFAs)", 40, |rng| {
+            let dfa = random_dfa(rng);
+            let flat = FlatDfa::from_dfa(&dfa);
+            let q = dfa.num_states as usize;
+            let len = rng.range_usize(0, 400);
+            let syms: Vec<u32> = (0..len)
+                .map(|_| rng.below(dfa.num_symbols as u64) as u32)
+                .collect();
+            let cut = rng.range_usize(0, len + 1);
+            let every = rng.range_usize(0, 64);
+            let all: Vec<u32> = (0..dfa.num_states).collect();
+            let mut oneshot = LVector::identity(q);
+            match_chunk_states(
+                &flat,
+                &mut oneshot,
+                &all,
+                flat.validate(&syms),
+                every,
+            );
+            let mut lv = LVector::identity(q);
+            match_chunk_states(
+                &flat,
+                &mut lv,
+                &all,
+                flat.validate(&syms[..cut]),
+                every,
+            );
+            match_chunk_states_resume(
+                &flat,
+                &mut lv,
+                flat.validate(&syms[cut..]),
+                every,
+            );
+            for init in 0..q as u32 {
+                assert_eq!(
+                    lv.get(init),
+                    oneshot.get(init),
+                    "init {init} cut {cut}"
+                );
+            }
         });
     }
 

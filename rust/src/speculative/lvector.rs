@@ -73,6 +73,21 @@ impl LVector {
     pub fn as_slice(&self) -> &[u32] {
         &self.map
     }
+
+    /// Rebuild an L-vector from raw parts — the checkpoint
+    /// deserialization path (`engine::stream`).  Panics when the two
+    /// vectors disagree in length or a map entry is out of range: a
+    /// checkpoint that fails these invariants is corrupt and must not
+    /// silently produce an out-of-bounds compose.
+    pub fn from_raw(map: Vec<u32>, matched: Vec<bool>) -> LVector {
+        assert_eq!(map.len(), matched.len(), "map/matched length mismatch");
+        let q = map.len() as u32;
+        assert!(
+            map.iter().all(|&m| m < q),
+            "map entry out of range for |Q| = {q}"
+        );
+        LVector { map, matched }
+    }
 }
 
 #[cfg(test)]

@@ -13,7 +13,9 @@
 //!    split points of the multicore engine);
 //!
 //! plus the serve-loop acceptance criterion: N different-pattern
-//! requests over one shared input complete with `fused_passes == 1`.
+//! requests over one shared input complete with `fused_passes == 1`,
+//! and the memo-poisoning regression: a prefilter-cleared slot's
+//! synthesized verdict must never enter the outcome memo.
 
 use std::time::{Duration, Instant};
 
@@ -383,6 +385,62 @@ fn serve_coalesces_distinct_patterns_over_one_input_into_one_pass() {
         stats.prefilter_clears, 0,
         "every literal is present in the shared input"
     );
+}
+
+#[test]
+fn fused_prefilter_clears_are_not_memoized() {
+    // outcome memo ON (the default), one worker
+    let server = Server::start(ServeConfig {
+        workers: 1,
+        calibrate_on_start: false,
+        recalibrate_every: 0,
+        profile_per_worker: false,
+        engine: Engine::Sequential,
+        ..ServeConfig::default()
+    })
+    .expect("server");
+    let scan = specdfa::workload::InputGen::new(0x3ED6E).ascii_text(8 << 20);
+    let wedge = server.submit(Pattern::Regex("ZQZQZQ".to_string()), scan);
+    wait_until(|| {
+        let s = server.stats();
+        s.batches >= 1 && s.queue_depth == 0
+    });
+    // one shared input: "cat" is present (a real fused verdict) while
+    // "unicorn" is absent, so the Aho–Corasick prefilter clears it and
+    // its slot is a synthesized reject without a final state
+    let shared = b"the cat sat".to_vec();
+    let hit =
+        server.submit(Pattern::Regex("cat".to_string()), shared.clone());
+    let cleared = server
+        .submit(Pattern::Regex("unicorn".to_string()), shared.clone());
+    wait_until(|| server.stats().queue_depth == 2);
+    assert!(hit.wait().expect("probe serves").accepted);
+    let first = cleared.wait().expect("probe serves");
+    assert!(!first.accepted);
+    assert!(wedge.wait().is_ok());
+    // regression: the cleared slot's verdict used to be memoized, so
+    // this solo re-submit of the identical (pattern, input) was served
+    // the degraded synthesized outcome from the cache instead of a real
+    // matcher run reporting the DFA's final state
+    let solo = server
+        .submit(Pattern::Regex("unicorn".to_string()), shared.clone())
+        .wait()
+        .expect("probe serves");
+    assert!(!solo.accepted);
+    assert!(
+        solo.final_state.is_some(),
+        "memo served a prefilter-cleared verdict back to a solo request"
+    );
+    // ...while the fused pass's REAL verdict is memoized as before
+    let again = server
+        .submit(Pattern::Regex("cat".to_string()), shared.clone())
+        .wait()
+        .expect("probe serves");
+    assert!(again.accepted);
+    let stats = server.shutdown();
+    assert_eq!(stats.fused_passes, 1);
+    assert_eq!(stats.prefilter_clears, 1);
+    assert_eq!(stats.outcome_hits, 1, "only the real verdict may hit");
 }
 
 #[test]

@@ -569,6 +569,61 @@ fn probe_flood_cannot_starve_a_queued_scan() {
 }
 
 #[test]
+fn cross_pattern_probe_flood_cannot_starve_a_queued_scan() {
+    let server = Server::start(ServeConfig {
+        max_queue: 8,
+        admission: Admission::Block,
+        max_batch: 4,
+        age_limit: 2,
+        ..bounded_config(1)
+    })
+    .unwrap();
+    let scan_input = InputGen::new(0xF00D).ascii_text(4 << 20);
+    let wedge_ticket = wedge(&server, 4 << 20);
+    let scan_ticket =
+        server.submit(Pattern::Regex("ZQZQZQ".to_string()), scan_input);
+    let scan_resolved = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        let server = &server;
+        let scan_resolved = &scan_resolved;
+        let flooder = scope.spawn(move || {
+            // two patterns over ONE shared input: every probe batch
+            // pulls the other pattern's queued probes into a fused
+            // group, so each cycle serves TWO passes — the fused drain
+            // must count against the aging bound like the batch it
+            // rides behind, or the scan's starvation bound silently
+            // stretches to 2 x age_limit
+            let pats = [
+                Pattern::Regex("ab+c".to_string()),
+                Pattern::Regex("xa".to_string()),
+            ];
+            let mut sent = 0u64;
+            while !scan_resolved.load(Ordering::Relaxed) {
+                let p = pats[(sent % 2) as usize].clone();
+                drop(server.submit(p, &b"xabbcx"[..]));
+                sent += 1;
+            }
+            sent
+        });
+        match scan_ticket.wait_timeout(Duration::from_secs(60)) {
+            Ok(res) => assert!(res.expect("scan serves").n > 0),
+            Err(_) => {
+                panic!("a cross-pattern probe flood starved the queued scan")
+            }
+        }
+        scan_resolved.store(true, Ordering::Relaxed);
+        assert!(flooder.join().unwrap() > 0);
+    });
+    assert!(wedge_ticket.wait().is_ok());
+    let stats = server.shutdown();
+    assert_eq!(stats.scan_wait.taken, 2, "the wedge + the aged scan");
+    assert!(
+        stats.fused_passes + stats.prefilter_clears > 0,
+        "the flood must actually exercise cross-pattern fusing"
+    );
+}
+
+#[test]
 fn queued_probes_jump_a_queued_scan() {
     let server = Server::start(ServeConfig {
         max_batch: 1024,

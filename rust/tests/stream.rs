@@ -1,0 +1,231 @@
+//! Differential suite for `engine::stream`: segment-streamed matching
+//! must be observationally identical to the one-shot matcher whatever
+//! the segmentation.
+//!
+//!  * random (pattern, input, segmentation) triples — 1-byte and empty
+//!    segments included — with checkpoint serialization round-trips
+//!    injected at random boundaries mid-stream;
+//!  * a deterministic sweep resuming from a `to_bytes`/`from_bytes`
+//!    round-trip at EVERY byte boundary of one input;
+//!  * preempt/resume under the serve loop: a probe flood preempts a
+//!    corpus scan (`ServeConfig::preempt_scans`), the parked checkpoint
+//!    is resumed, and the scan's verdict still equals the one-shot run.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
+
+use specdfa::engine::{
+    Checkpoint, CompiledMatcher, Engine, EngineKind, ExecPolicy, Matcher,
+    Pattern, ServeConfig, Server, StreamMatcher,
+};
+use specdfa::util::prop;
+use specdfa::util::rng::Rng;
+use specdfa::workload::InputGen;
+
+/// The symbols patterns are built from.
+const ALPHABET: &[u8] = b"abc";
+/// Input filler: the pattern alphabet plus bytes outside it.
+const FILLER: &[u8] = b"abcx .";
+
+/// One random pattern together with a witness string from its language.
+fn gen_pattern(rng: &mut Rng) -> (String, Vec<u8>) {
+    let lit = |rng: &mut Rng, len: usize| -> (String, Vec<u8>) {
+        let mut p = String::new();
+        let mut w = Vec::new();
+        for _ in 0..len.max(1) {
+            let c = ALPHABET[rng.usize_below(ALPHABET.len())];
+            p.push(c as char);
+            w.push(c);
+        }
+        (p, w)
+    };
+    match rng.usize_below(3) {
+        0 => lit(rng, 2 + rng.usize_below(3)),
+        1 => {
+            let (a, wa) = lit(rng, 1 + rng.usize_below(3));
+            let (b, _) = lit(rng, 1 + rng.usize_below(3));
+            (format!("({a}|{b})"), wa)
+        }
+        _ => {
+            let (a, wa) = lit(rng, 1 + rng.usize_below(2));
+            let (b, wb) = lit(rng, 2);
+            let mut w = wa.clone();
+            w.extend(&wb);
+            (format!("({a})+{b}"), w)
+        }
+    }
+}
+
+fn compile(pattern: &str) -> CompiledMatcher {
+    CompiledMatcher::compile(
+        &Pattern::Regex(pattern.to_string()),
+        Engine::Sequential,
+        ExecPolicy::default(),
+    )
+    .expect("compile")
+}
+
+#[test]
+fn prop_any_segmentation_equals_one_shot() {
+    prop::check("stream == one-shot under any segmentation", 40, |rng| {
+        let (pat, witness) = gen_pattern(rng);
+        let cm = compile(&pat);
+        let n = 1 + rng.usize_below(600);
+        let mut input: Vec<u8> = (0..n)
+            .map(|_| FILLER[rng.usize_below(FILLER.len())])
+            .collect();
+        if rng.chance(0.6) && witness.len() < n {
+            let pos = rng.usize_below(n - witness.len());
+            input[pos..pos + witness.len()].copy_from_slice(&witness);
+        }
+        let want = cm.run_bytes(&input).expect("one-shot");
+        let fold = 1 + rng.usize_below(64);
+        let mut sm = StreamMatcher::with_fold_bytes(&cm, fold);
+        let mut pos = 0;
+        while pos < input.len() {
+            if rng.chance(0.15) {
+                sm.feed(b""); // empty segments are legal no-ops
+            }
+            let mut len = 1 + rng.usize_below(48);
+            if rng.chance(0.3) {
+                len = 1; // 1-byte segments with positive probability
+            }
+            let end = input.len().min(pos + len);
+            let progress = sm.feed(&input[pos..end]);
+            pos = end;
+            assert_eq!(progress.offset, pos as u64, "{pat} fold={fold}");
+            // serialize + resume mid-stream at random boundaries: the
+            // wire round-trip must be invisible in the outcome
+            if rng.chance(0.25) {
+                let bytes = sm.checkpoint().to_bytes();
+                let ck = Checkpoint::from_bytes(&bytes).expect("decode");
+                assert_eq!(ck.offset(), pos as u64);
+                sm = StreamMatcher::from_checkpoint(&cm, ck)
+                    .expect("resume");
+                sm.set_fold_bytes(fold);
+            }
+        }
+        let out = sm.finish();
+        assert_eq!(out.accepted, want.accepted, "{pat} n={n} fold={fold}");
+        assert_eq!(out.final_state, want.final_state, "{pat} fold={fold}");
+        assert_eq!(out.n, input.len());
+        assert_eq!(out.engine, EngineKind::Stream);
+    });
+}
+
+#[test]
+fn checkpoint_roundtrip_resumes_at_every_boundary() {
+    let cm = compile("(ab|ca)+bc");
+    let mut gen = Rng::new(0xC4);
+    let input: Vec<u8> = (0..257)
+        .map(|_| FILLER[gen.usize_below(FILLER.len())])
+        .collect();
+    let want = cm.run_bytes(&input).expect("one-shot");
+    for cut in 0..=input.len() {
+        let mut head = StreamMatcher::with_fold_bytes(&cm, 16);
+        head.feed(&input[..cut]);
+        let bytes = head.checkpoint().to_bytes();
+        let ckpt = Checkpoint::from_bytes(&bytes).expect("frame decodes");
+        assert_eq!(ckpt.offset(), cut as u64, "cut {cut}");
+        let mut tail =
+            StreamMatcher::from_checkpoint(&cm, ckpt).expect("resume");
+        tail.feed(&input[cut..]);
+        let out = tail.finish();
+        assert_eq!(out.accepted, want.accepted, "cut {cut}");
+        assert_eq!(out.final_state, want.final_state, "cut {cut}");
+        assert_eq!(out.n, input.len(), "cut {cut}");
+    }
+}
+
+/// Spin until `cond` holds (30 s hard cap).
+fn wait_until(mut cond: impl FnMut() -> bool) {
+    let t0 = Instant::now();
+    while !cond() {
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "condition timed out"
+        );
+        std::thread::yield_now();
+    }
+}
+
+#[test]
+fn preempted_scan_resumes_and_reports_the_one_shot_verdict() {
+    let server = Server::start(ServeConfig {
+        workers: 1,
+        preempt_scans: true,
+        preempt_segment_bytes: 8 << 10,
+        probe_max_bytes: 1 << 10,
+        age_limit: 1,
+        max_queue: 64,
+        calibrate_on_start: false,
+        recalibrate_every: 0,
+        cache_outcomes: 0,
+        profile_per_worker: false,
+        engine: Engine::Sequential,
+        ..ServeConfig::default()
+    })
+    .expect("server");
+    // the scan's only witness sits at the very end of the corpus, so a
+    // lost resume is observable as a wrong verdict — ascii_text emits
+    // lowercase only, the uppercase witness occurs nowhere else
+    let mut scan_input = InputGen::new(0xD1CE).ascii_text(512 << 10);
+    let n = scan_input.len();
+    scan_input[n - 4..].copy_from_slice(b"ZQZQ");
+    let scan_pattern = Pattern::Regex("ZQZQ".to_string());
+    let want = CompiledMatcher::compile(
+        &scan_pattern,
+        Engine::Sequential,
+        ExecPolicy::default(),
+    )
+    .expect("compile")
+    .run_bytes(&scan_input)
+    .expect("one-shot");
+    assert!(want.accepted, "the planted witness must match");
+
+    let stop = AtomicBool::new(false);
+    let out = std::thread::scope(|scope| {
+        let server = &server;
+        let stop = &stop;
+        let flooder = scope.spawn(move || {
+            let probe = Pattern::Regex("qz".to_string());
+            let mut sent = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                // Block admission paces the flood to the service rate,
+                // so probes are (virtually) always live at the scan's
+                // segment boundaries
+                drop(server.submit(probe.clone(), &b"aqzb"[..]));
+                sent += 1;
+            }
+            sent
+        });
+        // let the flood reach steady state before the scan arrives
+        wait_until(|| server.stats().served >= 64);
+        let out = server
+            .submit(scan_pattern.clone(), scan_input.clone())
+            .wait()
+            .expect("scan serves");
+        stop.store(true, Ordering::Relaxed);
+        assert!(flooder.join().unwrap() > 0);
+        out
+    });
+
+    assert_eq!(out.accepted, want.accepted);
+    assert_eq!(out.final_state, want.final_state);
+    assert_eq!(out.n, want.n);
+    assert_eq!(
+        out.engine,
+        EngineKind::Stream,
+        "a preemptible scan is served through the stream wrapper"
+    );
+    let stats = server.shutdown();
+    assert!(
+        stats.preemptions >= 1,
+        "the probe flood must park the scan at least once"
+    );
+    assert!(
+        stats.resumed_scans >= 1,
+        "a parked scan must be resumed from its checkpoint"
+    );
+    assert_eq!(stats.failed, 0);
+}
