@@ -10,8 +10,20 @@
 //!
 //! A fuel counter guards against the exponential blowup cases so the
 //! benchmark harness can cap runtimes; `None` = ran out of fuel.
+//! Every construction path clamps the budget to [`MAX_FUEL`], so a
+//! ReDoS-shaped pattern (`(a|a)*b`, `(a+)+b`, …) terminates with a
+//! budget error in bounded time instead of hanging the caller — there
+//! is no unbounded configuration anymore.
 
 use crate::regex::ast::Ast;
+
+/// Hard ceiling on the step budget.  2³⁰ recursive `match_node` calls
+/// is seconds of wall-clock on any host this runs on — far above every
+/// legitimate polynomial workload in the repo (the Fig. 12 corpora
+/// spend ~10⁸ steps) and far below the 2⁶⁴-shaped blowups the
+/// adversarial ReDoS corpus produces.  [`Backtracker::new`] and
+/// [`Backtracker::with_fuel`] both clamp to it.
+pub const MAX_FUEL: u64 = 1 << 30;
 
 /// Recursive backtracking matcher over a pattern AST.
 pub struct Backtracker<'a> {
@@ -29,14 +41,24 @@ pub struct BacktrackStats {
 }
 
 impl<'a> Backtracker<'a> {
-    /// Unbounded engine (no fuel limit).
+    /// Engine with the default budget ([`MAX_FUEL`]).  There is
+    /// deliberately no unbounded constructor: pre-cap, this was
+    /// `fuel = u64::MAX`, and one `(a|a)*b`-shaped pattern reaching it
+    /// through any call path would hang CI forever.
     pub fn new(ast: &'a Ast) -> Self {
-        Backtracker { ast, fuel: u64::MAX }
+        Backtracker { ast, fuel: MAX_FUEL }
     }
 
     /// Engine with a step budget; exceeding it aborts with `None`.
+    /// Budgets above [`MAX_FUEL`] are clamped — the cap is a hard
+    /// guarantee, not a default.
     pub fn with_fuel(ast: &'a Ast, fuel: u64) -> Self {
-        Backtracker { ast, fuel }
+        Backtracker { ast, fuel: fuel.min(MAX_FUEL) }
+    }
+
+    /// The effective step budget (post-clamp).
+    pub fn budget(&self) -> u64 {
+        self.fuel
     }
 
     /// Whole-input match (anchored at both ends).
@@ -291,6 +313,44 @@ mod tests {
         let input = vec![b'a'; 28];
         let bt = Backtracker::with_fuel(&p.ast, 100_000);
         assert!(bt.is_match(&input).is_none(), "should run out of fuel");
+    }
+
+    #[test]
+    fn redos_alternation_is_budget_capped_by_default() {
+        // regression: `(a|a)*b` doubles the search tree per `a`, so on
+        // a 64-`a` input an unbounded run needs ~2^64 steps — the
+        // pre-fix `Backtracker::new` (fuel = u64::MAX) would hang here
+        // for centuries.  The hard cap turns it into a budget error.
+        let p = parser::parse("(a|a)*b").unwrap();
+        let bt = Backtracker::new(&p.ast);
+        assert_eq!(bt.budget(), MAX_FUEL, "default budget must be capped");
+        // behavioral check at a small explicit budget: the blowup is
+        // detected and reported as None, not a hang or a wrong verdict
+        let input = vec![b'a'; 64];
+        let small = Backtracker::with_fuel(&p.ast, 200_000);
+        assert!(
+            small.is_match(&input).is_none(),
+            "exponential alternation must exhaust the budget"
+        );
+        // explicit budgets cannot opt back out of the cap
+        let huge = Backtracker::with_fuel(&p.ast, u64::MAX);
+        assert_eq!(huge.budget(), MAX_FUEL, "u64::MAX must clamp");
+    }
+
+    #[test]
+    fn capped_budget_still_answers_polynomial_patterns() {
+        // the cap must be invisible to legitimate workloads: a linear
+        // pattern completes far under MAX_FUEL (repeat count kept small
+        // — the CPS matcher's stack depth grows with each iteration)
+        let p = parser::parse("(ab|cd)+e").unwrap();
+        let mut input = Vec::new();
+        for _ in 0..300 {
+            input.extend_from_slice(b"ab");
+        }
+        input.push(b'e');
+        let stats = Backtracker::new(&p.ast).is_match(&input).unwrap();
+        assert!(stats.matched);
+        assert!(stats.steps < MAX_FUEL / 2, "steps={}", stats.steps);
     }
 
     #[test]

@@ -209,7 +209,10 @@ pub struct ExecPolicy {
     /// default (sequential Eq. 8 on shared memory, hierarchical Fig. 9 on
     /// the cluster).
     pub merge: Option<MergeStrategy>,
-    /// Fuel bound for the backtracking engine.
+    /// Fuel bound for the backtracking engine.  Clamped to the
+    /// engine's hard step cap
+    /// ([`crate::baseline::backtracking::MAX_FUEL`]), so no policy can
+    /// configure an effectively unbounded ReDoS-vulnerable run.
     pub backtrack_fuel: u64,
     /// Convergence-collapse check interval for the speculative chunk
     /// kernels, in symbols: chains that have converged are merged and

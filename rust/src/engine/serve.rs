@@ -425,6 +425,19 @@ pub struct ServeStats {
     /// High-water mark of `queue_depth` since startup; never exceeds
     /// [`ServeConfig::max_queue`] when a bound is configured.
     pub max_queue_depth: usize,
+    /// Serving passes (probe batches, plus fused same-input drains
+    /// riding behind them) executed while a scan-class request was
+    /// waiting — the total aging pressure since startup.
+    pub scan_bypasses: u64,
+    /// Highest consecutive-bypass count any waiting scan experienced
+    /// before a worker was forced to serve the scan class: the
+    /// *measured* PR 5 starvation bound.  Never exceeds
+    /// [`ServeConfig::age_limit`] under size-aware scheduling alone;
+    /// a fused cross-pattern drain riding behind the final bypassing
+    /// probe batch can add one more (see
+    /// [`ServeConfig::fuse_cross_pattern`]), so `age_limit + 1` is the
+    /// ceiling with fusion enabled.
+    pub max_bypass_streak: u64,
     /// Queue-wait telemetry for probe-class requests.
     pub probe_wait: WaitStats,
     /// Queue-wait telemetry for scan-class requests.
@@ -495,6 +508,10 @@ struct ReqQueue {
     next_seq: u64,
     /// probe batches taken while a scan-class request waited (aging)
     bypassed: u64,
+    /// total bypass increments since startup (telemetry)
+    bypass_total: u64,
+    /// high-water mark of `bypassed`: the measured starvation bound
+    max_streak: u64,
 }
 
 impl ReqQueue {
@@ -507,7 +524,17 @@ impl ReqQueue {
             max_depth: 0,
             next_seq: 0,
             bypassed: 0,
+            bypass_total: 0,
+            max_streak: 0,
         }
+    }
+
+    /// One more serving pass went ahead of a waiting scan: bump the
+    /// aging counter and the telemetry that makes the bound observable.
+    fn note_bypass(&mut self) {
+        self.bypassed += 1;
+        self.bypass_total += 1;
+        self.max_streak = self.max_streak.max(self.bypassed);
     }
 
     /// Admit one request into class `sched` (its telemetry size class is
@@ -557,7 +584,7 @@ impl ReqQueue {
                     self.bypassed = 0;
                     Some(CLASS_SCAN)
                 } else {
-                    self.bypassed += 1;
+                    self.note_bypass();
                     Some(CLASS_PROBE)
                 }
             }
@@ -652,7 +679,7 @@ impl ReqQueue {
             self.lanes.remove(&p);
         }
         if !taken.is_empty() && self.live[CLASS_SCAN] > 0 {
-            self.bypassed += 1;
+            self.note_bypass();
         }
         taken.sort_by_key(|t| t.seq);
         taken
@@ -1148,9 +1175,9 @@ fn stats_of(shared: &Shared) -> ServeStats {
     // one lock at a time: a snapshot must never stall the workers
     let cached_patterns = shared.cache.lock().unwrap().entries.len();
     let cached_outcomes = shared.outcomes.lock().unwrap().entries.len();
-    let (queue_depth, max_queue_depth) = {
+    let (queue_depth, max_queue_depth, scan_bypasses, max_bypass_streak) = {
         let q = shared.queue.lock().unwrap();
-        (q.len, q.max_depth)
+        (q.len, q.max_depth, q.bypass_total, q.max_streak)
     };
     let thresholds = shared.thresholds.lock().unwrap().clone();
     let worker_rates = shared
@@ -1194,6 +1221,8 @@ fn stats_of(shared: &Shared) -> ServeStats {
         cached_outcomes,
         queue_depth,
         max_queue_depth,
+        scan_bypasses,
+        max_bypass_streak,
         probe_wait: wait(CLASS_PROBE),
         scan_wait: wait(CLASS_SCAN),
         thresholds,
@@ -2052,6 +2081,32 @@ mod tests {
                 vec![probes[8], probes[9]],
             ]
         );
+    }
+
+    #[test]
+    fn bypass_telemetry_tracks_the_aging_bound() {
+        let scan = Pattern::Regex("scan".to_string());
+        let probe = Pattern::Regex("probe".to_string());
+        let mut q = ReqQueue::new();
+        push_class(&mut q, &scan, CLASS_SCAN);
+        for _ in 0..12 {
+            push_class(&mut q, &probe, CLASS_PROBE);
+        }
+        // drain everything under age_limit 3, max_batch 1: the scan is
+        // bypassed exactly three times, then forced; afterwards only
+        // probes remain so the streak never grows again
+        while q.take_batch(3, 1).is_some() {}
+        assert_eq!(q.bypass_total, 3);
+        assert_eq!(q.max_streak, 3);
+        // a second wave with a waiting scan resumes the total but the
+        // streak high-water mark still respects the bound
+        push_class(&mut q, &scan, CLASS_SCAN);
+        for _ in 0..8 {
+            push_class(&mut q, &probe, CLASS_PROBE);
+        }
+        while q.take_batch(3, 1).is_some() {}
+        assert_eq!(q.bypass_total, 6);
+        assert_eq!(q.max_streak, 3, "streak resets when the scan serves");
     }
 
     #[test]

@@ -30,10 +30,13 @@ use specdfa::runtime::pjrt::VectorUnit;
 use specdfa::runtime::simd::SimdMatcher;
 use specdfa::speculative::lookahead::Lookahead;
 use specdfa::speculative::matcher::MatchPlan;
+use specdfa::engine::select::DfaProps;
 use specdfa::util::bench::{
-    render_bench_json, time_median, time_once, BenchRecord, Table,
+    percentile, render_bench_json, time_median, time_once, BenchRecord,
+    Table,
 };
 use specdfa::util::rng::Rng;
+use specdfa::util::workload;
 use specdfa::workload::{pcre_suite_cached, prosite_suite_cached, InputGen};
 use specdfa::{Dfa, SequentialMatcher};
 
@@ -103,7 +106,7 @@ fn print_usage() {
          \x20KIND: regex|regex-exact|prosite; INPUT: text, @file, or \
          gen:N)\n\
          \x20 specdfa bench   [--suite \
-         kernels|engines|serve|patternset|stream|all]\n\
+         kernels|engines|serve|patternset|stream|adversarial|all]\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 \
          [--quick] [--json PATH]\n\
          \x20 specdfa experiment <name>|all      names: {}\n\
@@ -604,21 +607,6 @@ struct BenchWorkload {
     syms: Vec<u32>,
 }
 
-/// A dense synthetic DFA whose u32 table is large enough to stress the
-/// cache hierarchy (the regime where width compaction pays).
-fn synthetic_dense_dfa(states: u32, symbols: u32, seed: u64) -> Dfa {
-    let mut rng = Rng::new(seed);
-    let table: Vec<u32> = (0..states as u64 * symbols as u64)
-        .map(|_| rng.below(states as u64) as u32)
-        .collect();
-    let mut classes = [0u8; 256];
-    for (b, c) in classes.iter_mut().enumerate() {
-        *c = (b as u32 % symbols) as u8;
-    }
-    let accepting: Vec<bool> = (0..states).map(|q| q % 97 == 0).collect();
-    Dfa::new(states, symbols, 0, accepting, table, classes)
-}
-
 fn kernel_workloads(quick: bool) -> Vec<BenchWorkload> {
     let n = if quick { 200_000 } else { 2_000_000 };
     let mut gen = InputGen::new(0xBE4C);
@@ -628,7 +616,9 @@ fn kernel_workloads(quick: bool) -> Vec<BenchWorkload> {
         compile_prosite("C-x(2)-C-x(3)-[LIVMFYWC]-x(4)-H-x(3,5)-H.")
             .expect("static signature");
     let prosite_syms = prosite.map_input(&gen.protein(n));
-    let dense = synthetic_dense_dfa(1024, 32, 0xDE45E);
+    // dense random table large enough to stress the cache hierarchy
+    // (the regime where width compaction pays)
+    let dense = workload::dense_frontier_dfa(1024, 32, 0xDE45E);
     let dense_syms = gen.uniform_syms(&dense, n);
     let sink = compile_exact("abcde").expect("static pattern");
     let sink_syms = sink.map_input(&gen.ascii_text(n));
@@ -933,11 +923,8 @@ fn bench_serve(quick: bool, records: &mut Vec<BenchRecord>) {
         let wall = t0.elapsed().as_secs_f64();
         let _ = server.shutdown();
         probe_done.sort_by(|a, b| a.total_cmp(b));
-        let pct = |v: &[f64], p: f64| {
-            v[(((v.len() - 1) as f64) * p).round() as usize]
-        };
-        let p50 = pct(&probe_done, 0.50);
-        let p99 = pct(&probe_done, 0.99);
+        let p50 = percentile(&probe_done, 0.50);
+        let p99 = percentile(&probe_done, 0.99);
         let scan_max = scan_done.iter().fold(0.0_f64, |a, &b| a.max(b));
         let total_bytes = 2 * scan_n + probes * probe_n;
         let sps = total_bytes as f64 / wall.max(1e-12);
@@ -1205,6 +1192,175 @@ fn bench_stream(quick: bool, records: &mut Vec<BenchRecord>) {
     table.print();
 }
 
+/// The `adversarial` suite: (1) one-shot engine throughput on the
+/// pathological automata — permutation (γ = 1 at every lookahead
+/// depth, speculation's structural worst case; `Auto` must dodge it),
+/// dense-frontier and sink-heavy — and (2) client-observed ticket
+/// latency for a bursty Zipfian heavy-tail trace replayed through the
+/// server with the PR 5 bounds active.
+fn bench_adversarial(quick: bool, records: &mut Vec<BenchRecord>) {
+    let seed = 0xADE5_2026u64;
+
+    // part 1: one-shot throughput vs automaton structure
+    let n: usize = if quick { 1 << 16 } else { 1 << 20 };
+    let (warmup, iters) = if quick { (1, 3) } else { (2, 7) };
+    let mut table = Table::new(
+        "adversarial automata (throughput vs structure)",
+        &["case", "gamma", "engine", "Msym/s"],
+    );
+    let policy = ExecPolicy {
+        processors: 4,
+        lookahead: 2,
+        ..ExecPolicy::default()
+    };
+    let cases: Vec<(&str, Dfa)> = vec![
+        ("perm-q64", workload::permutation_dfa(64, 8, seed)),
+        ("perm-q256", workload::permutation_dfa(256, 16, seed ^ 1)),
+        ("dense-q512", workload::dense_frontier_dfa(512, 16, seed ^ 2)),
+        ("sink-q32", workload::sink_heavy_dfa(30, 8, seed ^ 3).0),
+    ];
+    for (name, dfa) in cases {
+        let gamma = DfaProps::analyze(&dfa, policy.lookahead.max(1)).gamma;
+        let table_bytes =
+            dfa.num_states as usize * dfa.num_symbols as usize * 4;
+        let mut gen = InputGen::new(seed ^ 4);
+        let syms = gen.uniform_syms(&dfa, n);
+        for (ename, engine) in [
+            ("seq", Engine::Sequential),
+            ("spec", Engine::Speculative { adaptive: false }),
+            ("auto", Engine::Auto),
+        ] {
+            let m = match CompiledMatcher::from_dfa(
+                dfa.clone(),
+                engine,
+                policy.clone(),
+            ) {
+                Ok(m) => m,
+                Err(e) => {
+                    eprintln!("  {name}/{ename}: skipped ({e:#})");
+                    continue;
+                }
+            };
+            let secs = time_median(warmup, iters, || {
+                m.run_syms(&syms).expect("adversarial bench run")
+            });
+            let sps = n as f64 / secs.max(1e-12);
+            records.push(BenchRecord {
+                suite: "adversarial".to_string(),
+                workload: name.to_string(),
+                kernel: format!("oneshot_{ename}"),
+                width: None,
+                table_bytes: Some(table_bytes),
+                n_syms: n,
+                reps: iters,
+                secs_per_iter: secs,
+                syms_per_sec: sps,
+                syms_matched: None,
+                collapses: None,
+            });
+            table.row(vec![
+                name.to_string(),
+                format!("{gamma:.3}"),
+                ename.to_string(),
+                format!("{:.1}", sps / 1e6),
+            ]);
+        }
+    }
+    table.print();
+
+    // part 2: bursty Zipfian heavy-tail trace through the server —
+    // the same generator tests/adversarial.rs asserts the bounds on,
+    // here timed from the client side of the ticket
+    let requests: usize = if quick { 200 } else { 1000 };
+    let probe_max = 1 << 12;
+    let pool = workload::pathological_corpus(seed);
+    let events = workload::trace(
+        &workload::TraceConfig {
+            requests,
+            pool: pool.len(),
+            skew: 1.1,
+            probe_max_bytes: probe_max,
+            burst: 16,
+            gap_us: 200,
+        },
+        seed ^ 5,
+    );
+    let mut rng = Rng::new(seed ^ 6);
+    let jobs: Vec<(usize, Vec<u8>)> = events
+        .iter()
+        .map(|ev| {
+            let i = ev.pattern % pool.len();
+            let alphabet = &pool[i].alphabet;
+            let input: Vec<u8> = (0..ev.len)
+                .map(|_| alphabet[rng.usize_below(alphabet.len())])
+                .collect();
+            (i, input)
+        })
+        .collect();
+    let total_bytes: usize = jobs.iter().map(|(_, b)| b.len()).sum();
+    let server = Server::start(ServeConfig {
+        workers: 2,
+        max_queue: 64,
+        admission: Admission::Block,
+        priority: PriorityPolicy::SizeAware,
+        probe_max_bytes: probe_max,
+        age_limit: 4,
+        calibrate_on_start: false,
+        profile_runs: 1,
+        profile_sample_syms: 1 << 14,
+        recalibrate_every: 0,
+        ..ServeConfig::default()
+    })
+    .expect("adversarial bench server");
+    let t0 = std::time::Instant::now();
+    let tickets: Vec<_> = jobs
+        .iter()
+        .map(|(i, input)| server.submit(pool[*i].pattern.clone(), input.clone()))
+        .collect();
+    let mut done: Vec<f64> = tickets
+        .into_iter()
+        .map(|t| {
+            t.wait().expect("adversarial trace request serves");
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = server.shutdown();
+    done.sort_by(|a, b| a.total_cmp(b));
+    let p50 = percentile(&done, 0.50);
+    let p99 = percentile(&done, 0.99);
+    let sps = total_bytes as f64 / wall.max(1e-12);
+    for (kernel, secs) in
+        [("trace_wait_p50", p50), ("trace_wait_p99", p99)]
+    {
+        records.push(BenchRecord {
+            suite: "adversarial".to_string(),
+            workload: format!("zipf-trace-{requests}req"),
+            kernel: kernel.to_string(),
+            width: None,
+            table_bytes: None,
+            n_syms: total_bytes,
+            reps: requests,
+            secs_per_iter: secs,
+            syms_per_sec: sps,
+            syms_matched: None,
+            collapses: None,
+        });
+    }
+    let mut t2 = Table::new(
+        "adversarial trace (bursty zipfian, heavy-tail sizes)",
+        &["requests", "p50 ms", "p99 ms", "max bypass streak", "MB/s"],
+    );
+    t2.row(vec![
+        requests.to_string(),
+        format!("{:.2}", p50 * 1e3),
+        format!("{:.2}", p99 * 1e3),
+        stats.max_bypass_streak.to_string(),
+        format!("{:.1}", sps / (1 << 20) as f64),
+    ]);
+    t2.print();
+}
+
 /// `specdfa bench`: reproducible kernel-tier, engine and serve-latency
 /// benchmarks with machine-readable JSON output (the repo's
 /// `BENCH_*.json` trajectory).
@@ -1219,16 +1375,19 @@ fn cmd_bench(args: &[String]) -> anyhow::Result<()> {
         "serve" => bench_serve(quick, &mut records),
         "patternset" => bench_patternset(quick, &mut records),
         "stream" => bench_stream(quick, &mut records),
+        "adversarial" => bench_adversarial(quick, &mut records),
         "all" => {
             bench_kernels(quick, &mut records);
             bench_engines(quick, &mut records);
             bench_serve(quick, &mut records);
             bench_patternset(quick, &mut records);
             bench_stream(quick, &mut records);
+            bench_adversarial(quick, &mut records);
         }
         other => anyhow::bail!(
             "unknown suite {other:?} \
-             (expected kernels|engines|serve|patternset|stream|all)"
+             (expected kernels|engines|serve|patternset|stream|\
+              adversarial|all)"
         ),
     }
     if let Some(path) = get(&fl, "json") {

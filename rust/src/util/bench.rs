@@ -32,6 +32,16 @@ pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (f64, T) {
     (t0.elapsed().as_secs_f64(), v)
 }
 
+/// Nearest-rank percentile of an ascending-sorted, non-empty sample;
+/// `p` in `[0, 1]` (0.5 = median, 0.99 = p99).  Shared by the serve
+/// and adversarial latency suites so every `BENCH_*.json` percentile
+/// means the same thing.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of an empty sample");
+    let idx = ((sorted.len() - 1) as f64 * p.clamp(0.0, 1.0)).round() as usize;
+    sorted[idx]
+}
+
 /// Simple fixed-width table, printed in the style of the paper's tables.
 pub struct Table {
     /// table caption
@@ -246,6 +256,16 @@ pub fn render_bench_json(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 0.5), 51.0);
+        assert_eq!(percentile(&v, 0.99), 99.0);
+        assert_eq!(percentile(&v, 1.0), 100.0);
+        assert_eq!(percentile(&[7.5], 0.99), 7.5);
+    }
 
     #[test]
     fn table_renders_aligned() {

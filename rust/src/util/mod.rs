@@ -8,6 +8,7 @@ pub mod bitset;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod workload;
 
 /// FNV-1a over a byte slice: the request-dedup hash of the serving
 /// path's outcome cache.  Non-cryptographic; collisions are further

@@ -6,11 +6,14 @@
 
 use super::rng::Rng;
 
-/// Base seed; fixed so CI is deterministic. Override with SPECDFA_PROP_SEED.
+/// Base seed; fixed so CI is deterministic.  Override with
+/// `SPECDFA_PROP_SEED`, or with the suite-wide `SPECDFA_TEST_SEED`
+/// (both accept decimal or `0x` hex via
+/// [`super::rng::seed_from_env`]); the prop-specific variable wins
+/// when both are set.
 fn base_seed() -> u64 {
-    std::env::var("SPECDFA_PROP_SEED")
-        .ok()
-        .and_then(|s| s.parse().ok())
+    super::rng::seed_from_env("SPECDFA_PROP_SEED")
+        .or_else(|| super::rng::seed_from_env("SPECDFA_TEST_SEED"))
         .unwrap_or(0xC0FFEE)
 }
 

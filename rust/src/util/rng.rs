@@ -108,6 +108,31 @@ impl Rng {
     }
 }
 
+/// The base seed a randomized test or workload generator should use:
+/// `SPECDFA_TEST_SEED` from the environment when set (decimal or
+/// `0x`-prefixed hex, `_` separators allowed), otherwise `default`.
+///
+/// This is the replay half of the seed-plumbing contract: every suite
+/// that derives its corpus from a seed prints the value it used on
+/// entry (so a CI failure names it), and re-running with
+/// `SPECDFA_TEST_SEED=<printed value>` reproduces the exact corpus.
+/// A malformed value falls back to `default` rather than aborting the
+/// suite.
+pub fn test_seed(default: u64) -> u64 {
+    seed_from_env("SPECDFA_TEST_SEED").unwrap_or(default)
+}
+
+/// Parse a seed from environment variable `var` (decimal or `0x` hex).
+pub fn seed_from_env(var: &str) -> Option<u64> {
+    let raw = std::env::var(var).ok()?;
+    let raw = raw.trim().replace('_', "");
+    let parsed = match raw.strip_prefix("0x").or_else(|| raw.strip_prefix("0X")) {
+        Some(hex) => u64::from_str_radix(hex, 16),
+        None => raw.parse(),
+    };
+    parsed.ok()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -168,5 +193,20 @@ mod tests {
         let mut b = a.fork();
         let mut c = a.fork();
         assert_ne!(b.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn env_seed_parsing() {
+        // one env var per assertion, names unique to this test so the
+        // process-global environment races with no other test
+        std::env::set_var("SPECDFA_RNG_T1", "12345");
+        assert_eq!(seed_from_env("SPECDFA_RNG_T1"), Some(12345));
+        std::env::set_var("SPECDFA_RNG_T2", "0xD1FF_2024");
+        assert_eq!(seed_from_env("SPECDFA_RNG_T2"), Some(0xD1FF_2024));
+        std::env::set_var("SPECDFA_RNG_T3", " 0XABC ");
+        assert_eq!(seed_from_env("SPECDFA_RNG_T3"), Some(0xABC));
+        std::env::set_var("SPECDFA_RNG_T4", "not-a-seed");
+        assert_eq!(seed_from_env("SPECDFA_RNG_T4"), None);
+        assert_eq!(seed_from_env("SPECDFA_RNG_UNSET_VAR"), None);
     }
 }

@@ -1,0 +1,706 @@
+//! Adversarial, trace-driven workload generation — the harness behind
+//! `specdfa bench --suite adversarial` and `tests/adversarial.rs`.
+//!
+//! Three seeded generators compose into a request trace:
+//!
+//!  * [`Zipf`] — skewed pattern popularity over a configurable pool,
+//!    stressing the serve loop's LRU pattern cache and outcome memo
+//!    (a hot head that must hit, a long tail that must not thrash it);
+//!  * [`HeavyTailSizes`] — Pareto-distributed input sizes *straddling*
+//!    [`crate::engine::serve::ServeConfig::probe_max_bytes`], so one
+//!    trace exercises both scheduling classes and the probe/scan
+//!    aging machinery between them;
+//!  * [`trace`] — bursty open-loop arrivals (geometric burst lengths,
+//!    exponential inter-burst gaps), the arrival shape under which
+//!    bounded-queue admission and the PR 5 starvation bound actually
+//!    bind.
+//!
+//! A separate factory builds *pathological automata* — the structural
+//! worst cases PaREM (arXiv 1412.1741) identifies for parallel
+//! matching, plus the ReDoS patterns (arXiv 1110.1716's insomnia
+//! taxonomy) the backtracking baseline must survive:
+//!
+//!  * [`permutation_dfa`] — every symbol acts as a permutation of the
+//!    state set, so every word map is a bijection: `I_max,r = |Q|` at
+//!    every lookahead depth (γ = 1, Eq. 18's worst case), and
+//!    speculative chains **never** converge, defeating collapsing;
+//!  * [`dense_frontier_dfa`] — a uniformly random complete transition
+//!    table: large reachable frontier, mediocre γ, the "dense
+//!    near-complete automaton" case;
+//!  * [`sink_heavy_dfa`] — an anchored needle chain where every
+//!    off-needle byte falls into a dead sink: tiny γ, instant chain
+//!    convergence — the opposite structural extreme;
+//!  * ReDoS regexes (`(a|a)*b`-shaped) whose DFAs are trivial but
+//!    whose backtracking cost is exponential — they must terminate
+//!    with a budget error, never hang.
+//!
+//! [`replay_trace`] closes the loop: it replays a trace against a live
+//! [`Server`], checks every served verdict against the sequential
+//! reference, and returns the final [`ServeStats`] so callers can
+//! assert the PR 5 invariants (starvation bound, depth bound,
+//! snapshot-consistent counters) under adversarial load.
+//!
+//! Everything is deterministic by seed; suites derive theirs from
+//! [`crate::util::rng::test_seed`] so `SPECDFA_TEST_SEED` replays a CI
+//! failure exactly.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::automata::{grail, Dfa};
+use crate::engine::serve::{ServeConfig, ServeError, ServeStats, Server};
+use crate::engine::{CompiledMatcher, Engine, Matcher, Pattern};
+use crate::util::rng::Rng;
+
+// ---------------------------------------------------------------------
+// popularity + size + arrival generators
+// ---------------------------------------------------------------------
+
+/// Zipfian sampler over ranks `0..k`: rank `r` is drawn with
+/// probability proportional to `1 / (r+1)^skew`.  `skew = 0` is
+/// uniform; `skew ≈ 1` is the classic web-request shape; larger skews
+/// concentrate the mass on the head of the pool.
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    /// Sampler over `k` ranks with exponent `skew` (`k` is clamped to
+    /// ≥ 1).
+    pub fn new(k: usize, skew: f64) -> Zipf {
+        let k = k.max(1);
+        let mut cdf = Vec::with_capacity(k);
+        let mut total = 0.0f64;
+        for rank in 1..=k {
+            total += 1.0 / (rank as f64).powf(skew);
+            cdf.push(total);
+        }
+        for c in &mut cdf {
+            *c /= total;
+        }
+        Zipf { cdf }
+    }
+
+    /// Draw one rank in `0..k`.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.f64();
+        self.cdf
+            .partition_point(|&c| c < u)
+            .min(self.cdf.len() - 1)
+    }
+}
+
+/// Pareto (power-law) input sizes positioned to *straddle* the serve
+/// loop's probe/scan boundary: most draws are probe-sized, a heavy
+/// tail of draws are scans several times `probe_max_bytes` long.
+pub struct HeavyTailSizes {
+    /// Pareto scale `x_m` (the minimum of the unclamped distribution)
+    pub scale: f64,
+    /// Pareto tail exponent α (smaller = heavier tail)
+    pub alpha: f64,
+    /// hard floor on a drawn size
+    pub min: usize,
+    /// hard ceiling on a drawn size (keeps a single draw from eating
+    /// the whole test budget)
+    pub max: usize,
+}
+
+impl HeavyTailSizes {
+    /// The canonical adversarial shape for a given probe/scan boundary:
+    /// `x_m = probe_max/8`, `α = 1.16` (the classic "80/20" exponent),
+    /// capped at `8 × probe_max`.  Roughly 9 % of draws land above
+    /// `probe_max_bytes` — enough scans to age, enough probes to flood.
+    pub fn straddling(probe_max_bytes: usize) -> HeavyTailSizes {
+        HeavyTailSizes {
+            scale: (probe_max_bytes / 8).max(1) as f64,
+            alpha: 1.16,
+            min: 16,
+            max: probe_max_bytes.saturating_mul(8).max(64),
+        }
+    }
+
+    /// Draw one size in bytes.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.f64().max(1e-12);
+        let x = self.scale / u.powf(1.0 / self.alpha);
+        (x as usize).clamp(self.min, self.max)
+    }
+
+    /// Expected fraction of draws strictly above `bytes` (before
+    /// clamping): `(x_m / bytes)^α`.
+    pub fn tail_fraction(&self, bytes: usize) -> f64 {
+        if (bytes as f64) <= self.scale {
+            return 1.0;
+        }
+        (self.scale / bytes as f64).powf(self.alpha)
+    }
+}
+
+/// One arrival in a generated trace.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    /// arrival time offset from the trace start, in microseconds
+    /// (events inside one burst share an offset)
+    pub at_us: u64,
+    /// rank of the pattern in the pool (Zipf-distributed; callers
+    /// index their pool with `pattern % pool.len()`)
+    pub pattern: usize,
+    /// input length in bytes (heavy-tail-distributed)
+    pub len: usize,
+}
+
+/// Shape of a generated trace.
+#[derive(Clone, Debug)]
+pub struct TraceConfig {
+    /// total number of requests
+    pub requests: usize,
+    /// pattern-pool size the Zipf sampler ranks over
+    pub pool: usize,
+    /// Zipf exponent (0 = uniform popularity)
+    pub skew: f64,
+    /// the probe/scan boundary sizes straddle
+    pub probe_max_bytes: usize,
+    /// mean burst length (arrivals sharing one instant)
+    pub burst: usize,
+    /// mean inter-burst gap in microseconds (exponential)
+    pub gap_us: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> TraceConfig {
+        TraceConfig {
+            requests: 400,
+            pool: 32,
+            skew: 1.1,
+            probe_max_bytes: 1 << 10,
+            burst: 16,
+            gap_us: 400,
+        }
+    }
+}
+
+/// Generate a bursty open-loop arrival trace: bursts of
+/// uniformly-jittered length (mean [`TraceConfig::burst`]) separated
+/// by exponential gaps (mean [`TraceConfig::gap_us`]), each event
+/// carrying a Zipf-ranked pattern and a heavy-tailed input size.
+/// Deterministic by `seed`.
+pub fn trace(cfg: &TraceConfig, seed: u64) -> Vec<TraceEvent> {
+    let mut rng = Rng::new(seed);
+    let zipf = Zipf::new(cfg.pool, cfg.skew);
+    let sizes = HeavyTailSizes::straddling(cfg.probe_max_bytes);
+    let mut at = 0u64;
+    let mut out = Vec::with_capacity(cfg.requests);
+    while out.len() < cfg.requests {
+        // burst length: uniform on 1..=2·mean (mean = cfg.burst)
+        let burst = 1 + rng.usize_below(cfg.burst.max(1) * 2);
+        for _ in 0..burst {
+            if out.len() >= cfg.requests {
+                break;
+            }
+            out.push(TraceEvent {
+                at_us: at,
+                pattern: zipf.sample(&mut rng),
+                len: sizes.sample(&mut rng),
+            });
+        }
+        // open-loop gap: exponential with the configured mean — the
+        // arrival process never waits for service completions
+        let u = rng.f64().max(1e-12);
+        at += (-u.ln() * cfg.gap_us as f64) as u64 + 1;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// pathological-automata factory
+// ---------------------------------------------------------------------
+
+/// Every symbol is a random permutation of the state set, so every
+/// word acts as a bijection on `Q`: `I_max,r = |Q|` at every lookahead
+/// depth (γ = 1 exactly — Eq. 18's structural worst case) and two
+/// speculative chains can never converge, defeating collapse entirely.
+/// Roughly half the states accept, so random inputs exercise both
+/// verdicts.  `symbols ≤ 256` required.
+pub fn permutation_dfa(states: u32, symbols: u32, seed: u64) -> Dfa {
+    assert!(states >= 1 && (1..=256).contains(&symbols));
+    let mut rng = Rng::new(seed);
+    let mut table = vec![0u32; (states * symbols) as usize];
+    for s in 0..symbols {
+        let mut perm: Vec<u32> = (0..states).collect();
+        rng.shuffle(&mut perm);
+        for q in 0..states {
+            table[(q * symbols + s) as usize] = perm[q as usize];
+        }
+    }
+    let accepting: Vec<bool> = (0..states).map(|q| q % 2 == 0).collect();
+    Dfa::new(states, symbols, 0, accepting, table, mod_classes(symbols))
+}
+
+/// A uniformly random complete transition table: the "dense
+/// near-complete automaton" with a large reachable frontier (the PaREM
+/// worst case for frontier-based parallel matching).  About one state
+/// in eight accepts (at least one always does).
+pub fn dense_frontier_dfa(states: u32, symbols: u32, seed: u64) -> Dfa {
+    assert!(states >= 1 && (1..=256).contains(&symbols));
+    let mut rng = Rng::new(seed);
+    let table: Vec<u32> = (0..states * symbols)
+        .map(|_| rng.below(states as u64) as u32)
+        .collect();
+    let mut accepting: Vec<bool> =
+        (0..states).map(|_| rng.below(8) == 0).collect();
+    if !accepting.iter().any(|&a| a) {
+        let forced = rng.below(states as u64) as usize;
+        accepting[forced] = true;
+    }
+    Dfa::new(states, symbols, 0, accepting, table, mod_classes(symbols))
+}
+
+/// An anchored needle chain with a dead sink: state `q < chain` steps
+/// to `q+1` on the one needle symbol and to the sink on everything
+/// else; the accept state (chain completed) absorbs.  γ is tiny —
+/// after a few symbols almost every speculative chain sits in the sink
+/// or the accept state — so this is the *best*-case structural extreme
+/// that bounds the other end of the sweep.  Returns the DFA and the
+/// needle bytes (a guaranteed-accept witness prefix).
+pub fn sink_heavy_dfa(chain: u32, symbols: u32, seed: u64) -> (Dfa, Vec<u8>) {
+    assert!(chain >= 1 && (2..=256).contains(&symbols));
+    let states = chain + 2;
+    let accept = chain;
+    let sink = chain + 1;
+    let mut rng = Rng::new(seed);
+    let needle: Vec<u32> =
+        (0..chain).map(|_| rng.below(symbols as u64) as u32).collect();
+    let mut table = vec![0u32; (states * symbols) as usize];
+    for q in 0..states {
+        for s in 0..symbols {
+            let to = if q < chain {
+                if s == needle[q as usize] {
+                    q + 1
+                } else {
+                    sink
+                }
+            } else if q == accept {
+                accept
+            } else {
+                sink
+            };
+            table[(q * symbols + s) as usize] = to;
+        }
+    }
+    let mut accepting = vec![false; states as usize];
+    accepting[accept as usize] = true;
+    let witness: Vec<u8> = needle.iter().map(|&s| s as u8).collect();
+    (
+        Dfa::new(states, symbols, 0, accepting, table, mod_classes(symbols)),
+        witness,
+    )
+}
+
+/// Byte classes for a synthetic dense-symbol DFA: byte `b` maps to
+/// symbol `b mod symbols`, so any byte stream drives the automaton and
+/// bytes `0..symbols` hit each symbol exactly.
+fn mod_classes(symbols: u32) -> [u8; 256] {
+    let mut classes = [0u8; 256];
+    for (b, class) in classes.iter_mut().enumerate() {
+        *class = (b as u32 % symbols) as u8;
+    }
+    classes
+}
+
+/// One entry of the pathological corpus: a pattern, the byte alphabet
+/// adversarial inputs for it should be drawn from, an optional
+/// guaranteed-accept witness (planted by the differential suite), and
+/// whether the AST comparators (backtracking / grep-like) can compile
+/// it at all.
+pub struct AdversarialCase {
+    /// scenario name (stable across runs; used as the bench workload)
+    pub name: String,
+    /// the pattern under test
+    pub pattern: Pattern,
+    /// bytes random inputs should be drawn from so the DFA actually
+    /// moves through its state space
+    pub alphabet: Vec<u8>,
+    /// a byte string guaranteed to be accepted when planted as a
+    /// prefix (sink-heavy chains) or substring (search patterns)
+    pub witness: Option<Vec<u8>>,
+    /// whether the AST engines (backtrack / grep) can run this case —
+    /// false for raw Grail automata and anchored patterns
+    pub ast_safe: bool,
+}
+
+/// The pathological corpus: permutation (γ = 1), dense-frontier and
+/// sink-heavy automata at several sizes, ReDoS regexes, and anchored
+/// patterns.  Deterministic by `seed`; sub-seeds fork from it so cases
+/// are independent.
+pub fn pathological_corpus(seed: u64) -> Vec<AdversarialCase> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::new();
+    for (q, s) in [(16u32, 4u32), (64, 8), (256, 16)] {
+        let dfa = permutation_dfa(q, s, rng.next_u64());
+        out.push(AdversarialCase {
+            name: format!("perm-q{q}"),
+            pattern: Pattern::Grail(grail::to_grail(&dfa)),
+            alphabet: (0..s as u8).collect(),
+            witness: None,
+            ast_safe: false,
+        });
+    }
+    for (q, s) in [(128u32, 8u32), (512, 16)] {
+        let dfa = dense_frontier_dfa(q, s, rng.next_u64());
+        out.push(AdversarialCase {
+            name: format!("dense-q{q}"),
+            pattern: Pattern::Grail(grail::to_grail(&dfa)),
+            alphabet: (0..s as u8).collect(),
+            witness: None,
+            ast_safe: false,
+        });
+    }
+    for (chain, s) in [(30u32, 8u32), (100, 12)] {
+        let (dfa, witness) = sink_heavy_dfa(chain, s, rng.next_u64());
+        out.push(AdversarialCase {
+            name: format!("sink-q{}", chain + 2),
+            pattern: Pattern::Grail(grail::to_grail(&dfa)),
+            alphabet: (0..s as u8).collect(),
+            witness: Some(witness),
+            ast_safe: false,
+        });
+    }
+    // ReDoS: trivial DFAs, exponential backtracking — the AST engines
+    // must answer with a budget error, never a hang
+    for (name, pat, witness) in [
+        ("redos-alt", "(a|a)*b", &b"aab"[..]),
+        ("redos-nest", "(a+)+b", &b"ab"[..]),
+        ("redos-poly", "(ab|a)*c", &b"abc"[..]),
+    ] {
+        out.push(AdversarialCase {
+            name: name.to_string(),
+            pattern: Pattern::Regex(pat.to_string()),
+            alphabet: b"ab".to_vec(),
+            witness: Some(witness.to_vec()),
+            ast_safe: true,
+        });
+    }
+    // anchored cases (DFA engines only: the AST comparators refuse ^/$)
+    out.push(AdversarialCase {
+        name: "anchored-start".to_string(),
+        pattern: Pattern::Regex("^(ab|cd)+e".to_string()),
+        alphabet: b"abcde".to_vec(),
+        witness: None,
+        ast_safe: false,
+    });
+    out.push(AdversarialCase {
+        name: "anchored-exact".to_string(),
+        pattern: Pattern::RegexExact("(a|b)*abb".to_string()),
+        alphabet: b"ab".to_vec(),
+        // no witness: the accept condition is a *suffix* ("ends in
+        // abb"), which random {a,b} inputs hit 1 time in 8 anyway
+        witness: None,
+        ast_safe: false,
+    });
+    out
+}
+
+// ---------------------------------------------------------------------
+// serve-loop stress driver
+// ---------------------------------------------------------------------
+
+/// What one [`replay_trace`] run observed.
+pub struct StressReport {
+    /// final serving telemetry (taken after shutdown drained the queue)
+    pub stats: ServeStats,
+    /// requests refused at admission (`ServeError::Overloaded`)
+    pub rejected: usize,
+    /// served verdicts that disagreed with the sequential reference —
+    /// always 0 unless failure-freedom is broken
+    pub mismatches: usize,
+    /// requests that streamed any other error back
+    pub errors: usize,
+    /// total input bytes submitted (throughput accounting)
+    pub bytes: u64,
+}
+
+/// Replay a trace against a live [`Server`] and differentially check
+/// every served verdict against `Engine::Sequential`.
+///
+/// Inputs are generated deterministically from `seed` over each
+/// case's alphabet (with the case witness planted at position 0 on a
+/// third of its events, so accept verdicts occur).  `pace_cap_us`
+/// bounds the inter-burst sleep: `0` floods the queue with no pacing
+/// (maximum admission pressure); otherwise gaps are honored up to the
+/// cap, preserving burstiness while keeping tests fast.
+///
+/// The returned [`StressReport`] carries the final [`ServeStats`];
+/// callers assert the PR 5 bounds on it (`max_bypass_streak` vs
+/// `age_limit`, `max_queue_depth` vs `max_queue`, counter
+/// consistency).
+pub fn replay_trace(
+    config: ServeConfig,
+    pool: &[AdversarialCase],
+    events: &[TraceEvent],
+    seed: u64,
+    pace_cap_us: u64,
+) -> Result<StressReport> {
+    anyhow::ensure!(!pool.is_empty(), "replay needs a non-empty pool");
+    let mut rng = Rng::new(seed);
+    let refs: Vec<CompiledMatcher> = pool
+        .iter()
+        .map(|case| {
+            CompiledMatcher::compile(
+                &case.pattern,
+                Engine::Sequential,
+                config.policy.clone(),
+            )
+        })
+        .collect::<Result<Vec<_>>>()?;
+
+    // materialize inputs + expected verdicts up front, so the replay
+    // loop measures serving rather than generation
+    struct Job {
+        pattern: usize,
+        input: Vec<u8>,
+        at_us: u64,
+        expect: bool,
+    }
+    let mut jobs = Vec::with_capacity(events.len());
+    for ev in events {
+        let idx = ev.pattern % pool.len();
+        let case = &pool[idx];
+        let mut input: Vec<u8> = (0..ev.len)
+            .map(|_| case.alphabet[rng.usize_below(case.alphabet.len())])
+            .collect();
+        if let Some(w) = &case.witness {
+            if rng.below(3) == 0 && w.len() <= input.len() {
+                input[..w.len()].copy_from_slice(w);
+            }
+        }
+        let expect = refs[idx].run_bytes(&input)?.accepted;
+        jobs.push(Job { pattern: idx, input, at_us: ev.at_us, expect });
+    }
+
+    let server = Server::start(config)?;
+    let mut tickets = Vec::with_capacity(jobs.len());
+    let mut bytes = 0u64;
+    let mut last_at = jobs.first().map_or(0, |j| j.at_us);
+    for job in &jobs {
+        if pace_cap_us > 0 && job.at_us > last_at {
+            let gap = (job.at_us - last_at).min(pace_cap_us);
+            std::thread::sleep(Duration::from_micros(gap));
+        }
+        last_at = job.at_us;
+        bytes += job.input.len() as u64;
+        tickets.push(
+            server.submit(pool[job.pattern].pattern.clone(), job.input.clone()),
+        );
+    }
+
+    let mut mismatches = 0usize;
+    let mut rejected = 0usize;
+    let mut errors = 0usize;
+    for (ticket, job) in tickets.into_iter().zip(&jobs) {
+        match ticket.wait() {
+            Ok(out) => {
+                if out.accepted != job.expect {
+                    mismatches += 1;
+                }
+            }
+            Err(ServeError::Overloaded { .. }) => rejected += 1,
+            Err(_) => errors += 1,
+        }
+    }
+    let stats = server.shutdown();
+    Ok(StressReport { stats, rejected, mismatches, errors, bytes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::select::DfaProps;
+    use crate::engine::serve::{Admission, PriorityPolicy};
+
+    #[test]
+    fn zipf_concentrates_with_skew() {
+        let mut rng = Rng::new(1);
+        let mut head_share = |skew: f64| {
+            let z = Zipf::new(64, skew);
+            let n = 8000;
+            let hits = (0..n).filter(|_| z.sample(&mut rng) == 0).count();
+            hits as f64 / n as f64
+        };
+        let uniform = head_share(0.0);
+        let mild = head_share(0.9);
+        let steep = head_share(1.6);
+        assert!(uniform < 0.05, "uniform head share {uniform}");
+        assert!(mild > uniform * 2.0, "mild {mild} vs uniform {uniform}");
+        assert!(steep > mild, "steep {steep} vs mild {mild}");
+    }
+
+    #[test]
+    fn heavy_tail_straddles_the_probe_boundary() {
+        let probe_max = 1 << 12;
+        let sizes = HeavyTailSizes::straddling(probe_max);
+        let mut rng = Rng::new(2);
+        let n = 4000;
+        let scans = (0..n)
+            .filter(|_| sizes.sample(&mut rng) > probe_max)
+            .count();
+        let frac = scans as f64 / n as f64;
+        assert!(
+            (0.02..0.30).contains(&frac),
+            "scan fraction {frac} out of the straddling band"
+        );
+        // the analytic tail agrees with the empirical one, loosely
+        let expect = sizes.tail_fraction(probe_max);
+        assert!((frac - expect).abs() < 0.08, "{frac} vs {expect}");
+    }
+
+    #[test]
+    fn traces_are_deterministic_and_bursty() {
+        let cfg = TraceConfig::default();
+        let a = trace(&cfg, 7);
+        let b = trace(&cfg, 7);
+        assert_eq!(a.len(), cfg.requests);
+        assert!(a
+            .iter()
+            .zip(&b)
+            .all(|(x, y)| x.at_us == y.at_us
+                && x.pattern == y.pattern
+                && x.len == y.len));
+        let c = trace(&cfg, 8);
+        assert!(a
+            .iter()
+            .zip(&c)
+            .any(|(x, y)| x.pattern != y.pattern || x.len != y.len));
+        // bursty: some instant carries more than one arrival, and time
+        // still advances across the whole trace
+        let same_instant = a.windows(2).filter(|w| w[0].at_us == w[1].at_us);
+        assert!(same_instant.count() > 0, "no bursts generated");
+        assert!(a.last().unwrap().at_us > a[0].at_us, "time never advanced");
+    }
+
+    #[test]
+    fn permutation_dfa_has_gamma_one_everywhere() {
+        for r in [1usize, 2, 4] {
+            let dfa = permutation_dfa(32, 6, 99);
+            let props = DfaProps::analyze(&dfa, r);
+            assert_eq!(props.i_max, 32, "lookahead r={r} shrank a bijection");
+            assert!((props.gamma - 1.0).abs() < 1e-9);
+        }
+        // each symbol column really is a permutation
+        let dfa = permutation_dfa(32, 6, 99);
+        for s in 0..6u32 {
+            let mut seen = vec![false; 32];
+            for q in 0..32u32 {
+                seen[dfa.step(q, s) as usize] = true;
+            }
+            assert!(seen.iter().all(|&x| x), "symbol {s} is not a bijection");
+        }
+    }
+
+    #[test]
+    fn sink_heavy_dfa_is_speculation_friendly_and_accepts_its_witness() {
+        let (dfa, witness) = sink_heavy_dfa(30, 8, 5);
+        let props = DfaProps::analyze(&dfa, 4);
+        assert!(
+            props.gamma <= 0.25,
+            "sink-heavy gamma {} should be tiny",
+            props.gamma
+        );
+        // the needle prefix reaches the absorbing accept state
+        let mut input = witness.clone();
+        input.extend_from_slice(&[0, 1, 2, 3]);
+        assert!(dfa.accepts_bytes(&input));
+        // an off-needle first byte lands in the sink forever
+        let mut wrong = witness.clone();
+        wrong[0] = (wrong[0] + 1) % 8;
+        assert!(!dfa.accepts_bytes(&wrong));
+    }
+
+    #[test]
+    fn dense_frontier_dfa_keeps_a_large_frontier() {
+        let dfa = dense_frontier_dfa(128, 8, 11);
+        let props = DfaProps::analyze(&dfa, 4);
+        assert!(
+            props.i_max > 128 / 8,
+            "dense automaton frontier collapsed: I_max {}",
+            props.i_max
+        );
+        assert!(dfa.accepting.iter().any(|&a| a));
+    }
+
+    #[test]
+    fn corpus_is_deterministic_and_compiles() {
+        let corpus = pathological_corpus(0xADE5);
+        assert!(corpus.len() >= 10);
+        let again = pathological_corpus(0xADE5);
+        assert!(corpus
+            .iter()
+            .zip(&again)
+            .all(|(a, b)| a.name == b.name && a.pattern == b.pattern));
+        for case in &corpus {
+            CompiledMatcher::compile(
+                &case.pattern,
+                Engine::Sequential,
+                Default::default(),
+            )
+            .unwrap_or_else(|e| panic!("{} failed to compile: {e:#}", case.name));
+            assert!(!case.alphabet.is_empty(), "{}", case.name);
+        }
+    }
+
+    #[test]
+    fn replay_smoke_is_failure_free() {
+        // a small flood through a bounded queue: every verdict must
+        // match sequential and the counters must reconcile
+        let pool = vec![
+            AdversarialCase {
+                name: "lit".into(),
+                pattern: Pattern::Regex("(ab|cd)+e".into()),
+                alphabet: b"abcde".to_vec(),
+                witness: Some(b"abe".to_vec()),
+                ast_safe: true,
+            },
+            AdversarialCase {
+                name: "cls".into(),
+                pattern: Pattern::Regex("[ab]c[cd]".into()),
+                alphabet: b"abcd".to_vec(),
+                witness: Some(b"acd".to_vec()),
+                ast_safe: true,
+            },
+        ];
+        let events = trace(
+            &TraceConfig {
+                requests: 60,
+                pool: 2,
+                skew: 1.0,
+                probe_max_bytes: 512,
+                burst: 8,
+                gap_us: 100,
+            },
+            3,
+        );
+        let config = ServeConfig {
+            workers: 2,
+            max_queue: 16,
+            admission: Admission::Block,
+            priority: PriorityPolicy::SizeAware,
+            probe_max_bytes: 512,
+            age_limit: 2,
+            calibrate_on_start: false,
+            ..ServeConfig::default()
+        };
+        let report = replay_trace(config, &pool, &events, 17, 0).unwrap();
+        assert_eq!(report.mismatches, 0);
+        assert_eq!(report.errors, 0);
+        assert_eq!(report.rejected, 0, "Block admission never rejects");
+        let s = &report.stats;
+        assert_eq!(s.submitted, 60);
+        assert_eq!(s.served + s.failed, s.submitted);
+        assert!(s.max_queue_depth <= 16, "depth {}", s.max_queue_depth);
+        assert!(
+            s.max_bypass_streak <= 2 + 1,
+            "streak {} vs age_limit 2 (+1 fused drain credit)",
+            s.max_bypass_streak
+        );
+    }
+}

@@ -1,0 +1,473 @@
+//! Adversarial stress suite: the `util::workload` generators driven
+//! against every layer that claims a bound.
+//!
+//!  * **Differential**: every engine must agree with
+//!    `Engine::Sequential` on the pathological corpus — permutation
+//!    automata (γ = 1, speculation's structural worst case),
+//!    dense-frontier and sink-heavy automata, ReDoS regexes and
+//!    anchored patterns.  Backtracking is allowed to answer with its
+//!    fuel-budget error on the exponential cases; it is never allowed
+//!    to hang or disagree.
+//!  * **Serving bounds**: a bursty Zipfian heavy-tail trace replayed
+//!    against a live [`Server`] must respect the PR 5 invariants —
+//!    the measured starvation bound (`max_bypass_streak ≤ age_limit`
+//!    without cross-pattern fusion), the queue-depth bound under
+//!    `Admission::Block`, load-shedding accounting under
+//!    `Admission::Reject`, and counter reconciliation after drain.
+//!  * **Preempt/resume**: a long scan flooded by probes must park on
+//!    its checkpoint and resume without changing its verdict.
+//!  * **Cache churn**: Zipfian popularity over a pool larger than the
+//!    pattern cache — the compile-cache hit rate must grow with skew,
+//!    and the outcome memo must fire on repeated (pattern, input)
+//!    pairs while epoch recalibration never serves a stale verdict.
+//!
+//! Every corpus derives from [`test_seed`]: a CI failure prints the
+//! seed, and `SPECDFA_TEST_SEED=<value>` replays it exactly.
+
+use specdfa::engine::{
+    Admission, CompiledMatcher, Engine, ExecPolicy, Matcher, Pattern,
+    PriorityPolicy, ServeConfig,
+};
+use specdfa::util::rng::{test_seed, Rng};
+use specdfa::util::workload::{
+    pathological_corpus, replay_trace, trace, AdversarialCase, TraceConfig,
+};
+
+/// Processor count for the multicore engines (chunk boundaries at
+/// multiples of n/PROCS).
+const PROCS: usize = 4;
+
+fn policy() -> ExecPolicy {
+    ExecPolicy {
+        processors: PROCS,
+        lookahead: 2,
+        // bounded so exponential backtracking degrades into a skipped
+        // comparison instead of a hung suite
+        backtrack_fuel: 1 << 22,
+        ..ExecPolicy::default()
+    }
+}
+
+/// Engines comparable on AST-safe patterns (unanchored regex search).
+fn engines() -> Vec<(&'static str, Engine)> {
+    vec![
+        ("seq", Engine::Sequential),
+        ("spec", Engine::Speculative { adaptive: false }),
+        ("spec-adaptive", Engine::Speculative { adaptive: true }),
+        ("simd", Engine::Simd { variant: None }),
+        ("cloud", Engine::Cloud { nodes: 3 }),
+        ("shard", Engine::Shard { nodes: 3 }),
+        ("holub", Engine::HolubStekr),
+        ("backtrack", Engine::Backtracking),
+        ("grep", Engine::GrepLike),
+    ]
+}
+
+/// Engines comparable on raw automata and anchored patterns (the AST
+/// comparators refuse those).
+fn dfa_only_engines() -> Vec<(&'static str, Engine)> {
+    engines()
+        .into_iter()
+        .filter(|(name, _)| *name != "backtrack" && *name != "grep")
+        .collect()
+}
+
+/// Adversarial input lengths: empty, sub-chunk, chunk-boundary
+/// straddling, and large enough that speculation actually partitions.
+const LENGTHS: &[usize] = &[0, 1, 3, 4, 17, 256, 1024, 4096];
+
+#[test]
+fn pathological_corpus_engines_agree_with_sequential() {
+    let seed = test_seed(0xADE5_2026);
+    eprintln!(
+        "adversarial corpus seed: {seed:#x} \
+         (SPECDFA_TEST_SEED={seed:#x} replays this corpus exactly)"
+    );
+    let corpus = pathological_corpus(seed);
+    let mut rng = Rng::new(seed ^ 1);
+    for case in &corpus {
+        let reference =
+            CompiledMatcher::compile(&case.pattern, Engine::Sequential, policy())
+                .unwrap_or_else(|e| panic!("{}: reference compile: {e:#}", case.name));
+        let list =
+            if case.ast_safe { engines() } else { dfa_only_engines() };
+        let pool: Vec<(&'static str, CompiledMatcher)> = list
+            .into_iter()
+            .map(|(name, eng)| {
+                    let m = CompiledMatcher::compile(&case.pattern, eng, policy())
+                        .unwrap_or_else(|e| {
+                            panic!("{}/{name}: compile: {e:#}", case.name)
+                        });
+                    (name, m)
+                })
+                .collect();
+        let mut inputs: Vec<Vec<u8>> = Vec::new();
+        for &n in LENGTHS {
+            let mut input: Vec<u8> = (0..n)
+                .map(|_| *rng.choose(&case.alphabet))
+                .collect();
+            inputs.push(input.clone());
+            if let Some(w) = &case.witness {
+                if w.len() <= n {
+                    input[..w.len()].copy_from_slice(w);
+                    inputs.push(input);
+                }
+            }
+        }
+        if case.ast_safe {
+            // the pure-repetition prefix is the exponential
+            // backtracking trigger: the budget must fire, not a hang
+            inputs.push(vec![b'a'; 48]);
+        }
+        for input in &inputs {
+            let expect = reference
+                .run_bytes(input)
+                .unwrap_or_else(|e| {
+                    panic!("{}: sequential failed: {e:#}", case.name)
+                })
+                .accepted;
+            for (name, matcher) in &pool {
+                match matcher.run_bytes(input) {
+                    Ok(out) => assert_eq!(
+                        out.accepted, expect,
+                        "{}/{name} disagrees with sequential on \
+                         {}-byte input (seed {seed:#x})",
+                        case.name,
+                        input.len()
+                    ),
+                    // the only tolerated failure: an exhausted
+                    // backtracking budget on a ReDoS case
+                    Err(e) => assert!(
+                        format!("{e:#}").contains("fuel"),
+                        "{}/{name}: unexpected error: {e:#}",
+                        case.name
+                    ),
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn bursty_zipfian_trace_respects_serving_bounds() {
+    let seed = test_seed(0xB0B5_2026);
+    eprintln!(
+        "trace seed: {seed:#x} (SPECDFA_TEST_SEED={seed:#x} replays)"
+    );
+    let pool = pathological_corpus(seed);
+    let probe_max = 1 << 10;
+    let events = trace(
+        &TraceConfig {
+            requests: 300,
+            pool: pool.len(),
+            skew: 1.2,
+            probe_max_bytes: probe_max,
+            burst: 12,
+            gap_us: 200,
+        },
+        seed ^ 2,
+    );
+    let age_limit = 3u64;
+    let config = ServeConfig {
+        workers: 3,
+        max_queue: 24,
+        admission: Admission::Block,
+        priority: PriorityPolicy::SizeAware,
+        probe_max_bytes: probe_max,
+        age_limit,
+        // fusion's drain credit would raise the streak ceiling to
+        // age_limit + 1; keep the clean bound under test here
+        fuse_cross_pattern: false,
+        calibrate_on_start: false,
+        policy: policy(),
+        ..ServeConfig::default()
+    };
+    let report = replay_trace(config, &pool, &events, seed ^ 3, 0).unwrap();
+    assert_eq!(report.mismatches, 0, "served verdict diverged (seed {seed:#x})");
+    assert_eq!(report.errors, 0);
+    assert_eq!(report.rejected, 0, "Block admission never rejects");
+    let s = &report.stats;
+    assert_eq!(s.submitted, 300);
+    assert_eq!(s.served + s.failed, s.submitted, "drain lost a request");
+    assert_eq!(s.failed, 0);
+    assert!(
+        s.max_queue_depth <= 24,
+        "queue bound violated: depth {} > 24",
+        s.max_queue_depth
+    );
+    assert!(
+        s.max_bypass_streak <= age_limit,
+        "starvation bound violated: a scan was bypassed {} consecutive \
+         times with age_limit {age_limit} (seed {seed:#x})",
+        s.max_bypass_streak
+    );
+    assert!(
+        s.scan_bypasses >= s.max_bypass_streak,
+        "total bypasses {} below the observed streak {}",
+        s.scan_bypasses,
+        s.max_bypass_streak
+    );
+}
+
+#[test]
+fn reject_admission_sheds_load_with_consistent_accounting() {
+    let seed = test_seed(0x5EED_2026);
+    eprintln!("trace seed: {seed:#x} (SPECDFA_TEST_SEED replays)");
+    let pool = pathological_corpus(seed);
+    let requests = 400;
+    let events = trace(
+        &TraceConfig {
+            requests,
+            pool: pool.len(),
+            skew: 1.0,
+            probe_max_bytes: 512,
+            burst: 32,
+            gap_us: 100,
+        },
+        seed ^ 2,
+    );
+    let config = ServeConfig {
+        workers: 1,
+        max_queue: 4,
+        admission: Admission::Reject,
+        priority: PriorityPolicy::SizeAware,
+        probe_max_bytes: 512,
+        age_limit: 2,
+        calibrate_on_start: false,
+        policy: policy(),
+        ..ServeConfig::default()
+    };
+    // pace 0: flood — a single worker behind a depth-4 queue must shed
+    let report = replay_trace(config, &pool, &events, seed ^ 3, 0).unwrap();
+    assert_eq!(report.mismatches, 0);
+    assert_eq!(report.errors, 0);
+    assert!(
+        report.rejected > 0,
+        "depth-4 Reject queue under a {requests}-request flood shed nothing"
+    );
+    let s = &report.stats;
+    assert_eq!(s.rejected as usize, report.rejected);
+    assert_eq!(
+        s.submitted as usize + report.rejected,
+        requests,
+        "every request is admitted or rejected, never both"
+    );
+    assert_eq!(s.served + s.failed, s.submitted);
+    assert!(s.max_queue_depth <= 4, "depth {}", s.max_queue_depth);
+}
+
+#[test]
+fn preempted_scans_resume_with_correct_verdicts_under_flood() {
+    use specdfa::util::workload::TraceEvent;
+    let seed = test_seed(0xF10D_2026);
+    eprintln!("flood seed: {seed:#x} (SPECDFA_TEST_SEED replays)");
+    let pool = pathological_corpus(seed);
+    // hand-crafted flood: one huge scan first, then a probe storm, so
+    // the single worker is mid-scan while probes queue behind it
+    let scan_idx = pool
+        .iter()
+        .position(|c| c.name.starts_with("sink"))
+        .expect("corpus always carries a sink-heavy case");
+    let mut events = vec![TraceEvent {
+        at_us: 0,
+        pattern: scan_idx,
+        len: 1 << 18,
+    }];
+    for i in 0..300 {
+        events.push(TraceEvent { at_us: 0, pattern: i, len: 64 });
+    }
+    let config = ServeConfig {
+        workers: 1,
+        max_queue: 0,
+        admission: Admission::Block,
+        priority: PriorityPolicy::SizeAware,
+        probe_max_bytes: 1 << 12,
+        age_limit: 4,
+        preempt_scans: true,
+        preempt_segment_bytes: 1 << 13,
+        calibrate_on_start: false,
+        policy: policy(),
+        ..ServeConfig::default()
+    };
+    let report = replay_trace(config, &pool, &events, seed ^ 3, 0).unwrap();
+    assert_eq!(report.mismatches, 0, "a resumed scan changed its verdict");
+    assert_eq!(report.errors, 0);
+    let s = &report.stats;
+    assert_eq!(s.served, 301);
+    assert!(
+        s.preemptions >= 1,
+        "a 256 KiB scan behind a 300-probe flood never parked \
+         (preempt_segment_bytes 8 KiB)"
+    );
+    assert!(
+        s.resumed_scans >= 1,
+        "parked scans were never picked back up"
+    );
+}
+
+/// Pool of cheap distinct literal patterns for the cache-churn tests —
+/// popularity is the variable under test, pattern cost is not.
+fn literal_pool(k: usize) -> Vec<AdversarialCase> {
+    (0..k)
+        .map(|i| AdversarialCase {
+            name: format!("lit-{i}"),
+            pattern: Pattern::Regex(format!("x{i}y")),
+            // single-symbol alphabet: inputs of equal length are
+            // *identical*, so the outcome memo sees repeats
+            alphabet: b"a".to_vec(),
+            witness: None,
+            ast_safe: true,
+        })
+        .collect()
+}
+
+#[test]
+fn zipfian_churn_hit_rate_grows_with_skew_and_memo_fires() {
+    let seed = test_seed(0xCAC4_2026);
+    eprintln!("churn seed: {seed:#x} (SPECDFA_TEST_SEED replays)");
+    let pool = literal_pool(32);
+    let mut run = |skew: f64| {
+        let events = trace(
+            &TraceConfig {
+                requests: 500,
+                pool: pool.len(),
+                skew,
+                probe_max_bytes: 512,
+                burst: 8,
+                gap_us: 100,
+            },
+            seed ^ 2,
+        );
+        let config = ServeConfig {
+            workers: 2,
+            // cache far smaller than the pool: the tail must churn
+            cache_patterns: 8,
+            cache_outcomes: 256,
+            max_queue: 64,
+            admission: Admission::Block,
+            probe_max_bytes: 512,
+            calibrate_on_start: false,
+            policy: policy(),
+            ..ServeConfig::default()
+        };
+        let report = replay_trace(config, &pool, &events, seed ^ 3, 0).unwrap();
+        assert_eq!(report.mismatches, 0, "stale verdict at skew {skew}");
+        assert_eq!(report.errors, 0);
+        let s = report.stats;
+        let hit = s.cache_hits as f64 / (s.cache_hits + s.compiles).max(1) as f64;
+        (hit, s.outcome_hits, s.evictions)
+    };
+    let (uniform_hit, _, uniform_evictions) = run(0.0);
+    let (mild_hit, _, _) = run(0.8);
+    let (steep_hit, steep_memo, _) = run(1.6);
+    assert!(
+        uniform_evictions > 0,
+        "a 32-pattern pool over an 8-entry cache must evict"
+    );
+    assert!(
+        steep_hit > uniform_hit,
+        "compile-cache hit rate should grow with skew: \
+         uniform {uniform_hit:.3} vs steep {steep_hit:.3} (seed {seed:#x})"
+    );
+    assert!(
+        steep_hit >= mild_hit * 0.9,
+        "steep skew {steep_hit:.3} collapsed below mild {mild_hit:.3}"
+    );
+    assert!(
+        steep_memo > 0,
+        "identical repeated inputs never hit the outcome memo"
+    );
+}
+
+#[test]
+fn epoch_recalibration_never_serves_stale_verdicts() {
+    let seed = test_seed(0xE0C4_2026);
+    eprintln!("epoch seed: {seed:#x} (SPECDFA_TEST_SEED replays)");
+    let pool = literal_pool(6);
+    let events = trace(
+        &TraceConfig {
+            requests: 200,
+            pool: pool.len(),
+            skew: 0.9,
+            probe_max_bytes: 512,
+            burst: 8,
+            gap_us: 100,
+        },
+        seed ^ 2,
+    );
+    let config = ServeConfig {
+        workers: 2,
+        // recalibrate every handful of requests: verdicts must be
+        // epoch-stable even while thresholds churn underneath
+        recalibrate_every: 16,
+        profile_runs: 1,
+        profile_sample_syms: 1 << 10,
+        max_queue: 32,
+        admission: Admission::Block,
+        probe_max_bytes: 512,
+        calibrate_on_start: true,
+        policy: policy(),
+        ..ServeConfig::default()
+    };
+    let report = replay_trace(config, &pool, &events, seed ^ 3, 0).unwrap();
+    assert_eq!(
+        report.mismatches, 0,
+        "recalibration churn produced a stale verdict (seed {seed:#x})"
+    );
+    assert_eq!(report.errors, 0);
+    let s = &report.stats;
+    assert!(
+        s.recalibrations >= 2,
+        "recalibrate_every=16 over 200 requests recalibrated only {} times",
+        s.recalibrations
+    );
+    assert_eq!(s.served + s.failed, s.submitted);
+}
+
+/// Soak variant of the serving-bounds test: an order of magnitude more
+/// load. `cargo test --release --test adversarial -- --ignored` runs it.
+#[test]
+#[ignore = "soak: ~10x the quick trace; run with -- --ignored"]
+fn soak_bursty_trace_bounds_hold_at_scale() {
+    let seed = test_seed(0x50AC_2026);
+    eprintln!("soak seed: {seed:#x} (SPECDFA_TEST_SEED replays)");
+    let pool = pathological_corpus(seed);
+    let probe_max = 1 << 10;
+    let events = trace(
+        &TraceConfig {
+            requests: 4000,
+            pool: pool.len(),
+            skew: 1.1,
+            probe_max_bytes: probe_max,
+            burst: 24,
+            gap_us: 150,
+        },
+        seed ^ 2,
+    );
+    let age_limit = 4u64;
+    let config = ServeConfig {
+        workers: 4,
+        max_queue: 64,
+        admission: Admission::Block,
+        priority: PriorityPolicy::SizeAware,
+        probe_max_bytes: probe_max,
+        age_limit,
+        fuse_cross_pattern: false,
+        preempt_scans: true,
+        preempt_segment_bytes: 1 << 13,
+        calibrate_on_start: false,
+        policy: policy(),
+        ..ServeConfig::default()
+    };
+    let report = replay_trace(config, &pool, &events, seed ^ 3, 1000).unwrap();
+    assert_eq!(report.mismatches, 0);
+    assert_eq!(report.errors, 0);
+    let s = &report.stats;
+    assert_eq!(s.served + s.failed + s.rejected, 4000);
+    assert!(s.max_queue_depth <= 64);
+    assert!(
+        s.max_bypass_streak <= age_limit,
+        "soak starvation bound violated: streak {} (seed {seed:#x})",
+        s.max_bypass_streak
+    );
+}

@@ -11,7 +11,7 @@
 use specdfa::engine::{
     CompiledMatcher, Engine, ExecPolicy, Matcher, Pattern,
 };
-use specdfa::util::rng::Rng;
+use specdfa::util::rng::{test_seed, Rng};
 
 /// The symbols patterns are built from.
 const ALPHABET: &[u8] = b"abcd";
@@ -224,7 +224,12 @@ fn check_case(
 
 #[test]
 fn randomized_corpus_all_engines_agree_with_sequential() {
-    let mut gen = PatternGen { rng: Rng::new(0xD1FF_2024) };
+    let seed = test_seed(0xD1FF_2024);
+    eprintln!(
+        "differential corpus seed: {seed:#x} \
+         (SPECDFA_TEST_SEED={seed:#x} reproduces this corpus exactly)"
+    );
+    let mut gen = PatternGen { rng: Rng::new(seed) };
     let mut cases = 0usize;
     let mut accepts = 0usize;
     let mut rejects = 0usize;
@@ -335,7 +340,12 @@ fn dfa_only_corpus_nested_repeats_and_anchors() {
     // the deepened fuzz mode: nested repeats, start/end anchors, and
     // whole-input (RegexExact) semantics — checked across every DFA
     // engine, with the serving default convergence collapsing on
-    let mut gen = PatternGen { rng: Rng::new(0xD1FF_4202) };
+    let seed = test_seed(0xD1FF_4202);
+    eprintln!(
+        "DFA-only corpus seed: {seed:#x} \
+         (SPECDFA_TEST_SEED={seed:#x} reproduces this corpus exactly)"
+    );
+    let mut gen = PatternGen { rng: Rng::new(seed) };
     let mut cases = 0usize;
     for round in 0..24usize {
         let (core, witness) = gen.nested(2);

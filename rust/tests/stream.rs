@@ -229,3 +229,103 @@ fn preempted_scan_resumes_and_reports_the_one_shot_verdict() {
     );
     assert_eq!(stats.failed, 0);
 }
+
+/// Satellite: the `SDCK` wire format under hostile bytes.  Whatever we
+/// do to a serialized frame — cut it anywhere, flip any bit, append
+/// garbage — `Checkpoint::from_bytes` must return an error or a
+/// well-formed checkpoint; it must never panic.  And a frame that does
+/// parse but belongs to a different automaton must be refused at
+/// resume time (wrong |Q|), not silently continued.
+#[test]
+fn checkpoint_frame_survives_corruption_without_panicking() {
+    let seed = specdfa::util::rng::test_seed(0x5DC4_2026);
+    eprintln!(
+        "corruption seed: {seed:#x} (SPECDFA_TEST_SEED={seed:#x} replays)"
+    );
+    let cm = compile("(ab|ba)+c");
+    let mut sm = StreamMatcher::with_fold_bytes(&cm, 8);
+    sm.feed(b"abbaabba"); // folds once
+    sm.feed(b"abb"); // leaves pending bytes in the frame
+    let ckpt = sm.checkpoint();
+    let frame = ckpt.to_bytes();
+
+    // the untouched frame round-trips exactly
+    let rt = Checkpoint::from_bytes(&frame).expect("valid frame parses");
+    assert_eq!(rt, ckpt);
+
+    // (1) truncation at EVERY byte boundary is rejected
+    for cut in 0..frame.len() {
+        assert!(
+            Checkpoint::from_bytes(&frame[..cut]).is_err(),
+            "a {cut}-byte prefix of a {}-byte frame parsed",
+            frame.len()
+        );
+    }
+
+    // (2) trailing garbage is rejected — a frame is exact, not a prefix
+    for extra in [1usize, 7, 64] {
+        let mut long = frame.clone();
+        long.extend(std::iter::repeat(0xA5).take(extra));
+        assert!(
+            Checkpoint::from_bytes(&long).is_err(),
+            "{extra} trailing bytes accepted"
+        );
+    }
+
+    // (3) every single-bit flip either fails to parse or yields a
+    // well-formed checkpoint (flips inside pending bytes or counters
+    // are legitimately undetectable without a checksum) — never a panic
+    let mut parsed_ok = 0usize;
+    for bit in 0..frame.len() * 8 {
+        let mut bad = frame.clone();
+        bad[bit / 8] ^= 1 << (bit % 8);
+        if let Ok(c) = Checkpoint::from_bytes(&bad) {
+            parsed_ok += 1;
+            // whatever parsed is internally consistent
+            assert!(c.num_states() > 0);
+            assert!(c.offset() >= c.buffered() as u64);
+        }
+    }
+    // structural fields dominate the frame, so most flips must be caught
+    assert!(
+        parsed_ok < frame.len() * 8 / 2,
+        "{parsed_ok} of {} bit flips went unnoticed",
+        frame.len() * 8
+    );
+
+    // (4) random garbage never parses (the magic gate)
+    let mut rng = Rng::new(seed);
+    for _ in 0..200 {
+        let n = rng.usize_below(96);
+        let junk: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+        assert!(Checkpoint::from_bytes(&junk).is_err());
+    }
+
+    // (5) a valid frame for a DIFFERENT automaton parses but must be
+    // refused at resume: |Q| mismatch is a hard error, not a guess
+    // a long literal needs one chain state per character, so its |Q|
+    // cannot collide with the small alternation DFA above
+    let other = compile("aabbaabbaacc");
+    let other_ckpt = StreamMatcher::new(&other).checkpoint();
+    assert_ne!(
+        other_ckpt.num_states(),
+        ckpt.num_states(),
+        "test premise: the two DFAs must differ in |Q|"
+    );
+    let alien = Checkpoint::from_bytes(&other_ckpt.to_bytes()).unwrap();
+    assert!(
+        StreamMatcher::from_checkpoint(&cm, alien).is_err(),
+        "resumed a checkpoint from a different automaton"
+    );
+
+    // (6) and the happy path still works end to end after all that:
+    // resume from the serialized frame and finish equals one-shot
+    let resumed = Checkpoint::from_bytes(&frame).unwrap();
+    let mut sm2 = StreamMatcher::from_checkpoint(&cm, resumed).unwrap();
+    sm2.feed(b"aabbac");
+    let full: Vec<u8> = b"abbaabba".iter().chain(b"abb").chain(b"aabbac").copied().collect();
+    let want = cm.run_bytes(&full).unwrap();
+    let got = sm2.finish();
+    assert_eq!(got.accepted, want.accepted);
+    assert_eq!(got.final_state, want.final_state);
+}
