@@ -1,0 +1,311 @@
+//! Deterministic fault injection for the process cluster.
+//!
+//! Robustness claims are only as good as the failures they were tested
+//! against, so every failure mode the frontend recovers from is
+//! *injectable on purpose*: a [`FaultPlan`] rides into each worker on
+//! its command line (`specdfa worker --fault SPEC`) and the worker's
+//! transport consults it before every outbound frame and every byte of
+//! matching work.  Plans are pure data — parsing a spec, printing it
+//! back and parsing it again yields the same plan — so a CI failure
+//! reproduces from the spec string alone.
+//!
+//! Spec grammar (comma-separated directives, one plan per worker):
+//!
+//! ```text
+//!   kill@BYTES          exit mid-chunk after matching BYTES bytes
+//!   drop=KIND[:N]       silently skip the Nth outbound KIND frame
+//!   trunc=KIND[:N]      write half of the Nth KIND frame, then exit
+//!   delay=MS            sleep MS ms before every outbound frame
+//!   stall               stop answering heartbeats (but keep serving)
+//! ```
+//!
+//! `KIND` is a [`FrameKind`] name (`result`, `checkpoint`, …) or `any`;
+//! `N` is 1-based and defaults to 1.  A cluster-level spec targets
+//! workers by index: `w1:kill@65536;w0:stall`.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::proto::FrameKind;
+
+/// Which outbound frames a [`FaultPlan`] directive selects.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameSel {
+    /// every frame kind counts toward the occurrence number
+    Any,
+    /// only frames of this kind count
+    Kind(FrameKind),
+}
+
+impl FrameSel {
+    fn name(self) -> String {
+        match self {
+            FrameSel::Any => "any".to_string(),
+            FrameSel::Kind(k) => k.name().to_string(),
+        }
+    }
+
+    fn parse(name: &str) -> Result<FrameSel> {
+        if name == "any" {
+            return Ok(FrameSel::Any);
+        }
+        Ok(FrameSel::Kind(FrameKind::parse(name)?))
+    }
+}
+
+/// What the transport should do with the outbound frame it is about to
+/// write (decided by [`Injector::action`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Action {
+    /// write the frame normally
+    Send,
+    /// skip the frame entirely (the stream stays aligned; the peer
+    /// simply never sees it and times out waiting)
+    Drop,
+    /// write only the first half of the encoding, then crash — the
+    /// peer's decoder sees a truncated frame
+    Truncate,
+}
+
+/// A deterministic per-worker failure script.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// exit the process after this many bytes of chunk matching
+    pub kill_after_bytes: Option<u64>,
+    /// drop the Nth outbound frame matching the selector (1-based)
+    pub drop: Option<(FrameSel, u32)>,
+    /// truncate the Nth outbound frame matching the selector (1-based)
+    pub truncate: Option<(FrameSel, u32)>,
+    /// sleep this long before every outbound frame, in milliseconds
+    pub delay_ms: Option<u64>,
+    /// swallow heartbeat probes instead of echoing them
+    pub stall_heartbeats: bool,
+}
+
+impl FaultPlan {
+    /// True when the plan injects nothing.
+    pub fn is_benign(&self) -> bool {
+        *self == FaultPlan::default()
+    }
+
+    /// Parse a comma-separated directive list (see module docs).
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for directive in spec.split(',') {
+            let directive = directive.trim();
+            if directive.is_empty() {
+                continue;
+            }
+            if directive == "stall" {
+                plan.stall_heartbeats = true;
+            } else if let Some(bytes) = directive.strip_prefix("kill@") {
+                plan.kill_after_bytes = Some(
+                    bytes.parse().context("kill@BYTES wants an integer")?,
+                );
+            } else if let Some(ms) = directive.strip_prefix("delay=") {
+                plan.delay_ms =
+                    Some(ms.parse().context("delay=MS wants an integer")?);
+            } else if let Some(sel) = directive.strip_prefix("drop=") {
+                plan.drop = Some(parse_sel(sel)?);
+            } else if let Some(sel) = directive.strip_prefix("trunc=") {
+                plan.truncate = Some(parse_sel(sel)?);
+            } else {
+                bail!("unknown fault directive {directive:?}");
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Print the plan back as a spec string ([`FaultPlan::parse`]
+    /// roundtrips it).
+    pub fn to_spec(&self) -> String {
+        let mut parts = Vec::new();
+        if let Some(b) = self.kill_after_bytes {
+            parts.push(format!("kill@{b}"));
+        }
+        if let Some((sel, n)) = self.drop {
+            parts.push(format!("drop={}:{n}", sel.name()));
+        }
+        if let Some((sel, n)) = self.truncate {
+            parts.push(format!("trunc={}:{n}", sel.name()));
+        }
+        if let Some(ms) = self.delay_ms {
+            parts.push(format!("delay={ms}"));
+        }
+        if self.stall_heartbeats {
+            parts.push("stall".to_string());
+        }
+        parts.join(",")
+    }
+}
+
+fn parse_sel(text: &str) -> Result<(FrameSel, u32)> {
+    let (name, n) = match text.split_once(':') {
+        Some((name, n)) => {
+            (name, n.parse::<u32>().context("frame ordinal wants an integer")?)
+        }
+        None => (text, 1),
+    };
+    if n == 0 {
+        bail!("frame ordinals are 1-based");
+    }
+    Ok((FrameSel::parse(name)?, n))
+}
+
+/// Parse a cluster-level spec: `;`-separated `wK:PLAN` entries, each
+/// targeting worker index `K`.  A bare plan with no `wK:` prefix
+/// targets worker 0.
+pub fn parse_cluster_spec(spec: &str) -> Result<Vec<(usize, FaultPlan)>> {
+    let mut out = Vec::new();
+    for entry in spec.split(';') {
+        let entry = entry.trim();
+        if entry.is_empty() {
+            continue;
+        }
+        let (worker, plan_spec) = match entry.split_once(':') {
+            Some((w, rest)) if w.starts_with('w') => {
+                let idx: usize = w[1..]
+                    .parse()
+                    .with_context(|| format!("bad worker selector {w:?}"))?;
+                (idx, rest)
+            }
+            _ => (0, entry),
+        };
+        out.push((worker, FaultPlan::parse(plan_spec)?));
+    }
+    Ok(out)
+}
+
+/// The worker-side injection state machine: counts outbound frames per
+/// kind and tells the transport what to do with each one.
+#[derive(Debug)]
+pub struct Injector {
+    plan: FaultPlan,
+    sent_any: u32,
+    sent_by_kind: HashMap<FrameKind, u32>,
+}
+
+impl Injector {
+    /// Fresh injector for a plan.
+    pub fn new(plan: FaultPlan) -> Injector {
+        Injector { plan, sent_any: 0, sent_by_kind: HashMap::new() }
+    }
+
+    /// The plan being executed.
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Decide the fate of the next outbound frame of `kind`, advancing
+    /// the occurrence counters.  Also returns the pre-send delay.
+    pub fn action(&mut self, kind: FrameKind) -> (Action, Option<u64>) {
+        self.sent_any += 1;
+        let by_kind = self.sent_by_kind.entry(kind).or_insert(0);
+        *by_kind += 1;
+        let matches = |directive: &Option<(FrameSel, u32)>| match directive {
+            Some((FrameSel::Any, n)) => *n == self.sent_any,
+            Some((FrameSel::Kind(k), n)) => *k == kind && *n == *by_kind,
+            None => false,
+        };
+        let action = if matches(&self.plan.truncate) {
+            Action::Truncate
+        } else if matches(&self.plan.drop) {
+            Action::Drop
+        } else {
+            Action::Send
+        };
+        (action, self.plan.delay_ms)
+    }
+
+    /// True once `bytes_matched` crosses the plan's kill threshold.
+    pub fn should_kill(&self, bytes_matched: u64) -> bool {
+        matches!(self.plan.kill_after_bytes, Some(b) if bytes_matched >= b)
+    }
+
+    /// True when heartbeat probes must be swallowed.
+    pub fn stall_heartbeats(&self) -> bool {
+        self.plan.stall_heartbeats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_roundtrip_through_parse_and_print() {
+        for spec in [
+            "kill@65536",
+            "drop=result:1",
+            "trunc=checkpoint:2",
+            "delay=5",
+            "stall",
+            "kill@1024,drop=result:1,trunc=any:3,delay=2,stall",
+        ] {
+            let plan = FaultPlan::parse(spec).unwrap();
+            let printed = plan.to_spec();
+            assert_eq!(FaultPlan::parse(&printed).unwrap(), plan, "{spec}");
+        }
+        // defaulted ordinal prints explicitly but parses back equal
+        let plan = FaultPlan::parse("drop=result").unwrap();
+        assert_eq!(plan.drop, Some((FrameSel::Kind(FrameKind::Result), 1)));
+        assert!(FaultPlan::parse("").unwrap().is_benign());
+        assert!(FaultPlan::parse("explode").is_err());
+        assert!(FaultPlan::parse("kill@lots").is_err());
+        assert!(FaultPlan::parse("drop=result:0").is_err());
+        assert!(FaultPlan::parse("drop=warp").is_err());
+    }
+
+    #[test]
+    fn cluster_specs_target_workers() {
+        let plans =
+            parse_cluster_spec("w1:kill@4096;w0:stall;w2:drop=result")
+                .unwrap();
+        assert_eq!(plans.len(), 3);
+        assert_eq!(plans[0].0, 1);
+        assert_eq!(plans[0].1.kill_after_bytes, Some(4096));
+        assert_eq!(plans[1].0, 0);
+        assert!(plans[1].1.stall_heartbeats);
+        assert_eq!(plans[2].0, 2);
+        // bare plan targets worker 0
+        let bare = parse_cluster_spec("kill@10").unwrap();
+        assert_eq!(bare, vec![(0, FaultPlan::parse("kill@10").unwrap())]);
+        assert!(parse_cluster_spec("wx:stall").is_err());
+    }
+
+    #[test]
+    fn injector_counts_occurrences_per_kind() {
+        let plan = FaultPlan::parse("drop=checkpoint:2").unwrap();
+        let mut inj = Injector::new(plan);
+        assert_eq!(inj.action(FrameKind::Hello).0, Action::Send);
+        assert_eq!(inj.action(FrameKind::Checkpoint).0, Action::Send);
+        // an interleaved other-kind frame doesn't advance the counter
+        assert_eq!(inj.action(FrameKind::Result).0, Action::Send);
+        assert_eq!(inj.action(FrameKind::Checkpoint).0, Action::Drop);
+        assert_eq!(inj.action(FrameKind::Checkpoint).0, Action::Send);
+    }
+
+    #[test]
+    fn injector_any_selector_counts_all_frames() {
+        let plan = FaultPlan::parse("trunc=any:3,delay=7").unwrap();
+        let mut inj = Injector::new(plan);
+        assert_eq!(inj.action(FrameKind::Hello), (Action::Send, Some(7)));
+        assert_eq!(inj.action(FrameKind::CompileOk), (Action::Send, Some(7)));
+        assert_eq!(
+            inj.action(FrameKind::Checkpoint),
+            (Action::Truncate, Some(7))
+        );
+    }
+
+    #[test]
+    fn kill_threshold_and_stall() {
+        let inj = Injector::new(FaultPlan::parse("kill@100,stall").unwrap());
+        assert!(!inj.should_kill(99));
+        assert!(inj.should_kill(100));
+        assert!(inj.stall_heartbeats());
+        let benign = Injector::new(FaultPlan::default());
+        assert!(!benign.should_kill(u64::MAX));
+        assert!(!benign.stall_heartbeats());
+    }
+}

@@ -1,9 +1,11 @@
-//! Simulated cloud computing environment — the EC2 substitute.
+//! Cloud computing environments: the simulated EC2 substitute and a
+//! real multi-process cluster.
 //!
 //! The paper's cloud experiments (§5.2, §6.2) measure quantities that are
 //! functions of (a) per-core matching capacity, (b) message latency
-//! distributions, and (c) the merge topology.  All three are modelled here
-//! with the paper's own measured parameters:
+//! distributions, and (c) the merge topology.  All three are modelled in
+//! [`cloud`]/[`network`]/[`node`] with the paper's own measured
+//! parameters:
 //!
 //!  * inter-node L-vector transfer: mean 362 µs, σ = 3.6 %
 //!  * intra-node L-vector transfer: mean 2.68 µs, σ = 0.14 %
@@ -11,15 +13,28 @@
 //!  * hypervisor preemption: without the leave-one-core-idle rule, one
 //!    worker per node may run an order of magnitude slower
 //!
-//! Matching itself is executed for real (results are bit-identical to the
-//! sequential matcher — failure-freedom is preserved); only the *timing*
-//! of the parallel execution is simulated, since the build host exposes a
-//! single physical core (see DESIGN.md §Substitutions).
+//! In the simulated path, matching is executed for real (results are
+//! bit-identical to the sequential matcher — failure-freedom is
+//! preserved); only the *timing* of the parallel execution is simulated,
+//! since the build host exposes a single physical core (see DESIGN.md
+//! §Substitutions).
+//!
+//! The [`proc`] module replaces the timing model with actual deployment:
+//! `specdfa worker` processes speak the length-framed [`proto`] protocol
+//! over Unix/TCP sockets, and a [`ProcCluster`] frontend partitions,
+//! retries, fails over between them, and — under total cluster loss —
+//! degrades to an in-process match.  [`fault`] makes every failure mode
+//! deterministically injectable.
 
 pub mod cloud;
+pub mod fault;
 pub mod network;
 pub mod node;
+pub mod proc;
+pub mod proto;
 
 pub use cloud::{CloudMatcher, CloudOutcome};
+pub use fault::FaultPlan;
 pub use network::LatencyModel;
 pub use node::{ClusterSpec, InstanceType, NodeSpec};
+pub use proc::{ClusterStats, ProcCluster, ProcConfig, ProcOutcome};

@@ -1,0 +1,1253 @@
+//! Real multi-process cluster execution: a [`ProcCluster`] frontend
+//! drives `specdfa worker` **processes** over the [`super::proto`]
+//! frame protocol, replacing the timing model of [`super::cloud`] with
+//! actual sockets, actual crashes and actual recovery.
+//!
+//! ```text
+//!   ProcCluster ──spawn──▶ specdfa worker (× N, Unix/TCP sockets)
+//!        │   Hello(rate)◀──┘  §4.1 profile_host run *in-process*
+//!        │
+//!   match_bytes(pattern, input)
+//!        │ 1. heartbeat sweep: dead workers leave the partition
+//!        │ 2. Eq. (1) capacity weights → partition() → one chunk per
+//!        │    live worker
+//!        │ 3. Match frames fan out; workers stream Checkpoint
+//!        │    progress frames and finish with Result (an identity-
+//!        │    seeded L-vector covering the whole chunk)
+//!        │ 4. failed chunks retry with exponential backoff on a
+//!        │    survivor, resuming from the victim's last streamed
+//!        │    checkpoint (match_chunk_states_resume — no rescan)
+//!        │ 5. per-chunk L-vectors compose in order (Fig. 9 / Eq. 9);
+//!        │    entry q0 of the composition is the sequential verdict
+//!        ▼
+//!   Outcome (EngineKind::Cluster)  — or, when the cluster is gone,
+//!   the in-process Engine::Auto verdict (degraded, never an error)
+//! ```
+//!
+//! **Degradation ladder** (every rung still returns the
+//! `Engine::Sequential` verdict):
+//!
+//! 1. all workers healthy → full capacity-weighted fan-out;
+//! 2. some workers dead → partition over the survivors;
+//! 3. a chunk fails mid-flight → retry/backoff on a survivor, resumed
+//!    from its last checkpoint (`ClusterStats::failovers`,
+//!    `ClusterStats::resumed_bytes`);
+//! 4. retry budget exhausted or no live workers → in-process
+//!    `Engine::Auto` match (`ClusterStats::degraded`).
+//!
+//! Failure detection is deliberately *pessimistic*: any protocol
+//! hiccup on a connection (timeout, EOF, bad frame, wrong offset)
+//! marks that worker dead and it is never reused — correctness never
+//! depends on guessing how broken a broken peer is.  Fault injection
+//! ([`super::fault::FaultPlan`]) rides into each worker on its command
+//! line, so every rung of the ladder is exercised deterministically in
+//! CI.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::engine::outcome::{Detail, EngineKind, Outcome};
+use crate::engine::stream::{Checkpoint, StreamMatcher};
+use crate::engine::{
+    CompiledMatcher, Engine, ExecPolicy, Matcher, Pattern,
+};
+use crate::speculative::lvector::LVector;
+use crate::speculative::partition::partition;
+use crate::speculative::profile::{profile_host, weights_from_capacities};
+
+use super::fault::{parse_cluster_spec, Action, FaultPlan, Injector};
+use super::proto::{self, Frame};
+
+// ---------------------------------------------------------------------
+// transport
+// ---------------------------------------------------------------------
+
+/// Which socket family the cluster runs over.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Transport {
+    /// `AF_UNIX` stream sockets (unix hosts only).
+    Unix,
+    /// Loopback TCP (`127.0.0.1`), portable everywhere.
+    Tcp,
+}
+
+impl Transport {
+    /// Unix sockets where available, TCP elsewhere.
+    pub fn default_for_host() -> Transport {
+        if cfg!(unix) {
+            Transport::Unix
+        } else {
+            Transport::Tcp
+        }
+    }
+}
+
+#[cfg(unix)]
+static SOCKET_SEQ: AtomicU64 = AtomicU64::new(0);
+
+enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(UnixListener, PathBuf),
+}
+
+impl Listener {
+    fn bind(transport: Transport) -> Result<(Listener, String)> {
+        match transport {
+            Transport::Tcp => {
+                let l = TcpListener::bind("127.0.0.1:0")
+                    .context("bind cluster TCP listener")?;
+                let addr = format!("tcp:{}", l.local_addr()?);
+                Ok((Listener::Tcp(l), addr))
+            }
+            #[cfg(unix)]
+            Transport::Unix => {
+                let path = std::env::temp_dir().join(format!(
+                    "specdfa-{}-{}.sock",
+                    std::process::id(),
+                    SOCKET_SEQ.fetch_add(1, Ordering::Relaxed),
+                ));
+                let _ = std::fs::remove_file(&path);
+                let l = UnixListener::bind(&path)
+                    .context("bind cluster unix listener")?;
+                let addr = format!("unix:{}", path.display());
+                Ok((Listener::Unix(l, path), addr))
+            }
+            #[cfg(not(unix))]
+            Transport::Unix => {
+                bail!("unix sockets are not available on this host")
+            }
+        }
+    }
+
+    /// Accept one connection, polling until `deadline`.
+    fn accept_by(&self, deadline: Instant) -> Result<Conn> {
+        match self {
+            Listener::Tcp(l) => l.set_nonblocking(true)?,
+            #[cfg(unix)]
+            Listener::Unix(l, _) => l.set_nonblocking(true)?,
+        }
+        loop {
+            let res = match self {
+                Listener::Tcp(l) => l.accept().map(|(s, _)| {
+                    let _ = s.set_nodelay(true);
+                    Conn::Tcp(s)
+                }),
+                #[cfg(unix)]
+                Listener::Unix(l, _) => {
+                    l.accept().map(|(s, _)| Conn::Unix(s))
+                }
+            };
+            match res {
+                Ok(conn) => {
+                    conn.set_nonblocking(false)?;
+                    return Ok(conn);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        bail!("timed out waiting for a worker to attach");
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+}
+
+impl Drop for Listener {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let Listener::Unix(_, path) = self {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+/// One live socket to a worker (either family), with uniform timeout
+/// control.
+pub enum Conn {
+    /// loopback TCP stream
+    Tcp(TcpStream),
+    /// unix-domain stream
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl Conn {
+    fn set_nonblocking(&self, on: bool) -> std::io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.set_nonblocking(on),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.set_nonblocking(on),
+        }
+    }
+
+    fn set_read_timeout(&self, d: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.set_read_timeout(d),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.set_read_timeout(d),
+        }
+    }
+}
+
+impl Read for Conn {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Conn {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// Connect to a frontend address of the form `tcp:HOST:PORT` or
+/// `unix:PATH` (the string a [`ProcCluster`] passed to the spawned
+/// worker's `--connect` flag).
+pub fn connect(addr: &str) -> Result<Conn> {
+    if let Some(hostport) = addr.strip_prefix("tcp:") {
+        let s = TcpStream::connect(hostport)
+            .with_context(|| format!("connect {addr}"))?;
+        let _ = s.set_nodelay(true);
+        return Ok(Conn::Tcp(s));
+    }
+    #[cfg(unix)]
+    if let Some(path) = addr.strip_prefix("unix:") {
+        let s = UnixStream::connect(path)
+            .with_context(|| format!("connect {addr}"))?;
+        return Ok(Conn::Unix(s));
+    }
+    bail!("unsupported cluster address {addr:?} (want tcp:… or unix:…)")
+}
+
+// ---------------------------------------------------------------------
+// worker side
+// ---------------------------------------------------------------------
+
+/// Configuration of one `specdfa worker` process (parsed from its
+/// command line by `cmd_worker`).
+#[derive(Clone, Debug)]
+pub struct WorkerConfig {
+    /// frontend address (`tcp:…` / `unix:…`)
+    pub addr: String,
+    /// worker index announced in the `Hello` frame
+    pub id: u32,
+    /// deterministic failure script for this process
+    pub fault: FaultPlan,
+    /// §4.1 profiling runs at startup
+    pub profile_runs: usize,
+    /// symbols per profiling run
+    pub profile_sample_syms: usize,
+}
+
+impl Default for WorkerConfig {
+    fn default() -> WorkerConfig {
+        let proc = ProcConfig::default();
+        WorkerConfig {
+            addr: String::new(),
+            id: 0,
+            fault: FaultPlan::default(),
+            profile_runs: proc.profile_runs,
+            profile_sample_syms: proc.profile_sample_syms,
+        }
+    }
+}
+
+/// Run the worker side of the protocol until the frontend shuts the
+/// connection (or the fault plan kills the process).  This is the body
+/// of the `specdfa worker` subcommand.
+pub fn run_worker(cfg: WorkerConfig) -> Result<()> {
+    let mut conn = connect(&cfg.addr)?;
+    let profile = profile_host(cfg.profile_runs, cfg.profile_sample_syms);
+    let mut inj = Injector::new(cfg.fault);
+    if worker_send(
+        &mut conn,
+        &mut inj,
+        Frame::Hello {
+            worker: cfg.id,
+            rate_syms_per_us: profile.syms_per_us,
+        },
+    )
+    .is_err()
+    {
+        return Ok(()); // frontend already gone
+    }
+    let mut patterns: HashMap<u32, CompiledMatcher> = HashMap::new();
+    let mut bytes_matched = 0u64;
+    loop {
+        let frame = match proto::read_frame(&mut conn) {
+            Ok(frame) => frame,
+            Err(_) => return Ok(()), // EOF / frontend died: exit cleanly
+        };
+        let reply = match frame {
+            Frame::Compile { pattern_id, pattern } => {
+                match CompiledMatcher::compile(
+                    &pattern,
+                    Engine::Auto,
+                    ExecPolicy::default(),
+                ) {
+                    Ok(cm) => {
+                        let states = cm.dfa().num_states;
+                        patterns.insert(pattern_id, cm);
+                        Some(Frame::CompileOk { pattern_id, states })
+                    }
+                    Err(e) => Some(Frame::Error {
+                        req_id: 0,
+                        message: format!("compile failed: {e:#}"),
+                    }),
+                }
+            }
+            Frame::Match {
+                req_id,
+                pattern_id,
+                checkpoint_every,
+                resume,
+                data,
+            } => {
+                serve_chunk(
+                    &mut conn,
+                    &mut inj,
+                    &patterns,
+                    ChunkJob {
+                        req_id,
+                        pattern_id,
+                        checkpoint_every,
+                        resume,
+                        data,
+                    },
+                    &mut bytes_matched,
+                )?;
+                None
+            }
+            Frame::Heartbeat { nonce } => {
+                if inj.stall_heartbeats() {
+                    None // swallow the probe: the stall fault
+                } else {
+                    Some(Frame::Heartbeat { nonce })
+                }
+            }
+            Frame::Shutdown => return Ok(()),
+            other => Some(Frame::Error {
+                req_id: 0,
+                message: format!(
+                    "unexpected {} frame on a worker",
+                    other.kind().name()
+                ),
+            }),
+        };
+        if let Some(frame) = reply {
+            if worker_send(&mut conn, &mut inj, frame).is_err() {
+                return Ok(());
+            }
+        }
+    }
+}
+
+struct ChunkJob {
+    req_id: u64,
+    pattern_id: u32,
+    checkpoint_every: u64,
+    resume: Option<Vec<u8>>,
+    data: Vec<u8>,
+}
+
+/// Serve one `Match` frame: stream the chunk through an
+/// identity-seeded [`StreamMatcher`] (or resume a shipped checkpoint),
+/// emitting `Checkpoint` progress frames every `checkpoint_every`
+/// bytes and a final fully-folded `Result`.
+fn serve_chunk(
+    conn: &mut Conn,
+    inj: &mut Injector,
+    patterns: &HashMap<u32, CompiledMatcher>,
+    job: ChunkJob,
+    bytes_matched: &mut u64,
+) -> Result<()> {
+    let Some(cm) = patterns.get(&job.pattern_id) else {
+        worker_send(
+            conn,
+            inj,
+            Frame::Error {
+                req_id: job.req_id,
+                message: format!("unknown pattern id {}", job.pattern_id),
+            },
+        )?;
+        return Ok(());
+    };
+    let mut sm = match &job.resume {
+        Some(bytes) => {
+            match Checkpoint::from_bytes(bytes)
+                .and_then(|c| StreamMatcher::from_checkpoint(cm, c))
+            {
+                Ok(sm) => sm,
+                Err(e) => {
+                    worker_send(
+                        conn,
+                        inj,
+                        Frame::Error {
+                            req_id: job.req_id,
+                            message: format!("bad resume checkpoint: {e:#}"),
+                        },
+                    )?;
+                    return Ok(());
+                }
+            }
+        }
+        None => StreamMatcher::for_chunk(cm),
+    };
+    let step = usize::try_from(job.checkpoint_every.max(1))
+        .unwrap_or(usize::MAX)
+        .max(1);
+    sm.set_fold_bytes(step);
+    let mut fed = 0usize;
+    while fed < job.data.len() {
+        let end = (fed + step).min(job.data.len());
+        sm.feed(&job.data[fed..end]);
+        *bytes_matched += (end - fed) as u64;
+        fed = end;
+        if fed < job.data.len() {
+            worker_send(
+                conn,
+                inj,
+                Frame::Checkpoint {
+                    req_id: job.req_id,
+                    ckpt: sm.checkpoint().to_bytes(),
+                },
+            )?;
+        }
+        if inj.should_kill(*bytes_matched) {
+            // crash mid-chunk, after the last progress checkpoint: the
+            // frontend resumes a survivor from it
+            std::process::exit(4);
+        }
+    }
+    sm.flush();
+    worker_send(
+        conn,
+        inj,
+        Frame::Result { req_id: job.req_id, ckpt: sm.checkpoint().to_bytes() },
+    )?;
+    Ok(())
+}
+
+/// Write one frame through the fault injector: honor delay, skip
+/// dropped frames, and crash halfway through truncated ones.
+fn worker_send(
+    conn: &mut Conn,
+    inj: &mut Injector,
+    frame: Frame,
+) -> std::io::Result<()> {
+    let (action, delay_ms) = inj.action(frame.kind());
+    if let Some(ms) = delay_ms {
+        std::thread::sleep(Duration::from_millis(ms));
+    }
+    match action {
+        Action::Send => proto::write_frame(conn, &frame),
+        Action::Drop => Ok(()),
+        Action::Truncate => {
+            let bytes = frame.encode();
+            let _ = conn.write(&bytes[..bytes.len() / 2]);
+            let _ = conn.flush();
+            // crash mid-send: the peer sees a torn frame then EOF
+            std::process::exit(3);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// frontend
+// ---------------------------------------------------------------------
+
+/// Frontend configuration for [`ProcCluster::start`].
+#[derive(Clone, Debug)]
+pub struct ProcConfig {
+    /// worker processes to spawn
+    pub workers: usize,
+    /// socket family ([`Transport::default_for_host`] by default)
+    pub transport: Transport,
+    /// worker binary to spawn; `None` uses `std::env::current_exe()`
+    /// (integration tests pass `env!("CARGO_BIN_EXE_specdfa")`, since
+    /// their own executable is the test harness, not `specdfa`)
+    pub worker_bin: Option<PathBuf>,
+    /// spawn → `Hello` attach deadline
+    pub connect_timeout: Duration,
+    /// per-attempt deadline for one chunk request
+    pub request_timeout: Duration,
+    /// deadline for a heartbeat echo
+    pub heartbeat_timeout: Duration,
+    /// total chunk retries allowed per serve before degrading
+    pub retry_budget: u32,
+    /// first retry backoff (doubles per retry, capped)
+    pub backoff_base: Duration,
+    /// backoff ceiling
+    pub backoff_cap: Duration,
+    /// bytes between streamed worker checkpoints (the failover grain)
+    pub checkpoint_every: usize,
+    /// inputs shorter than `workers × this` use fewer workers; inputs
+    /// shorter than this skip the cluster and run locally
+    pub min_chunk_bytes: usize,
+    /// §4.1 profiling runs each worker performs at attach
+    pub profile_runs: usize,
+    /// symbols per worker profiling run
+    pub profile_sample_syms: usize,
+    /// cluster-level fault-injection spec
+    /// ([`super::fault::parse_cluster_spec`] grammar), threaded to the
+    /// targeted workers' command lines
+    pub fault_spec: Option<String>,
+    /// execution policy for the local (degraded-mode) matcher
+    pub policy: ExecPolicy,
+}
+
+impl Default for ProcConfig {
+    fn default() -> ProcConfig {
+        ProcConfig {
+            workers: 2,
+            transport: Transport::default_for_host(),
+            worker_bin: None,
+            connect_timeout: Duration::from_secs(20),
+            request_timeout: Duration::from_secs(10),
+            heartbeat_timeout: Duration::from_secs(2),
+            retry_budget: 4,
+            backoff_base: Duration::from_millis(25),
+            backoff_cap: Duration::from_secs(1),
+            checkpoint_every: 64 << 10,
+            min_chunk_bytes: 4 << 10,
+            profile_runs: 3,
+            profile_sample_syms: 1 << 17,
+            fault_spec: None,
+            policy: ExecPolicy::default(),
+        }
+    }
+}
+
+/// Cluster-wide telemetry counters (monotonic since
+/// [`ProcCluster::start`]).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ClusterStats {
+    /// `match_bytes` calls
+    pub serves: u64,
+    /// serves answered by the worker fleet
+    pub cluster_serves: u64,
+    /// serves answered in-process because the cluster was unusable
+    /// (rung 4 of the degradation ladder)
+    pub degraded: u64,
+    /// serves answered locally because the input was below the
+    /// cluster-efficiency floor (`min_chunk_bytes`) — not a failure
+    pub local_small: u64,
+    /// chunk retry attempts (each backoff-delayed reassignment)
+    pub retries: u64,
+    /// chunks reassigned from a dead worker to a survivor
+    pub failovers: u64,
+    /// workers declared dead (crash, timeout, bad frame, stalled
+    /// heartbeat)
+    pub worker_deaths: u64,
+    /// failovers that resumed from a streamed checkpoint
+    pub resumed_serves: u64,
+    /// bytes of matching work **not** redone thanks to checkpoint
+    /// resume (the victim's progress the survivor inherited)
+    pub resumed_bytes: u64,
+    /// heartbeat probes sent
+    pub heartbeats: u64,
+    /// heartbeat probes that timed out or came back wrong
+    pub heartbeat_failures: u64,
+    /// input bytes submitted
+    pub bytes: u64,
+    /// per-worker attach-time capacity rates (symbols/µs; 0.0 = never
+    /// attached)
+    pub worker_rates: Vec<f64>,
+    /// workers currently alive
+    pub live_workers: usize,
+}
+
+/// Per-serve record carried as [`Detail::Cluster`].
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ProcOutcome {
+    /// chunks the input was partitioned into
+    pub chunks: usize,
+    /// retry attempts this serve needed
+    pub retries: u64,
+    /// chunks that failed over to a survivor
+    pub failovers: u64,
+    /// bytes inherited from streamed checkpoints instead of rescanned
+    pub resumed_bytes: u64,
+}
+
+#[derive(Default)]
+struct Counters {
+    serves: AtomicU64,
+    cluster_serves: AtomicU64,
+    degraded: AtomicU64,
+    local_small: AtomicU64,
+    retries: AtomicU64,
+    failovers: AtomicU64,
+    worker_deaths: AtomicU64,
+    resumed_serves: AtomicU64,
+    resumed_bytes: AtomicU64,
+    heartbeats: AtomicU64,
+    heartbeat_failures: AtomicU64,
+    bytes: AtomicU64,
+}
+
+struct WorkerSlot {
+    alive: bool,
+    conn: Option<Conn>,
+    child: Option<Child>,
+    rate: f64,
+    patterns: HashMap<Pattern, u32>,
+    next_pattern_id: u32,
+}
+
+impl WorkerSlot {
+    fn dead() -> WorkerSlot {
+        WorkerSlot {
+            alive: false,
+            conn: None,
+            child: None,
+            rate: 0.0,
+            patterns: HashMap::new(),
+            next_pattern_id: 0,
+        }
+    }
+
+    /// Declare the worker dead: close the socket, reap the process.
+    fn bury(&mut self) {
+        self.alive = false;
+        self.conn = None;
+        if let Some(mut child) = self.child.take() {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+}
+
+/// A running multi-process cluster: spawned workers, their sockets,
+/// and the retry/failover state machine.  See the [module docs](self).
+pub struct ProcCluster {
+    config: ProcConfig,
+    slots: Vec<Mutex<WorkerSlot>>,
+    counters: Counters,
+    next_req: AtomicU64,
+    local: Mutex<HashMap<Pattern, std::sync::Arc<CompiledMatcher>>>,
+}
+
+impl fmt::Debug for ProcCluster {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("ProcCluster")
+            .field("workers", &self.slots.len())
+            .field("live", &self.live_workers())
+            .finish()
+    }
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+impl ProcCluster {
+    /// Spawn `config.workers` worker processes, wait for each to
+    /// attach with its measured capacity, and return the frontend.
+    /// Workers that fail to spawn or attach start out dead; a cluster
+    /// with zero live workers is still usable — every serve degrades
+    /// to the in-process matcher.
+    pub fn start(config: ProcConfig) -> Result<ProcCluster> {
+        let fault_plans: HashMap<usize, FaultPlan> = match &config.fault_spec
+        {
+            Some(spec) => parse_cluster_spec(spec)?.into_iter().collect(),
+            None => HashMap::new(),
+        };
+        let (listener, addr) = Listener::bind(config.transport)?;
+        let bin = match &config.worker_bin {
+            Some(bin) => bin.clone(),
+            None => std::env::current_exe()
+                .context("resolve worker binary path")?,
+        };
+        let mut slots: Vec<WorkerSlot> =
+            (0..config.workers).map(|_| WorkerSlot::dead()).collect();
+        let mut spawned = 0usize;
+        for (k, slot) in slots.iter_mut().enumerate() {
+            let mut cmd = Command::new(&bin);
+            cmd.arg("worker")
+                .arg("--connect")
+                .arg(&addr)
+                .arg("--id")
+                .arg(k.to_string())
+                .arg("--profile-runs")
+                .arg(config.profile_runs.to_string())
+                .arg("--profile-syms")
+                .arg(config.profile_sample_syms.to_string())
+                .stdin(Stdio::null())
+                .stdout(Stdio::null());
+            if let Some(plan) = fault_plans.get(&k) {
+                if !plan.is_benign() {
+                    cmd.arg("--fault").arg(plan.to_spec());
+                }
+            }
+            match cmd.spawn() {
+                Ok(child) => {
+                    slot.child = Some(child);
+                    spawned += 1;
+                }
+                Err(_) => slot.bury(),
+            }
+        }
+        // collect Hello frames; workers identify themselves, so accept
+        // order doesn't matter
+        let deadline = Instant::now() + config.connect_timeout;
+        let mut attached = 0usize;
+        while attached < spawned {
+            let Ok(mut conn) = listener.accept_by(deadline) else {
+                break;
+            };
+            let _ = conn.set_read_timeout(Some(config.connect_timeout));
+            match proto::read_frame(&mut conn) {
+                Ok(Frame::Hello { worker, rate_syms_per_us }) => {
+                    let idx = worker as usize;
+                    if idx < slots.len() && slots[idx].conn.is_none() {
+                        slots[idx].conn = Some(conn);
+                        slots[idx].alive = true;
+                        slots[idx].rate = if rate_syms_per_us > 0.0 {
+                            rate_syms_per_us
+                        } else {
+                            1.0
+                        };
+                        attached += 1;
+                    }
+                }
+                _ => attached += 1, // garbled attach: drop the conn
+            }
+        }
+        let cluster = ProcCluster {
+            config,
+            slots: slots.into_iter().map(Mutex::new).collect(),
+            counters: Counters::default(),
+            next_req: AtomicU64::new(1),
+            local: Mutex::new(HashMap::new()),
+        };
+        // reap any spawned-but-never-attached workers
+        for slot in &cluster.slots {
+            let mut slot = lock(slot);
+            if !slot.alive {
+                slot.bury();
+            }
+        }
+        Ok(cluster)
+    }
+
+    /// Workers currently alive.
+    pub fn live_workers(&self) -> usize {
+        self.slots.iter().filter(|s| lock(s).alive).count()
+    }
+
+    /// Snapshot the telemetry counters.
+    pub fn stats(&self) -> ClusterStats {
+        let c = &self.counters;
+        let mut rates = Vec::with_capacity(self.slots.len());
+        let mut live = 0usize;
+        for slot in &self.slots {
+            let slot = lock(slot);
+            rates.push(slot.rate);
+            live += usize::from(slot.alive);
+        }
+        ClusterStats {
+            serves: c.serves.load(Ordering::Relaxed),
+            cluster_serves: c.cluster_serves.load(Ordering::Relaxed),
+            degraded: c.degraded.load(Ordering::Relaxed),
+            local_small: c.local_small.load(Ordering::Relaxed),
+            retries: c.retries.load(Ordering::Relaxed),
+            failovers: c.failovers.load(Ordering::Relaxed),
+            worker_deaths: c.worker_deaths.load(Ordering::Relaxed),
+            resumed_serves: c.resumed_serves.load(Ordering::Relaxed),
+            resumed_bytes: c.resumed_bytes.load(Ordering::Relaxed),
+            heartbeats: c.heartbeats.load(Ordering::Relaxed),
+            heartbeat_failures: c.heartbeat_failures.load(Ordering::Relaxed),
+            bytes: c.bytes.load(Ordering::Relaxed),
+            worker_rates: rates,
+            live_workers: live,
+        }
+    }
+
+    /// Probe every live worker with a nonce echo; workers that fail to
+    /// echo in time are declared dead.  Returns the live count.
+    pub fn heartbeat(&self) -> usize {
+        let mut live = 0usize;
+        for slot in &self.slots {
+            let mut slot = lock(slot);
+            if !slot.alive {
+                continue;
+            }
+            self.counters.heartbeats.fetch_add(1, Ordering::Relaxed);
+            let nonce = self.next_req.fetch_add(1, Ordering::Relaxed);
+            let ok = Self::heartbeat_conn(
+                slot.conn.as_mut().expect("alive worker has a conn"),
+                nonce,
+                self.config.heartbeat_timeout,
+            );
+            if ok {
+                live += 1;
+            } else {
+                self.counters
+                    .heartbeat_failures
+                    .fetch_add(1, Ordering::Relaxed);
+                self.counters.worker_deaths.fetch_add(1, Ordering::Relaxed);
+                slot.bury();
+            }
+        }
+        live
+    }
+
+    fn heartbeat_conn(conn: &mut Conn, nonce: u64, timeout: Duration) -> bool {
+        if conn.set_read_timeout(Some(timeout.max(MIN_TIMEOUT))).is_err() {
+            return false;
+        }
+        if proto::write_frame(conn, &Frame::Heartbeat { nonce }).is_err() {
+            return false;
+        }
+        matches!(
+            proto::read_frame(conn),
+            Ok(Frame::Heartbeat { nonce: echo }) if echo == nonce
+        )
+    }
+
+    /// Serve one membership test through the cluster.  Never fails on
+    /// worker trouble: every rung of the degradation ladder ends in a
+    /// verdict equal to `Engine::Sequential`'s (an `Err` means the
+    /// *pattern itself* doesn't compile).
+    pub fn match_bytes(
+        &self,
+        pattern: &Pattern,
+        input: &[u8],
+    ) -> Result<Outcome> {
+        let t0 = Instant::now();
+        self.counters.serves.fetch_add(1, Ordering::Relaxed);
+        self.counters.bytes.fetch_add(input.len() as u64, Ordering::Relaxed);
+        let local = self.local_matcher(pattern)?;
+        if input.len() < self.config.min_chunk_bytes.max(1) {
+            self.counters.local_small.fetch_add(1, Ordering::Relaxed);
+            return local.run_bytes(input);
+        }
+        // heartbeat sweep: stalled or crashed workers leave the
+        // partition before any chunk is cut for them
+        if self.heartbeat() == 0 {
+            return self.degrade(&local, input);
+        }
+        let live: Vec<usize> = (0..self.slots.len())
+            .filter(|&k| lock(&self.slots[k]).alive)
+            .collect();
+        if live.is_empty() {
+            return self.degrade(&local, input);
+        }
+        // Eq. (1): capacity-weighted partition over the live workers,
+        // capped so no chunk falls below the efficiency floor
+        let usable = live
+            .len()
+            .min((input.len() / self.config.min_chunk_bytes.max(1)).max(1));
+        let live = &live[..usable];
+        let rates: Vec<f64> =
+            live.iter().map(|&k| lock(&self.slots[k]).rate.max(1e-9)).collect();
+        let weights = weights_from_capacities(&rates);
+        let chunks: Vec<_> = partition(input.len(), &weights, 1)
+            .into_iter()
+            .filter(|c| !c.is_empty())
+            .collect();
+        // fan out: one thread per chunk drives one worker's socket
+        let attempts: Vec<ChunkAttempt> = std::thread::scope(|scope| {
+            let handles: Vec<_> = chunks
+                .iter()
+                .map(|chunk| {
+                    let slot_idx = live[chunk.proc];
+                    let data = &input[chunk.start..chunk.end];
+                    scope.spawn(move || {
+                        self.run_chunk(slot_idx, pattern, data, None)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join().unwrap_or_else(|_| {
+                        ChunkAttempt::failed(
+                            "chunk thread panicked".into(),
+                            None,
+                        )
+                    })
+                })
+                .collect()
+        });
+        // failover: retry failed chunks on survivors, resuming from
+        // the victim's last streamed checkpoint
+        let mut serve = ProcOutcome { chunks: chunks.len(), ..Default::default() };
+        let mut lvs: Vec<Option<LVector>> = Vec::with_capacity(chunks.len());
+        for (chunk, attempt) in chunks.iter().zip(attempts) {
+            match self.recover_chunk(pattern, input, chunk, attempt, &mut serve)
+            {
+                Some(lv) => lvs.push(Some(lv)),
+                None => return self.degrade(&local, input),
+            }
+        }
+        // Fig. 9 / Eq. 9: compose the per-chunk maps in input order
+        let mut composed: Option<LVector> = None;
+        for lv in lvs.into_iter().flatten() {
+            composed = Some(match composed {
+                Some(acc) => acc.compose(&lv),
+                None => lv,
+            });
+        }
+        let dfa = local.dfa();
+        let fin = match composed {
+            Some(lv) => lv.get(dfa.start),
+            None => dfa.start, // every chunk empty: n == 0
+        };
+        self.counters.cluster_serves.fetch_add(1, Ordering::Relaxed);
+        self.counters.retries.fetch_add(serve.retries, Ordering::Relaxed);
+        self.counters.failovers.fetch_add(serve.failovers, Ordering::Relaxed);
+        self.counters
+            .resumed_bytes
+            .fetch_add(serve.resumed_bytes, Ordering::Relaxed);
+        if serve.resumed_bytes > 0 {
+            self.counters.resumed_serves.fetch_add(1, Ordering::Relaxed);
+        }
+        let per_worker: Vec<usize> = chunks.iter().map(|c| c.len()).collect();
+        Ok(Outcome {
+            engine: EngineKind::Cluster,
+            n: input.len(),
+            accepted: dfa.accepting[fin as usize],
+            final_state: Some(fin),
+            makespan: per_worker.iter().copied().max().unwrap_or(0),
+            overhead_syms: 0,
+            per_worker_syms: per_worker,
+            wall_s: t0.elapsed().as_secs_f64(),
+            selection: None,
+            detail: Detail::Cluster(serve),
+        })
+    }
+
+    /// Drive the retry/backoff loop for one failed chunk.  Returns the
+    /// chunk's L-vector, or `None` when the budget or the fleet ran
+    /// out (the caller degrades the whole serve).
+    fn recover_chunk(
+        &self,
+        pattern: &Pattern,
+        input: &[u8],
+        chunk: &crate::speculative::partition::Chunk,
+        attempt: ChunkAttempt,
+        serve: &mut ProcOutcome,
+    ) -> Option<LVector> {
+        if let Some(lv) = attempt.lv {
+            return Some(lv);
+        }
+        let mut last_ckpt = attempt.last_ckpt;
+        let mut backoff = self.config.backoff_base;
+        let mut reassigned = false;
+        loop {
+            if serve.retries >= u64::from(self.config.retry_budget) {
+                return None;
+            }
+            let target = self.pick_live(chunk.proc)?;
+            std::thread::sleep(backoff);
+            backoff = (backoff * 2).min(self.config.backoff_cap);
+            serve.retries += 1;
+            if !reassigned {
+                reassigned = true;
+                serve.failovers += 1;
+            }
+            let resume = last_ckpt.clone();
+            let resume_off = resume
+                .as_ref()
+                .map(|c| c.offset() as usize)
+                .unwrap_or(0)
+                .min(chunk.len());
+            let data = &input[chunk.start + resume_off..chunk.end];
+            let next =
+                self.run_chunk(target, pattern, data, resume.clone());
+            if let Some(lv) = next.lv {
+                serve.resumed_bytes += resume_off as u64;
+                return Some(lv);
+            }
+            // carry forward whichever checkpoint got further
+            let next_off =
+                next.last_ckpt.as_ref().map(|c| c.offset()).unwrap_or(0);
+            let prev_off =
+                last_ckpt.as_ref().map(|c| c.offset()).unwrap_or(0);
+            if next_off > prev_off {
+                last_ckpt = next.last_ckpt;
+            }
+        }
+    }
+
+    /// First live worker, scanning round-robin from `after + 1`.
+    fn pick_live(&self, after: usize) -> Option<usize> {
+        let n = self.slots.len();
+        (1..=n)
+            .map(|d| (after + d) % n)
+            .find(|&k| lock(&self.slots[k]).alive)
+    }
+
+    /// One attempt at matching `data` (a chunk suffix when resuming)
+    /// on worker `slot_idx`.  Any protocol trouble buries the worker.
+    fn run_chunk(
+        &self,
+        slot_idx: usize,
+        pattern: &Pattern,
+        data: &[u8],
+        resume: Option<Checkpoint>,
+    ) -> ChunkAttempt {
+        let mut slot = lock(&self.slots[slot_idx]);
+        if !slot.alive {
+            return ChunkAttempt::failed("worker already dead".into(), resume);
+        }
+        let expected = resume.as_ref().map(|c| c.offset()).unwrap_or(0)
+            + data.len() as u64;
+        let attempt =
+            self.drive_request(&mut slot, pattern, data, &resume, expected);
+        if attempt.lv.is_some() {
+            return attempt;
+        }
+        self.counters.worker_deaths.fetch_add(1, Ordering::Relaxed);
+        slot.bury();
+        // resume from whichever checkpoint is furthest along
+        let best = match (attempt.last_ckpt, resume) {
+            (Some(p), Some(r)) => {
+                Some(if p.offset() >= r.offset() { p } else { r })
+            }
+            (Some(p), None) => Some(p),
+            (None, r) => r,
+        };
+        ChunkAttempt { lv: None, last_ckpt: best, error: attempt.error }
+    }
+
+    fn drive_request(
+        &self,
+        slot: &mut WorkerSlot,
+        pattern: &Pattern,
+        data: &[u8],
+        resume: &Option<Checkpoint>,
+        expected_offset: u64,
+    ) -> ChunkAttempt {
+        let deadline = Instant::now() + self.config.request_timeout;
+        let pattern_id = match self.compile_on(slot, pattern, deadline) {
+            Ok(id) => id,
+            Err(e) => return ChunkAttempt::failed(format!("{e:#}"), None),
+        };
+        let req_id = self.next_req.fetch_add(1, Ordering::Relaxed);
+        let frame = Frame::Match {
+            req_id,
+            pattern_id,
+            checkpoint_every: self.config.checkpoint_every.max(1) as u64,
+            resume: resume.as_ref().map(|c| c.to_bytes()),
+            data: data.to_vec(),
+        };
+        let conn = slot.conn.as_mut().expect("alive worker has a conn");
+        if let Err(e) = proto::write_frame(conn, &frame) {
+            return ChunkAttempt::failed(format!("send match: {e}"), None);
+        }
+        let mut progress: Option<Checkpoint> = None;
+        loop {
+            let now = Instant::now();
+            if now >= deadline {
+                return ChunkAttempt::failed(
+                    "request deadline exceeded".into(),
+                    progress,
+                );
+            }
+            if conn
+                .set_read_timeout(Some((deadline - now).max(MIN_TIMEOUT)))
+                .is_err()
+            {
+                return ChunkAttempt::failed("socket lost".into(), progress);
+            }
+            match proto::read_frame(conn) {
+                Ok(Frame::Checkpoint { req_id: r, ckpt }) if r == req_id => {
+                    match Checkpoint::from_bytes(&ckpt) {
+                        Ok(c) => progress = Some(c),
+                        Err(e) => {
+                            return ChunkAttempt::failed(
+                                format!("bad progress checkpoint: {e:#}"),
+                                progress,
+                            )
+                        }
+                    }
+                }
+                Ok(Frame::Result { req_id: r, ckpt }) if r == req_id => {
+                    return match Checkpoint::from_bytes(&ckpt) {
+                        Ok(c) if c.offset() == expected_offset
+                            && c.buffered() == 0 =>
+                        {
+                            ChunkAttempt {
+                                lv: Some(c.lvector().clone()),
+                                last_ckpt: None,
+                                error: None,
+                            }
+                        }
+                        Ok(c) => ChunkAttempt::failed(
+                            format!(
+                                "result covers {} of {expected_offset} bytes",
+                                c.offset()
+                            ),
+                            progress,
+                        ),
+                        Err(e) => ChunkAttempt::failed(
+                            format!("bad result checkpoint: {e:#}"),
+                            progress,
+                        ),
+                    };
+                }
+                Ok(Frame::Error { message, .. }) => {
+                    return ChunkAttempt::failed(
+                        format!("worker error: {message}"),
+                        progress,
+                    )
+                }
+                Ok(other) => {
+                    return ChunkAttempt::failed(
+                        format!(
+                            "unexpected {} frame mid-request",
+                            other.kind().name()
+                        ),
+                        progress,
+                    )
+                }
+                Err(e) => {
+                    return ChunkAttempt::failed(
+                        format!("transport: {e:#}"),
+                        progress,
+                    )
+                }
+            }
+        }
+    }
+
+    /// Ensure `pattern` is compiled on this worker; returns its id.
+    fn compile_on(
+        &self,
+        slot: &mut WorkerSlot,
+        pattern: &Pattern,
+        deadline: Instant,
+    ) -> Result<u32> {
+        if let Some(&id) = slot.patterns.get(pattern) {
+            return Ok(id);
+        }
+        let id = slot.next_pattern_id;
+        let conn = slot.conn.as_mut().expect("alive worker has a conn");
+        let remaining =
+            deadline.saturating_duration_since(Instant::now()).max(MIN_TIMEOUT);
+        conn.set_read_timeout(Some(remaining))?;
+        proto::write_frame(
+            conn,
+            &Frame::Compile { pattern_id: id, pattern: pattern.clone() },
+        )?;
+        match proto::read_frame(conn)? {
+            Frame::CompileOk { pattern_id, .. } if pattern_id == id => {
+                slot.next_pattern_id += 1;
+                slot.patterns.insert(pattern.clone(), id);
+                Ok(id)
+            }
+            Frame::Error { message, .. } => {
+                bail!("worker refused pattern: {message}")
+            }
+            other => bail!(
+                "unexpected {} frame while compiling",
+                other.kind().name()
+            ),
+        }
+    }
+
+    /// Rung 4: the cluster is unusable — answer in-process.  Still the
+    /// sequential verdict, never an error.
+    fn degrade(
+        &self,
+        local: &CompiledMatcher,
+        input: &[u8],
+    ) -> Result<Outcome> {
+        self.counters.degraded.fetch_add(1, Ordering::Relaxed);
+        local.run_bytes(input)
+    }
+
+    fn local_matcher(
+        &self,
+        pattern: &Pattern,
+    ) -> Result<std::sync::Arc<CompiledMatcher>> {
+        let mut cache = lock(&self.local);
+        if let Some(cm) = cache.get(pattern) {
+            return Ok(cm.clone());
+        }
+        let cm = std::sync::Arc::new(CompiledMatcher::compile(
+            pattern,
+            Engine::Auto,
+            self.config.policy.clone(),
+        )?);
+        cache.insert(pattern.clone(), cm.clone());
+        Ok(cm)
+    }
+
+    /// Shut the fleet down (graceful `Shutdown` frames, then reap) and
+    /// return the final stats.
+    pub fn shutdown(self) -> ClusterStats {
+        let stats = self.stats();
+        self.teardown();
+        stats
+    }
+
+    fn teardown(&self) {
+        for slot in &self.slots {
+            let mut slot = lock(slot);
+            if slot.alive {
+                if let Some(conn) = slot.conn.as_mut() {
+                    let _ = proto::write_frame(conn, &Frame::Shutdown);
+                }
+            }
+            slot.bury();
+        }
+    }
+}
+
+impl Drop for ProcCluster {
+    fn drop(&mut self) {
+        self.teardown();
+    }
+}
+
+/// Floor for socket timeouts: zero is invalid, and sub-millisecond
+/// deadlines just busy-spin.
+const MIN_TIMEOUT: Duration = Duration::from_millis(1);
+
+struct ChunkAttempt {
+    lv: Option<LVector>,
+    last_ckpt: Option<Checkpoint>,
+    #[allow(dead_code)] // kept for debugging/telemetry symmetry
+    error: Option<String>,
+}
+
+impl ChunkAttempt {
+    fn failed(message: String, last_ckpt: Option<Checkpoint>) -> ChunkAttempt {
+        ChunkAttempt { lv: None, last_ckpt, error: Some(message) }
+    }
+}

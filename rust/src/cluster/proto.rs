@@ -1,0 +1,543 @@
+//! The `SDPF` frame protocol spoken between a [`super::proc::ProcCluster`]
+//! frontend and its `specdfa worker` processes.
+//!
+//! Everything on the wire is a length-framed message with a fixed
+//! 11-byte header, versioned exactly like the `SDCK` checkpoint frame
+//! ([`crate::engine::stream::Checkpoint`]) it transports:
+//!
+//! ```text
+//!   +------+---------+------+--------------+-----------------+
+//!   | SDPF | version | kind | payload_len  |  payload bytes  |
+//!   | 4 B  | u16 LE  | u8   |   u32 LE     |  (payload_len)  |
+//!   +------+---------+------+--------------+-----------------+
+//! ```
+//!
+//! The conversation is strictly request/response from the frontend's
+//! point of view, with one exception: while serving a `Match`, the
+//! worker *streams* [`Frame::Checkpoint`] progress frames before the
+//! final [`Frame::Result`] — those checkpoints are the failover
+//! currency (a survivor resumes a dead worker's chunk from the last
+//! one received, instead of rescanning).
+//!
+//! Decoding is paranoid by design: bad magic, unknown version, unknown
+//! kind, truncated payloads, oversized payloads and trailing garbage
+//! are all hard errors, so a corrupted or maliciously short write never
+//! silently changes a verdict — it surfaces as a transport failure that
+//! the frontend's retry/failover machinery handles.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Result};
+
+use crate::engine::Pattern;
+
+/// Frame magic: `SDPF` ("SpecDFA Process Frame").
+pub const MAGIC: [u8; 4] = *b"SDPF";
+/// Current protocol version; bumped on any wire-layout change.
+pub const VERSION: u16 = 1;
+/// Header size in bytes: magic + version + kind + payload length.
+pub const HEADER_BYTES: usize = 4 + 2 + 1 + 4;
+/// Hard ceiling on a single frame payload (64 MiB): anything larger is
+/// rejected before allocation, so a corrupted length field cannot OOM
+/// the peer.
+pub const MAX_PAYLOAD: usize = 64 << 20;
+
+/// Frame kind discriminant — the `kind` byte of the header.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FrameKind {
+    /// Worker → frontend, once after connecting: identity + capacity.
+    Hello,
+    /// Frontend → worker: compile a pattern under an id.
+    Compile,
+    /// Worker → frontend: the pattern compiled.
+    CompileOk,
+    /// Frontend → worker: match a chunk (optionally resuming).
+    Match,
+    /// Worker → frontend: streamed mid-chunk progress checkpoint.
+    Checkpoint,
+    /// Worker → frontend: final checkpoint for a finished chunk.
+    Result,
+    /// Either direction: liveness probe (nonce echoed back).
+    Heartbeat,
+    /// Worker → frontend: a request failed.
+    Error,
+    /// Frontend → worker: exit cleanly.
+    Shutdown,
+}
+
+impl FrameKind {
+    /// Wire discriminant.
+    pub fn code(self) -> u8 {
+        match self {
+            FrameKind::Hello => 1,
+            FrameKind::Compile => 2,
+            FrameKind::CompileOk => 3,
+            FrameKind::Match => 4,
+            FrameKind::Checkpoint => 5,
+            FrameKind::Result => 6,
+            FrameKind::Heartbeat => 7,
+            FrameKind::Error => 8,
+            FrameKind::Shutdown => 9,
+        }
+    }
+
+    /// Decode a wire discriminant.
+    pub fn from_code(code: u8) -> Result<FrameKind> {
+        Ok(match code {
+            1 => FrameKind::Hello,
+            2 => FrameKind::Compile,
+            3 => FrameKind::CompileOk,
+            4 => FrameKind::Match,
+            5 => FrameKind::Checkpoint,
+            6 => FrameKind::Result,
+            7 => FrameKind::Heartbeat,
+            8 => FrameKind::Error,
+            9 => FrameKind::Shutdown,
+            other => bail!("unknown SDPF frame kind {other}"),
+        })
+    }
+
+    /// Stable lowercase name (fault-plan spec vocabulary).
+    pub fn name(self) -> &'static str {
+        match self {
+            FrameKind::Hello => "hello",
+            FrameKind::Compile => "compile",
+            FrameKind::CompileOk => "compileok",
+            FrameKind::Match => "match",
+            FrameKind::Checkpoint => "checkpoint",
+            FrameKind::Result => "result",
+            FrameKind::Heartbeat => "heartbeat",
+            FrameKind::Error => "error",
+            FrameKind::Shutdown => "shutdown",
+        }
+    }
+
+    /// Parse a lowercase name ([`FrameKind::name`] vocabulary).
+    pub fn parse(name: &str) -> Result<FrameKind> {
+        Ok(match name {
+            "hello" => FrameKind::Hello,
+            "compile" => FrameKind::Compile,
+            "compileok" => FrameKind::CompileOk,
+            "match" => FrameKind::Match,
+            "checkpoint" => FrameKind::Checkpoint,
+            "result" => FrameKind::Result,
+            "heartbeat" => FrameKind::Heartbeat,
+            "error" => FrameKind::Error,
+            "shutdown" => FrameKind::Shutdown,
+            other => bail!("unknown SDPF frame name {other:?}"),
+        })
+    }
+}
+
+/// One protocol message (header kind + decoded payload).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// Worker attach: which worker this connection is, and its measured
+    /// §4.1 matching capacity in symbols per microsecond.
+    Hello {
+        /// worker index (the `--id` the frontend spawned it with)
+        worker: u32,
+        /// median matching rate measured in-process at startup
+        rate_syms_per_us: f64,
+    },
+    /// Compile `pattern` and remember it as `pattern_id`.
+    Compile {
+        /// frontend-assigned id future `Match` frames reference
+        pattern_id: u32,
+        /// the pattern to compile
+        pattern: Pattern,
+    },
+    /// `Compile` succeeded.
+    CompileOk {
+        /// echoed pattern id
+        pattern_id: u32,
+        /// |Q| of the compiled minimal DFA (sanity telemetry)
+        states: u32,
+    },
+    /// Match a chunk of input against a compiled pattern.
+    Match {
+        /// frontend-assigned request id echoed in every reply frame
+        req_id: u64,
+        /// which compiled pattern to run
+        pattern_id: u32,
+        /// stream a [`Frame::Checkpoint`] after every this many bytes
+        checkpoint_every: u64,
+        /// resume from this serialized [`crate::engine::Checkpoint`]
+        /// (`SDCK` bytes) instead of starting fresh — the failover path
+        resume: Option<Vec<u8>>,
+        /// the chunk bytes to match
+        data: Vec<u8>,
+    },
+    /// Streamed mid-chunk progress (serialized `SDCK` checkpoint).
+    Checkpoint {
+        /// echoed request id
+        req_id: u64,
+        /// serialized [`crate::engine::Checkpoint`]
+        ckpt: Vec<u8>,
+    },
+    /// Final answer for a chunk: the fully-folded checkpoint whose
+    /// L-vector covers every byte of the chunk.
+    Result {
+        /// echoed request id
+        req_id: u64,
+        /// serialized [`crate::engine::Checkpoint`]
+        ckpt: Vec<u8>,
+    },
+    /// Liveness probe; the peer echoes the nonce back.
+    Heartbeat {
+        /// opaque nonce the reply must echo
+        nonce: u64,
+    },
+    /// A request failed on the worker.
+    Error {
+        /// request id the failure belongs to (0 = connection-level)
+        req_id: u64,
+        /// human-readable failure description
+        message: String,
+    },
+    /// Clean shutdown request; the worker exits after reading it.
+    Shutdown,
+}
+
+impl Frame {
+    /// This frame's [`FrameKind`].
+    pub fn kind(&self) -> FrameKind {
+        match self {
+            Frame::Hello { .. } => FrameKind::Hello,
+            Frame::Compile { .. } => FrameKind::Compile,
+            Frame::CompileOk { .. } => FrameKind::CompileOk,
+            Frame::Match { .. } => FrameKind::Match,
+            Frame::Checkpoint { .. } => FrameKind::Checkpoint,
+            Frame::Result { .. } => FrameKind::Result,
+            Frame::Heartbeat { .. } => FrameKind::Heartbeat,
+            Frame::Error { .. } => FrameKind::Error,
+            Frame::Shutdown => FrameKind::Shutdown,
+        }
+    }
+
+    /// Encode header + payload into a fresh byte vector.
+    pub fn encode(&self) -> Vec<u8> {
+        let payload = self.encode_payload();
+        let mut out = Vec::with_capacity(HEADER_BYTES + payload.len());
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.push(self.kind().code());
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&payload);
+        out
+    }
+
+    fn encode_payload(&self) -> Vec<u8> {
+        let mut p = Vec::new();
+        match self {
+            Frame::Hello { worker, rate_syms_per_us } => {
+                p.extend_from_slice(&worker.to_le_bytes());
+                p.extend_from_slice(&rate_syms_per_us.to_bits().to_le_bytes());
+            }
+            Frame::Compile { pattern_id, pattern } => {
+                p.extend_from_slice(&pattern_id.to_le_bytes());
+                encode_pattern(&mut p, pattern);
+            }
+            Frame::CompileOk { pattern_id, states } => {
+                p.extend_from_slice(&pattern_id.to_le_bytes());
+                p.extend_from_slice(&states.to_le_bytes());
+            }
+            Frame::Match {
+                req_id,
+                pattern_id,
+                checkpoint_every,
+                resume,
+                data,
+            } => {
+                p.extend_from_slice(&req_id.to_le_bytes());
+                p.extend_from_slice(&pattern_id.to_le_bytes());
+                p.extend_from_slice(&checkpoint_every.to_le_bytes());
+                let resume = resume.as_deref().unwrap_or(&[]);
+                p.extend_from_slice(&(resume.len() as u64).to_le_bytes());
+                p.extend_from_slice(resume);
+                p.extend_from_slice(&(data.len() as u64).to_le_bytes());
+                p.extend_from_slice(data);
+            }
+            Frame::Checkpoint { req_id, ckpt }
+            | Frame::Result { req_id, ckpt } => {
+                p.extend_from_slice(&req_id.to_le_bytes());
+                p.extend_from_slice(&(ckpt.len() as u64).to_le_bytes());
+                p.extend_from_slice(ckpt);
+            }
+            Frame::Heartbeat { nonce } => {
+                p.extend_from_slice(&nonce.to_le_bytes());
+            }
+            Frame::Error { req_id, message } => {
+                p.extend_from_slice(&req_id.to_le_bytes());
+                let bytes = message.as_bytes();
+                p.extend_from_slice(&(bytes.len() as u64).to_le_bytes());
+                p.extend_from_slice(bytes);
+            }
+            Frame::Shutdown => {}
+        }
+        p
+    }
+
+    /// Decode a payload for `kind`; the whole payload must be consumed.
+    pub fn decode(kind: FrameKind, payload: &[u8]) -> Result<Frame> {
+        let mut c = Cursor { buf: payload, pos: 0 };
+        let frame = match kind {
+            FrameKind::Hello => Frame::Hello {
+                worker: c.u32()?,
+                rate_syms_per_us: f64::from_bits(c.u64()?),
+            },
+            FrameKind::Compile => Frame::Compile {
+                pattern_id: c.u32()?,
+                pattern: decode_pattern(&mut c)?,
+            },
+            FrameKind::CompileOk => Frame::CompileOk {
+                pattern_id: c.u32()?,
+                states: c.u32()?,
+            },
+            FrameKind::Match => {
+                let req_id = c.u64()?;
+                let pattern_id = c.u32()?;
+                let checkpoint_every = c.u64()?;
+                let resume_len = c.u64()? as usize;
+                let resume = c.take(resume_len)?.to_vec();
+                let data_len = c.u64()? as usize;
+                let data = c.take(data_len)?.to_vec();
+                Frame::Match {
+                    req_id,
+                    pattern_id,
+                    checkpoint_every,
+                    resume: if resume.is_empty() { None } else { Some(resume) },
+                    data,
+                }
+            }
+            FrameKind::Checkpoint | FrameKind::Result => {
+                let req_id = c.u64()?;
+                let len = c.u64()? as usize;
+                let ckpt = c.take(len)?.to_vec();
+                if kind == FrameKind::Checkpoint {
+                    Frame::Checkpoint { req_id, ckpt }
+                } else {
+                    Frame::Result { req_id, ckpt }
+                }
+            }
+            FrameKind::Heartbeat => Frame::Heartbeat { nonce: c.u64()? },
+            FrameKind::Error => {
+                let req_id = c.u64()?;
+                let len = c.u64()? as usize;
+                let bytes = c.take(len)?.to_vec();
+                Frame::Error {
+                    req_id,
+                    message: String::from_utf8_lossy(&bytes).into_owned(),
+                }
+            }
+            FrameKind::Shutdown => Frame::Shutdown,
+        };
+        if c.pos != payload.len() {
+            bail!(
+                "SDPF {} frame has {} trailing payload bytes",
+                kind.name(),
+                payload.len() - c.pos
+            );
+        }
+        Ok(frame)
+    }
+}
+
+/// Write one frame to a stream (single `write_all` of the encoding, so
+/// a frame is either fully queued to the transport or not at all — the
+/// only partial writes on the wire are deliberately injected faults).
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> std::io::Result<()> {
+    w.write_all(&frame.encode())?;
+    w.flush()
+}
+
+/// Read one frame from a stream, validating magic, version and payload
+/// bounds before allocating.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame> {
+    let mut header = [0u8; HEADER_BYTES];
+    r.read_exact(&mut header)?;
+    if header[..4] != MAGIC {
+        bail!("bad SDPF magic {:?}", &header[..4]);
+    }
+    let version = u16::from_le_bytes([header[4], header[5]]);
+    if version != VERSION {
+        bail!("unsupported SDPF version {version} (want {VERSION})");
+    }
+    let kind = FrameKind::from_code(header[6])?;
+    let len = u32::from_le_bytes([header[7], header[8], header[9], header[10]])
+        as usize;
+    if len > MAX_PAYLOAD {
+        bail!("SDPF payload length {len} exceeds cap {MAX_PAYLOAD}");
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Frame::decode(kind, &payload)
+}
+
+fn encode_pattern(out: &mut Vec<u8>, pattern: &Pattern) {
+    let (tag, text): (u8, &str) = match pattern {
+        Pattern::Regex(t) => (0, t),
+        Pattern::RegexExact(t) => (1, t),
+        Pattern::Prosite(t) => (2, t),
+        Pattern::Grail(t) => (3, t),
+    };
+    out.push(tag);
+    let bytes = text.as_bytes();
+    out.extend_from_slice(&(bytes.len() as u64).to_le_bytes());
+    out.extend_from_slice(bytes);
+}
+
+fn decode_pattern(c: &mut Cursor<'_>) -> Result<Pattern> {
+    let tag = c.take(1)?[0];
+    let len = c.u64()? as usize;
+    let text = String::from_utf8(c.take(len)?.to_vec())?;
+    Ok(match tag {
+        0 => Pattern::Regex(text),
+        1 => Pattern::RegexExact(text),
+        2 => Pattern::Prosite(text),
+        3 => Pattern::Grail(text),
+        other => bail!("unknown pattern tag {other}"),
+    })
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.buf.len() - self.pos < n {
+            bail!(
+                "truncated SDPF payload: wanted {n} bytes at offset {}, \
+                 have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            );
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(frame: Frame) {
+        let bytes = frame.encode();
+        let mut r = &bytes[..];
+        let back = read_frame(&mut r).unwrap();
+        assert_eq!(back, frame);
+        assert!(r.is_empty(), "reader must consume the whole frame");
+    }
+
+    #[test]
+    fn every_frame_kind_roundtrips() {
+        roundtrip(Frame::Hello { worker: 3, rate_syms_per_us: 417.25 });
+        roundtrip(Frame::Compile {
+            pattern_id: 9,
+            pattern: Pattern::Regex("(ab|cd)+e".into()),
+        });
+        roundtrip(Frame::Compile {
+            pattern_id: 10,
+            pattern: Pattern::Grail("(START) |- 0\n0 -| (FINAL)\n".into()),
+        });
+        roundtrip(Frame::CompileOk { pattern_id: 9, states: 6 });
+        roundtrip(Frame::Match {
+            req_id: 77,
+            pattern_id: 9,
+            checkpoint_every: 65536,
+            resume: None,
+            data: b"abcdabcde".to_vec(),
+        });
+        roundtrip(Frame::Match {
+            req_id: 78,
+            pattern_id: 9,
+            checkpoint_every: 4096,
+            resume: Some(vec![1, 2, 3, 4]),
+            data: vec![0xAB; 100],
+        });
+        roundtrip(Frame::Checkpoint { req_id: 77, ckpt: vec![5; 40] });
+        roundtrip(Frame::Result { req_id: 77, ckpt: vec![6; 40] });
+        roundtrip(Frame::Heartbeat { nonce: 0xDEADBEEF });
+        roundtrip(Frame::Error { req_id: 1, message: "boom".into() });
+        roundtrip(Frame::Shutdown);
+    }
+
+    #[test]
+    fn corrupt_headers_are_rejected() {
+        let good = Frame::Heartbeat { nonce: 42 }.encode();
+        // bad magic
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(read_frame(&mut &bad[..]).is_err());
+        // bad version
+        let mut bad = good.clone();
+        bad[4] = 0xFF;
+        assert!(read_frame(&mut &bad[..]).is_err());
+        // unknown kind
+        let mut bad = good.clone();
+        bad[6] = 0x7F;
+        assert!(read_frame(&mut &bad[..]).is_err());
+        // oversized payload length
+        let mut bad = good.clone();
+        bad[7..11].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(read_frame(&mut &bad[..]).is_err());
+    }
+
+    #[test]
+    fn truncation_at_every_byte_is_rejected() {
+        let full = Frame::Result { req_id: 5, ckpt: vec![7; 16] }.encode();
+        for cut in 0..full.len() {
+            let mut r = &full[..cut];
+            assert!(
+                read_frame(&mut r).is_err(),
+                "truncation at byte {cut} must fail"
+            );
+        }
+    }
+
+    #[test]
+    fn trailing_payload_bytes_are_rejected() {
+        let mut bytes = Frame::Heartbeat { nonce: 1 }.encode();
+        // grow the declared payload by one garbage byte
+        let len = u32::from_le_bytes(bytes[7..11].try_into().unwrap()) + 1;
+        bytes[7..11].copy_from_slice(&len.to_le_bytes());
+        bytes.push(0xEE);
+        assert!(read_frame(&mut &bytes[..]).is_err());
+    }
+
+    #[test]
+    fn frame_kind_names_roundtrip() {
+        for kind in [
+            FrameKind::Hello,
+            FrameKind::Compile,
+            FrameKind::CompileOk,
+            FrameKind::Match,
+            FrameKind::Checkpoint,
+            FrameKind::Result,
+            FrameKind::Heartbeat,
+            FrameKind::Error,
+            FrameKind::Shutdown,
+        ] {
+            assert_eq!(FrameKind::parse(kind.name()).unwrap(), kind);
+            assert_eq!(FrameKind::from_code(kind.code()).unwrap(), kind);
+        }
+        assert!(FrameKind::parse("warp").is_err());
+        assert!(FrameKind::from_code(0).is_err());
+    }
+}

@@ -14,7 +14,7 @@ use crate::baseline::backtracking::BacktrackStats;
 use crate::baseline::greplike::GrepStats;
 use crate::baseline::holub_stekr::HolubStekrOutcome;
 use crate::baseline::sequential::SeqOutcome;
-use crate::cluster::CloudOutcome;
+use crate::cluster::{CloudOutcome, ProcOutcome};
 use crate::runtime::simd::SimdOutcome;
 use crate::speculative::matcher::MatchOutcome;
 
@@ -46,6 +46,9 @@ pub enum EngineKind {
     /// Segment-streamed, checkpoint-resumable matching
     /// ([`crate::engine::stream::StreamMatcher`]).
     Stream,
+    /// Real multi-process cluster over the framed socket protocol
+    /// ([`crate::cluster::proc::ProcCluster`]).
+    Cluster,
 }
 
 impl EngineKind {
@@ -61,6 +64,7 @@ impl EngineKind {
             EngineKind::Backtracking => "backtrack",
             EngineKind::GrepLike => "grep",
             EngineKind::Stream => "stream",
+            EngineKind::Cluster => "cluster",
         }
     }
 }
@@ -84,6 +88,7 @@ pub enum Detail {
     Backtracking(BacktrackStats),
     GrepLike(GrepStats),
     Stream(StreamStats),
+    Cluster(ProcOutcome),
 }
 
 /// Unified outcome of one membership test, whichever engine ran it.
@@ -142,12 +147,13 @@ mod tests {
             EngineKind::Backtracking,
             EngineKind::GrepLike,
             EngineKind::Stream,
+            EngineKind::Cluster,
         ];
         let names: Vec<&str> = all.iter().map(|k| k.name()).collect();
         assert_eq!(
             names,
             ["seq", "spec", "simd", "cloud", "shard", "holub", "backtrack",
-             "grep", "stream"]
+             "grep", "stream", "cluster"]
         );
         // names are distinct and Display matches name()
         for k in all {

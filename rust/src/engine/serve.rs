@@ -55,7 +55,17 @@
 //!   coalescing (k patterns × 1 input instead of 1 pattern × k inputs).
 //!   [`ServeStats::fused_passes`], [`ServeStats::patterns_fused`] and
 //!   [`ServeStats::prefilter_clears`] count the wins;
-//!   [`ServeConfig::fuse_cross_pattern`] turns the path off.
+//!   [`ServeConfig::fuse_cross_pattern`] turns the path off.  Compiled
+//!   set matchers live in their own LRU keyed by the distinct-pattern
+//!   list, so a recurring fused group recompiles nothing
+//!   ([`ServeStats::set_cache_hits`]); entries are epoch-invalidated by
+//!   re-calibration exactly like the per-pattern cache.
+//! * **Cluster routing** ([`ServeConfig::cluster`]): scans of at least
+//!   [`ServeConfig::cluster_min_bytes`] are handed to a
+//!   [`ProcCluster`](crate::cluster::ProcCluster) of worker processes;
+//!   its own degradation ladder guarantees the sequential verdict comes
+//!   back even when every worker is dead, so routing never weakens the
+//!   serve loop's failure-freedom.
 //! * **Preemptible scans** ([`ServeConfig::preempt_scans`]): scan-class
 //!   requests are served through the streaming wrapper
 //!   ([`super::stream::StreamMatcher`]) one
@@ -95,6 +105,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::cluster::ProcCluster;
 use crate::speculative::profile;
 
 use super::patternset::{
@@ -231,6 +242,15 @@ pub struct ServeConfig {
     /// Segment size (bytes) a preemptible scan is fed between park
     /// checks; clamped to at least 1.
     pub preempt_segment_bytes: usize,
+    /// Optional multi-process cluster: requests of at least
+    /// `cluster_min_bytes` (that are not parked scans) are served by
+    /// [`ProcCluster::match_bytes`] instead of an in-process matcher.
+    /// The cluster's degradation ladder still produces the sequential
+    /// verdict under any worker failure, so routing cannot change
+    /// results.
+    pub cluster: Option<Arc<ProcCluster>>,
+    /// Smallest input (bytes) routed to `cluster` when one is attached.
+    pub cluster_min_bytes: usize,
     /// Engine every request is served with (normally `Engine::Auto`).
     pub engine: Engine,
     /// Execution policy template; its `thresholds` field is replaced by
@@ -260,6 +280,8 @@ impl Default for ServeConfig {
             fuse_state_budget: DEFAULT_STATE_BUDGET,
             preempt_scans: false,
             preempt_segment_bytes: 1 << 20,
+            cluster: None,
+            cluster_min_bytes: 1 << 20,
             engine: Engine::Auto,
             policy: ExecPolicy::default(),
         }
@@ -405,6 +427,12 @@ pub struct ServeStats {
     /// Unique patterns rejected by the Aho–Corasick literal prefilter
     /// during cross-pattern groups (no DFA ran for them at all).
     pub prefilter_clears: u64,
+    /// Fused groups answered by an already-compiled set matcher from
+    /// the set-level LRU (each hit skipped a product-DFA construction).
+    pub set_cache_hits: u64,
+    /// Requests handed to the attached [`ServeConfig::cluster`]
+    /// (0 when no cluster is configured).
+    pub cluster_routed: u64,
     /// Scan-class requests parked mid-input because a probe was waiting
     /// (the checkpoint re-queued; counted once per park, so one scan can
     /// contribute many).
@@ -767,6 +795,25 @@ struct OutcomeCache {
     tick: u64,
 }
 
+/// One cached fused set matcher, keyed by the distinct-pattern list in
+/// first-appearance order (the [`serve_fused_group`] group identity).
+struct SetCacheEntry {
+    patterns: Vec<Pattern>,
+    /// calibration epoch the set was compiled under; stale entries are
+    /// recompiled so fused routing uses the fresh thresholds
+    epoch: u64,
+    matcher: Arc<CompiledSetMatcher>,
+    last_used: u64,
+}
+
+/// Set-matcher LRU, the fused-group analog of [`PatternCache`]: a
+/// recurring cross-pattern group (the same distinct patterns hammering
+/// one server) pays the product-DFA construction once.
+struct SetCache {
+    entries: Vec<SetCacheEntry>,
+    tick: u64,
+}
+
 struct Counters {
     submitted: AtomicU64,
     served: AtomicU64,
@@ -780,6 +827,8 @@ struct Counters {
     fused_passes: AtomicU64,
     patterns_fused: AtomicU64,
     prefilter_clears: AtomicU64,
+    set_cache_hits: AtomicU64,
+    cluster_routed: AtomicU64,
     preemptions: AtomicU64,
     resumed_scans: AtomicU64,
     evictions: AtomicU64,
@@ -804,6 +853,8 @@ impl Counters {
             fused_passes: AtomicU64::new(0),
             patterns_fused: AtomicU64::new(0),
             prefilter_clears: AtomicU64::new(0),
+            set_cache_hits: AtomicU64::new(0),
+            cluster_routed: AtomicU64::new(0),
             preemptions: AtomicU64::new(0),
             resumed_scans: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
@@ -838,6 +889,7 @@ struct Shared {
     /// queued behind the same new pattern
     compiled: Condvar,
     outcomes: Mutex<OutcomeCache>,
+    set_cache: Mutex<SetCache>,
     counters: Counters,
 }
 
@@ -956,6 +1008,10 @@ impl Server {
             }),
             compiled: Condvar::new(),
             outcomes: Mutex::new(OutcomeCache {
+                entries: Vec::new(),
+                tick: 0,
+            }),
+            set_cache: Mutex::new(SetCache {
                 entries: Vec::new(),
                 tick: 0,
             }),
@@ -1213,6 +1269,8 @@ fn stats_of(shared: &Shared) -> ServeStats {
         fused_passes: c.fused_passes.load(Ordering::Relaxed),
         patterns_fused: c.patterns_fused.load(Ordering::Relaxed),
         prefilter_clears: c.prefilter_clears.load(Ordering::Relaxed),
+        set_cache_hits: c.set_cache_hits.load(Ordering::Relaxed),
+        cluster_routed: c.cluster_routed.load(Ordering::Relaxed),
         preemptions: c.preemptions.load(Ordering::Relaxed),
         resumed_scans: c.resumed_scans.load(Ordering::Relaxed),
         evictions: c.evictions.load(Ordering::Relaxed),
@@ -1380,9 +1438,20 @@ fn serve_same_pattern(shared: &Shared, misses: Vec<(Request, Option<u64>)>) {
                 } else {
                     None
                 };
-                if memo.is_none() && preemptible(shared, &req) {
-                    serve_preemptible(shared, &cm, req);
-                    continue;
+                if memo.is_none() {
+                    if let Some(res) = serve_via_cluster(shared, &req) {
+                        match &res {
+                            Ok(_) => c.served.fetch_add(1, Ordering::SeqCst),
+                            Err(_) => c.failed.fetch_add(1, Ordering::SeqCst),
+                        };
+                        let _ = req.reply.send(res);
+                        finish_request(shared);
+                        continue;
+                    }
+                    if preemptible(shared, &req) {
+                        serve_preemptible(shared, &cm, req);
+                        continue;
+                    }
                 }
                 let res = match memo {
                     Some(out) => Ok(out),
@@ -1417,6 +1486,28 @@ fn serve_same_pattern(shared: &Shared, misses: Vec<(Request, Option<u64>)>) {
             }
         }
     }
+}
+
+/// Route one request to the attached process cluster, when configured
+/// and the input is large enough.  `None` means "serve locally"; parked
+/// scans always stay local (their checkpoint belongs to the in-process
+/// stream).  The cluster's own degradation ladder guarantees the
+/// verdict matches `Engine::Sequential` even with every worker dead, so
+/// this routing decision can never change a result.
+fn serve_via_cluster(shared: &Shared, req: &Request) -> Option<ServeResult> {
+    if req.ckpt.is_some() {
+        return None;
+    }
+    let cluster = shared.config.cluster.as_ref()?;
+    if req.input.len() < shared.config.cluster_min_bytes {
+        return None;
+    }
+    shared.counters.cluster_routed.fetch_add(1, Ordering::Relaxed);
+    Some(
+        cluster
+            .match_bytes(&req.pattern, &req.input)
+            .map_err(|e| ServeError::failed(format!("{e:#}"))),
+    )
 }
 
 /// Whether a request takes the preemptible streaming path: a scan-class
@@ -1521,14 +1612,7 @@ fn serve_fused_group(shared: &Shared, group: Vec<Request>) {
         serve_same_pattern(shared, misses);
         return;
     }
-    let set = PatternSet::from_patterns(distinct.clone());
-    let set_config = SetConfig {
-        engine: shared.config.engine.clone(),
-        policy: live_policy(shared),
-        state_budget: shared.config.fuse_state_budget,
-        prefilter: true,
-    };
-    let csm = match CompiledSetMatcher::compile(&set, set_config) {
+    let csm = match set_matcher_for(shared, &distinct) {
         Ok(csm) => csm,
         Err(_) => {
             // one bad pattern (or an AST-engine config) must not fail
@@ -1586,6 +1670,76 @@ fn serve_fused_group(shared: &Shared, group: Vec<Request>) {
             }
         }
     }
+}
+
+/// Set-matcher lookup / compile for a fused group, the
+/// [`matcher_for`] idiom generalized to a distinct-pattern-list key.
+/// Hits must be from the current calibration epoch; a stale entry is
+/// dropped and recompiled.  Unlike the per-pattern cache there is no
+/// in-flight marker: fused groups are far rarer than single patterns,
+/// so two workers racing on the same new group at worst compile it
+/// twice (the second insert wins the LRU slot) — never a wrong result.
+fn set_matcher_for(
+    shared: &Shared,
+    distinct: &[Pattern],
+) -> std::result::Result<Arc<CompiledSetMatcher>, ServeError> {
+    let epoch = shared.epoch.load(Ordering::SeqCst);
+    {
+        let mut cache = shared.set_cache.lock().unwrap();
+        cache.tick += 1;
+        let tick = cache.tick;
+        if let Some(pos) = cache
+            .entries
+            .iter()
+            .position(|e| e.patterns.as_slice() == distinct)
+        {
+            if cache.entries[pos].epoch == epoch {
+                let entry = &mut cache.entries[pos];
+                entry.last_used = tick;
+                shared
+                    .counters
+                    .set_cache_hits
+                    .fetch_add(1, Ordering::Relaxed);
+                return Ok(Arc::clone(&entry.matcher));
+            }
+            // compiled under stale thresholds: drop and recompile below
+            cache.entries.swap_remove(pos);
+        }
+    }
+    // compile with NO cache lock held (product DFAs can be large)
+    let set = PatternSet::from_patterns(distinct.to_vec());
+    let set_config = SetConfig {
+        engine: shared.config.engine.clone(),
+        policy: live_policy(shared),
+        state_budget: shared.config.fuse_state_budget,
+        prefilter: true,
+    };
+    let csm = Arc::new(
+        CompiledSetMatcher::compile(&set, set_config)
+            .map_err(|e| ServeError::failed(format!("{e:#}")))?,
+    );
+    let mut cache = shared.set_cache.lock().unwrap();
+    cache.tick += 1;
+    let tick = cache.tick;
+    if cache.entries.len() >= shared.config.cache_patterns {
+        if let Some(lru) = cache
+            .entries
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, e)| e.last_used)
+            .map(|(i, _)| i)
+        {
+            cache.entries.swap_remove(lru);
+            shared.counters.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    cache.entries.push(SetCacheEntry {
+        patterns: distinct.to_vec(),
+        epoch,
+        matcher: Arc::clone(&csm),
+        last_used: tick,
+    });
+    Ok(csm)
 }
 
 /// Split misses into per-pattern lists, preserving request order within
@@ -2241,5 +2395,115 @@ mod tests {
                 assert_eq!(q.len, mirror.len());
             }
         }
+    }
+
+    /// Build a fused group of one request per pattern, all sharing one
+    /// input, keeping the receivers alive so verdicts can be checked.
+    fn fused_group(
+        patterns: &[Pattern],
+        input: &[u8],
+    ) -> (Vec<Request>, Vec<Receiver<ServeResult>>) {
+        let mut group = Vec::new();
+        let mut rxs = Vec::new();
+        for p in patterns {
+            let (tx, rx) = channel();
+            group.push(Request {
+                pattern: p.clone(),
+                input: input.to_vec(),
+                reply: tx,
+                ckpt: None,
+            });
+            rxs.push(rx);
+        }
+        (group, rxs)
+    }
+
+    #[test]
+    fn fused_set_matcher_is_cached_and_epoch_invalidated() {
+        // memoization off so every repeat group reaches the set path
+        let server = Server::start(ServeConfig {
+            calibrate_on_start: false,
+            cache_outcomes: 0,
+            ..quick_config()
+        })
+        .unwrap();
+        let shared = &server.shared;
+        let patterns = [
+            Pattern::Regex("ab+c".to_string()),
+            Pattern::Regex("xyz".to_string()),
+        ];
+        let check = |rxs: Vec<Receiver<ServeResult>>| {
+            let o1 = rxs[0].recv().unwrap().unwrap();
+            let o2 = rxs[1].recv().unwrap().unwrap();
+            assert!(o1.accepted, "ab+c matches");
+            assert!(!o2.accepted, "xyz does not");
+        };
+
+        let (g1, rx1) = fused_group(&patterns, b"zzabbbczz");
+        serve_fused_group(shared, g1);
+        check(rx1);
+        assert_eq!(stats_of(shared).set_cache_hits, 0, "first group compiles");
+
+        let (g2, rx2) = fused_group(&patterns, b"zzabbbczz");
+        serve_fused_group(shared, g2);
+        check(rx2);
+        assert_eq!(stats_of(shared).set_cache_hits, 1, "repeat group hits");
+
+        // recalibration bumps the epoch: the cached set matcher was
+        // compiled under stale thresholds and must not be reused
+        recalibrate(shared);
+        let (g3, rx3) = fused_group(&patterns, b"zzabbbczz");
+        serve_fused_group(shared, g3);
+        check(rx3);
+        assert_eq!(
+            stats_of(shared).set_cache_hits,
+            1,
+            "post-epoch group recompiles"
+        );
+
+        let (g4, rx4) = fused_group(&patterns, b"zzabbbczz");
+        serve_fused_group(shared, g4);
+        check(rx4);
+        assert_eq!(stats_of(shared).set_cache_hits, 2);
+        server.shutdown();
+    }
+
+    #[test]
+    fn abandoned_tickets_do_not_strand_the_queue() {
+        // Satellite audit: a Ticket dropped after wait_timeout (or
+        // dropped outright) must not wedge the serve loop — the worker's
+        // reply send is `let _ =`, so a gone receiver only discards the
+        // outcome.  Regression test for the abandonment leak.
+        let server = Server::start(ServeConfig {
+            workers: 1,
+            ..quick_config()
+        })
+        .unwrap();
+        let pattern = Pattern::Regex("ab+c".to_string());
+        let mut abandoned = 0usize;
+        for _ in 0..8 {
+            let t = server.submit(pattern.clone(), &b"xxabbbcyy"[..]);
+            match t.wait_timeout(Duration::from_nanos(1)) {
+                Ok(out) => assert!(out.unwrap().accepted),
+                Err(ticket) => {
+                    drop(ticket); // abandon while possibly in flight
+                    abandoned += 1;
+                }
+            }
+        }
+        // dropped without any wait at all
+        let t = server.submit(pattern.clone(), &b"xxabbbcyy"[..]);
+        drop(t);
+        // the loop is still alive and serving
+        let t = server.submit(pattern, &b"xxabbbcyy"[..]);
+        assert!(t.wait().unwrap().accepted, "server survived abandonment");
+        let stats = server.shutdown();
+        assert_eq!(stats.submitted, 10);
+        assert_eq!(
+            stats.served + stats.failed + stats.rejected,
+            stats.submitted,
+            "every submission resolved: {stats:?} ({abandoned} abandoned)"
+        );
+        assert_eq!(stats.queue_depth, 0, "nothing stranded in the queue");
     }
 }

@@ -108,6 +108,15 @@ impl Checkpoint {
         self.stats
     }
 
+    /// The composed L-vector itself — the Fig. 9 merge operand.  A
+    /// chunk-mode stream ([`StreamMatcher::for_chunk`]) finishes with
+    /// entry `q` equal to `δ*(q, chunk)`, so a cluster frontend
+    /// composes per-chunk checkpoints with
+    /// [`LVector::compose`] (Eq. 9) instead of rescanning anything.
+    pub fn lvector(&self) -> &LVector {
+        &self.lv
+    }
+
     /// Serialize to the versioned `SDCK` wire format (little-endian):
     /// magic, version, flags, |Q|, the counters, the state map, the
     /// grounded-entry bitset, and the pending bytes.
@@ -313,6 +322,34 @@ impl<'m> StreamMatcher<'m> {
         }
     }
 
+    /// Start a **chunk-mode** stream: the L-vector is seeded with the
+    /// *identity map* (entry `q` starts at `q`) instead of the constant
+    /// map to `q0`, so after streaming a chunk through it, entry `q`
+    /// equals `δ*(q, chunk)` — the chunk's full per-state L-vector.
+    /// This is the worker side of the multi-process cluster
+    /// ([`crate::cluster::proc`]): every worker folds its own chunk
+    /// blind to the others' final states, and the frontend composes
+    /// the finished maps in chunk order (Fig. 9 / Eq. 9) to recover the
+    /// sequential verdict.  Costs up to |Q| chains per fold where the
+    /// constant seed pays one — the paper's price for speculation.
+    pub fn for_chunk(matcher: &'m CompiledMatcher) -> StreamMatcher<'m> {
+        let q = matcher.dfa().num_states as usize;
+        let lv =
+            LVector::from_raw((0..q as u32).collect(), vec![true; q]);
+        StreamMatcher {
+            matcher,
+            flat: matcher.seq.flat(),
+            ckpt: Checkpoint {
+                lv,
+                folded: 0,
+                pending: Vec::new(),
+                stats: StreamStats::default(),
+            },
+            fold_bytes: DEFAULT_FOLD_BYTES,
+            wall_s: 0.0,
+        }
+    }
+
     /// Continue a stream from a checkpoint — possibly taken by another
     /// `StreamMatcher` on another worker (or deserialized from another
     /// process).  Fails when the checkpoint's |Q| does not match this
@@ -360,6 +397,15 @@ impl<'m> StreamMatcher<'m> {
             folded: self.ckpt.folded,
             buffered: self.ckpt.pending.len(),
         }
+    }
+
+    /// Fold any buffered bytes through the kernel right now, leaving
+    /// the pending buffer empty.  A cluster worker flushes before
+    /// taking the final [`StreamMatcher::checkpoint`] of a chunk so the
+    /// shipped L-vector covers every byte ([`Checkpoint::buffered`]
+    /// is 0 and [`Checkpoint::offset`] equals the fold count).
+    pub fn flush(&mut self) {
+        self.fold();
     }
 
     /// Snapshot the resumable state (pending bytes included).
@@ -485,6 +531,69 @@ mod tests {
             Detail::Stream(stats) => assert!(stats.resumed),
             other => panic!("expected stream detail, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn chunk_mode_composes_to_the_one_shot_verdict() {
+        let cm = compile("(ab|cd)+e");
+        let input: Vec<u8> = (0..4096u32)
+            .map(|i| b"abcde"[(i.wrapping_mul(2654435761) % 5) as usize])
+            .collect();
+        let want = cm.run_bytes(&input).unwrap();
+        for split in [1usize, 7, 1000, 2048, 4095] {
+            let (left, right) = input.split_at(split);
+            let mut a = StreamMatcher::for_chunk(&cm);
+            a.set_fold_bytes(64);
+            a.feed(left);
+            a.flush();
+            let ca = a.checkpoint();
+            assert_eq!(ca.buffered(), 0, "flush must empty the buffer");
+            assert_eq!(ca.offset(), split as u64);
+            let mut b = StreamMatcher::for_chunk(&cm);
+            b.feed(right);
+            b.flush();
+            let cb = b.checkpoint();
+            // Fig. 9 / Eq. 9: compose the chunk maps in order, then
+            // read the start-state entry
+            let lv = ca.lvector().compose(cb.lvector());
+            let fin = lv.get(cm.dfa().start);
+            assert_eq!(Some(fin), want.final_state, "split {split}");
+            assert_eq!(
+                cm.dfa().accepting[fin as usize],
+                want.accepted,
+                "split {split}"
+            );
+        }
+    }
+
+    #[test]
+    fn chunk_mode_resume_continues_midway() {
+        let cm = compile("needle");
+        let input = vec![b'x'; 3000]
+            .into_iter()
+            .chain(b"needle".iter().copied())
+            .chain(vec![b'y'; 1000])
+            .collect::<Vec<u8>>();
+        // a "worker" dies after folding the first 2000 bytes; its last
+        // checkpoint resumes on a fresh stream that feeds the rest
+        let mut victim = StreamMatcher::for_chunk(&cm);
+        victim.set_fold_bytes(500);
+        victim.feed(&input[..2000]);
+        let ckpt = victim.checkpoint();
+        let wire = ckpt.to_bytes();
+        let restored = Checkpoint::from_bytes(&wire).unwrap();
+        let offset = restored.offset() as usize;
+        let mut survivor =
+            StreamMatcher::from_checkpoint(&cm, restored).unwrap();
+        survivor.feed(&input[offset..]);
+        survivor.flush();
+        let lv = survivor.checkpoint();
+        assert_eq!(lv.offset() as usize, input.len());
+        assert!(lv.stats().resumed);
+        let fin = lv.lvector().get(cm.dfa().start);
+        let want = cm.run_bytes(&input).unwrap();
+        assert_eq!(Some(fin), want.final_state);
+        assert!(cm.dfa().accepting[fin as usize]);
     }
 
     #[test]

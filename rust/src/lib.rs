@@ -65,7 +65,14 @@
 //! * [`speculative`] — the paper's contribution: failure-free speculative
 //!   parallel matching with I_max,r reverse-lookahead optimization,
 //!   weighted partitioning and L-vector merging.
-//! * [`cluster`] — simulated cloud computing environment (EC2 analog).
+//! * [`cluster`] — the cloud environment twice over: the simulated EC2
+//!   timing model ([`cluster::cloud`]) and a **real multi-process
+//!   cluster** ([`cluster::proc`]): `specdfa worker` processes speaking
+//!   a length-framed protocol over Unix/TCP sockets, Eq. (1)
+//!   capacity-weighted chunking, retry/backoff/heartbeat failure
+//!   handling with checkpointed failover, deterministic fault injection
+//!   ([`cluster::fault`]), and degradation to in-process matching under
+//!   total loss — every rung returning the sequential verdict.
 //! * [`runtime`] — the vector unit (the AVX2-gather analog): an emulated
 //!   lane kernel by default, the AOT-compiled Pallas artifact on PJRT
 //!   under the `xla-pjrt` feature.

@@ -11,12 +11,17 @@
 //!   grail       run a DFA given in Grail+ format
 //!   simd        run the PJRT vector-unit matcher
 //!   cloud       run the simulated-EC2 matcher
+//!   cluster     run the real multi-process cluster (with fault injection)
+//!   worker      cluster worker process (spawned by `cluster`, not by hand)
 
 use std::process::ExitCode;
 use std::sync::Arc;
 
 use specdfa::automata::{grail, FlatDfa, Width};
-use specdfa::cluster::{CloudMatcher, ClusterSpec};
+use specdfa::cluster::proc::{run_worker, Transport, WorkerConfig};
+use specdfa::cluster::{
+    CloudMatcher, ClusterSpec, FaultPlan, ProcCluster, ProcConfig,
+};
 use specdfa::engine::{
     Admission, CompiledMatcher, CompiledSetMatcher, Engine, ExecPolicy,
     Matcher, Pattern, PatternSet, PriorityPolicy, ServeConfig, Server,
@@ -52,6 +57,8 @@ fn main() -> ExitCode {
         Some("grail") => cmd_grail(&args[1..]),
         Some("simd") => cmd_simd(&args[1..]),
         Some("cloud") => cmd_cloud(&args[1..]),
+        Some("cluster") => cmd_cluster(&args[1..]),
+        Some("worker") => cmd_worker(&args[1..]),
         Some("help") | None => {
             print_usage();
             Ok(())
@@ -106,7 +113,9 @@ fn print_usage() {
          \x20KIND: regex|regex-exact|prosite; INPUT: text, @file, or \
          gen:N)\n\
          \x20 specdfa bench   [--suite \
-         kernels|engines|serve|patternset|stream|adversarial|all]\n\
+         kernels|engines|serve|patternset|stream|adversarial|\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 \
+         \x20cluster|all]\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 \
          [--quick] [--json PATH]\n\
          \x20 specdfa experiment <name>|all      names: {}\n\
@@ -116,14 +125,22 @@ fn print_usage() {
          \x20 specdfa simd    (--regex PAT | --prosite PAT) [--gen N] \
          [--variant V] [--lookahead R]\n\
          \x20 specdfa cloud   (--regex PAT | --prosite PAT) [--gen N] \
-         [--nodes K] [--lookahead R]",
+         [--nodes K] [--lookahead R]\n\
+         \x20 specdfa cluster [--workers N] [--regex PAT] [--n BYTES] \
+         [--requests K]\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 \
+         [--fault-plan SPEC] [--tcp]   (SPEC: `wK:PLAN;...`, PLAN e.g.\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 \
+         \x20kill@BYTES, drop=KIND[:N], trunc=KIND[:N], delay=MS, stall)\n\
+         \x20 specdfa worker  --connect ADDR --id K [--fault PLAN] \
+         (internal)",
         experiments::ALL.join(" ")
     );
 }
 
 /// Flags that take no value (presence == true); everything else is a
 /// --key value pair.
-const BOOL_FLAGS: &[&str] = &["quick", "no-prefilter", "stream"];
+const BOOL_FLAGS: &[&str] = &["quick", "no-prefilter", "stream", "tcp"];
 
 /// Minimal flag parser: --key value pairs, plus valueless [`BOOL_FLAGS`].
 fn flags(args: &[String]) -> anyhow::Result<Vec<(String, String)>> {
@@ -1361,6 +1378,109 @@ fn bench_adversarial(quick: bool, records: &mut Vec<BenchRecord>) {
     t2.print();
 }
 
+/// The `cluster` suite: real multi-process matching over the framed
+/// socket protocol vs the in-process one-shot yardstick, plus one
+/// faulted serve timing the full kill → failover → checkpoint-resume
+/// path.  Worker processes are this same binary (`specdfa worker`).
+fn bench_cluster(quick: bool, records: &mut Vec<BenchRecord>) {
+    let reps = if quick { 2 } else { 4 };
+    let n: usize = if quick { 1 << 19 } else { 4 << 20 };
+    let pattern = Pattern::Regex("ZQZQZQ".to_string());
+    let input = InputGen::new(0xC1A5).ascii_text(n);
+    let cm = CompiledMatcher::compile(
+        &pattern,
+        Engine::Sequential,
+        ExecPolicy::default(),
+    )
+    .expect("static pattern");
+    let expect = cm.run_bytes(&input).expect("local yardstick").accepted;
+    let mut table = Table::new(
+        "cluster (multi-process vs local one-shot)",
+        &["kernel", "chunks", "failovers", "MB/s"],
+    );
+    let mut push = |records: &mut Vec<BenchRecord>,
+                    kernel: &str,
+                    reps: usize,
+                    secs: f64,
+                    chunks: usize,
+                    failovers: u64| {
+        let sps = n as f64 / secs.max(1e-12);
+        records.push(BenchRecord {
+            suite: "cluster".to_string(),
+            workload: "ascii-text".to_string(),
+            kernel: kernel.to_string(),
+            width: None,
+            table_bytes: None,
+            n_syms: n,
+            reps,
+            secs_per_iter: secs,
+            syms_per_sec: sps,
+            syms_matched: None,
+            collapses: None,
+        });
+        table.row(vec![
+            kernel.to_string(),
+            chunks.to_string(),
+            failovers.to_string(),
+            format!("{:.1}", sps / (1 << 20) as f64),
+        ]);
+    };
+
+    // yardstick: the same verdict computed in-process
+    let secs = time_median(1, reps, || {
+        cm.run_bytes(&input).expect("local yardstick").accepted
+    });
+    push(records, "local_oneshot", reps, secs, 1, 0);
+
+    let quick_proc = |fault: Option<String>| ProcConfig {
+        workers: 2,
+        min_chunk_bytes: 1 << 12,
+        fault_spec: fault,
+        ..ProcConfig::default()
+    };
+
+    // healthy two-worker cluster
+    match ProcCluster::start(quick_proc(None)) {
+        Ok(cluster) => {
+            let run = || {
+                cluster
+                    .match_bytes(&pattern, &input)
+                    .expect("cluster serve")
+            };
+            let out = run(); // warmup (compiles the pattern on workers)
+            assert_eq!(out.accepted, expect, "failure-freedom violated");
+            let chunks = match &out.detail {
+                specdfa::engine::Detail::Cluster(p) => p.chunks,
+                _ => 1,
+            };
+            let secs = time_median(0, reps, || run().accepted);
+            let stats = cluster.shutdown();
+            push(records, "cluster_w2", reps, secs, chunks, stats.failovers);
+        }
+        Err(e) => eprintln!("bench: skip cluster_w2: {e:#}"),
+    }
+
+    // worker 1 killed mid-chunk: one serve paying the whole
+    // detect → retry → resume-from-checkpoint path
+    let kill = format!("w1:kill@{}", n / 8);
+    match ProcCluster::start(quick_proc(Some(kill))) {
+        Ok(cluster) => {
+            let (secs, out) =
+                time_once(|| cluster.match_bytes(&pattern, &input));
+            let out = out.expect("faulted serve still answers");
+            assert_eq!(out.accepted, expect, "failure-freedom violated");
+            let chunks = match &out.detail {
+                specdfa::engine::Detail::Cluster(p) => p.chunks,
+                _ => 1,
+            };
+            let stats = cluster.shutdown();
+            push(records, "cluster_w2_kill", 1, secs, chunks, stats.failovers);
+        }
+        Err(e) => eprintln!("bench: skip cluster_w2_kill: {e:#}"),
+    }
+    table.print();
+}
+
 /// `specdfa bench`: reproducible kernel-tier, engine and serve-latency
 /// benchmarks with machine-readable JSON output (the repo's
 /// `BENCH_*.json` trajectory).
@@ -1376,6 +1496,7 @@ fn cmd_bench(args: &[String]) -> anyhow::Result<()> {
         "patternset" => bench_patternset(quick, &mut records),
         "stream" => bench_stream(quick, &mut records),
         "adversarial" => bench_adversarial(quick, &mut records),
+        "cluster" => bench_cluster(quick, &mut records),
         "all" => {
             bench_kernels(quick, &mut records);
             bench_engines(quick, &mut records);
@@ -1383,11 +1504,12 @@ fn cmd_bench(args: &[String]) -> anyhow::Result<()> {
             bench_patternset(quick, &mut records);
             bench_stream(quick, &mut records);
             bench_adversarial(quick, &mut records);
+            bench_cluster(quick, &mut records);
         }
         other => anyhow::bail!(
             "unknown suite {other:?} \
              (expected kernels|engines|serve|patternset|stream|\
-              adversarial|all)"
+              adversarial|cluster|all)"
         ),
     }
     if let Some(path) = get(&fl, "json") {
@@ -1504,6 +1626,130 @@ fn cmd_simd(args: &[String]) -> anyhow::Result<()> {
         out.wall_s * 1e3
     );
     Ok(())
+}
+
+/// `specdfa cluster`: spawn a real multi-process cluster (workers are
+/// this same binary re-invoked as `specdfa worker`), run a differential
+/// batch against the sequential yardstick, and print the fault-tolerance
+/// telemetry.  `--fault-plan` injects deterministic failures
+/// (`w1:kill@65536`, `w0:trunc=result`, …) — the verdicts must still
+/// match, which is the whole point.
+fn cmd_cluster(args: &[String]) -> anyhow::Result<()> {
+    let fl = flags(args)?;
+    let workers: usize = get(&fl, "workers").unwrap_or("2").parse()?;
+    let pattern =
+        Pattern::Regex(get(&fl, "regex").unwrap_or("(ab|cd)+e").to_string());
+    let n: usize = get(&fl, "n").unwrap_or("4000000").parse()?;
+    let requests: usize = get(&fl, "requests").unwrap_or("4").parse()?;
+    let transport = if has_flag(&fl, "tcp") {
+        Transport::Tcp
+    } else {
+        Transport::default_for_host()
+    };
+    let config = ProcConfig {
+        workers,
+        transport,
+        min_chunk_bytes: 1 << 12,
+        fault_spec: get(&fl, "fault-plan").map(str::to_string),
+        ..ProcConfig::default()
+    };
+    let cluster = ProcCluster::start(config)?;
+    println!(
+        "cluster: {} of {workers} worker(s) attached ({transport:?})",
+        cluster.live_workers()
+    );
+
+    let cm = CompiledMatcher::compile(
+        &pattern,
+        Engine::Sequential,
+        ExecPolicy::default(),
+    )?;
+    let mut gen = InputGen::new(0xC15);
+    let mut mismatches = 0usize;
+    for i in 0..requests {
+        let input = gen.ascii_text(n);
+        let out = cluster.match_bytes(&pattern, &input)?;
+        let seq = cm.run_bytes(&input)?;
+        if out.accepted != seq.accepted {
+            mismatches += 1;
+        }
+        let detail = match &out.detail {
+            specdfa::engine::Detail::Cluster(p) => format!(
+                "{} chunk(s), {} retry(s), {} failover(s), \
+                 {} B resumed",
+                p.chunks, p.retries, p.failovers, p.resumed_bytes
+            ),
+            _ => "served locally".to_string(),
+        };
+        println!(
+            "request {i}: accepted={} via {} (n={n}; {detail}) \
+             seq={} -> {}",
+            out.accepted,
+            out.engine,
+            seq.accepted,
+            if out.accepted == seq.accepted { "OK" } else { "MISMATCH" }
+        );
+    }
+
+    let stats = cluster.shutdown();
+    let mut t = Table::new("cluster telemetry", &["counter", "value"]);
+    for (k, v) in [
+        ("serves", stats.serves),
+        ("cluster serves", stats.cluster_serves),
+        ("degraded to local", stats.degraded),
+        ("small served locally", stats.local_small),
+        ("retries", stats.retries),
+        ("failovers", stats.failovers),
+        ("worker deaths", stats.worker_deaths),
+        ("resumed serves", stats.resumed_serves),
+        ("resumed bytes", stats.resumed_bytes),
+        ("heartbeats", stats.heartbeats),
+        ("heartbeat failures", stats.heartbeat_failures),
+        ("bytes", stats.bytes),
+    ] {
+        t.row(vec![k.to_string(), v.to_string()]);
+    }
+    t.row(vec![
+        "live workers at end".to_string(),
+        stats.live_workers.to_string(),
+    ]);
+    t.print();
+    anyhow::ensure!(
+        mismatches == 0,
+        "{mismatches} verdict(s) diverged from sequential — \
+         failure-freedom violated"
+    );
+    Ok(())
+}
+
+/// `specdfa worker`: one cluster worker process.  Spawned by
+/// [`cmd_cluster`] / `ProcCluster::start`, not meant for interactive
+/// use; speaks the framed protocol on the socket given by `--connect`.
+fn cmd_worker(args: &[String]) -> anyhow::Result<()> {
+    let fl = flags(args)?;
+    let addr = get(&fl, "connect")
+        .ok_or_else(|| anyhow::anyhow!("worker needs --connect ADDR"))?;
+    let id: u32 = get(&fl, "id").unwrap_or("0").parse()?;
+    let fault = match get(&fl, "fault") {
+        Some(spec) => FaultPlan::parse(spec)?,
+        None => FaultPlan::default(),
+    };
+    let defaults = WorkerConfig::default();
+    let profile_runs: usize = match get(&fl, "profile-runs") {
+        Some(v) => v.parse()?,
+        None => defaults.profile_runs,
+    };
+    let profile_sample_syms: usize = match get(&fl, "profile-syms") {
+        Some(v) => v.parse()?,
+        None => defaults.profile_sample_syms,
+    };
+    run_worker(WorkerConfig {
+        addr: addr.to_string(),
+        id,
+        fault,
+        profile_runs,
+        profile_sample_syms,
+    })
 }
 
 fn cmd_cloud(args: &[String]) -> anyhow::Result<()> {

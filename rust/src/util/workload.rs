@@ -44,13 +44,16 @@
 //! [`crate::util::rng::test_seed`] so `SPECDFA_TEST_SEED` replays a CI
 //! failure exactly.
 
-use std::time::Duration;
+use std::sync::mpsc::channel;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::automata::{grail, Dfa};
-use crate::engine::serve::{ServeConfig, ServeError, ServeStats, Server};
+use crate::engine::serve::{ServeConfig, ServeError, ServeStats, Server, Ticket};
 use crate::engine::{CompiledMatcher, Engine, Matcher, Pattern};
+use crate::util::bench::percentile;
 use crate::util::rng::Rng;
 
 // ---------------------------------------------------------------------
@@ -405,6 +408,44 @@ pub fn pathological_corpus(seed: u64) -> Vec<AdversarialCase> {
 // serve-loop stress driver
 // ---------------------------------------------------------------------
 
+/// Client-observed latency percentiles for one scheduling class, in
+/// microseconds.  Latency is measured submit → reply received by a
+/// dedicated waiter thread, so it includes queueing, aging and
+/// preemption — the number a remote client would see, not the worker's
+/// service time.  Nearest-rank percentiles via
+/// [`crate::util::bench::percentile`].
+#[derive(Clone, Debug, Default)]
+pub struct LatencySummary {
+    /// requests observed in this class
+    pub count: usize,
+    /// median latency, µs
+    pub p50_us: f64,
+    /// 90th-percentile latency, µs
+    pub p90_us: f64,
+    /// 99th-percentile latency, µs
+    pub p99_us: f64,
+    /// worst observed latency, µs
+    pub max_us: f64,
+}
+
+impl LatencySummary {
+    /// Summarize raw per-request latencies (any order); all-zero for an
+    /// empty sample.
+    pub fn from_samples(mut us: Vec<f64>) -> LatencySummary {
+        if us.is_empty() {
+            return LatencySummary::default();
+        }
+        us.sort_by(f64::total_cmp);
+        LatencySummary {
+            count: us.len(),
+            p50_us: percentile(&us, 0.50),
+            p90_us: percentile(&us, 0.90),
+            p99_us: percentile(&us, 0.99),
+            max_us: *us.last().unwrap(),
+        }
+    }
+}
+
 /// What one [`replay_trace`] run observed.
 pub struct StressReport {
     /// final serving telemetry (taken after shutdown drained the queue)
@@ -418,6 +459,11 @@ pub struct StressReport {
     pub errors: usize,
     /// total input bytes submitted (throughput accounting)
     pub bytes: u64,
+    /// client-observed latency of probe-class requests (input ≤
+    /// `probe_max_bytes`)
+    pub probe_lat: LatencySummary,
+    /// client-observed latency of scan-class requests
+    pub scan_lat: LatencySummary,
 }
 
 /// Replay a trace against a live [`Server`] and differentially check
@@ -478,38 +524,79 @@ pub fn replay_trace(
         jobs.push(Job { pattern: idx, input, at_us: ev.at_us, expect });
     }
 
+    let probe_max = config.probe_max_bytes;
     let server = Server::start(config)?;
-    let mut tickets = Vec::with_capacity(jobs.len());
     let mut bytes = 0u64;
-    let mut last_at = jobs.first().map_or(0, |j| j.at_us);
-    for job in &jobs {
-        if pace_cap_us > 0 && job.at_us > last_at {
-            let gap = (job.at_us - last_at).min(pace_cap_us);
-            std::thread::sleep(Duration::from_micros(gap));
-        }
-        last_at = job.at_us;
-        bytes += job.input.len() as u64;
-        tickets.push(
-            server.submit(pool[job.pattern].pattern.clone(), job.input.clone()),
-        );
-    }
-
     let mut mismatches = 0usize;
     let mut rejected = 0usize;
     let mut errors = 0usize;
-    for (ticket, job) in tickets.into_iter().zip(&jobs) {
-        match ticket.wait() {
-            Ok(out) => {
-                if out.accepted != job.expect {
-                    mismatches += 1;
-                }
-            }
-            Err(ServeError::Overloaded { .. }) => rejected += 1,
-            Err(_) => errors += 1,
+    let mut probe_us: Vec<f64> = Vec::new();
+    let mut scan_us: Vec<f64> = Vec::new();
+
+    // a pool of waiter threads observes each reply as it lands, so the
+    // recorded latency is submit → reply (queueing included), not
+    // "position in a sequential drain loop"
+    std::thread::scope(|scope| {
+        let (work_tx, work_rx) = channel::<(usize, Ticket, Instant)>();
+        let work_rx = Mutex::new(work_rx);
+        let work_rx = &work_rx;
+        let (done_tx, done_rx) =
+            channel::<(usize, f64, std::result::Result<bool, ServeError>)>();
+        for _ in 0..jobs.len().clamp(1, 32) {
+            let done_tx = done_tx.clone();
+            scope.spawn(move || loop {
+                let msg = work_rx.lock().unwrap().recv();
+                let Ok((idx, ticket, at)) = msg else { break };
+                let res = ticket.wait().map(|out| out.accepted);
+                let us = at.elapsed().as_secs_f64() * 1e6;
+                let _ = done_tx.send((idx, us, res));
+            });
         }
-    }
+        drop(done_tx);
+
+        let mut last_at = jobs.first().map_or(0, |j| j.at_us);
+        for (idx, job) in jobs.iter().enumerate() {
+            if pace_cap_us > 0 && job.at_us > last_at {
+                let gap = (job.at_us - last_at).min(pace_cap_us);
+                std::thread::sleep(Duration::from_micros(gap));
+            }
+            last_at = job.at_us;
+            bytes += job.input.len() as u64;
+            let at = Instant::now();
+            let ticket = server
+                .submit(pool[job.pattern].pattern.clone(), job.input.clone());
+            let _ = work_tx.send((idx, ticket, at));
+        }
+        drop(work_tx);
+
+        for (idx, us, res) in done_rx {
+            match res {
+                Ok(accepted) => {
+                    if accepted != jobs[idx].expect {
+                        mismatches += 1;
+                    }
+                }
+                Err(ServeError::Overloaded { .. }) => rejected += 1,
+                Err(_) => errors += 1,
+            }
+            if jobs[idx].input.len() <= probe_max {
+                probe_us.push(us);
+            } else {
+                scan_us.push(us);
+            }
+        }
+    });
+
     let stats = server.shutdown();
-    Ok(StressReport { stats, rejected, mismatches, errors, bytes })
+    Ok(StressReport {
+        stats,
+        rejected,
+        mismatches,
+        errors,
+        bytes,
+        probe_lat: LatencySummary::from_samples(probe_us),
+        scan_lat: LatencySummary::from_samples(scan_us),
+    })
 }
 
 #[cfg(test)]
@@ -693,6 +780,18 @@ mod tests {
         assert_eq!(report.mismatches, 0);
         assert_eq!(report.errors, 0);
         assert_eq!(report.rejected, 0, "Block admission never rejects");
+        // latency telemetry covers every request, split by class, with
+        // sane percentile ordering
+        let (p, s) = (&report.probe_lat, &report.scan_lat);
+        assert_eq!(p.count + s.count, 60, "{p:?} {s:?}");
+        for lat in [p, s] {
+            if lat.count > 0 {
+                assert!(lat.p50_us > 0.0, "{lat:?}");
+                assert!(lat.p50_us <= lat.p90_us, "{lat:?}");
+                assert!(lat.p90_us <= lat.p99_us, "{lat:?}");
+                assert!(lat.p99_us <= lat.max_us, "{lat:?}");
+            }
+        }
         let s = &report.stats;
         assert_eq!(s.submitted, 60);
         assert_eq!(s.served + s.failed, s.submitted);

@@ -1,0 +1,252 @@
+//! Differential fault-tolerance suite for the real multi-process
+//! cluster (`cluster::proc`).
+//!
+//! Every test spawns actual `specdfa worker` processes (this crate's
+//! own binary, via `CARGO_BIN_EXE_specdfa`) speaking the framed socket
+//! protocol, then asserts the one invariant the paper's failure-freedom
+//! argument demands: **whatever is injected — a worker killed
+//! mid-chunk, a truncated or dropped `Result` frame, stalled
+//! heartbeats, total cluster loss — the verdict equals
+//! `Engine::Sequential`'s**, and the recovery telemetry proves the
+//! advertised path was taken (failover counted, checkpointed bytes
+//! resumed rather than rescanned, degradation to local matching under
+//! total loss).
+//!
+//! Inputs come from the PR 8 pathological corpus where the automaton
+//! shape matters, and from seeded ASCII text where only the fault
+//! machinery is under test.  `SPECDFA_TEST_SEED=<value>` replays a CI
+//! failure exactly.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use specdfa::cluster::{ClusterStats, ProcCluster, ProcConfig};
+use specdfa::engine::{
+    CompiledMatcher, Engine, ExecPolicy, Matcher, Pattern, ServeConfig,
+    Server,
+};
+use specdfa::util::rng::{test_seed, Rng};
+use specdfa::util::workload::pathological_corpus;
+use specdfa::workload::InputGen;
+
+/// Base configuration every test builds on: this crate's own binary as
+/// the worker, chunk/checkpoint sizes small enough that a ~512 KiB
+/// input spans many checkpoints, and timeouts short enough that the
+/// timeout-driven failure paths run in test time.
+fn config(workers: usize, fault: Option<&str>) -> ProcConfig {
+    ProcConfig {
+        workers,
+        worker_bin: Some(env!("CARGO_BIN_EXE_specdfa").into()),
+        min_chunk_bytes: 4 << 10,
+        checkpoint_every: 16 << 10,
+        request_timeout: Duration::from_millis(2500),
+        heartbeat_timeout: Duration::from_millis(500),
+        backoff_base: Duration::from_millis(5),
+        backoff_cap: Duration::from_millis(50),
+        profile_runs: 1,
+        profile_sample_syms: 4 << 10,
+        fault_spec: fault.map(str::to_string),
+        ..ProcConfig::default()
+    }
+}
+
+fn sequential(pattern: &Pattern) -> CompiledMatcher {
+    CompiledMatcher::compile(
+        pattern,
+        Engine::Sequential,
+        ExecPolicy::default(),
+    )
+    .expect("sequential yardstick compiles")
+}
+
+/// Run one pattern/input through a fresh cluster under `fault` and
+/// return (cluster verdict == sequential verdict, final stats).
+fn differential(
+    pattern: &Pattern,
+    input: &[u8],
+    workers: usize,
+    fault: Option<&str>,
+) -> (bool, ClusterStats) {
+    let cluster =
+        ProcCluster::start(config(workers, fault)).expect("cluster starts");
+    let out = cluster
+        .match_bytes(pattern, input)
+        .expect("a verdict is always produced");
+    let seq = sequential(pattern).run_bytes(input).expect("seq runs");
+    assert_eq!(
+        out.accepted, seq.accepted,
+        "failure-freedom violated under fault {fault:?}"
+    );
+    if let Some(fin) = out.final_state {
+        assert_eq!(fin, seq.final_state.expect("seq reports a state"));
+    }
+    (out.accepted == seq.accepted, cluster.shutdown())
+}
+
+#[test]
+fn no_fault_differential_on_pathological_corpus() {
+    let seed = test_seed();
+    let mut rng = Rng::new(seed ^ 0xC1D5);
+    let corpus = pathological_corpus(seed);
+    // a structural cross-section: permutation (γ = 1), dense frontier,
+    // sink-heavy, one ReDoS regex — enough shapes to catch a
+    // composition bug without spawning dozens of process fleets
+    let picks = ["perm-q64", "dense-q128", "sink-q32", "redos-alt"];
+    let mut tested = 0;
+    for case in corpus.iter().filter(|c| picks.contains(&c.name.as_str())) {
+        let n = 200 << 10;
+        let mut input: Vec<u8> = (0..n)
+            .map(|_| case.alphabet[rng.usize_below(case.alphabet.len())])
+            .collect();
+        if let Some(w) = &case.witness {
+            input[..w.len()].copy_from_slice(w);
+        }
+        let (ok, stats) = differential(&case.pattern, &input, 2, None);
+        assert!(ok, "{}", case.name);
+        assert!(
+            stats.cluster_serves >= 1,
+            "{}: input must go through the workers, not the local \
+             fallback: {stats:?}",
+            case.name
+        );
+        assert_eq!(stats.failovers, 0, "{}: no fault, no failover", case.name);
+        assert_eq!(stats.degraded, 0, "{}", case.name);
+        tested += 1;
+    }
+    assert!(tested >= 3, "corpus no longer contains the picked cases");
+}
+
+#[test]
+fn kill_mid_chunk_fails_over_and_resumes_from_checkpoint() {
+    let input = InputGen::new(test_seed() ^ 0x417).ascii_text(512 << 10);
+    let pattern = Pattern::Regex("ZQZQZQ".to_string());
+    // worker 1 dies after matching 64 KiB — several checkpoints into
+    // its ~256 KiB chunk
+    let (_, stats) =
+        differential(&pattern, &input, 2, Some("w1:kill@65536"));
+    assert!(stats.failovers >= 1, "{stats:?}");
+    assert!(stats.worker_deaths >= 1, "{stats:?}");
+    assert!(
+        stats.resumed_bytes > 0,
+        "failover must resume from the streamed checkpoint, not \
+         rescan from zero: {stats:?}"
+    );
+    assert!(stats.resumed_serves >= 1, "{stats:?}");
+    assert_eq!(stats.degraded, 0, "a survivor existed: {stats:?}");
+}
+
+#[test]
+fn truncated_result_frame_fails_over() {
+    let input = InputGen::new(test_seed() ^ 0x7256).ascii_text(256 << 10);
+    let pattern = Pattern::Regex("(ab|cd)+e".to_string());
+    // worker 1 writes half of its first Result frame, then exits: the
+    // frontend sees a corrupt/short read and must fail over
+    let (_, stats) =
+        differential(&pattern, &input, 2, Some("w1:trunc=result"));
+    assert!(stats.failovers >= 1, "{stats:?}");
+    assert!(stats.worker_deaths >= 1, "{stats:?}");
+    assert_eq!(stats.degraded, 0, "{stats:?}");
+}
+
+#[test]
+fn dropped_result_frame_times_out_and_retries() {
+    let input = InputGen::new(test_seed() ^ 0xD20).ascii_text(128 << 10);
+    let pattern = Pattern::Regex("(ab|cd)+e".to_string());
+    // worker 1 swallows its first Result frame but stays alive: only
+    // the per-request deadline can unstick this serve
+    let (_, stats) =
+        differential(&pattern, &input, 2, Some("w1:drop=result"));
+    assert!(stats.retries >= 1, "{stats:?}");
+    assert!(stats.failovers >= 1, "{stats:?}");
+}
+
+#[test]
+fn heartbeat_stall_is_detected_and_worker_buried() {
+    let input = InputGen::new(test_seed() ^ 0x57A1).ascii_text(128 << 10);
+    let pattern = Pattern::Regex("(ab|cd)+e".to_string());
+    let (_, stats) = differential(&pattern, &input, 2, Some("w1:stall"));
+    assert!(stats.heartbeat_failures >= 1, "{stats:?}");
+    assert!(stats.worker_deaths >= 1, "{stats:?}");
+    assert_eq!(stats.degraded, 0, "the healthy worker serves: {stats:?}");
+}
+
+#[test]
+fn total_cluster_loss_degrades_to_local_match() {
+    let input = InputGen::new(test_seed() ^ 0x1055).ascii_text(256 << 10);
+    let pattern = Pattern::Regex("ZQZQZQ".to_string());
+    // both workers die almost immediately: the ladder must end at the
+    // in-process engine, with a verdict — not an error
+    let (_, stats) = differential(
+        &pattern,
+        &input,
+        2,
+        Some("w0:kill@4096;w1:kill@4096"),
+    );
+    assert!(stats.degraded >= 1, "{stats:?}");
+    assert_eq!(stats.live_workers, 0, "{stats:?}");
+}
+
+#[test]
+fn cluster_survives_repeated_serves_after_failover() {
+    // the buried worker stays buried; later serves keep working on the
+    // survivor with no further retries
+    let cluster = ProcCluster::start(config(2, Some("w1:kill@32768")))
+        .expect("cluster starts");
+    let pattern = Pattern::Regex("ZQZQZQ".to_string());
+    let seq = sequential(&pattern);
+    let mut gen = InputGen::new(test_seed() ^ 0x2EAF);
+    for i in 0..3 {
+        let input = gen.ascii_text(128 << 10);
+        let out = cluster.match_bytes(&pattern, &input).expect("verdict");
+        let want = seq.run_bytes(&input).expect("seq").accepted;
+        assert_eq!(out.accepted, want, "serve {i}");
+    }
+    let stats = cluster.shutdown();
+    assert_eq!(stats.serves, 3, "{stats:?}");
+    assert!(stats.failovers >= 1, "{stats:?}");
+    assert!(stats.live_workers >= 1, "survivor still attached: {stats:?}");
+}
+
+#[test]
+fn serve_loop_routes_large_scans_through_the_cluster() {
+    let cluster =
+        Arc::new(ProcCluster::start(config(2, None)).expect("cluster"));
+    let server = Server::start(ServeConfig {
+        workers: 1,
+        profile_runs: 1,
+        profile_sample_syms: 4 << 10,
+        recalibrate_every: 0,
+        calibrate_on_start: false,
+        cache_outcomes: 0,
+        cluster: Some(Arc::clone(&cluster)),
+        cluster_min_bytes: 32 << 10,
+        ..ServeConfig::default()
+    })
+    .expect("server starts");
+    let pattern = Pattern::Regex("(ab|cd)+e".to_string());
+    let seq = sequential(&pattern);
+    let mut gen = InputGen::new(test_seed() ^ 0x5C42);
+    let small = gen.ascii_text(1 << 10); // below the routing floor
+    let large = gen.ascii_text(128 << 10); // routed to the cluster
+    let t_small = server.submit(pattern.clone(), small.clone());
+    let t_large = server.submit(pattern.clone(), large.clone());
+    let out_small = t_small.wait().expect("small serves");
+    let out_large = t_large.wait().expect("large serves");
+    assert_eq!(
+        out_small.accepted,
+        seq.run_bytes(&small).unwrap().accepted
+    );
+    assert_eq!(
+        out_large.accepted,
+        seq.run_bytes(&large).unwrap().accepted
+    );
+    let stats = server.shutdown();
+    assert!(
+        stats.cluster_routed >= 1,
+        "the large scan must route to the cluster: {stats:?}"
+    );
+    let cstats = cluster.stats();
+    assert!(cstats.serves >= 1, "{cstats:?}");
+    assert_eq!(cstats.degraded + cstats.local_small, 0, "{cstats:?}");
+    // worker processes are reaped by ProcCluster's Drop impl
+}
