@@ -1,0 +1,239 @@
+//! Per-DFA structural report: the speculation-feasibility pass.
+//!
+//! Everything `Engine::Auto` decides from at match time — γ = I_max,r/|Q|
+//! (Eq. 18), the I_max,r curve (Eq. 12, Lemma 1) — is surfaced here
+//! *before* anything runs, together with facts only a static pass has
+//! time to compute: the minimality gap against a Hopcroft re-minimized
+//! copy, dead/unreachable state counts, and sink absorption.  The verdict
+//! is binary: **speculation-friendly** (parallel substrates can win) or
+//! **speculation-hostile** (γ past the threshold — e.g. permutation DFAs
+//! where every r-gram image keeps |Q| candidates, so Eq. 18 bounds the
+//! speedup below break-even and Listing 1 is optimal).
+//!
+//! [`speculation_hostile`] is the same predicate `Engine::Auto` rule 2
+//! applies at dispatch; `engine::mod` consults it at *compile* time to
+//! skip building the parallel adapters a hostile DFA can never route to.
+
+use crate::automata::minimize::minimize;
+use crate::automata::Dfa;
+use crate::engine::select::{AutoThresholds, DfaProps};
+use crate::speculative::lookahead::Lookahead;
+
+/// The speculation-feasibility verdict for one DFA.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Feasibility {
+    /// γ ≤ threshold: parallel substrates can beat Listing 1.
+    Friendly,
+    /// γ > threshold: Eq. 18 bounds every parallel substrate below
+    /// break-even; route sequential.
+    Hostile,
+}
+
+impl Feasibility {
+    /// Stable lowercase identifier (used in the JSON report).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Feasibility::Friendly => "speculation-friendly",
+            Feasibility::Hostile => "speculation-hostile",
+        }
+    }
+}
+
+/// The DFA pass report.
+#[derive(Clone, Debug)]
+pub struct DfaReport {
+    /// |Q|
+    pub q: usize,
+    /// |Σ| (dense symbol classes)
+    pub sigma: usize,
+    /// lookahead depth used (≥ 1)
+    pub r: usize,
+    /// I_max,r (Eq. 12)
+    pub i_max: usize,
+    /// the I_max,k curve for k = 1..=r (Lemma 1: non-increasing)
+    pub i_max_by_r: Vec<usize>,
+    /// γ = I_max,r / |Q| (Eq. 18)
+    pub gamma: f64,
+    /// |Q| of the Hopcroft-minimized copy
+    pub minimal_q: usize,
+    /// |Q| − minimal |Q| (0 = the DFA is already minimal)
+    pub minimality_gap: usize,
+    /// states unreachable from the start state
+    pub unreachable_states: usize,
+    /// live states from which no accepting state is reachable
+    /// (beyond the designated sink)
+    pub dead_states: usize,
+    /// the absorbing non-accepting sink, if one exists
+    pub sink_state: Option<u32>,
+    /// number of accepting states
+    pub accepting_states: usize,
+    /// processor count the cost model was evaluated for
+    pub processors: usize,
+    /// γ threshold the verdict used
+    pub gamma_max: f64,
+    /// Eq. 18 cost model: predicted speculative speedup on `processors`
+    /// cores — min(P, 1 + (P−1)/I_max,r)
+    pub predicted_speedup: f64,
+    /// Eq. 18 cost model: per-chunk overhead factor — each non-first
+    /// chunk must run I_max,r chains instead of 1
+    pub chunk_overhead: f64,
+    /// the verdict
+    pub feasibility: Feasibility,
+}
+
+/// The same predicate [`crate::engine::select::select`] rule 2 applies at
+/// dispatch time: γ past the threshold means every parallel substrate is
+/// bounded below break-even, so Auto always routes sequential.
+pub fn speculation_hostile(props: &DfaProps, t: &AutoThresholds) -> bool {
+    props.gamma > t.gamma_max
+}
+
+/// Run the DFA pass: Lookahead BFS for the I_max,r curve, a Hopcroft
+/// re-minimization for the minimality gap, and reachability sweeps for
+/// dead/unreachable states.  `r` is clamped to ≥ 1; `gamma_max` is the
+/// verdict threshold (use [`AutoThresholds::default`]'s 0.5 to match
+/// Auto routing).
+pub fn analyze_dfa(
+    dfa: &Dfa,
+    r: usize,
+    processors: usize,
+    gamma_max: f64,
+) -> DfaReport {
+    let q = dfa.num_states as usize;
+    let la = Lookahead::analyze(dfa, r.max(1));
+    let gamma = la.gamma(dfa);
+    let minimal_q = minimize(dfa).num_states as usize;
+    let unreachable = q - dfa.trim_unreachable().num_states as usize;
+    let sink = dfa.sink();
+    let dead = dead_states(dfa, sink);
+    let p = processors.max(1) as f64;
+    let i_max = la.i_max.max(1) as f64;
+    let predicted_speedup = (1.0 + (p - 1.0) / i_max).min(p);
+    let feasibility = if gamma > gamma_max {
+        Feasibility::Hostile
+    } else {
+        Feasibility::Friendly
+    };
+    DfaReport {
+        q,
+        sigma: dfa.num_symbols as usize,
+        r: la.r,
+        i_max: la.i_max,
+        i_max_by_r: la.i_max_by_r.clone(),
+        gamma,
+        minimal_q,
+        minimality_gap: q.saturating_sub(minimal_q),
+        unreachable_states: unreachable,
+        dead_states: dead,
+        sink_state: sink,
+        accepting_states: dfa.num_accepting(),
+        processors: processors.max(1),
+        gamma_max,
+        predicted_speedup,
+        chunk_overhead: i_max,
+        feasibility,
+    }
+}
+
+/// Count live (start-reachable) non-sink states from which no accepting
+/// state is reachable — work the matcher does that can never change the
+/// verdict, i.e. states a trimming pass could absorb into the sink.
+fn dead_states(dfa: &Dfa, sink: Option<u32>) -> usize {
+    let q = dfa.num_states as usize;
+    let s = dfa.num_symbols as usize;
+    // reverse edges
+    let mut preds: Vec<Vec<u32>> = vec![Vec::new(); q];
+    for state in 0..q as u32 {
+        for sym in 0..s as u32 {
+            let t = dfa.step(state, sym) as usize;
+            preds[t].push(state);
+        }
+    }
+    // backward BFS from accepting states
+    let mut productive = vec![false; q];
+    let mut stack: Vec<u32> = (0..q as u32)
+        .filter(|&st| dfa.accepting[st as usize])
+        .collect();
+    for &st in &stack {
+        productive[st as usize] = true;
+    }
+    while let Some(st) = stack.pop() {
+        for &p in &preds[st as usize] {
+            if !productive[p as usize] {
+                productive[p as usize] = true;
+                stack.push(p);
+            }
+        }
+    }
+    // forward reachability from start
+    let mut reachable = vec![false; q];
+    reachable[dfa.start as usize] = true;
+    let mut stack = vec![dfa.start];
+    while let Some(st) = stack.pop() {
+        for sym in 0..s as u32 {
+            let t = dfa.step(st, sym);
+            if !reachable[t as usize] {
+                reachable[t as usize] = true;
+                stack.push(t);
+            }
+        }
+    }
+    (0..q)
+        .filter(|&st| {
+            reachable[st] && !productive[st] && Some(st as u32) != sink
+        })
+        .count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::regex::compile::compile_search;
+    use crate::util::workload::permutation_dfa;
+
+    #[test]
+    fn literal_dfa_is_friendly_and_minimal() {
+        let dfa = compile_search("needle").unwrap();
+        let rep = analyze_dfa(&dfa, 4, 8, 0.5);
+        assert_eq!(rep.feasibility, Feasibility::Friendly);
+        assert_eq!(rep.minimality_gap, 0, "compile pipeline minimizes");
+        assert_eq!(rep.unreachable_states, 0);
+        assert!(rep.gamma <= 0.5, "gamma {}", rep.gamma);
+        assert!(rep.predicted_speedup > 1.0);
+        // Lemma 1: the curve is non-increasing
+        for w in rep.i_max_by_r.windows(2) {
+            assert!(w[0] >= w[1], "{:?}", rep.i_max_by_r);
+        }
+    }
+
+    #[test]
+    fn permutation_dfa_is_hostile() {
+        // γ = 1: every symbol permutes Q, so every r-gram image keeps
+        // all |Q| candidates — the paper's worst case.
+        let dfa = permutation_dfa(16, 4, 7);
+        let rep = analyze_dfa(&dfa, 4, 8, 0.5);
+        assert_eq!(rep.i_max, rep.q);
+        assert!((rep.gamma - 1.0).abs() < 1e-12);
+        assert_eq!(rep.feasibility, Feasibility::Hostile);
+        assert_eq!(rep.feasibility.name(), "speculation-hostile");
+        // Eq. 18: 8 cores buy < 1.5x on a permutation DFA
+        assert!(rep.predicted_speedup < 1.5, "{}", rep.predicted_speedup);
+        let props = DfaProps::analyze(&dfa, 4);
+        assert!(speculation_hostile(&props, &AutoThresholds::default()));
+    }
+
+    #[test]
+    fn dead_state_detection() {
+        // a(b) with an explicit dead branch: build via Grail text —
+        // state 2 is live-reachable but can never accept, and is not
+        // the all-self-loop sink (it steps to the sink 3).
+        let dfa = crate::automata::grail::from_grail(
+            "(START) |- 0\n0 0 1\n0 1 2\n1 0 1\n1 1 1\n\
+             2 0 3\n2 1 3\n3 0 3\n3 1 3\n1 -| (FINAL)\n",
+        )
+        .unwrap();
+        let rep = analyze_dfa(&dfa, 2, 4, 0.5);
+        assert_eq!(rep.sink_state, Some(3));
+        assert_eq!(rep.dead_states, 1, "state 2 is dead but not the sink");
+    }
+}

@@ -1,0 +1,151 @@
+//! Pre-fuse product-size estimation: predict `automata::product::fuse`
+//! blowup before paying for it.
+//!
+//! The product construction (the arXiv 1405.0562 / 1512.09228 lineage)
+//! interns reachable state *tuples* by BFS and aborts once it has
+//! interned more than `state_budget` of them — discovering a doomed fuse
+//! only after burning the whole budget.  This pass bounds the reachable
+//! tuple count from component structure alone:
+//!
+//! * **Upper bound** — ∏ trimmed |Qᵢ| (saturating): the product can
+//!   never intern more tuples than the full cross product.
+//! * **Certain lower bound** — max trimmed |Qᵢ|: every component all
+//!   read the *same* word, so each state reachable in component *i* via
+//!   some word appears in a reachable tuple — the product has at least
+//!   as many reachable tuples as its largest component has reachable
+//!   states.
+//!
+//! `predicted_overflow` fires only off the *certain* bound, so a skip
+//! decision ([`crate::engine::patternset`]'s
+//! `SetOutcome::fuse_skipped_predicted`) is provably one `fuse` would
+//! have aborted anyway: reachable ≥ certain_min > budget means the BFS
+//! must intern more than `budget` tuples before finishing.
+//!
+//! Also reported: the combined byte-class signature — the number of
+//! distinct `(class₁(b), …, classₖ(b))` tuples over all 256 byte values,
+//! which is exactly the fused product's dense symbol count (its table
+//! width), and a measure of how much the component alphabets overlap.
+
+use std::collections::HashSet;
+
+use crate::automata::Dfa;
+
+/// The fuse pass report for one component list.
+#[derive(Clone, Debug)]
+pub struct FuseEstimate {
+    /// number of component DFAs
+    pub components: usize,
+    /// trimmed (start-reachable) |Q| per component
+    pub component_states: Vec<usize>,
+    /// ∏ trimmed |Qᵢ|, saturating — the product can never exceed this
+    pub upper_bound: usize,
+    /// max trimmed |Qᵢ| — the product provably reaches at least this
+    /// many tuples (all components read the same word)
+    pub certain_min: usize,
+    /// distinct combined byte-class tuples over 0..=255 — the fused
+    /// product's dense symbol count
+    pub combined_classes: usize,
+    /// the state budget the prediction was made against (0 = unlimited)
+    pub budget: usize,
+    /// `budget != 0 && certain_min > budget`: `fuse` is guaranteed to
+    /// abort, skip it
+    pub predicted_overflow: bool,
+}
+
+/// Bound the fused product size for `dfas` against `budget` (0 =
+/// unlimited, matching [`crate::automata::product::fuse`]'s convention).
+pub fn estimate_fuse(dfas: &[&Dfa], budget: usize) -> FuseEstimate {
+    let component_states: Vec<usize> = dfas
+        .iter()
+        .map(|d| d.trim_unreachable().num_states as usize)
+        .collect();
+    let upper_bound = component_states
+        .iter()
+        .fold(1usize, |acc, &q| acc.saturating_mul(q.max(1)));
+    let certain_min = component_states.iter().copied().max().unwrap_or(0);
+    let combined_classes = combined_class_count(dfas);
+    FuseEstimate {
+        components: dfas.len(),
+        component_states,
+        upper_bound,
+        certain_min,
+        combined_classes,
+        budget,
+        predicted_overflow: budget != 0 && certain_min > budget,
+    }
+}
+
+/// Number of distinct `(class₁(b), …, classₖ(b))` tuples over all 256
+/// byte values — the fused product's dense symbol count.
+fn combined_class_count(dfas: &[&Dfa]) -> usize {
+    if dfas.is_empty() {
+        return 0;
+    }
+    let mut seen: HashSet<Vec<u32>> = HashSet::new();
+    for b in 0..=255u8 {
+        seen.insert(dfas.iter().map(|d| d.class_of(b)).collect());
+    }
+    seen.len()
+}
+
+/// Whether every pair of required literals is disjoint (no literal a
+/// substring of another, no overlap prefix/suffix sharing needed — the
+/// simple "no pattern's literal contains another's" check).  `None` when
+/// any component lacks a required literal.  Disjoint literals mean the
+/// prefilter can attribute candidates to single patterns, a fact the
+/// report surfaces for routing quality.
+pub fn literals_disjoint(literals: &[Option<Vec<u8>>]) -> Option<bool> {
+    let lits: Option<Vec<&Vec<u8>>> =
+        literals.iter().map(|l| l.as_ref()).collect();
+    let lits = lits?;
+    for i in 0..lits.len() {
+        for j in 0..lits.len() {
+            if i != j && contains_sub(lits[i], lits[j]) {
+                return Some(false);
+            }
+        }
+    }
+    Some(true)
+}
+
+fn contains_sub(hay: &[u8], needle: &[u8]) -> bool {
+    needle.is_empty()
+        || hay.windows(needle.len()).any(|w| w == needle)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::automata::product::fuse;
+    use crate::regex::compile::compile_search;
+
+    #[test]
+    fn bounds_bracket_the_actual_product() {
+        let a = compile_search("cat").unwrap();
+        let b = compile_search("dog").unwrap();
+        let est = estimate_fuse(&[&a, &b], 0);
+        let prod = fuse(&[&a, &b], 0, 1).expect("unlimited budget");
+        let actual = prod.dfa.num_states as usize;
+        assert!(est.certain_min <= actual, "{} > {actual}", est.certain_min);
+        assert!(est.upper_bound >= actual, "{} < {actual}", est.upper_bound);
+        assert_eq!(est.combined_classes, prod.dfa.num_symbols as usize);
+        assert!(!est.predicted_overflow);
+    }
+
+    #[test]
+    fn certain_overflow_means_fuse_aborts() {
+        let a = compile_search("cat").unwrap();
+        let b = compile_search("dog").unwrap();
+        let est = estimate_fuse(&[&a, &b], 1);
+        assert!(est.predicted_overflow, "certain_min {}", est.certain_min);
+        assert!(fuse(&[&a, &b], 1, 1).is_none(), "prediction must be sound");
+    }
+
+    #[test]
+    fn literal_disjointness() {
+        let l = |s: &str| Some(s.as_bytes().to_vec());
+        assert_eq!(literals_disjoint(&[l("cat"), l("dog")]), Some(true));
+        assert_eq!(literals_disjoint(&[l("cat"), l("concatenate")]), Some(false));
+        assert_eq!(literals_disjoint(&[l("cat"), None]), None);
+    }
+}

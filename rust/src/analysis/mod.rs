@@ -1,0 +1,40 @@
+//! Static hazard analysis: every pass runs *before* anything executes.
+//!
+//! The paper's levers are structural DFA properties (Eq. 11–18: I_σ,
+//! I_max,r, γ); this subsystem turns them — plus the regex-pathology
+//! catalog of arXiv 1110.1716 and the product-size predictability
+//! observation of arXiv 1512.09228 — into a pre-execution analyzer with
+//! four passes and one versioned machine-readable record:
+//!
+//! | pass | subject | hazard / fact |
+//! |------|---------|----------------|
+//! | [`regex`] | pattern AST | ReDoS ambiguity (nested quantifiers, overlapping alternation), anchors, required literal |
+//! | [`dfa`] | compiled DFA | γ / I_max,r curve (Eq. 12/18), minimality gap, dead states, speculation-feasibility verdict |
+//! | [`fuse`] | pattern set | product-size bounds: skip `fuse` attempts guaranteed to bust `state_budget` |
+//! | [`proto`] | `cluster::proto` | session-FSM safety: every arrival handled, no dead ends |
+//!
+//! Consumers:
+//!
+//! * `specdfa analyze` (CLI) emits the [`report::ANALYSIS_SCHEMA`] JSON
+//!   record.
+//! * [`crate::engine::serve`] gates admission on the regex pass
+//!   ([`crate::engine::serve::HazardPolicy`]).
+//! * [`crate::engine::patternset`] consults the fuse estimate before
+//!   paying for a doomed product construction.
+//! * `Engine::Auto` ([`crate::engine::CompiledMatcher`]) skips building
+//!   parallel adapters for speculation-hostile DFAs.
+
+pub mod dfa;
+pub mod fuse;
+pub mod proto;
+pub mod regex;
+pub mod report;
+
+pub use dfa::{analyze_dfa, speculation_hostile, DfaReport, Feasibility};
+pub use fuse::{estimate_fuse, literals_disjoint, FuseEstimate};
+pub use proto::{check_model, session_model, ProtoReport, SessionModel, SessionState};
+pub use regex::{lint_ast, lint_pattern, Hazard, HazardKind, PatternFacts, PatternReport};
+pub use report::{
+    analyze_patterns, render_analysis_json, AnalysisReport, PatternAnalysis,
+    ANALYSIS_SCHEMA,
+};

@@ -1,0 +1,297 @@
+//! Session-FSM model and checker for the `cluster::proto` conversation.
+//!
+//! The frontend/worker protocol is enforced today by integration tests
+//! (`tests/cluster_proc.rs`) and fault-injection fuzzing — both
+//! *trajectory* checks.  This pass is the static complement: the
+//! conversation is written down as an explicit finite state machine over
+//! the [`FrameKind`] alphabet, and an exhaustive-exploration checker
+//! asserts the safety properties a trajectory suite can only sample:
+//!
+//! 1. every declared (state, frame) arrival has a handler transition,
+//! 2. every state is reachable from the start state,
+//! 3. every non-terminal state can still reach a terminal (no live-lock
+//!    dead ends),
+//! 4. terminal states have no outgoing transitions,
+//! 5. every transition's (state, frame) pair is declared as a possible
+//!    arrival (the model can't handle frames it claims can't arrive).
+//!
+//! [`session_model`] is the model of the protocol *as implemented* in
+//! [`crate::cluster::proc`]; the ground-truth test seeds a mutation
+//! (dropping the idle Heartbeat handler) and asserts the checker
+//! catches it.
+
+use crate::cluster::proto::FrameKind;
+
+/// The frontend's view of one worker conversation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SessionState {
+    /// socket connected, Hello not yet received
+    Connecting,
+    /// attached, no outstanding request
+    Idle,
+    /// a Compile is outstanding
+    Compiling,
+    /// a Match is outstanding (checkpoints may stream)
+    Matching,
+    /// Shutdown sent; the conversation is over
+    Closed,
+}
+
+impl SessionState {
+    /// Stable lowercase identifier (used in the JSON report).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SessionState::Connecting => "connecting",
+            SessionState::Idle => "idle",
+            SessionState::Compiling => "compiling",
+            SessionState::Matching => "matching",
+            SessionState::Closed => "closed",
+        }
+    }
+}
+
+/// A declarative session FSM: states, the frame alphabet, which frames
+/// may arrive in which states, and the handler transitions.
+#[derive(Clone, Debug)]
+pub struct SessionModel {
+    /// every session state
+    pub states: Vec<SessionState>,
+    /// initial state
+    pub start: SessionState,
+    /// terminal states (conversation over)
+    pub terminals: Vec<SessionState>,
+    /// (state, frame) pairs that can arrive per the protocol contract
+    pub may_arrive: Vec<(SessionState, FrameKind)>,
+    /// handler transitions: in `state`, on `frame`, go to `next`
+    pub transitions: Vec<(SessionState, FrameKind, SessionState)>,
+}
+
+/// The proto pass report.
+#[derive(Clone, Debug)]
+pub struct ProtoReport {
+    /// number of states in the model
+    pub states: usize,
+    /// number of handler transitions
+    pub transitions: usize,
+    /// number of declared (state, frame) arrivals
+    pub arrivals: usize,
+    /// every safety violation found (empty = the model checks out)
+    pub problems: Vec<String>,
+}
+
+impl ProtoReport {
+    /// Whether the model passed every check.
+    pub fn ok(&self) -> bool {
+        self.problems.is_empty()
+    }
+}
+
+/// The SDPF conversation as implemented by [`crate::cluster::proc`]:
+/// attach (`Hello`), compile round-trips, match with streamed
+/// checkpoints, heartbeats in any quiescent or matching state, and
+/// explicit shutdown.  Errors abort the outstanding request back to
+/// idle (the retry/failover ladder runs above this layer).
+pub fn session_model() -> SessionModel {
+    use FrameKind::*;
+    use SessionState::*;
+    SessionModel {
+        states: vec![Connecting, Idle, Compiling, Matching, Closed],
+        start: Connecting,
+        terminals: vec![Closed],
+        may_arrive: vec![
+            (Connecting, Hello),
+            (Idle, Compile),
+            (Compiling, CompileOk),
+            (Compiling, Error),
+            (Idle, Match),
+            (Matching, Checkpoint),
+            (Matching, Result),
+            (Matching, Error),
+            (Matching, Heartbeat),
+            (Idle, Heartbeat),
+            (Idle, Shutdown),
+        ],
+        transitions: vec![
+            (Connecting, Hello, Idle),
+            (Idle, Compile, Compiling),
+            (Compiling, CompileOk, Idle),
+            (Compiling, Error, Idle),
+            (Idle, Match, Matching),
+            (Matching, Checkpoint, Matching),
+            (Matching, Result, Idle),
+            (Matching, Error, Idle),
+            (Matching, Heartbeat, Matching),
+            (Idle, Heartbeat, Idle),
+            (Idle, Shutdown, Closed),
+        ],
+    }
+}
+
+/// Exhaustively check a session model (the five safety properties in
+/// the module docs).  Every violation is reported, not just the first.
+pub fn check_model(model: &SessionModel) -> ProtoReport {
+    let mut problems = Vec::new();
+
+    // 1. every declared arrival has a handler
+    for &(state, frame) in &model.may_arrive {
+        let handled = model
+            .transitions
+            .iter()
+            .any(|&(s, f, _)| s == state && f == frame);
+        if !handled {
+            problems.push(format!(
+                "unhandled arrival: frame {} in state {} has no transition",
+                frame.name(),
+                state.name()
+            ));
+        }
+    }
+
+    // 5. no transition for an undeclared arrival
+    for &(state, frame, _) in &model.transitions {
+        let declared = model
+            .may_arrive
+            .iter()
+            .any(|&(s, f)| s == state && f == frame);
+        if !declared {
+            problems.push(format!(
+                "phantom transition: frame {} handled in state {} but \
+                 not declared as a possible arrival",
+                frame.name(),
+                state.name()
+            ));
+        }
+    }
+
+    // reachability from start over handler transitions
+    let mut reachable = vec![model.start];
+    let mut frontier = vec![model.start];
+    while let Some(state) = frontier.pop() {
+        for &(s, _, next) in &model.transitions {
+            if s == state && !reachable.contains(&next) {
+                reachable.push(next);
+                frontier.push(next);
+            }
+        }
+    }
+
+    // 2. every state reachable
+    for &state in &model.states {
+        if !reachable.contains(&state) {
+            problems.push(format!(
+                "unreachable state: {} cannot be entered from {}",
+                state.name(),
+                model.start.name()
+            ));
+        }
+    }
+
+    // 3. every reachable non-terminal can reach a terminal — backward
+    // sweep from the terminals
+    let mut can_finish: Vec<SessionState> = model.terminals.clone();
+    loop {
+        let mut grew = false;
+        for &(s, _, next) in &model.transitions {
+            if can_finish.contains(&next) && !can_finish.contains(&s) {
+                can_finish.push(s);
+                grew = true;
+            }
+        }
+        if !grew {
+            break;
+        }
+    }
+    for &state in &reachable {
+        if !model.terminals.contains(&state) && !can_finish.contains(&state)
+        {
+            problems.push(format!(
+                "dead end: non-terminal state {} cannot reach any \
+                 terminal state",
+                state.name()
+            ));
+        }
+    }
+
+    // 4. terminals have no outgoing transitions
+    for &term in &model.terminals {
+        for &(s, frame, _) in &model.transitions {
+            if s == term {
+                problems.push(format!(
+                    "terminal state {} has an outgoing transition on {}",
+                    term.name(),
+                    frame.name()
+                ));
+            }
+        }
+    }
+
+    ProtoReport {
+        states: model.states.len(),
+        transitions: model.transitions.len(),
+        arrivals: model.may_arrive.len(),
+        problems,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn current_protocol_checks_out() {
+        let report = check_model(&session_model());
+        assert!(report.ok(), "problems: {:?}", report.problems);
+        assert_eq!(report.states, 5);
+    }
+
+    #[test]
+    fn dropped_handler_is_caught() {
+        let mut model = session_model();
+        model.transitions.retain(|&(s, f, _)| {
+            !(s == SessionState::Idle && f == FrameKind::Heartbeat)
+        });
+        let report = check_model(&model);
+        assert!(!report.ok());
+        assert!(
+            report.problems.iter().any(|p| p.contains("unhandled")
+                && p.contains("heartbeat")
+                && p.contains("idle")),
+            "{:?}",
+            report.problems
+        );
+    }
+
+    #[test]
+    fn dead_end_is_caught() {
+        let mut model = session_model();
+        // sever Idle's path to Closed
+        model.transitions.retain(|&(s, f, _)| {
+            !(s == SessionState::Idle && f == FrameKind::Shutdown)
+        });
+        model
+            .may_arrive
+            .retain(|&(s, f)| !(s == SessionState::Idle && f == FrameKind::Shutdown));
+        let report = check_model(&model);
+        assert!(
+            report.problems.iter().any(|p| p.contains("dead end")),
+            "{:?}",
+            report.problems
+        );
+    }
+
+    #[test]
+    fn phantom_transition_is_caught() {
+        let mut model = session_model();
+        model.transitions.push((
+            SessionState::Connecting,
+            FrameKind::Shutdown,
+            SessionState::Closed,
+        ));
+        let report = check_model(&model);
+        assert!(
+            report.problems.iter().any(|p| p.contains("phantom")),
+            "{:?}",
+            report.problems
+        );
+    }
+}

@@ -1,0 +1,428 @@
+//! AST lints over [`Pattern`]: the pre-execution regex hazard pass.
+//!
+//! The detector targets the matching pathologies cataloged by Quesada
+//! et al. (arXiv 1110.1716) — the ambiguity families that blow up a
+//! backtracking matcher even though the DFA engines are immune:
+//!
+//! * **Nested unbounded quantifiers** (`(a+)+`, `(a*b*)*`) — the number
+//!   of ways to split the input among the repeat levels is exponential
+//!   in its length ("exponential ReDoS").
+//! * **Overlapping alternation under an unbounded repeat** (`(a|a)*b`,
+//!   `(ab|a)*c`) — two branches can consume the same prefix, so a
+//!   backtracker explores polynomially many branch interleavings
+//!   ("polynomial ReDoS").
+//!
+//! The repo keeps a backtracking comparator engine whose fuel cap
+//! ([`crate::baseline::backtracking::MAX_FUEL`]) exists precisely for
+//! these inputs; this pass flags them *before* anything runs, so the
+//! serving stack can warn or refuse at admission
+//! ([`crate::engine::ServeConfig::hazard_policy`]) instead of burning
+//! the fuel budget.
+//!
+//! Besides hazards the pass reports routing-quality **facts**: anchors,
+//! the required literal (the grep-like prefilter key), AST size and
+//! quantifier-nesting depth, and feature-use counts.
+
+use anyhow::Result;
+
+use crate::automata::byteset::ByteSet;
+use crate::baseline::greplike::required_literal;
+use crate::engine::Pattern;
+use crate::regex::ast::Ast;
+use crate::regex::{parser, prosite};
+
+/// The hazard family a lint found.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HazardKind {
+    /// Nested unbounded quantifiers: exponential backtracking blowup.
+    NestedQuantifier,
+    /// Overlapping alternation branches under an unbounded repeat:
+    /// polynomial backtracking blowup.
+    OverlappingAlternation,
+}
+
+impl HazardKind {
+    /// Blowup class of this hazard family ("exponential"/"polynomial").
+    pub fn severity(&self) -> &'static str {
+        match self {
+            HazardKind::NestedQuantifier => "exponential",
+            HazardKind::OverlappingAlternation => "polynomial",
+        }
+    }
+
+    /// Stable lowercase identifier (used in the JSON report).
+    pub fn name(&self) -> &'static str {
+        match self {
+            HazardKind::NestedQuantifier => "nested-quantifier",
+            HazardKind::OverlappingAlternation => "overlapping-alternation",
+        }
+    }
+}
+
+/// One hazard found by the AST lints.
+#[derive(Clone, Debug)]
+pub struct Hazard {
+    /// the hazard family
+    pub kind: HazardKind,
+    /// human-readable description of the offending construct
+    pub detail: String,
+}
+
+/// Routing-quality facts about a pattern (no hazard implied).
+#[derive(Clone, Debug, Default)]
+pub struct PatternFacts {
+    /// AST node count ([`Ast::size`])
+    pub ast_size: usize,
+    /// maximum quantifier-nesting depth (repeats inside repeats)
+    pub repeat_depth: usize,
+    /// number of unbounded (`max = None`) repeats
+    pub unbounded_repeats: usize,
+    /// number of alternation nodes
+    pub alternations: usize,
+    /// pattern is anchored at the start (`^` / `<`)
+    pub anchored_start: bool,
+    /// pattern is anchored at the end (`$` / `>`)
+    pub anchored_end: bool,
+    /// the required literal every match must contain, when one exists
+    /// (the grep-like / Aho–Corasick prefilter key)
+    pub required_literal: Option<Vec<u8>>,
+}
+
+/// The regex pass report for one pattern.
+#[derive(Clone, Debug)]
+pub struct PatternReport {
+    /// source pattern text
+    pub pattern: String,
+    /// pattern frontend ("regex" / "regex-exact" / "prosite" / "grail")
+    pub kind: &'static str,
+    /// hazards found (empty = clean)
+    pub hazards: Vec<Hazard>,
+    /// routing-quality facts
+    pub facts: PatternFacts,
+}
+
+impl PatternReport {
+    /// Whether any ReDoS-family hazard was found.
+    pub fn is_hazardous(&self) -> bool {
+        !self.hazards.is_empty()
+    }
+}
+
+/// Run the regex pass on one [`Pattern`].  Parse-only — no NFA, subset
+/// construction or minimization runs — so this is cheap enough to gate
+/// serve admission on.  Fails only if the pattern does not parse.
+pub fn lint_pattern(pattern: &Pattern) -> Result<PatternReport> {
+    let (text, kind, ast, anchored_start, anchored_end) = match pattern {
+        Pattern::Regex(p) => {
+            let parsed = parser::parse(p)?;
+            (p.as_str(), "regex", Some(parsed.ast), parsed.anchored_start, parsed.anchored_end)
+        }
+        Pattern::RegexExact(p) => {
+            let parsed = parser::parse(p)?;
+            // whole-input semantics: effectively anchored at both ends
+            (p.as_str(), "regex-exact", Some(parsed.ast), true, true)
+        }
+        Pattern::Prosite(p) => {
+            let parsed = prosite::parse(p)?;
+            (p.as_str(), "prosite", Some(parsed.ast), parsed.anchored_start, parsed.anchored_end)
+        }
+        Pattern::Grail(text) => {
+            // no AST: validate the text parses, report facts-only
+            crate::automata::grail::from_grail(text)?;
+            (text.as_str(), "grail", None, true, true)
+        }
+    };
+    let (hazards, facts) = match &ast {
+        Some(ast) => {
+            let mut facts = PatternFacts {
+                ast_size: ast.size(),
+                required_literal: required_literal(ast),
+                anchored_start,
+                anchored_end,
+                ..PatternFacts::default()
+            };
+            collect_facts(ast, 0, &mut facts);
+            (lint_ast(ast), facts)
+        }
+        None => (
+            Vec::new(),
+            PatternFacts { anchored_start, anchored_end, ..PatternFacts::default() },
+        ),
+    };
+    Ok(PatternReport { pattern: text.to_string(), kind, hazards, facts })
+}
+
+/// Run the ReDoS lints over a raw AST.  Returns every hazard found
+/// (deduplicated by construct, not by family — a pattern with two
+/// independent nests reports two hazards).
+pub fn lint_ast(ast: &Ast) -> Vec<Hazard> {
+    let mut out = Vec::new();
+    walk(ast, &mut out);
+    out
+}
+
+fn walk(ast: &Ast, out: &mut Vec<Hazard>) {
+    if let Ast::Repeat { node, max: None, .. } = ast {
+        if matches_nonempty(node) {
+            if directly_unbounded(node) {
+                out.push(Hazard {
+                    kind: HazardKind::NestedQuantifier,
+                    detail: "unbounded repeat whose body is itself \
+                             unbounded (e.g. (a+)+): exponential \
+                             backtracking ambiguity"
+                        .to_string(),
+                });
+            }
+            for alt in body_alternations(node) {
+                if let Some((i, j)) = overlapping_branches(alt) {
+                    out.push(Hazard {
+                        kind: HazardKind::OverlappingAlternation,
+                        detail: format!(
+                            "alternation branches {i} and {j} share \
+                             first bytes under an unbounded repeat \
+                             (e.g. (a|a)* / (ab|a)*): polynomial \
+                             backtracking ambiguity"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    match ast {
+        Ast::Concat(parts) | Ast::Alt(parts) => {
+            for p in parts {
+                walk(p, out);
+            }
+        }
+        Ast::Repeat { node, .. } => walk(node, out),
+        Ast::Empty | Ast::Epsilon | Ast::Class(_) => {}
+    }
+}
+
+/// Whether the repeat body can absorb input through a nested unbounded
+/// repeat with every other element skippable — the shape where the
+/// outer and inner repeat compete for the same characters.
+fn directly_unbounded(body: &Ast) -> bool {
+    match body {
+        Ast::Repeat { node, max: None, .. } => matches_nonempty(node),
+        Ast::Concat(parts) => {
+            parts.iter().any(directly_unbounded)
+                && parts
+                    .iter()
+                    .all(|p| nullable(p) || directly_unbounded(p))
+        }
+        Ast::Alt(parts) => parts.iter().any(directly_unbounded),
+        _ => false,
+    }
+}
+
+/// The alternation nodes that sit at the "top" of a repeat body: the
+/// body itself, or an element of a concat whose other elements are all
+/// nullable (so the alternation competes with the repeat directly).
+fn body_alternations(body: &Ast) -> Vec<&Ast> {
+    match body {
+        Ast::Alt(_) => vec![body],
+        Ast::Concat(parts) if parts.iter().all(nullable_or_alt) => parts
+            .iter()
+            .filter(|p| matches!(p, Ast::Alt(_)))
+            .collect(),
+        _ => Vec::new(),
+    }
+}
+
+fn nullable_or_alt(ast: &Ast) -> bool {
+    nullable(ast) || matches!(ast, Ast::Alt(_))
+}
+
+/// First pair of alternation branches that both match non-empty input
+/// and share a possible first byte (the local-ambiguity witness).
+fn overlapping_branches(alt: &Ast) -> Option<(usize, usize)> {
+    let Ast::Alt(branches) = alt else { return None };
+    for i in 0..branches.len() {
+        if !matches_nonempty(&branches[i]) {
+            continue;
+        }
+        let fi = first_set(&branches[i]);
+        for (jo, bj) in branches.iter().enumerate().skip(i + 1) {
+            if !matches_nonempty(bj) {
+                continue;
+            }
+            if !fi.intersect(&first_set(bj)).is_empty() {
+                return Some((i, jo));
+            }
+        }
+    }
+    None
+}
+
+/// Whether the node's language contains the empty string.
+fn nullable(ast: &Ast) -> bool {
+    match ast {
+        Ast::Empty => false,
+        Ast::Epsilon => true,
+        Ast::Class(_) => false,
+        Ast::Concat(parts) => parts.iter().all(nullable),
+        Ast::Alt(parts) => parts.iter().any(nullable),
+        Ast::Repeat { node, min, .. } => *min == 0 || nullable(node),
+    }
+}
+
+/// Whether the node's language contains a non-empty string.
+fn matches_nonempty(ast: &Ast) -> bool {
+    match ast {
+        Ast::Empty | Ast::Epsilon => false,
+        Ast::Class(s) => !s.is_empty(),
+        Ast::Concat(parts) => {
+            parts.iter().all(can_match) && parts.iter().any(matches_nonempty)
+        }
+        Ast::Alt(parts) => parts.iter().any(matches_nonempty),
+        Ast::Repeat { node, max, .. } => {
+            *max != Some(0) && matches_nonempty(node)
+        }
+    }
+}
+
+/// Whether the node's language is non-empty at all.
+fn can_match(ast: &Ast) -> bool {
+    match ast {
+        Ast::Empty => false,
+        Ast::Epsilon => true,
+        Ast::Class(s) => !s.is_empty(),
+        Ast::Concat(parts) => parts.iter().all(can_match),
+        Ast::Alt(parts) => parts.iter().any(can_match),
+        Ast::Repeat { node, min, .. } => *min == 0 || can_match(node),
+    }
+}
+
+/// Possible first bytes of the non-empty strings in the node's language
+/// (conservative over-approximation).
+fn first_set(ast: &Ast) -> ByteSet {
+    match ast {
+        Ast::Empty | Ast::Epsilon => ByteSet::EMPTY,
+        Ast::Class(s) => *s,
+        Ast::Concat(parts) => {
+            let mut fs = ByteSet::EMPTY;
+            for p in parts {
+                fs = fs.union(&first_set(p));
+                if !nullable(p) {
+                    break;
+                }
+            }
+            fs
+        }
+        Ast::Alt(parts) => {
+            let mut fs = ByteSet::EMPTY;
+            for p in parts {
+                fs = fs.union(&first_set(p));
+            }
+            fs
+        }
+        Ast::Repeat { node, max, .. } => {
+            if *max == Some(0) {
+                ByteSet::EMPTY
+            } else {
+                first_set(node)
+            }
+        }
+    }
+}
+
+fn collect_facts(ast: &Ast, depth: usize, facts: &mut PatternFacts) {
+    match ast {
+        Ast::Alt(parts) => {
+            facts.alternations += 1;
+            for p in parts {
+                collect_facts(p, depth, facts);
+            }
+        }
+        Ast::Concat(parts) => {
+            for p in parts {
+                collect_facts(p, depth, facts);
+            }
+        }
+        Ast::Repeat { node, max, .. } => {
+            let depth = depth + 1;
+            facts.repeat_depth = facts.repeat_depth.max(depth);
+            if max.is_none() {
+                facts.unbounded_repeats += 1;
+            }
+            collect_facts(node, depth, facts);
+        }
+        Ast::Empty | Ast::Epsilon | Ast::Class(_) => {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint(p: &str) -> Vec<Hazard> {
+        lint_pattern(&Pattern::Regex(p.to_string())).unwrap().hazards
+    }
+
+    #[test]
+    fn flags_the_redos_families() {
+        // polynomial: overlapping alternation under a star
+        let h = lint("(a|a)*b");
+        assert!(h.iter().any(|h| h.kind == HazardKind::OverlappingAlternation), "{h:?}");
+        let h = lint("(ab|a)*c");
+        assert!(h.iter().any(|h| h.kind == HazardKind::OverlappingAlternation), "{h:?}");
+        // exponential: nested unbounded quantifiers
+        let h = lint("(a+)+b");
+        assert!(h.iter().any(|h| h.kind == HazardKind::NestedQuantifier), "{h:?}");
+        let h = lint("(a*b*)*c");
+        assert!(h.iter().any(|h| h.kind == HazardKind::NestedQuantifier), "{h:?}");
+    }
+
+    #[test]
+    fn clean_patterns_stay_clean() {
+        for p in [
+            "abc",
+            "[0-9]+",
+            "(ab|cd)+e",
+            "a{2,5}b",
+            "(a+b)+",      // inner repeat guarded by a mandatory 'b'
+            "(ab|cd|ef)*", // disjoint first bytes
+            "colou?r",
+            "(a|b)(a|b)",  // overlap, but not under a repeat
+        ] {
+            assert!(lint(p).is_empty(), "false positive on {p:?}: {:?}", lint(p));
+        }
+    }
+
+    #[test]
+    fn severity_classes() {
+        assert_eq!(HazardKind::NestedQuantifier.severity(), "exponential");
+        assert_eq!(
+            HazardKind::OverlappingAlternation.severity(),
+            "polynomial"
+        );
+    }
+
+    #[test]
+    fn facts_capture_structure() {
+        let r = lint_pattern(&Pattern::Regex("^(ab|cd)+e$".to_string()))
+            .unwrap();
+        assert!(r.facts.anchored_start && r.facts.anchored_end);
+        assert_eq!(r.facts.alternations, 1);
+        assert_eq!(r.facts.unbounded_repeats, 1);
+        assert_eq!(r.facts.repeat_depth, 1);
+        assert!(r.hazards.is_empty());
+        let r = lint_pattern(&Pattern::Regex("needle".to_string())).unwrap();
+        assert_eq!(r.facts.required_literal.as_deref(), Some(&b"needle"[..]));
+    }
+
+    #[test]
+    fn prosite_and_grail_frontends_lint() {
+        let r = lint_pattern(&Pattern::Prosite("C-x(2)-C.".to_string()))
+            .unwrap();
+        assert_eq!(r.kind, "prosite");
+        assert!(r.hazards.is_empty());
+        let fig6 = "(START) |- 0\n0 0 1\n0 1 2\n1 0 1\n1 1 3\n2 0 3\n\
+                    2 1 2\n3 0 3\n3 1 3\n3 -| (FINAL)\n";
+        let r = lint_pattern(&Pattern::Grail(fig6.to_string())).unwrap();
+        assert_eq!(r.kind, "grail");
+        assert!(r.hazards.is_empty());
+        assert!(lint_pattern(&Pattern::Regex("(a".to_string())).is_err());
+    }
+}

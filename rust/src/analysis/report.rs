@@ -1,0 +1,319 @@
+//! The machine-readable analysis record: `specdfa-analysis-v1`.
+//!
+//! [`analyze_patterns`] runs every pass over a pattern list —
+//! [`super::regex`] lints, per-DFA [`super::dfa`] structure reports, the
+//! [`super::fuse`] product-size estimate when more than one pattern is
+//! given, and the [`super::proto`] session-FSM check — and
+//! [`render_analysis_json`] serializes the result as a versioned JSON
+//! document, the same hand-rolled emission style as the
+//! `specdfa-bench-v1` records ([`crate::util::bench`]).  CI
+//! schema-validates the document alongside the bench records.
+
+use anyhow::Result;
+
+use crate::engine::Pattern;
+use crate::util::bench::json_escape;
+
+use super::dfa::{analyze_dfa, DfaReport};
+use super::fuse::{estimate_fuse, literals_disjoint, FuseEstimate};
+use super::proto::{check_model, session_model, ProtoReport};
+use super::regex::{lint_pattern, PatternReport};
+
+/// Schema identifier stamped into every analysis JSON document.
+pub const ANALYSIS_SCHEMA: &str = "specdfa-analysis-v1";
+
+/// All passes' results for one pattern.
+#[derive(Clone, Debug)]
+pub struct PatternAnalysis {
+    /// the regex pass (AST lints + facts)
+    pub regex: PatternReport,
+    /// the DFA pass (structure + feasibility verdict)
+    pub dfa: DfaReport,
+}
+
+/// The full analysis record for one `specdfa analyze` invocation.
+#[derive(Clone, Debug)]
+pub struct AnalysisReport {
+    /// per-pattern pass results, in input order
+    pub patterns: Vec<PatternAnalysis>,
+    /// the fuse estimate (present when ≥ 2 patterns were analyzed)
+    pub fuse: Option<FuseEstimate>,
+    /// whether the patterns' required literals are pairwise disjoint
+    /// (`None` when any pattern lacks one, or with < 2 patterns)
+    pub literals_disjoint: Option<bool>,
+    /// the protocol session-FSM check (pattern-independent)
+    pub proto: ProtoReport,
+    /// lookahead depth the DFA pass used
+    pub r: usize,
+    /// processor count the Eq. 18 cost model used
+    pub processors: usize,
+    /// γ threshold the feasibility verdicts used
+    pub gamma_max: f64,
+}
+
+impl AnalysisReport {
+    /// Number of patterns with at least one ReDoS-family hazard.
+    pub fn hazardous(&self) -> usize {
+        self.patterns.iter().filter(|p| p.regex.is_hazardous()).count()
+    }
+}
+
+/// Run every pass over `patterns`.  `state_budget` parameterizes the
+/// fuse estimate (0 = unlimited, the `fuse` convention); `r`,
+/// `processors` and `gamma_max` parameterize the DFA pass.  Fails only
+/// if a pattern does not parse/compile.
+pub fn analyze_patterns(
+    patterns: &[Pattern],
+    r: usize,
+    processors: usize,
+    gamma_max: f64,
+    state_budget: usize,
+) -> Result<AnalysisReport> {
+    let mut reports = Vec::with_capacity(patterns.len());
+    let mut dfas = Vec::with_capacity(patterns.len());
+    for p in patterns {
+        let regex = lint_pattern(p)?;
+        let parts = p.compile()?;
+        dfas.push(parts.dfa);
+        reports.push(regex);
+    }
+    let analyses: Vec<PatternAnalysis> = reports
+        .into_iter()
+        .zip(&dfas)
+        .map(|(regex, dfa)| PatternAnalysis {
+            dfa: analyze_dfa(dfa, r, processors, gamma_max),
+            regex,
+        })
+        .collect();
+    let (fuse, lits) = if dfas.len() >= 2 {
+        let refs: Vec<&crate::automata::Dfa> = dfas.iter().collect();
+        let literals: Vec<Option<Vec<u8>>> = analyses
+            .iter()
+            .map(|a| a.regex.facts.required_literal.clone())
+            .collect();
+        (
+            Some(estimate_fuse(&refs, state_budget)),
+            literals_disjoint(&literals),
+        )
+    } else {
+        (None, None)
+    };
+    Ok(AnalysisReport {
+        patterns: analyses,
+        fuse,
+        literals_disjoint: lits,
+        proto: check_model(&session_model()),
+        r: r.max(1),
+        processors: processors.max(1),
+        gamma_max,
+    })
+}
+
+/// Serialize the report as a `specdfa-analysis-v1` JSON document.
+pub fn render_analysis_json(report: &AnalysisReport) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str(&format!("  \"schema\": \"{ANALYSIS_SCHEMA}\",\n"));
+    out.push_str(&format!(
+        "  \"params\": {{\"r\": {}, \"processors\": {}, \"gamma_max\": {}}},\n",
+        report.r,
+        report.processors,
+        json_f64(report.gamma_max)
+    ));
+    out.push_str(&format!(
+        "  \"hazardous_patterns\": {},\n",
+        report.hazardous()
+    ));
+    out.push_str("  \"patterns\": [\n");
+    for (i, p) in report.patterns.iter().enumerate() {
+        out.push_str("    ");
+        out.push_str(&pattern_json(p));
+        out.push_str(if i + 1 < report.patterns.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ],\n");
+    match &report.fuse {
+        Some(f) => out.push_str(&format!("  \"fuse\": {},\n", fuse_json(f))),
+        None => out.push_str("  \"fuse\": null,\n"),
+    }
+    out.push_str(&format!(
+        "  \"literals_disjoint\": {},\n",
+        opt_bool(report.literals_disjoint)
+    ));
+    out.push_str(&format!("  \"proto\": {}\n", proto_json(&report.proto)));
+    out.push_str("}\n");
+    out
+}
+
+fn pattern_json(p: &PatternAnalysis) -> String {
+    let hazards: Vec<String> = p
+        .regex
+        .hazards
+        .iter()
+        .map(|h| {
+            format!(
+                "{{\"kind\": \"{}\", \"severity\": \"{}\", \
+                 \"detail\": \"{}\"}}",
+                h.kind.name(),
+                h.kind.severity(),
+                json_escape(&h.detail)
+            )
+        })
+        .collect();
+    let f = &p.regex.facts;
+    let literal = match &f.required_literal {
+        Some(bytes) => {
+            format!("\"{}\"", json_escape(&String::from_utf8_lossy(bytes)))
+        }
+        None => "null".to_string(),
+    };
+    let d = &p.dfa;
+    let curve: Vec<String> =
+        d.i_max_by_r.iter().map(|v| v.to_string()).collect();
+    format!(
+        "{{\"pattern\": \"{}\", \"kind\": \"{}\", \
+         \"hazards\": [{}], \
+         \"facts\": {{\"ast_size\": {}, \"repeat_depth\": {}, \
+         \"unbounded_repeats\": {}, \"alternations\": {}, \
+         \"anchored_start\": {}, \"anchored_end\": {}, \
+         \"required_literal\": {}}}, \
+         \"dfa\": {{\"q\": {}, \"sigma\": {}, \"r\": {}, \"i_max\": {}, \
+         \"i_max_by_r\": [{}], \"gamma\": {}, \"minimal_q\": {}, \
+         \"minimality_gap\": {}, \"unreachable_states\": {}, \
+         \"dead_states\": {}, \"sink_state\": {}, \
+         \"accepting_states\": {}, \"predicted_speedup\": {}, \
+         \"chunk_overhead\": {}, \"feasibility\": \"{}\"}}}}",
+        json_escape(&p.regex.pattern),
+        p.regex.kind,
+        hazards.join(", "),
+        f.ast_size,
+        f.repeat_depth,
+        f.unbounded_repeats,
+        f.alternations,
+        f.anchored_start,
+        f.anchored_end,
+        literal,
+        d.q,
+        d.sigma,
+        d.r,
+        d.i_max,
+        curve.join(", "),
+        json_f64(d.gamma),
+        d.minimal_q,
+        d.minimality_gap,
+        d.unreachable_states,
+        d.dead_states,
+        match d.sink_state {
+            Some(s) => s.to_string(),
+            None => "null".to_string(),
+        },
+        d.accepting_states,
+        json_f64(d.predicted_speedup),
+        json_f64(d.chunk_overhead),
+        d.feasibility.name(),
+    )
+}
+
+fn fuse_json(f: &FuseEstimate) -> String {
+    let comps: Vec<String> =
+        f.component_states.iter().map(|q| q.to_string()).collect();
+    format!(
+        "{{\"components\": {}, \"component_states\": [{}], \
+         \"upper_bound\": {}, \"certain_min\": {}, \
+         \"combined_classes\": {}, \"budget\": {}, \
+         \"predicted_overflow\": {}}}",
+        f.components,
+        comps.join(", "),
+        f.upper_bound,
+        f.certain_min,
+        f.combined_classes,
+        f.budget,
+        f.predicted_overflow
+    )
+}
+
+fn proto_json(p: &ProtoReport) -> String {
+    let problems: Vec<String> = p
+        .problems
+        .iter()
+        .map(|m| format!("\"{}\"", json_escape(m)))
+        .collect();
+    format!(
+        "{{\"states\": {}, \"transitions\": {}, \"arrivals\": {}, \
+         \"ok\": {}, \"problems\": [{}]}}",
+        p.states,
+        p.transitions,
+        p.arrivals,
+        p.ok(),
+        problems.join(", ")
+    )
+}
+
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn opt_bool(v: Option<bool>) -> String {
+    match v {
+        Some(b) => b.to_string(),
+        None => "null".to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_report_over_a_mixed_set() {
+        let patterns = [
+            Pattern::Regex("(a|a)*b".to_string()),
+            Pattern::Regex("needle".to_string()),
+        ];
+        let rep = analyze_patterns(&patterns, 4, 8, 0.5, 1 << 14).unwrap();
+        assert_eq!(rep.patterns.len(), 2);
+        assert_eq!(rep.hazardous(), 1);
+        assert!(rep.fuse.is_some());
+        assert!(rep.proto.ok());
+        let doc = render_analysis_json(&rep);
+        assert!(doc.contains("\"schema\": \"specdfa-analysis-v1\""));
+        assert!(doc.contains("overlapping-alternation"));
+        assert!(doc.contains("\"required_literal\": \"needle\""));
+        assert!(doc.contains("\"ok\": true"));
+        // crude balance check on the hand-rolled emission
+        let opens = doc.matches('{').count();
+        let closes = doc.matches('}').count();
+        assert_eq!(opens, closes, "unbalanced JSON:\n{doc}");
+    }
+
+    #[test]
+    fn single_pattern_skips_fuse() {
+        let rep = analyze_patterns(
+            &[Pattern::Regex("abc".to_string())],
+            2,
+            4,
+            0.5,
+            0,
+        )
+        .unwrap();
+        assert!(rep.fuse.is_none());
+        assert!(rep.literals_disjoint.is_none());
+        let doc = render_analysis_json(&rep);
+        assert!(doc.contains("\"fuse\": null"));
+    }
+
+    #[test]
+    fn unparsable_pattern_is_an_error() {
+        assert!(analyze_patterns(
+            &[Pattern::Regex("(a".to_string())],
+            2,
+            4,
+            0.5,
+            0
+        )
+        .is_err());
+    }
+}

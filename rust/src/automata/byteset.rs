@@ -70,6 +70,16 @@ impl ByteSet {
         ])
     }
 
+    /// Set intersection.
+    pub fn intersect(&self, o: &ByteSet) -> ByteSet {
+        ByteSet([
+            self.0[0] & o.0[0],
+            self.0[1] & o.0[1],
+            self.0[2] & o.0[2],
+            self.0[3] & o.0[3],
+        ])
+    }
+
     /// Set complement.
     pub fn negate(&self) -> ByteSet {
         ByteSet([!self.0[0], !self.0[1], !self.0[2], !self.0[3]])
@@ -130,5 +140,13 @@ mod tests {
     fn union_collects() {
         let u = ByteSet::single(b'x').union(&ByteSet::single(b'y'));
         assert_eq!(u.iter().collect::<Vec<_>>(), vec![b'x', b'y']);
+    }
+
+    #[test]
+    fn intersect_keeps_common() {
+        let a = ByteSet::from_bytes(b"abc");
+        let b = ByteSet::from_bytes(b"bcd");
+        assert_eq!(a.intersect(&b).iter().collect::<Vec<_>>(), vec![b'b', b'c']);
+        assert!(a.intersect(&ByteSet::EMPTY).is_empty());
     }
 }

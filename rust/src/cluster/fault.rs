@@ -230,6 +230,7 @@ impl Injector {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)] // unwrap in tests is a test failure
 mod tests {
     use super::*;
 

@@ -26,6 +26,11 @@
 //! degrades to an in-process match.  [`fault`] makes every failure mode
 //! deterministically injectable.
 
+// Cluster code runs unattended across process boundaries: a panic in
+// the frontend kills live requests, so `unwrap`/`expect` are banned in
+// non-test code (clippy.toml `disallowed-methods`).
+#![deny(clippy::disallowed_methods)]
+
 pub mod cloud;
 pub mod fault;
 pub mod network;

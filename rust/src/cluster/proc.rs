@@ -806,11 +806,16 @@ impl ProcCluster {
             }
             self.counters.heartbeats.fetch_add(1, Ordering::Relaxed);
             let nonce = self.next_req.fetch_add(1, Ordering::Relaxed);
-            let ok = Self::heartbeat_conn(
-                slot.conn.as_mut().expect("alive worker has a conn"),
-                nonce,
-                self.config.heartbeat_timeout,
-            );
+            // alive implies a connection; treat the impossible gap as a
+            // failed probe instead of panicking the frontend
+            let ok = match slot.conn.as_mut() {
+                Some(conn) => Self::heartbeat_conn(
+                    conn,
+                    nonce,
+                    self.config.heartbeat_timeout,
+                ),
+                None => false,
+            };
             if ok {
                 live += 1;
             } else {
@@ -1065,7 +1070,12 @@ impl ProcCluster {
             resume: resume.as_ref().map(|c| c.to_bytes()),
             data: data.to_vec(),
         };
-        let conn = slot.conn.as_mut().expect("alive worker has a conn");
+        let Some(conn) = slot.conn.as_mut() else {
+            return ChunkAttempt::failed(
+                "worker has no connection".into(),
+                None,
+            );
+        };
         if let Err(e) = proto::write_frame(conn, &frame) {
             return ChunkAttempt::failed(format!("send match: {e}"), None);
         }
@@ -1156,7 +1166,9 @@ impl ProcCluster {
             return Ok(id);
         }
         let id = slot.next_pattern_id;
-        let conn = slot.conn.as_mut().expect("alive worker has a conn");
+        let Some(conn) = slot.conn.as_mut() else {
+            bail!("worker has no connection");
+        };
         let remaining =
             deadline.saturating_duration_since(Instant::now()).max(MIN_TIMEOUT);
         conn.set_read_timeout(Some(remaining))?;

@@ -434,6 +434,7 @@ impl<'a> Cursor<'a> {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)] // unwrap in tests is a test failure
 mod tests {
     use super::*;
 

@@ -70,8 +70,8 @@ pub use patternset::{
 };
 pub use select::{select, AutoThresholds, DfaProps, Selection};
 pub use serve::{
-    Admission, PriorityPolicy, ServeConfig, ServeError, ServeStats, Server,
-    ServerHandle, Ticket, WaitStats,
+    Admission, HazardPolicy, PriorityPolicy, ServeConfig, ServeError,
+    ServeStats, Server, ServerHandle, Ticket, WaitStats,
 };
 pub use shard::{ShardLayout, ShardOutcome, ShardPlan, ShardWork};
 pub use stream::{Checkpoint, FeedProgress, StreamMatcher, StreamStats};
@@ -278,15 +278,15 @@ pub enum Pattern {
     Grail(String),
 }
 
-struct CompiledPattern {
-    dfa: Dfa,
+pub(crate) struct CompiledPattern {
+    pub(crate) dfa: Dfa,
     /// raw pattern AST for the AST engines; only present when unanchored
     /// search semantics make their scan loops equivalent to the DFA
-    ast: Option<Ast>,
+    pub(crate) ast: Option<Ast>,
 }
 
 impl Pattern {
-    fn compile(&self) -> Result<CompiledPattern> {
+    pub(crate) fn compile(&self) -> Result<CompiledPattern> {
         Ok(match self {
             Pattern::Regex(p) => {
                 let parsed = parser::parse(p)?;
@@ -378,6 +378,17 @@ impl CompiledMatcher {
             Some(la) => DfaProps::from_lookahead(&dfa, la),
             None => DfaProps::analyze(&dfa, 1),
         };
+        // Static feasibility verdict (analysis::dfa): a speculation-
+        // hostile DFA (gamma past the threshold) makes Auto's rule 2
+        // route every request sequential, and rule 2 fires before any
+        // rule that could pick a parallel substrate — so skip building
+        // the parallel adapters entirely instead of paying their plan
+        // construction for adapters that can never serve.
+        let hostile = auto
+            && crate::analysis::dfa::speculation_hostile(
+                &props,
+                &policy.thresholds,
+            );
         let mut cm = CompiledMatcher {
             seq: SequentialAdapter::new(&dfa),
             spec: None,
@@ -393,7 +404,7 @@ impl CompiledMatcher {
             dfa,
         };
 
-        if auto || matches!(cm.engine, Engine::Speculative { .. }) {
+        if (auto && !hostile) || matches!(cm.engine, Engine::Speculative { .. }) {
             let adaptive =
                 matches!(cm.engine, Engine::Speculative { adaptive: true });
             cm.spec = Some(SpeculativeAdapter::new(
@@ -406,14 +417,14 @@ impl CompiledMatcher {
                 cm.policy.collapse_every,
             )?);
         }
-        if auto || matches!(cm.engine, Engine::Simd { .. }) {
+        if (auto && !hostile) || matches!(cm.engine, Engine::Simd { .. }) {
             let variant = match &cm.engine {
                 Engine::Simd { variant } => variant.as_deref(),
                 _ => None,
             };
             cm.simd = Some(SimdAdapter::new(&cm.dfa, variant, la.as_ref())?);
         }
-        if auto || matches!(cm.engine, Engine::Cloud { .. }) {
+        if (auto && !hostile) || matches!(cm.engine, Engine::Cloud { .. }) {
             let nodes = match cm.engine {
                 Engine::Cloud { nodes } => nodes,
                 _ => cm.policy.cloud_nodes,
@@ -426,7 +437,7 @@ impl CompiledMatcher {
                 false,
             )?);
         }
-        if auto || matches!(cm.engine, Engine::Shard { .. }) {
+        if (auto && !hostile) || matches!(cm.engine, Engine::Shard { .. }) {
             let nodes = match cm.engine {
                 Engine::Shard { nodes } => nodes,
                 _ => cm.policy.cloud_nodes,
@@ -647,6 +658,44 @@ mod tests {
         assert_eq!(sel.kind, EngineKind::Sequential);
         assert_eq!(sel.n, 14);
         assert!(!sel.reason.is_empty());
+    }
+
+    #[test]
+    fn auto_skips_parallel_adapters_for_hostile_dfas() {
+        // gamma = 1 permutation DFA: Auto's rule 2 routes every request
+        // sequential, so compile must not build the parallel adapters.
+        let dfa = crate::util::workload::permutation_dfa(16, 4, 3);
+        let cm = CompiledMatcher::from_dfa(
+            dfa.clone(),
+            Engine::Auto,
+            ExecPolicy::default(),
+        )
+        .unwrap();
+        assert!(cm.props().gamma > cm.policy.thresholds.gamma_max);
+        assert!(cm.spec.is_none() && cm.simd.is_none());
+        assert!(cm.cloud.is_none() && cm.shard.is_none());
+        // every input size still serves, sequentially
+        for n in [8usize, 1 << 17, 1 << 21] {
+            let syms: Vec<u32> = (0..n).map(|i| (i % 4) as u32).collect();
+            let out = cm.run_syms(&syms).unwrap();
+            assert_eq!(out.engine, EngineKind::Sequential, "n={n}");
+        }
+        // a friendly DFA under the same policy still builds them
+        let friendly = CompiledMatcher::compile(
+            &Pattern::Regex("needle".to_string()),
+            Engine::Auto,
+            ExecPolicy::default(),
+        )
+        .unwrap();
+        assert!(friendly.spec.is_some() && friendly.shard.is_some());
+        // explicit engine choice is never second-guessed by the verdict
+        let pinned = CompiledMatcher::from_dfa(
+            dfa,
+            Engine::speculative(),
+            ExecPolicy::default(),
+        )
+        .unwrap();
+        assert!(pinned.spec.is_some());
     }
 
     #[test]

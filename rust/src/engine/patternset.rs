@@ -35,6 +35,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
+use crate::analysis::fuse::estimate_fuse;
 use crate::automata::acorasick::AhoCorasick;
 use crate::automata::product::fuse;
 use crate::automata::Dfa;
@@ -107,6 +108,14 @@ pub struct SetConfig {
     /// Product-state cap for the fused tier (0 = unlimited).  Overflow
     /// spills patterns instead of failing.
     pub state_budget: usize,
+    /// γ cap for the *fused product* (the ROADMAP fused-γ policy): when
+    /// set, a product that fuses within `state_budget` but whose
+    /// γ = I_max,r/|Q| ([`DfaProps`]) exceeds the cap spills its largest
+    /// component and retries — size alone no longer decides, because a
+    /// speculation-hostile product (γ→1, e.g. fused permutation DFAs)
+    /// would force every parallel substrate back to sequential cost.
+    /// `None` (the default) keeps the size-only behavior.
+    pub fuse_gamma_max: Option<f64>,
     /// Whether to build the Aho–Corasick literal prefilter tier.
     pub prefilter: bool,
 }
@@ -117,6 +126,7 @@ impl Default for SetConfig {
             engine: Engine::Auto,
             policy: ExecPolicy::default(),
             state_budget: DEFAULT_STATE_BUDGET,
+            fuse_gamma_max: None,
             prefilter: true,
         }
     }
@@ -145,6 +155,12 @@ pub struct SetOutcome {
     pub fused_pass: Option<Outcome>,
     /// Unique patterns cleared by the prefilter on this input.
     pub prefilter_cleared: usize,
+    /// Fuse attempts the pre-fuse estimator
+    /// ([`crate::analysis::fuse::estimate_fuse`]) skipped at *compile*
+    /// time because even the certain lower bound busted `state_budget`
+    /// (each skip avoided a full-cost `fuse` abort; constant across
+    /// runs of one compiled set).
+    pub fuse_skipped_predicted: usize,
     /// Input length in bytes.
     pub n: usize,
     /// Wall time of the whole set run, seconds.
@@ -209,6 +225,8 @@ pub struct CompiledSetMatcher {
     /// Aho–Corasick literal id -> unique-pattern index
     lit_uniq: Vec<usize>,
     fused: Option<FusedTier>,
+    /// fuse attempts the pre-fuse estimator skipped at compile time
+    fuse_skipped_predicted: usize,
     config: SetConfig,
 }
 
@@ -261,7 +279,13 @@ impl CompiledSetMatcher {
 
         // 3. Fuse with spill-retry: try the whole set; on budget
         //    overflow spill the largest DFA and retry.  Terminates (the
-        //    candidate list shrinks every round) and never fails.
+        //    candidate list shrinks every round) and never fails.  Two
+        //    static checks run before/after each attempt: the pre-fuse
+        //    size estimate skips attempts that are *certain* to bust the
+        //    budget (the abort would otherwise be discovered at full
+        //    construction cost), and the fused-γ policy spills out of a
+        //    product that fused within budget but came out
+        //    speculation-hostile.
         let threads = config.policy.processors.max(1);
         let mut fuse_order: Vec<usize> = (0..work.len()).collect();
         fuse_order.sort_by_key(|&u| {
@@ -269,13 +293,42 @@ impl CompiledSetMatcher {
         });
         let mut spilled_idx: Vec<usize> = Vec::new();
         let mut product = None;
+        let mut fuse_skipped_predicted = 0usize;
         while !fuse_order.is_empty() {
             let dfas: Vec<&Dfa> = fuse_order
                 .iter()
                 .map(|&u| work[u].dfa.as_ref().expect("dfa present"))
                 .collect();
+            let est = estimate_fuse(&dfas, config.state_budget);
+            if est.predicted_overflow {
+                // sound skip: certain_min > budget means fuse() would
+                // provably return None (all components read every byte,
+                // so the largest trimmed component lower-bounds the
+                // reachable product)
+                fuse_skipped_predicted += 1;
+                spilled_idx.push(
+                    fuse_order.pop().expect("non-empty fuse candidates"),
+                );
+                continue;
+            }
             match fuse(&dfas, config.state_budget, threads) {
                 Some(p) => {
+                    if let Some(limit) = config.fuse_gamma_max {
+                        if fuse_order.len() >= 2 {
+                            let props = DfaProps::analyze(
+                                &p.dfa,
+                                config.policy.lookahead.max(1),
+                            );
+                            if props.gamma > limit {
+                                spilled_idx.push(
+                                    fuse_order
+                                        .pop()
+                                        .expect("non-empty fuse candidates"),
+                                );
+                                continue;
+                            }
+                        }
+                    }
                     product = Some(p);
                     break;
                 }
@@ -351,7 +404,15 @@ impl CompiledSetMatcher {
             None
         };
 
-        Ok(CompiledSetMatcher { slot_of, uniq, prefilter, lit_uniq, fused, config })
+        Ok(CompiledSetMatcher {
+            slot_of,
+            uniq,
+            prefilter,
+            lit_uniq,
+            fused,
+            fuse_skipped_predicted,
+            config,
+        })
     }
 
     /// Run every pattern against `input` in one coordinated pass:
@@ -433,6 +494,7 @@ impl CompiledSetMatcher {
             tiers,
             fused_pass,
             prefilter_cleared,
+            fuse_skipped_predicted: self.fuse_skipped_predicted,
             n: input.len(),
             wall_s: t0.elapsed().as_secs_f64(),
         })
@@ -479,6 +541,13 @@ impl CompiledSetMatcher {
     /// Unique patterns guarded by a prefilter literal.
     pub fn prefiltered_patterns(&self) -> usize {
         self.lit_uniq.len()
+    }
+
+    /// Fuse attempts the pre-fuse size estimator skipped at compile
+    /// time (each one a `fuse` run that would have aborted at full
+    /// construction cost).
+    pub fn fuse_skips_predicted(&self) -> usize {
+        self.fuse_skipped_predicted
     }
 
     /// |Q| of the fused product DFA, when the fused tier exists.
@@ -587,9 +656,51 @@ mod tests {
         assert_eq!(csm.fused_patterns(), 0);
         assert_eq!(csm.spilled_patterns(), 2);
         assert!(csm.product_states().is_none());
+        // the estimator predicted every round's overflow statically —
+        // each component alone already exceeds a budget of 1 — so no
+        // fuse() construction was ever paid for
+        assert_eq!(csm.fuse_skips_predicted(), 2);
         let out = csm.run_bytes(b"hot dog").unwrap();
         assert_eq!(out.accepted(), vec![false, true]);
         assert_eq!(out.tiers[1], SetTier::Spilled);
+        assert_eq!(out.fuse_skipped_predicted, 2);
+    }
+
+    #[test]
+    fn fused_gamma_policy_spills_hostile_products() {
+        use crate::automata::grail::to_grail;
+        use crate::util::workload::permutation_dfa;
+
+        // Each component is a permutation DFA (γ = 1 at every r), and a
+        // product of permutations is a permutation, so the fused product
+        // is speculation-hostile however small it is.
+        let set = PatternSet::from_patterns(vec![
+            Pattern::Grail(to_grail(&permutation_dfa(8, 4, 11))),
+            Pattern::Grail(to_grail(&permutation_dfa(8, 4, 12))),
+        ]);
+
+        // size-only policy (default): the 64-state product fits the
+        // budget comfortably, so both patterns fuse
+        let csm =
+            CompiledSetMatcher::compile(&set, quick()).unwrap();
+        assert_eq!(csm.fused_patterns(), 2);
+        let props = csm.fused_props().expect("fused tier exists");
+        assert!(props.gamma > 0.5, "product not hostile: {props:?}");
+
+        // fused-γ policy: the same set spills because the product's γ
+        // exceeds the cap — size alone no longer decides
+        let cfg = SetConfig { fuse_gamma_max: Some(0.5), ..quick() };
+        let csm = CompiledSetMatcher::compile(&set, cfg).unwrap();
+        assert!(csm.fused_patterns() <= 1, "{}", csm.describe());
+        assert!(csm.spilled_patterns() >= 1, "{}", csm.describe());
+        // verdicts are unchanged by the tier split
+        let input: Vec<u8> = (0u8..64).collect();
+        let a = CompiledSetMatcher::compile(&set, quick())
+            .unwrap()
+            .run_bytes(&input)
+            .unwrap();
+        let b = csm.run_bytes(&input).unwrap();
+        assert_eq!(a.accepted(), b.accepted());
     }
 
     #[test]

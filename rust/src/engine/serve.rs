@@ -95,6 +95,13 @@
 //!
 //! Everything is `std` threads and channels — no new dependencies.
 
+// Always-on serving path: panics on `unwrap`/`expect` are outages, not
+// bugs-in-tests.  The ban is enforced by clippy.toml `disallowed-methods`
+// (poisoned locks are recovered with `unwrap_or_else(PoisonError::
+// into_inner)` — every guarded structure is counter- or cache-shaped and
+// stays valid across an unwinding holder).
+#![deny(clippy::disallowed_methods)]
+
 use std::collections::{HashMap, VecDeque};
 use std::fmt;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -170,6 +177,44 @@ impl PriorityPolicy {
             "size" | "size-aware" => PriorityPolicy::SizeAware,
             other => anyhow::bail!(
                 "unknown priority {other:?} (expected fifo|size)"
+            ),
+        })
+    }
+}
+
+/// What admission does with a pattern the static analyzer
+/// ([`crate::analysis::regex::lint_pattern`]) flags as ReDoS-hazardous
+/// (nested unbounded quantifiers, overlapping alternation under an
+/// unbounded repeat).
+///
+/// The lint runs on the pattern AST at submit time — parse-only, no DFA
+/// construction — and only on pattern kinds that have an AST to lint
+/// (`Grail` tables are exempt).  The DFA engines themselves are immune
+/// to ReDoS blowup at *match* time (no backtracking), so the gate
+/// protects the *compile* path — subset construction on an ambiguous
+/// regex is exactly where the exponential lives — and downstream
+/// consumers the served verdicts may be forwarded to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HazardPolicy {
+    /// Do not lint submitted patterns at all.
+    Off,
+    /// Lint and count ([`ServeStats::hazards_flagged`]) but still serve.
+    /// The default: observability without behavior change.
+    Warn,
+    /// Refuse hazardous patterns at admission: the ticket resolves with
+    /// [`ServeError::Hazard`] and nothing is queued or compiled.
+    Reject,
+}
+
+impl HazardPolicy {
+    /// Parse a CLI hazard-policy name: `off|warn|reject`.
+    pub fn parse(name: &str) -> Result<HazardPolicy> {
+        Ok(match name {
+            "off" => HazardPolicy::Off,
+            "warn" => HazardPolicy::Warn,
+            "reject" => HazardPolicy::Reject,
+            other => anyhow::bail!(
+                "unknown hazard policy {other:?} (expected off|warn|reject)"
             ),
         })
     }
@@ -251,6 +296,9 @@ pub struct ServeConfig {
     pub cluster: Option<Arc<ProcCluster>>,
     /// Smallest input (bytes) routed to `cluster` when one is attached.
     pub cluster_min_bytes: usize,
+    /// What admission does with patterns the static ReDoS lint flags
+    /// ([`crate::analysis::regex::lint_pattern`]); see [`HazardPolicy`].
+    pub hazard_policy: HazardPolicy,
     /// Engine every request is served with (normally `Engine::Auto`).
     pub engine: Engine,
     /// Execution policy template; its `thresholds` field is replaced by
@@ -282,6 +330,7 @@ impl Default for ServeConfig {
             preempt_segment_bytes: 1 << 20,
             cluster: None,
             cluster_min_bytes: 1 << 20,
+            hazard_policy: HazardPolicy::Warn,
             engine: Engine::Auto,
             policy: ExecPolicy::default(),
         }
@@ -308,6 +357,13 @@ pub enum ServeError {
         /// human-readable failure description (the full error chain)
         message: String,
     },
+    /// The pattern was refused at admission under
+    /// [`HazardPolicy::Reject`]: the static analyzer flagged it as
+    /// ReDoS-hazardous.  Nothing was queued or compiled.
+    Hazard {
+        /// the hazards found, `kind (severity)` comma-joined
+        detail: String,
+    },
 }
 
 impl ServeError {
@@ -328,6 +384,11 @@ impl fmt::Display for ServeError {
                 "server is shutting down; the request was not served",
             ),
             ServeError::Failed { message } => f.write_str(message),
+            ServeError::Hazard { detail } => write!(
+                f,
+                "pattern refused at admission (hazard policy reject): \
+                 {detail}"
+            ),
         }
     }
 }
@@ -403,9 +464,17 @@ pub struct ServeStats {
     pub served: u64,
     /// Requests that streamed an error back after being admitted.
     pub failed: u64,
-    /// Requests refused at admission: `Overloaded` rejects plus
-    /// submit-after-shutdown refusals.
+    /// Requests refused at admission: `Overloaded` rejects,
+    /// submit-after-shutdown refusals, and [`HazardPolicy::Reject`]
+    /// hazard refusals (the latter also counted in `hazards_rejected`).
     pub rejected: u64,
+    /// Submitted patterns the static ReDoS lint flagged as hazardous
+    /// (counted under both [`HazardPolicy::Warn`] and
+    /// [`HazardPolicy::Reject`]; once per *request*, not per pattern).
+    pub hazards_flagged: u64,
+    /// Requests refused with [`ServeError::Hazard`] under
+    /// [`HazardPolicy::Reject`]; a subset of `rejected`.
+    pub hazards_rejected: u64,
     /// Coalesced batches executed.
     pub batches: u64,
     /// Requests that rode along in a batch after the first (coalescing
@@ -571,15 +640,9 @@ impl ReqQueue {
         let seq = self.next_seq;
         self.next_seq += 1;
         self.arrivals[sched].push_back((seq, req.pattern.clone()));
-        // this runs under the global queue mutex: clone the pattern for
-        // the lane key only on a lane miss (a contains_key re-probe is
-        // cheaper than an unconditional String allocation)
-        if !self.lanes.contains_key(&req.pattern) {
-            self.lanes.insert(req.pattern.clone(), Lane::default());
-        }
         self.lanes
-            .get_mut(&req.pattern)
-            .expect("lane ensured above")
+            .entry(req.pattern.clone())
+            .or_default()
             .by_class[sched]
             .push_back(Queued {
                 seq,
@@ -674,7 +737,9 @@ impl ReqQueue {
         }
         seqs.sort_unstable();
         seqs.truncate(max);
-        let cutoff = *seqs.last().expect("non-empty seq list");
+        let Some(&cutoff) = seqs.last() else {
+            return Vec::new();
+        };
         // pass 2: remove exactly those requests
         let mut taken: Vec<Queued> = Vec::new();
         let mut emptied: Vec<Pattern> = Vec::new();
@@ -819,6 +884,8 @@ struct Counters {
     served: AtomicU64,
     failed: AtomicU64,
     rejected: AtomicU64,
+    hazards_flagged: AtomicU64,
+    hazards_rejected: AtomicU64,
     batches: AtomicU64,
     coalesced: AtomicU64,
     compiles: AtomicU64,
@@ -845,6 +912,8 @@ impl Counters {
             served: AtomicU64::new(0),
             failed: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
+            hazards_flagged: AtomicU64::new(0),
+            hazards_rejected: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             coalesced: AtomicU64::new(0),
             compiles: AtomicU64::new(0),
@@ -976,7 +1045,7 @@ impl ServerHandle {
 
     /// The thresholds `Engine::Auto` dispatch currently uses.
     pub fn thresholds(&self) -> AutoThresholds {
-        self.shared.thresholds.lock().unwrap().clone()
+        self.shared.thresholds.lock().unwrap_or_else(std::sync::PoisonError::into_inner).clone()
     }
 }
 
@@ -1033,7 +1102,7 @@ impl Server {
                     // unwind: don't leak the already-spawned workers
                     // parked forever on the condvar
                     {
-                        let _queue = shared.queue.lock().unwrap();
+                        let _queue = shared.queue.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
                         shared.shutdown.store(true, Ordering::SeqCst);
                         shared.ready.notify_all();
                     }
@@ -1082,7 +1151,7 @@ impl Server {
     /// The thresholds `Engine::Auto` dispatch currently uses (calibrated
     /// after startup profiling unless disabled).
     pub fn thresholds(&self) -> AutoThresholds {
-        self.shared.thresholds.lock().unwrap().clone()
+        self.shared.thresholds.lock().unwrap_or_else(std::sync::PoisonError::into_inner).clone()
     }
 
     /// Drain the queue, stop the workers, and return the final stats.
@@ -1096,7 +1165,7 @@ impl Server {
             // flag + notify under the queue lock: a worker between its
             // shutdown check and Condvar::wait holds this mutex, so the
             // wakeup can never race into the gap and get lost
-            let _queue = self.shared.queue.lock().unwrap();
+            let _queue = self.shared.queue.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
             self.shared.shutdown.store(true, Ordering::SeqCst);
             self.shared.ready.notify_all();
             // producers parked by Block admission re-check the shutdown
@@ -1115,12 +1184,47 @@ impl Drop for Server {
     }
 }
 
+/// The static ReDoS gate ([`ServeConfig::hazard_policy`]), evaluated at
+/// admission, before the queue lock.  Returns the refusal error under
+/// [`HazardPolicy::Reject`]; `None` means admit (clean pattern, policy
+/// `Off`/`Warn`, a `Grail` table with no AST to lint, or a pattern that
+/// does not even parse — the compile path reports parse errors with
+/// full context, so the gate stays out of the way).
+fn hazard_gate(shared: &Shared, pattern: &Pattern) -> Option<ServeError> {
+    if shared.config.hazard_policy == HazardPolicy::Off
+        || matches!(pattern, Pattern::Grail(_))
+    {
+        return None;
+    }
+    let report = crate::analysis::regex::lint_pattern(pattern).ok()?;
+    if !report.is_hazardous() {
+        return None;
+    }
+    let c = &shared.counters;
+    c.hazards_flagged.fetch_add(1, Ordering::SeqCst);
+    if shared.config.hazard_policy != HazardPolicy::Reject {
+        return None;
+    }
+    c.hazards_rejected.fetch_add(1, Ordering::SeqCst);
+    let detail = report
+        .hazards
+        .iter()
+        .map(|h| format!("{} ({})", h.kind.name(), h.kind.severity()))
+        .collect::<Vec<_>>()
+        .join(", ");
+    Some(ServeError::Hazard { detail })
+}
+
 /// The admission + enqueue path shared by [`Server`] and
 /// [`ServerHandle`].
 fn do_submit(shared: &Shared, pattern: Pattern, input: Vec<u8>) -> Ticket {
     let (tx, rx) = channel();
     let req = Request { pattern, input, reply: tx, ckpt: None };
-    let mut q = shared.queue.lock().unwrap();
+    if let Some(err) = hazard_gate(shared, &req.pattern) {
+        refuse(shared, req, err);
+        return Ticket { rx };
+    }
+    let mut q = shared.queue.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
     loop {
         if shared.shutdown.load(Ordering::SeqCst) {
             drop(q);
@@ -1142,7 +1246,10 @@ fn do_submit(shared: &Shared, pattern: Pattern, input: Vec<u8>) -> Ticket {
                 );
                 return Ticket { rx };
             }
-            Admission::Block => q = shared.space.wait(q).unwrap(),
+            Admission::Block => q = shared
+                    .space
+                    .wait(q)
+                    .unwrap_or_else(std::sync::PoisonError::into_inner),
         }
     }
     enqueue_locked(shared, &mut q, req);
@@ -1157,7 +1264,7 @@ fn do_submit_many(
     inputs: &[&[u8]],
 ) -> Vec<Ticket> {
     let mut tickets = Vec::with_capacity(inputs.len());
-    let mut q = shared.queue.lock().unwrap();
+    let mut q = shared.queue.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
     'requests: for input in inputs {
         let (tx, rx) = channel();
         tickets.push(Ticket { rx });
@@ -1167,6 +1274,13 @@ fn do_submit_many(
             reply: tx,
             ckpt: None,
         };
+        // per request, not once per batch: every refused request must
+        // carry its own Hazard error and count in the stats, matching
+        // the do_submit path exactly
+        if let Some(err) = hazard_gate(shared, &req.pattern) {
+            refuse(shared, req, err);
+            continue 'requests;
+        }
         loop {
             if shared.shutdown.load(Ordering::SeqCst) {
                 refuse(shared, req, ServeError::ShuttingDown);
@@ -1188,7 +1302,10 @@ fn do_submit_many(
                 }
                 // waiting releases the queue mutex, so workers drain
                 // (and other producers run) while this batch is parked
-                Admission::Block => q = shared.space.wait(q).unwrap(),
+                Admission::Block => q = shared
+                    .space
+                    .wait(q)
+                    .unwrap_or_else(std::sync::PoisonError::into_inner),
             }
         }
         enqueue_locked(shared, &mut q, req);
@@ -1229,17 +1346,17 @@ fn enqueue_locked(shared: &Shared, q: &mut ReqQueue, req: Request) {
 
 fn stats_of(shared: &Shared) -> ServeStats {
     // one lock at a time: a snapshot must never stall the workers
-    let cached_patterns = shared.cache.lock().unwrap().entries.len();
-    let cached_outcomes = shared.outcomes.lock().unwrap().entries.len();
+    let cached_patterns = shared.cache.lock().unwrap_or_else(std::sync::PoisonError::into_inner).entries.len();
+    let cached_outcomes = shared.outcomes.lock().unwrap_or_else(std::sync::PoisonError::into_inner).entries.len();
     let (queue_depth, max_queue_depth, scan_bypasses, max_bypass_streak) = {
-        let q = shared.queue.lock().unwrap();
+        let q = shared.queue.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         (q.len, q.max_depth, q.bypass_total, q.max_streak)
     };
-    let thresholds = shared.thresholds.lock().unwrap().clone();
+    let thresholds = shared.thresholds.lock().unwrap_or_else(std::sync::PoisonError::into_inner).clone();
     let worker_rates = shared
         .capacity
         .lock()
-        .unwrap()
+        .unwrap_or_else(std::sync::PoisonError::into_inner)
         .as_ref()
         .map(|cv| cv.rates.clone());
     let c = &shared.counters;
@@ -1261,6 +1378,8 @@ fn stats_of(shared: &Shared) -> ServeStats {
         served,
         failed,
         rejected,
+        hazards_flagged: c.hazards_flagged.load(Ordering::SeqCst),
+        hazards_rejected: c.hazards_rejected.load(Ordering::SeqCst),
         batches: c.batches.load(Ordering::Relaxed),
         coalesced: c.coalesced.load(Ordering::Relaxed),
         compiles: c.compiles.load(Ordering::Relaxed),
@@ -1310,7 +1429,7 @@ fn worker_loop(shared: &Shared) {
 /// every taken request with that input (whatever its pattern) and the
 /// batch keeps the rest.
 fn next_batch(shared: &Shared) -> Option<(Vec<Request>, Vec<Request>)> {
-    let mut q = shared.queue.lock().unwrap();
+    let mut q = shared.queue.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
     loop {
         if let Some(taken) =
             q.take_batch(shared.config.age_limit, shared.config.max_batch)
@@ -1362,7 +1481,10 @@ fn next_batch(shared: &Shared) -> Option<(Vec<Request>, Vec<Request>)> {
         if shared.shutdown.load(Ordering::SeqCst) {
             return None;
         }
-        q = shared.ready.wait(q).unwrap();
+        q = shared
+            .ready
+            .wait(q)
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
     }
 }
 
@@ -1570,7 +1692,7 @@ fn serve_preemptible(shared: &Shared, cm: &CompiledMatcher, mut req: Request) {
         if pos >= req.input.len() || shared.shutdown.load(Ordering::SeqCst) {
             continue;
         }
-        let mut q = shared.queue.lock().unwrap();
+        let mut q = shared.queue.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         if q.live[CLASS_PROBE] > 0 {
             req.ckpt = Some(sm.checkpoint().to_bytes());
             c.preemptions.fetch_add(1, Ordering::Relaxed);
@@ -1641,10 +1763,16 @@ fn serve_fused_group(shared: &Shared, group: Vec<Request>) {
                 Ordering::Relaxed,
             );
             for (req, hash) in misses {
-                let slot = distinct
-                    .iter()
-                    .position(|p| *p == req.pattern)
-                    .expect("every miss pattern is in the distinct list");
+                let Some(slot) =
+                    distinct.iter().position(|p| *p == req.pattern)
+                else {
+                    c.failed.fetch_add(1, Ordering::SeqCst);
+                    let _ = req.reply.send(Err(ServeError::failed(
+                        "internal: fused group slot missing for pattern",
+                    )));
+                    finish_request(shared);
+                    continue;
+                };
                 let out = setout.outcomes[slot].clone();
                 // memoize only verdicts a matcher actually computed: a
                 // prefilter-cleared slot is a synthesized reject
@@ -1685,7 +1813,7 @@ fn set_matcher_for(
 ) -> std::result::Result<Arc<CompiledSetMatcher>, ServeError> {
     let epoch = shared.epoch.load(Ordering::SeqCst);
     {
-        let mut cache = shared.set_cache.lock().unwrap();
+        let mut cache = shared.set_cache.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         cache.tick += 1;
         let tick = cache.tick;
         if let Some(pos) = cache
@@ -1718,7 +1846,7 @@ fn set_matcher_for(
         CompiledSetMatcher::compile(&set, set_config)
             .map_err(|e| ServeError::failed(format!("{e:#}")))?,
     );
-    let mut cache = shared.set_cache.lock().unwrap();
+    let mut cache = shared.set_cache.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
     cache.tick += 1;
     let tick = cache.tick;
     if cache.entries.len() >= shared.config.cache_patterns {
@@ -1783,7 +1911,7 @@ fn cached_outcome(
     hash: u64,
 ) -> Option<Outcome> {
     let epoch = shared.epoch.load(Ordering::SeqCst);
-    let mut cache = shared.outcomes.lock().unwrap();
+    let mut cache = shared.outcomes.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
     cache.tick += 1;
     let tick = cache.tick;
     let hit = cache
@@ -1806,7 +1934,7 @@ fn remember_outcome(
     out: &Outcome,
 ) {
     let cap = shared.config.cache_outcomes;
-    let mut cache = shared.outcomes.lock().unwrap();
+    let mut cache = shared.outcomes.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
     cache.tick += 1;
     let tick = cache.tick;
     if let Some(e) =
@@ -1874,7 +2002,7 @@ fn matcher_for(
 ) -> std::result::Result<Arc<CompiledMatcher>, ServeError> {
     let epoch = loop {
         let epoch = shared.epoch.load(Ordering::SeqCst);
-        let mut cache = shared.cache.lock().unwrap();
+        let mut cache = shared.cache.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         cache.tick += 1;
         let tick = cache.tick;
         if let Some(pos) =
@@ -1895,7 +2023,10 @@ fn matcher_for(
             // neither entry nor marker, so this worker becomes the
             // compiler, fails the same way, and reports its own error —
             // no retry loop.
-            let woken = shared.compiled.wait(cache).unwrap();
+            let woken = shared
+                .compiled
+                .wait(cache)
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
             drop(woken);
             continue;
         }
@@ -1912,7 +2043,7 @@ fn matcher_for(
             .map_err(|e| ServeError::failed(format!("compile failed: {e:#}")));
     let cm = Arc::new(compiled?);
     shared.counters.compiles.fetch_add(1, Ordering::Relaxed);
-    let mut cache = shared.cache.lock().unwrap();
+    let mut cache = shared.cache.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
     cache.tick += 1;
     let tick = cache.tick;
     if cache.entries.len() >= shared.config.cache_patterns {
@@ -1946,12 +2077,12 @@ fn live_policy(shared: &Shared) -> ExecPolicy {
     let weights = shared
         .capacity
         .lock()
-        .unwrap()
+        .unwrap_or_else(std::sync::PoisonError::into_inner)
         .as_ref()
         .map(|cv| cv.weights())
         .or_else(|| shared.config.policy.weights.clone());
     ExecPolicy {
-        thresholds: shared.thresholds.lock().unwrap().clone(),
+        thresholds: shared.thresholds.lock().unwrap_or_else(std::sync::PoisonError::into_inner).clone(),
         weights,
         ..shared.config.policy.clone()
     }
@@ -1975,24 +2106,25 @@ fn recalibrate(shared: &Shared) {
         shared.config.profile_runs,
         shared.config.profile_sample_syms,
     );
-    *shared.thresholds.lock().unwrap() = AutoThresholds::from_profile(&p);
+    *shared.thresholds.lock().unwrap_or_else(std::sync::PoisonError::into_inner) = AutoThresholds::from_profile(&p);
     if shared.config.profile_per_worker {
         let cv = profile::profile_workers(
             shared.config.policy.processors,
             shared.config.profile_runs,
             shared.config.profile_sample_syms,
         );
-        *shared.capacity.lock().unwrap() = Some(cv);
+        *shared.capacity.lock().unwrap_or_else(std::sync::PoisonError::into_inner) = Some(cv);
     }
     shared.epoch.fetch_add(1, Ordering::SeqCst);
     // every memoized outcome is now stale (routing may differ under the
     // fresh thresholds); purge instead of letting dead entries linger in
     // the scan until LRU pressure displaces them
-    shared.outcomes.lock().unwrap().entries.clear();
+    shared.outcomes.lock().unwrap_or_else(std::sync::PoisonError::into_inner).entries.clear();
     shared.counters.recalibrations.fetch_add(1, Ordering::Relaxed);
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)] // unwrap in tests is a test failure
 mod tests {
     use super::*;
 
@@ -2089,6 +2221,47 @@ mod tests {
         }
         assert!(stats.batches <= 32);
         assert!(stats.requests_per_batch() >= 1.0);
+    }
+
+    #[test]
+    fn hazard_policy_warn_counts_and_reject_refuses() {
+        // Warn (the default): the hazardous pattern is still served
+        let server = Server::start(quick_config()).unwrap();
+        let t = server
+            .submit(Pattern::Regex("(a|a)*b".to_string()), &b"aaab"[..]);
+        assert!(t.wait().unwrap().accepted);
+        let stats = server.shutdown();
+        assert_eq!(stats.hazards_flagged, 1);
+        assert_eq!(stats.hazards_rejected, 0);
+        assert_eq!(stats.served, 1);
+
+        // Reject: the ticket resolves with ServeError::Hazard and the
+        // request never reaches the queue; clean patterns still serve
+        let server = Server::start(ServeConfig {
+            hazard_policy: HazardPolicy::Reject,
+            ..quick_config()
+        })
+        .unwrap();
+        let bad = server
+            .submit(Pattern::Regex("(a+)+b".to_string()), &b"aaab"[..]);
+        let good =
+            server.submit(Pattern::Regex("a+b".to_string()), &b"aaab"[..]);
+        let err = bad.wait().expect_err("nested quantifier must refuse");
+        assert!(matches!(err, ServeError::Hazard { .. }), "{err:?}");
+        assert!(err.to_string().contains("nested-quantifier"), "{err}");
+        assert!(good.wait().unwrap().accepted);
+        let stats = server.shutdown();
+        assert_eq!(stats.hazards_flagged, 1);
+        assert_eq!(stats.hazards_rejected, 1);
+        assert_eq!(stats.rejected, 1);
+        assert_eq!(stats.served, 1);
+        assert_eq!(stats.submitted, 1, "refused request never queued");
+
+        assert_eq!(
+            HazardPolicy::parse("reject").unwrap(),
+            HazardPolicy::Reject
+        );
+        assert!(HazardPolicy::parse("panic").is_err());
     }
 
     #[test]

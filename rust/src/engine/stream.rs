@@ -34,6 +34,11 @@
 //! coalesces small feeds up to the fold threshold so kernel entry cost
 //! is amortized, and [`StreamMatcher::finish`] flushes the remainder.
 
+// Checkpoints cross process boundaries (the serve loop parks scans on
+// them; the cluster migrates them): decode failures must be `Err`, not
+// panics.  Enforced by clippy.toml `disallowed-methods`.
+#![deny(clippy::disallowed_methods)]
+
 use std::time::Instant;
 
 use anyhow::{bail, Result};
@@ -239,15 +244,20 @@ impl<'a> Cursor<'a> {
     }
 
     fn u16(&mut self) -> Result<u16> {
-        Ok(u16::from_le_bytes(self.take(2)?.try_into().expect("sized")))
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
     }
 
     fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("sized")))
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
 
     fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("sized")))
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
     }
 }
 
@@ -467,6 +477,7 @@ impl<'m> StreamMatcher<'m> {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)] // unwrap in tests is a test failure
 mod tests {
     use super::super::{Engine, ExecPolicy, Matcher, Pattern};
     use super::*;

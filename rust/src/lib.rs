@@ -55,6 +55,15 @@
 //!   [`engine::Outcome`]; failure-freedom (identical results to
 //!   sequential matching) is enforced by construction and property tests.
 //!
+//! * [`analysis`] is the static hazard analyzer (`specdfa analyze`):
+//!   ReDoS ambiguity lints over pattern ASTs, per-DFA
+//!   speculation-feasibility reports (γ, the I_max,r curve, minimality
+//!   gap), pre-fuse product-size prediction consumed by
+//!   [`engine::patternset`], and a session-FSM checker for the
+//!   [`cluster::proto`] conversation — all wired into serving:
+//!   [`engine::ServeConfig::hazard_policy`] warns on or rejects
+//!   hazardous patterns at admission.
+//!
 //! ## The substrates underneath
 //!
 //! * [`regex`] / [`automata`] — pattern frontends and the Grail+-substitute
@@ -85,6 +94,7 @@
 
 #![warn(missing_docs)]
 
+pub mod analysis;
 pub mod automata;
 pub mod baseline;
 pub mod cluster;
@@ -100,8 +110,8 @@ pub use automata::{Dfa, FlatDfa};
 pub use baseline::sequential::SequentialMatcher;
 pub use engine::{
     Admission, Checkpoint, CompiledMatcher, CompiledSetMatcher, Engine,
-    EngineKind, ExecPolicy, FeedProgress, Matcher, Outcome, Pattern,
-    PatternSet, PriorityPolicy, Selection, ServeConfig, ServeError,
+    EngineKind, ExecPolicy, FeedProgress, HazardPolicy, Matcher, Outcome,
+    Pattern, PatternSet, PriorityPolicy, Selection, ServeConfig, ServeError,
     ServeStats, Server, ServerHandle, SetConfig, SetOutcome, SetTier,
     ShardPlan, StreamMatcher, StreamStats, Ticket, WaitStats,
 };

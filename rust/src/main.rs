@@ -3,6 +3,8 @@
 //!
 //! Subcommands (hand-rolled parser; the build is offline, no clap):
 //!   match       run a membership test on a file or generated input
+//!   analyze     static hazard analysis (ReDoS lints, speculation
+//!               feasibility, fuse-blowup prediction, protocol FSM check)
 //!   serve       run the async batched serving loop on a request stream
 //!   bench       time the kernel tiers / engines, emit BENCH JSON
 //!   experiment  regenerate a paper table/figure (or `all`)
@@ -17,6 +19,7 @@
 use std::process::ExitCode;
 use std::sync::Arc;
 
+use specdfa::analysis::{analyze_patterns, render_analysis_json};
 use specdfa::automata::{grail, FlatDfa, Width};
 use specdfa::cluster::proc::{run_worker, Transport, WorkerConfig};
 use specdfa::cluster::{
@@ -35,7 +38,7 @@ use specdfa::runtime::pjrt::VectorUnit;
 use specdfa::runtime::simd::SimdMatcher;
 use specdfa::speculative::lookahead::Lookahead;
 use specdfa::speculative::matcher::MatchPlan;
-use specdfa::engine::select::DfaProps;
+use specdfa::engine::select::{AutoThresholds, DfaProps};
 use specdfa::util::bench::{
     percentile, render_bench_json, time_median, time_once, BenchRecord,
     Table,
@@ -49,6 +52,7 @@ fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let result = match args.first().map(String::as_str) {
         Some("match") => cmd_match(&args[1..]),
+        Some("analyze") => cmd_analyze(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
         Some("bench") => cmd_bench(&args[1..]),
         Some("experiment") => cmd_experiment(&args[1..]),
@@ -99,6 +103,14 @@ fn print_usage() {
          incrementally\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 \
          \x20through the checkpointable segment matcher)\n\
+         \x20 specdfa analyze (--pattern PAT)* (--prosite PAT)* \
+         [--patterns FILE|-]\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 \
+         [--lookahead R] [--procs P] [--gamma-max G] \
+         [--state-budget Q]\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 \
+         [--json PATH]   (static hazard report; JSON schema \
+         specdfa-analysis-v1)\n\
          \x20 specdfa serve   [--workers N] [--cache M] [--batch B] \
          [--recalibrate K]\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 \
@@ -168,6 +180,11 @@ fn get<'a>(fl: &'a [(String, String)], key: &str) -> Option<&'a str> {
 
 fn has_flag(fl: &[(String, String)], key: &str) -> bool {
     get(fl, key).is_some()
+}
+
+/// All values of a repeatable flag, in command-line order.
+fn get_all<'a>(fl: &'a [(String, String)], key: &str) -> Vec<&'a str> {
+    fl.iter().filter(|(k, _)| k == key).map(|(_, v)| v.as_str()).collect()
 }
 
 fn compile_from_flags(
@@ -449,6 +466,159 @@ fn cmd_match_patterns(
     );
     if let Some(q) = csm.product_states() {
         println!("fused product DFA: |Q| = {q} (budget {state_budget})");
+    }
+    Ok(())
+}
+
+/// `specdfa analyze`: the static hazard analyzer — every pass runs
+/// before anything executes.  Lints each pattern's AST for the ReDoS
+/// ambiguity family, reports the compiled DFA's structure and
+/// speculation feasibility (γ and the Eq. 18 chunk-overhead model),
+/// bounds the fused product size for multi-pattern sets, and checks the
+/// cluster session FSM.  `--json PATH` writes the versioned
+/// `specdfa-analysis-v1` record that CI schema-validates.
+fn cmd_analyze(args: &[String]) -> anyhow::Result<()> {
+    let fl = flags(args)?;
+    let mut patterns: Vec<Pattern> = Vec::new();
+    for p in get_all(&fl, "pattern") {
+        patterns.push(Pattern::Regex(p.to_string()));
+    }
+    for p in get_all(&fl, "prosite") {
+        patterns.push(Pattern::Prosite(p.to_string()));
+    }
+    if let Some(source) = get(&fl, "patterns") {
+        let text = if source == "-" {
+            let mut buf = String::new();
+            std::io::Read::read_to_string(&mut std::io::stdin(), &mut buf)?;
+            buf
+        } else {
+            std::fs::read_to_string(source)?
+        };
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            patterns.push(Pattern::Regex(line.to_string()));
+        }
+    }
+    anyhow::ensure!(
+        !patterns.is_empty(),
+        "nothing to analyze: need --pattern, --prosite or --patterns FILE"
+    );
+
+    let r: usize = get(&fl, "lookahead").unwrap_or("4").parse()?;
+    let procs: usize = get(&fl, "procs").unwrap_or("8").parse()?;
+    let gamma_max: f64 = match get(&fl, "gamma-max") {
+        Some(v) => v.parse()?,
+        None => AutoThresholds::default().gamma_max,
+    };
+    let state_budget: usize = match get(&fl, "state-budget") {
+        Some(v) => v.parse()?,
+        None => SetConfig::default().state_budget,
+    };
+
+    let report =
+        analyze_patterns(&patterns, r, procs, gamma_max, state_budget)?;
+
+    for (i, p) in report.patterns.iter().enumerate() {
+        println!("pattern {i} ({}): {}", p.regex.kind, p.regex.pattern);
+        if p.regex.hazards.is_empty() {
+            println!("  hazards: none");
+        }
+        for h in &p.regex.hazards {
+            println!(
+                "  hazard: {} [{} blowup] {}",
+                h.kind.name(),
+                h.kind.severity(),
+                h.detail
+            );
+        }
+        let f = &p.regex.facts;
+        println!(
+            "  facts: ast {} node(s), repeat depth {}, {} unbounded \
+             repeat(s), {} alternation(s), anchors {}{}, literal {}",
+            f.ast_size,
+            f.repeat_depth,
+            f.unbounded_repeats,
+            f.alternations,
+            if f.anchored_start { "^" } else { "-" },
+            if f.anchored_end { "$" } else { "-" },
+            match &f.required_literal {
+                Some(l) => format!("{:?}", String::from_utf8_lossy(l)),
+                None => "none".to_string(),
+            }
+        );
+        let d = &p.dfa;
+        println!(
+            "  dfa: |Q|={} |Sigma|={} I_max,{}={} gamma={:.3} \
+             minimal |Q|={} (gap {}), {} dead, {} unreachable, sink {}",
+            d.q,
+            d.sigma,
+            d.r,
+            d.i_max,
+            d.gamma,
+            d.minimal_q,
+            d.minimality_gap,
+            d.dead_states,
+            d.unreachable_states,
+            match d.sink_state {
+                Some(s) => s.to_string(),
+                None => "none".to_string(),
+            }
+        );
+        println!(
+            "  feasibility: {} (gamma_max {}, predicted speedup \
+             {:.2}x at P={}, chunk overhead {:.1} syms)",
+            d.feasibility.name(),
+            report.gamma_max,
+            d.predicted_speedup,
+            report.processors,
+            d.chunk_overhead
+        );
+    }
+    if let Some(f) = &report.fuse {
+        println!(
+            "fuse: {} component(s) {:?} -> product |Q| in \
+             [{}, {}], {} combined class(es), budget {} -> {}",
+            f.components,
+            f.component_states,
+            f.certain_min,
+            f.upper_bound,
+            f.combined_classes,
+            f.budget,
+            if f.predicted_overflow {
+                "predicted overflow (patternset skips the fuse attempt)"
+            } else {
+                "may fit"
+            }
+        );
+        if let Some(d) = report.literals_disjoint {
+            println!(
+                "fuse: required literals pairwise disjoint: {d} \
+                 (disjoint sets rarely co-fire the fused accept check)"
+            );
+        }
+    }
+    println!(
+        "proto: {} state(s), {} transition(s), {} arrival kind(s) -> {}",
+        report.proto.states,
+        report.proto.transitions,
+        report.proto.arrivals,
+        if report.proto.ok() { "ok" } else { "UNSAFE" }
+    );
+    for problem in &report.proto.problems {
+        println!("  proto problem: {problem}");
+    }
+    println!(
+        "analyzed {} pattern(s): {} hazardous",
+        report.patterns.len(),
+        report.hazardous()
+    );
+
+    if let Some(path) = get(&fl, "json") {
+        std::fs::write(path, render_analysis_json(&report))?;
+        println!("wrote analysis record to {path}");
     }
     Ok(())
 }

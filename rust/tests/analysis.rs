@@ -1,0 +1,258 @@
+//! Ground-truth tests for the static analyzer (`specdfa::analysis`).
+//!
+//! Three claims have to hold against the repo's own corpora, not
+//! hand-picked fixtures:
+//!
+//! 1. the ReDoS lints flag every pathological-corpus ReDoS entry and
+//!    produce zero false positives across the full PCRE-like and
+//!    PROSITE-like benchmark suites,
+//! 2. the fuse estimator's bounds bracket the *actual* fused product on
+//!    every corpus set, and every predicted skip is one `fuse` provably
+//!    aborts,
+//! 3. the protocol checker passes the protocol as implemented and
+//!    catches a seeded mutation.
+//!
+//! Plus the serving acceptance check: a `HazardPolicy::Reject` server
+//! refuses the ReDoS request in a mixed trace while serving the rest
+//! verdict-identically to the sequential engine.
+
+use specdfa::analysis::{
+    check_model, estimate_fuse, lint_pattern, session_model, SessionState,
+};
+use specdfa::automata::product::fuse;
+use specdfa::cluster::proto::FrameKind;
+use specdfa::engine::{
+    CompiledMatcher, Engine, ExecPolicy, HazardPolicy, Pattern, ServeConfig,
+    Server,
+};
+use specdfa::util::workload::pathological_corpus;
+use specdfa::workload::{pcre_suite_cached, prosite_suite_cached, InputGen};
+
+// ---------------------------------------------------------------------
+// 1. ReDoS ground truth
+// ---------------------------------------------------------------------
+
+#[test]
+fn every_corpus_redos_entry_is_flagged() {
+    let corpus = pathological_corpus(0xA11A);
+    let redos: Vec<_> = corpus
+        .iter()
+        .filter(|c| c.name.starts_with("redos-"))
+        .collect();
+    assert!(redos.len() >= 3, "corpus lost its ReDoS entries");
+    for case in redos {
+        let report = lint_pattern(&case.pattern)
+            .unwrap_or_else(|e| panic!("{}: lint failed: {e:#}", case.name));
+        assert!(
+            report.is_hazardous(),
+            "{}: ReDoS pattern {:?} not flagged",
+            case.name,
+            report.pattern
+        );
+    }
+}
+
+#[test]
+fn zero_false_positives_on_clean_corpus_and_suites() {
+    // every non-ReDoS pathological-corpus entry is hazard-free (the
+    // raw automata are pathological for *speculation*, not for a
+    // backtracker — different hazard class, different pass)
+    for case in pathological_corpus(0xA11B) {
+        if case.name.starts_with("redos-") {
+            continue;
+        }
+        let report = lint_pattern(&case.pattern)
+            .unwrap_or_else(|e| panic!("{}: lint failed: {e:#}", case.name));
+        assert!(
+            !report.is_hazardous(),
+            "{}: false positive: {:?}",
+            case.name,
+            report.hazards
+        );
+    }
+    // the full curated suites are production-shaped patterns; a single
+    // false positive here would make Warn-mode logs useless
+    for p in pcre_suite_cached() {
+        let report =
+            lint_pattern(&Pattern::Regex(p.pattern.clone())).unwrap();
+        assert!(
+            !report.is_hazardous(),
+            "pcre {}: false positive on {:?}: {:?}",
+            p.name,
+            p.pattern,
+            report.hazards
+        );
+    }
+    for p in prosite_suite_cached() {
+        let report =
+            lint_pattern(&Pattern::Prosite(p.pattern.clone())).unwrap();
+        assert!(
+            !report.is_hazardous(),
+            "prosite {}: false positive on {:?}: {:?}",
+            p.name,
+            p.pattern,
+            report.hazards
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// 2. fuse estimator soundness against the real product construction
+// ---------------------------------------------------------------------
+
+/// Small-DFA subsets of the PCRE suite (pairwise products stay cheap
+/// enough for debug-mode test runs).
+fn small_suite_dfas() -> Vec<&'static specdfa::Dfa> {
+    pcre_suite_cached()
+        .iter()
+        .filter(|p| p.q() <= 64)
+        .take(8)
+        .map(|p| &p.dfa)
+        .collect()
+}
+
+#[test]
+fn estimate_brackets_actual_fused_product_on_suite_sets() {
+    let dfas = small_suite_dfas();
+    assert!(dfas.len() >= 4, "suite lost its small DFAs");
+    for set in dfas.windows(2).chain(dfas.windows(3)) {
+        let refs: Vec<&specdfa::Dfa> = set.to_vec();
+        let est = estimate_fuse(&refs, 0);
+        let prod = fuse(&refs, 0, 1).expect("unlimited budget never aborts");
+        let actual = prod.dfa.num_states as usize;
+        assert!(
+            est.certain_min <= actual,
+            "certain_min {} > actual {actual}",
+            est.certain_min
+        );
+        assert!(
+            est.upper_bound >= actual,
+            "upper_bound {} < actual {actual}",
+            est.upper_bound
+        );
+        assert_eq!(
+            est.combined_classes, prod.dfa.num_symbols as usize,
+            "combined class count is the fused dense symbol count"
+        );
+    }
+}
+
+#[test]
+fn every_predicted_skip_is_a_fuse_that_aborts() {
+    let dfas = small_suite_dfas();
+    let mut predicted = 0usize;
+    for set in dfas.windows(2) {
+        let refs: Vec<&specdfa::Dfa> = set.to_vec();
+        for budget in [1usize, 4, 16, 64, 256] {
+            let est = estimate_fuse(&refs, budget);
+            if est.predicted_overflow {
+                predicted += 1;
+                assert!(
+                    fuse(&refs, budget, 1).is_none(),
+                    "predicted overflow at budget {budget} but fuse \
+                     succeeded (certain_min {})",
+                    est.certain_min
+                );
+            }
+        }
+    }
+    assert!(predicted > 0, "budget sweep never triggered a prediction");
+}
+
+// ---------------------------------------------------------------------
+// 3. protocol checker ground truth
+// ---------------------------------------------------------------------
+
+#[test]
+fn protocol_as_implemented_passes_and_mutation_fails() {
+    let report = check_model(&session_model());
+    assert!(report.ok(), "current protocol flagged: {:?}", report.problems);
+
+    // seeded mutation: drop the idle Heartbeat handler — the checker
+    // must notice the declared arrival with no transition
+    let mut mutated = session_model();
+    mutated.transitions.retain(|&(s, f, _)| {
+        !(s == SessionState::Idle && f == FrameKind::Heartbeat)
+    });
+    let report = check_model(&mutated);
+    assert!(!report.ok(), "dropped-Heartbeat mutation not caught");
+    assert!(
+        report
+            .problems
+            .iter()
+            .any(|p| p.contains("unhandled") && p.contains("heartbeat")),
+        "wrong diagnosis: {:?}",
+        report.problems
+    );
+}
+
+// ---------------------------------------------------------------------
+// acceptance: Reject-policy server refuses the hazard, serves the rest
+// ---------------------------------------------------------------------
+
+#[test]
+fn reject_policy_refuses_redos_and_serves_rest_verdict_identical() {
+    let clean: Vec<(Pattern, usize)> = vec![
+        (Pattern::Regex("cat|dog".to_string()), 1 << 12),
+        (Pattern::Regex("(ab|cd)+e".to_string()), 1 << 13),
+        (Pattern::Regex("needle".to_string()), 1 << 12),
+        (Pattern::Prosite("C-x(2)-C.".to_string()), 1 << 12),
+    ];
+    let server = Server::start(ServeConfig {
+        workers: 2,
+        hazard_policy: HazardPolicy::Reject,
+        engine: Engine::Sequential,
+        calibrate_on_start: false,
+        profile_runs: 1,
+        profile_sample_syms: 1 << 12,
+        recalibrate_every: 0,
+        ..ServeConfig::default()
+    })
+    .expect("server starts");
+
+    let mut gen = InputGen::new(0xACCE);
+    let mut expected = Vec::new();
+    let mut tickets = Vec::new();
+    for (i, (pattern, n)) in clean.iter().enumerate() {
+        let input = if matches!(pattern, Pattern::Prosite(_)) {
+            gen.protein(*n)
+        } else {
+            gen.ascii_text(*n)
+        };
+        let seq = CompiledMatcher::compile(
+            pattern,
+            Engine::Sequential,
+            ExecPolicy::default(),
+        )
+        .expect("clean pattern compiles")
+        .run_bytes(&input)
+        .expect("sequential yardstick runs");
+        expected.push((i, seq.accepted));
+        tickets.push((i, server.submit(pattern.clone(), input)));
+    }
+    // the hazardous request, interleaved with live clean traffic
+    let redos = server
+        .submit(Pattern::Regex("(a|a)*b".to_string()), b"aaaab".to_vec());
+
+    for ((i, ticket), (j, want)) in tickets.into_iter().zip(expected) {
+        assert_eq!(i, j);
+        let out = ticket.wait().expect("clean request serves");
+        assert_eq!(
+            out.accepted, want,
+            "request {i}: verdict diverged from Engine::Sequential"
+        );
+    }
+    let err = redos.wait().expect_err("ReDoS request must be refused");
+    let msg = err.to_string();
+    assert!(
+        msg.contains("hazard policy reject")
+            && msg.contains("overlapping-alternation"),
+        "unexpected refusal message: {msg}"
+    );
+
+    let stats = server.shutdown();
+    assert_eq!(stats.hazards_flagged, 1, "one hazardous request flagged");
+    assert_eq!(stats.hazards_rejected, 1, "acceptance criterion");
+    assert_eq!(stats.rejected, 1, "hazard refusals count as rejections");
+    assert_eq!(stats.served, 4, "every clean request served");
+}
